@@ -1,0 +1,21 @@
+//! The statistical-estimation side of the paper as a runnable demo:
+//! minimax risk of the §V subsampling scheme vs truncation / random /
+//! centralized baselines across the Theorem-1 k-window, with the closed-
+//! form Theorem 1/2 curves for comparison.
+//!
+//!     cargo run --release --example estimation_theory
+
+use rtopk::experiments::{run_experiment, ExperimentOptions};
+
+fn main() -> anyhow::Result<()> {
+    let opts = ExperimentOptions {
+        quick: true,
+        out_dir: std::path::PathBuf::from("results"),
+        ..Default::default()
+    };
+    run_experiment("figT1", &opts)?;
+    run_experiment("figT2", &opts)?;
+    println!("\nCSV curves written under results/figT1 and results/figT2.");
+    println!("Full-resolution versions: `rtopk experiment --id figT1` (no --quick).");
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT compile path: lower the L2/L1 functions once to HLO text artifacts.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly. (See
+/opt/xla-example/gen_hlo.py and its README.)
+
+Outputs, per model preset NAME in --presets:
+  artifacts/NAME.train.hlo.txt   (flat_params, batch...) -> (loss, flat_grads)
+  artifacts/NAME.eval.hlo.txt    (flat_params, batch...) -> (metric_sum, count)
+  artifacts/NAME.init.bin        raw little-endian f32 initial flat params
+
+Plus the standalone Layer-1 sparsification pipeline (used by the Rust
+`xla-sparsifier` accelerated path and its benches), sized per LM preset:
+  artifacts/sparse_pipeline.D.hlo.txt
+      (g f32[D], m f32[D], log_lo, log_hi, thresh) -> (hist i32[nbins],
+       out f32[D], m_new f32[D], nnz i32, maxabs f32)
+
+And a manifest describing every artifact:
+  artifacts/manifest.json
+
+Usage: python -m compile.aot --out-dir ../artifacts [--presets lm_tiny,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from .kernels import ref, topk_threshold
+
+DEFAULT_PRESETS = ["lm_tiny", "lm_small", "lm_base", "cnn_tiny"]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype).name)}
+
+
+def _abstract(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)), tree)
+
+
+def lower_model(fm: model_lib.FlatModel, out_dir: pathlib.Path) -> dict:
+    """Lower train/eval steps for one preset; returns its manifest entry."""
+    param_spec = jax.ShapeDtypeStruct((fm.dim,), jnp.float32)
+    entries = {}
+    for kind, fn in (("train", fm.train_step), ("eval", fm.eval_step)):
+        lowered = jax.jit(fn).lower(param_spec, *fm.batch_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{fm.name}.{kind}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        outs = jax.eval_shape(fn, param_spec, *fm.batch_specs)
+        entries[kind] = {
+            "file": fname,
+            "inputs": [_spec_json(param_spec)] + [_spec_json(s) for s in fm.batch_specs],
+            "outputs": [_spec_json(s) for s in jax.tree.leaves(_abstract(outs))],
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        }
+
+    init = np.asarray(fm.init_flat, dtype=np.float32)
+    init_file = f"{fm.name}.init.bin"
+    (out_dir / init_file).write_bytes(init.tobytes())
+    return {
+        "name": fm.name,
+        "dim": fm.dim,
+        "init": init_file,
+        "meta": fm.meta,
+        **entries,
+    }
+
+
+def sparse_pipeline(g, m, log_lo, log_hi, thresh):
+    """One-call fused sparsification pipeline over the Pallas kernels.
+
+    The rust coordinator's accelerated path calls this with a threshold of
+    +inf on the first pass (to get max/hist only) or a concrete threshold
+    to produce the split. Fusing all of it into one executable amortizes
+    the PJRT dispatch overhead at large d.
+    """
+    mx = topk_threshold.maxabs(g, m)
+    hist = topk_threshold.magnitude_histogram(g, m, log_lo, log_hi)
+    out, m_new, nnz = topk_threshold.ef_threshold_apply(g, m, thresh)
+    return hist, out, m_new, nnz, mx
+
+
+def lower_sparse_pipeline(dim: int, out_dir: pathlib.Path) -> dict:
+    vec = jax.ShapeDtypeStruct((dim,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(sparse_pipeline).lower(vec, vec, scalar, scalar, scalar)
+    text = to_hlo_text(lowered)
+    fname = f"sparse_pipeline.{dim}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    return {
+        "name": f"sparse_pipeline.{dim}",
+        "dim": dim,
+        "nbins": ref.DEFAULT_NBINS,
+        "file": fname,
+        "inputs": [
+            {"shape": [dim], "dtype": "float32"},
+            {"shape": [dim], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"},
+            {"shape": [], "dtype": "float32"},
+        ],
+        "outputs": [
+            {"shape": [ref.DEFAULT_NBINS], "dtype": "int32"},
+            {"shape": [dim], "dtype": "float32"},
+            {"shape": [dim], "dtype": "float32"},
+            {"shape": [], "dtype": "int32"},
+            {"shape": [], "dtype": "float32"},
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default=",".join(DEFAULT_PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--sparse-dims",
+        default="65536,1048576",
+        help="comma list of flat dims to lower the sparse pipeline for",
+    )
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest: dict = {"models": [], "sparse_pipelines": []}
+    for name in [p for p in args.presets.split(",") if p]:
+        fm = model_lib.build(name, seed=args.seed)
+        entry = lower_model(fm, out_dir)
+        manifest["models"].append(entry)
+        print(f"lowered {name}: d={fm.dim} -> {entry['train']['file']}")
+
+    for dim in [int(x) for x in args.sparse_dims.split(",") if x]:
+        entry = lower_sparse_pipeline(dim, out_dir)
+        manifest["sparse_pipelines"].append(entry)
+        print(f"lowered sparse_pipeline d={dim}")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Modules:
+  topk_threshold — two-pass histogram threshold select + fused error feedback
+  attention      — blocked causal attention (custom_vjp; fwd = Pallas)
+  ref            — pure-jnp oracles for everything above
+"""
+
+from . import attention, ref, topk_threshold
+
+__all__ = ["attention", "ref", "topk_threshold"]

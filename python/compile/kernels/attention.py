@@ -1,0 +1,142 @@
+"""Blocked causal attention as a Pallas kernel (flash-attention on TPU terms).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): Q streams through VMEM in
+MXU-shaped row blocks while K/V for the same (batch, head) stay VMEM-resident;
+an online-softmax accumulator in f32 avoids materializing the [S, S] score
+matrix in HBM — flash-attention's insight restated for the VMEM/MXU
+hierarchy instead of shared-memory/tensor-cores.
+
+The kernel is wrapped in a ``jax.custom_vjp``: forward runs the Pallas
+kernel; backward recomputes attention probabilities from the saved q, k, v
+with plain jnp (the standard flash-attn recompute strategy). This keeps the
+training graph differentiable while the forward hot path is the kernel.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel body to plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Q rows per grid step and K/V columns per inner iteration. 128 matches the
+# MXU systolic-array edge; smaller sequences clamp to the sequence length.
+BLOCK_Q: int = 128
+BLOCK_K: int = 128
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, seq: int, causal: bool):
+    i = pl.program_id(1)  # q-block index
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (seq, d)
+    v = v_ref[0].astype(jnp.float32)  # (seq, d)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    rows = i * bq + jax.lax.iota(jnp.int32, bq)
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        kj = jax.lax.dynamic_slice(k, (j * bk, 0), (bk, d))
+        vj = jax.lax.dynamic_slice(v, (j * bk, 0), (bk, d))
+        s = (q @ kj.T) * scale  # (bq, bk)
+        cols = j * bk + jax.lax.iota(jnp.int32, bk)
+        if causal:
+            s = jnp.where(rows[:, None] >= cols[None, :], s, _NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ vj
+        return acc, m_cur, l_cur
+
+    nkb = seq // bk
+    if causal:
+        # Blocks strictly above the diagonal contribute nothing; with the
+        # sequential grid we still visit them but their p is exp(-inf)=0,
+        # so limit the loop to the blocks that can intersect the mask.
+        upper = (i + 1) * bq  # first row of next q block
+        nkb_eff = jnp.minimum((upper + bk - 1) // bk, nkb)
+    else:
+        nkb_eff = nkb
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, nkb_eff, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def _attention_fwd_kernel(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool
+) -> jax.Array:
+    """Run the Pallas kernel. q,k,v: [B, H, S, D]."""
+    b, h, s, d = q.shape
+    bq = min(BLOCK_Q, s)
+    bk = min(BLOCK_K, s)
+    assert s % bq == 0 and s % bk == 0, f"seq {s} must divide blocks ({bq},{bk})"
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    kern = functools.partial(_attn_kernel, bq=bq, bk=bk, seq=s, causal=causal)
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, ii: (hh, ii, 0)),
+            pl.BlockSpec((1, s, d), lambda hh, ii: (hh, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda hh, ii: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda hh, ii: (hh, ii, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """Causal scaled-dot-product attention; forward = Pallas kernel."""
+    return _attention_fwd_kernel(q, k, v, causal)
+
+
+def _fwd(q, k, v, causal):
+    return _attention_fwd_kernel(q, k, v, causal), (q, k, v)
+
+
+def _bwd(causal, res, do):
+    # Recompute probabilities in f32 from saved q,k,v (flash-attn recompute
+    # strategy) and apply the standard softmax-attention backward.
+    q, k, v = res
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    dof = do.astype(jnp.float32)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        seq = q.shape[2]
+        mask = jnp.tril(jnp.ones((seq, seq), bool))
+        s = jnp.where(mask[None, None, :, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vf)
+    # softmax jacobian: dS = P * (dP - sum(dP * P))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kf) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qf) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+attention.defvjp(_fwd, _bwd)
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Re-export of the oracle for convenience in tests."""
+    return ref.attention(q, k, v, causal)

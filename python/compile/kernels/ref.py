@@ -1,0 +1,100 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain ``jax.numpy`` ops only. The pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` across shape/dtype sweeps —
+this is the core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Number of log-spaced magnitude bins used by the histogram-select path.
+DEFAULT_NBINS = 128
+
+
+def maxabs(g: jax.Array, m: jax.Array) -> jax.Array:
+    """max(|g + m|) over all elements (scalar, f32)."""
+    return jnp.max(jnp.abs(g.astype(jnp.float32) + m.astype(jnp.float32)))
+
+
+def log_bin_index(
+    absx: jax.Array, log_lo: jax.Array, log_hi: jax.Array, nbins: int
+) -> jax.Array:
+    """Map |x| to a log-spaced bin index in [0, nbins-1].
+
+    Bin 0 additionally catches everything below exp(log_lo) (including
+    exact zeros); bin nbins-1 catches everything >= exp(log_hi).
+    """
+    # log of zero -> -inf; the clip below sends it to bin 0.
+    logx = jnp.log(jnp.maximum(absx, 1e-45))
+    t = (logx - log_lo) / jnp.maximum(log_hi - log_lo, 1e-12)
+    idx = jnp.floor(t * nbins).astype(jnp.int32)
+    return jnp.clip(idx, 0, nbins - 1)
+
+
+def magnitude_histogram(
+    g: jax.Array,
+    m: jax.Array,
+    log_lo: jax.Array,
+    log_hi: jax.Array,
+    nbins: int = DEFAULT_NBINS,
+) -> jax.Array:
+    """Histogram of |g + m| over ``nbins`` log-spaced bins (counts, i32).
+
+    This is pass 1 of the two-pass threshold select: the host converts the
+    histogram CDF into a magnitude threshold whose rank is ~r.
+    """
+    acc = jnp.abs(g.astype(jnp.float32) + m.astype(jnp.float32)).reshape(-1)
+    idx = log_bin_index(acc, log_lo, log_hi, nbins)
+    return jnp.zeros((nbins,), jnp.int32).at[idx].add(1)
+
+
+def ef_threshold_apply(
+    g: jax.Array, m: jax.Array, thresh: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused error-feedback accumulate + threshold split (pass 2).
+
+    acc   = g + m                (error-compensated gradient)
+    out   = acc * [|acc| >= t]   (kept / communicated part)
+    m_new = acc * [|acc| <  t]   (residual memory, Algorithm 1)
+    nnz   = #kept                (i32 scalar)
+
+    Exact conservation holds by construction: out + m_new == acc.
+    """
+    acc = g.astype(jnp.float32) + m.astype(jnp.float32)
+    keep = jnp.abs(acc) >= thresh
+    out = jnp.where(keep, acc, 0.0)
+    m_new = jnp.where(keep, 0.0, acc)
+    nnz = jnp.sum(keep.astype(jnp.int32))
+    return out, m_new, nnz
+
+
+def topr_mask(x: jax.Array, r: int) -> jax.Array:
+    """Exact top-r-by-magnitude boolean mask (ties broken by index order).
+
+    Oracle used to sanity-check the histogram threshold's rank accuracy.
+    """
+    flat = jnp.abs(x).reshape(-1)
+    # kth largest magnitude
+    _, idx = jax.lax.top_k(flat, r)
+    return jnp.zeros_like(flat, dtype=bool).at[idx].set(True).reshape(x.shape)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """Reference scaled-dot-product attention.
+
+    q, k, v: [batch, heads, seq, head_dim] (any float dtype; math in f32).
+    """
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        s = q.shape[2]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,191 @@
+"""Pallas kernels for the two-pass histogram threshold select (top-r hot path).
+
+TPU adaptation of GPU radix-select (see DESIGN.md §Hardware-Adaptation):
+instead of a global sort, the gradient streams through VMEM in aligned
+blocks and we accumulate a log-spaced magnitude histogram in a VMEM-resident
+output; the host converts the histogram CDF into a magnitude threshold whose
+rank is ~r, then a second elementwise pass applies the threshold.
+
+All three kernels fuse the error-feedback accumulate ``acc = g + m`` so the
+error-compensated gradient never makes a standalone HBM round trip.
+
+Kernels (all lowered with ``interpret=True`` — CPU PJRT cannot execute
+Mosaic custom-calls; see /opt/xla-example/README.md):
+
+  maxabs(g, m)                        -> scalar f32 max|g+m|
+  magnitude_histogram(g, m, lo, hi)   -> i32[nbins] counts
+  ef_threshold_apply(g, m, t)         -> (out, m_new, nnz)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Block of elements resident in VMEM per grid step. 8*128-aligned
+# (f32 VPU tile); 64k elems = 256 KiB in + 256 KiB out worst case,
+# comfortably inside a 16 MiB VMEM budget with double buffering.
+BLOCK: int = 65536
+
+
+def _pad_flat(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    """Flatten and zero-pad to a multiple of ``block``; returns (padded, n)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, n
+
+
+# ---------------------------------------------------------------------------
+# Pass 0: global max|g+m| (sets the histogram's dynamic range)
+# ---------------------------------------------------------------------------
+
+
+def _maxabs_kernel(g_ref, m_ref, o_ref):
+    i = pl.program_id(0)
+    acc = jnp.abs(g_ref[...].astype(jnp.float32) + m_ref[...].astype(jnp.float32))
+    blockmax = jnp.max(acc)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = jnp.maximum(o_ref[...], blockmax)
+
+
+def maxabs(g: jax.Array, m: jax.Array, *, block: int = BLOCK) -> jax.Array:
+    """max(|g + m|) over all elements. Padding is safe: pads are zero."""
+    gf, _ = _pad_flat(g, block)
+    mf, _ = _pad_flat(m, block)
+    nblocks = gf.shape[0] // block
+    out = pl.pallas_call(
+        _maxabs_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(gf, mf)
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: log-spaced magnitude histogram
+# ---------------------------------------------------------------------------
+
+
+def _hist_kernel(lo_ref, hi_ref, g_ref, m_ref, o_ref, *, nbins: int, valid: int, block: int):
+    i = pl.program_id(0)
+    acc = jnp.abs(g_ref[...].astype(jnp.float32) + m_ref[...].astype(jnp.float32))
+    idx = ref.log_bin_index(acc, lo_ref[0], hi_ref[0], nbins)
+    # Mask out the zero padding of the final block so counts stay exact.
+    elem = jax.lax.iota(jnp.int32, block) + i * block
+    w = (elem < valid).astype(jnp.int32)
+    # one-hot matmul histogram: (block,) idx -> (nbins,) counts. This maps
+    # onto a (block x nbins) compare + reduce, which the VPU vectorizes.
+    onehot = (idx[:, None] == jax.lax.iota(jnp.int32, nbins)[None, :]).astype(jnp.int32)
+    counts = jnp.sum(onehot * w[:, None], axis=0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = o_ref[...] + counts
+
+
+def magnitude_histogram(
+    g: jax.Array,
+    m: jax.Array,
+    log_lo: jax.Array,
+    log_hi: jax.Array,
+    nbins: int = ref.DEFAULT_NBINS,
+    *,
+    block: int = BLOCK,
+) -> jax.Array:
+    """Histogram of |g+m| over ``nbins`` log-spaced bins. Matches ref exactly."""
+    gf, n = _pad_flat(g, block)
+    mf, _ = _pad_flat(m, block)
+    nblocks = gf.shape[0] // block
+    kern = functools.partial(_hist_kernel, nbins=nbins, valid=n, block=block)
+    lo = jnp.asarray(log_lo, jnp.float32).reshape(1)
+    hi = jnp.asarray(log_hi, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((nbins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nbins,), jnp.int32),
+        interpret=True,
+    )(lo, hi, gf, mf)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: fused error-feedback accumulate + threshold split
+# ---------------------------------------------------------------------------
+
+
+def _apply_kernel(t_ref, g_ref, m_ref, out_ref, mem_ref, nnz_ref, *, valid: int, block: int):
+    i = pl.program_id(0)
+    acc = g_ref[...].astype(jnp.float32) + m_ref[...].astype(jnp.float32)
+    keep = jnp.abs(acc) >= t_ref[0]
+    out_ref[...] = jnp.where(keep, acc, 0.0)
+    mem_ref[...] = jnp.where(keep, 0.0, acc)
+    elem = jax.lax.iota(jnp.int32, block) + i * block
+    w = jnp.logical_and(keep, elem < valid)
+
+    @pl.when(i == 0)
+    def _init():
+        nnz_ref[...] = jnp.zeros_like(nnz_ref)
+
+    nnz_ref[...] = nnz_ref[...] + jnp.sum(w.astype(jnp.int32))
+
+
+def ef_threshold_apply(
+    g: jax.Array, m: jax.Array, thresh: jax.Array, *, block: int = BLOCK
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(out, m_new, nnz): threshold split of the error-compensated gradient.
+
+    Conservation invariant: out + m_new == g + m, elementwise, exactly.
+    """
+    shape = g.shape
+    gf, n = _pad_flat(g, block)
+    mf, _ = _pad_flat(m, block)
+    nblocks = gf.shape[0] // block
+    t = jnp.asarray(thresh, jnp.float32).reshape(1)
+    kern = functools.partial(_apply_kernel, valid=n, block=block)
+    out, mem, nnz = pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(gf.shape, jnp.float32),
+            jax.ShapeDtypeStruct(gf.shape, jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(t, gf, mf)
+    return out[:n].reshape(shape), mem[:n].reshape(shape), nnz[0]

@@ -1,0 +1,309 @@
+"""Layer-2: the training-step compute graphs, written in JAX.
+
+Two model families, mirroring the paper's two experiment domains:
+
+* ``Transformer LM`` — PTB-analogue language model (the paper used a
+  2-layer LSTM; we use a GPT-style decoder, see DESIGN.md §2). Attention
+  runs through the Layer-1 Pallas kernel (``kernels.attention``), so the
+  kernel lowers into the same HLO artifact the Rust runtime executes.
+* ``Tiny CNN`` — CIFAR-analogue image classifier (conv stack + MLP head).
+
+Both expose the same flat-parameter ABI the Rust coordinator expects:
+
+    train_step(flat_params f32[d], batch) -> (loss f32[], flat_grads f32[d])
+    eval_step(flat_params f32[d], batch)  -> (loss_sum/correct, count)
+
+The flat vector is the paper's ``omega in R^d``: the coordinator treats the
+model as one opaque parameter vector it sparsifies, ships, and updates.
+Python only runs at build time — ``aot.py`` lowers these functions once to
+HLO text and the Rust side loads the artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import attention as attn_kernel
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only transformer configuration (tied in/out embeddings)."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Presets. `lm_tiny` drives pytest and fast rust integration tests;
+# `lm_small` is the Table IV/V workload; `lm_base` the e2e example;
+# `lm100m` matches the brief's ~100M-param configuration (compile-only by
+# default — a CPU-interpret train step at that size is minutes per step).
+LM_PRESETS: dict[str, LMConfig] = {
+    "lm_tiny": LMConfig("lm_tiny", vocab=256, d_model=64, n_layers=2, n_heads=2, seq=32, batch=4),
+    "lm_small": LMConfig("lm_small", vocab=1024, d_model=192, n_layers=3, n_heads=4, seq=64, batch=8),
+    "lm_base": LMConfig("lm_base", vocab=4096, d_model=384, n_layers=6, n_heads=6, seq=128, batch=8),
+    "lm100m": LMConfig("lm100m", vocab=32768, d_model=768, n_layers=12, n_heads=12, seq=256, batch=8),
+}
+
+
+def lm_init(cfg: LMConfig, key: jax.Array) -> dict[str, Any]:
+    """Initialize LM parameters as a pytree.
+
+    Per-layer tensors are stacked on a leading ``n_layers`` axis so the
+    forward pass can ``lax.scan`` over layers (bounds HLO size; see
+    DESIGN.md §7 L2 targets).
+    """
+    k_emb, k_pos, k_layers = jax.random.split(key, 3)
+    d, L = cfg.d_model, cfg.n_layers
+    init = jax.nn.initializers.normal(0.02)
+
+    def layer_params(k):
+        ks = jax.random.split(k, 4)
+        return {
+            "ln1_scale": jnp.ones((d,)),
+            "ln1_bias": jnp.zeros((d,)),
+            "wqkv": init(ks[0], (d, 3 * d)),
+            "wo": init(ks[1], (d, d)) / jnp.sqrt(2.0 * L),
+            "ln2_scale": jnp.ones((d,)),
+            "ln2_bias": jnp.zeros((d,)),
+            "w1": init(ks[2], (d, 4 * d)),
+            "b1": jnp.zeros((4 * d,)),
+            "w2": init(ks[3], (4 * d, d)) / jnp.sqrt(2.0 * L),
+            "b2": jnp.zeros((d,)),
+        }
+
+    layers = jax.vmap(layer_params)(jax.random.split(k_layers, L))
+    return {
+        "embed": init(k_emb, (cfg.vocab, d)),  # tied with the output head
+        "pos": init(k_pos, (cfg.seq, d)),
+        "layers": layers,
+        "lnf_scale": jnp.ones((d,)),
+        "lnf_bias": jnp.zeros((d,)),
+    }
+
+
+def _layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * scale + bias
+
+
+def _lm_block(cfg: LMConfig, x: jax.Array, p: dict[str, jax.Array]) -> jax.Array:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    y = _layernorm(x, p["ln1_scale"], p["ln1_bias"])
+    qkv = y @ p["wqkv"]  # (b, s, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    o = attn_kernel.attention(q, k, v, True)  # L1 Pallas kernel
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ p["wo"]
+    y = _layernorm(x, p["ln2_scale"], p["ln2_bias"])
+    y = jax.nn.gelu(y @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+    return x + y
+
+
+def lm_logits(cfg: LMConfig, params: dict[str, Any], tokens: jax.Array) -> jax.Array:
+    """tokens i32[b, s] -> logits f32[b, s, vocab]."""
+    x = params["embed"][tokens] + params["pos"][None, : tokens.shape[1], :]
+
+    def step(x, layer_p):
+        return _lm_block(cfg, x, layer_p), None
+
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    x = _layernorm(x, params["lnf_scale"], params["lnf_bias"])
+    return x @ params["embed"].T  # tied output head
+
+
+def lm_loss(cfg: LMConfig, params: dict[str, Any], tokens: jax.Array) -> jax.Array:
+    """Mean next-token cross entropy. tokens: i32[b, seq+1]."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = lm_logits(cfg, params, inputs)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Tiny CNN (CIFAR-analogue)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    """Stride-2 conv stack + MLP head on [b, image, image, 3] images."""
+
+    name: str
+    classes: int
+    channels: tuple[int, ...]
+    hidden: int
+    batch: int
+    image: int = 32
+
+
+CNN_PRESETS: dict[str, CNNConfig] = {
+    "cnn_tiny": CNNConfig("cnn_tiny", classes=10, channels=(8, 16), hidden=32, batch=8),
+    "cnn_cifar": CNNConfig("cnn_cifar", classes=10, channels=(32, 64, 128), hidden=128, batch=32),
+    "cnn_imagenet": CNNConfig("cnn_imagenet", classes=20, channels=(48, 96, 192), hidden=256, batch=32),
+}
+
+
+def cnn_init(cfg: CNNConfig, key: jax.Array) -> dict[str, Any]:
+    keys = jax.random.split(key, len(cfg.channels) + 2)
+    params: dict[str, Any] = {}
+    cin = 3
+    for i, cout in enumerate(cfg.channels):
+        fan_in = 3 * 3 * cin
+        params[f"conv{i}_w"] = jax.random.normal(keys[i], (3, 3, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+        params[f"conv{i}_b"] = jnp.zeros((cout,))
+        cin = cout
+    side = cfg.image // (2 ** len(cfg.channels))
+    flat = side * side * cin
+    params["fc1_w"] = jax.random.normal(keys[-2], (flat, cfg.hidden)) * jnp.sqrt(2.0 / flat)
+    params["fc1_b"] = jnp.zeros((cfg.hidden,))
+    params["fc2_w"] = jax.random.normal(keys[-1], (cfg.hidden, cfg.classes)) * jnp.sqrt(2.0 / cfg.hidden)
+    params["fc2_b"] = jnp.zeros((cfg.classes,))
+    return params
+
+
+def cnn_logits(cfg: CNNConfig, params: dict[str, Any], images: jax.Array) -> jax.Array:
+    """images f32[b, H, W, 3] -> logits f32[b, classes]."""
+    x = images
+    for i in range(len(cfg.channels)):
+        x = jax.lax.conv_general_dilated(
+            x,
+            params[f"conv{i}_w"],
+            window_strides=(2, 2),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        x = jax.nn.relu(x + params[f"conv{i}_b"])
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+    return x @ params["fc2_w"] + params["fc2_b"]
+
+
+def cnn_loss(cfg: CNNConfig, params: dict[str, Any], batch: tuple[jax.Array, jax.Array]) -> jax.Array:
+    images, labels = batch
+    logits = cnn_logits(cfg, params, images)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter ABI
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatModel:
+    """A model reduced to the coordinator's ABI: one flat f32 vector."""
+
+    name: str
+    dim: int
+    init_flat: jax.Array
+    train_step: Callable[..., tuple[jax.Array, jax.Array]]
+    eval_step: Callable[..., tuple[jax.Array, jax.Array]]
+    batch_specs: list[jax.ShapeDtypeStruct]
+    meta: dict[str, Any]
+
+
+def build_lm(cfg: LMConfig, seed: int = 0) -> FlatModel:
+    params = lm_init(cfg, jax.random.PRNGKey(seed))
+    flat, unravel = ravel_pytree(params)
+
+    def train_step(flat_params, tokens):
+        loss, grads = jax.value_and_grad(lambda p: lm_loss(cfg, p, tokens))(unravel(flat_params))
+        return loss, ravel_pytree(grads)[0]
+
+    def eval_step(flat_params, tokens):
+        # Sum of per-token NLL plus token count, so perplexity aggregates
+        # exactly across eval batches: ppl = exp(sum_nll / count).
+        loss = lm_loss(cfg, unravel(flat_params), tokens)
+        count = jnp.asarray(tokens.shape[0] * (tokens.shape[1] - 1), jnp.float32)
+        return loss * count, count
+
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    return FlatModel(
+        name=cfg.name,
+        dim=flat.shape[0],
+        init_flat=flat,
+        train_step=train_step,
+        eval_step=eval_step,
+        batch_specs=[tok_spec],
+        meta={
+            "family": "lm",
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "seq": cfg.seq,
+            "batch": cfg.batch,
+        },
+    )
+
+
+def build_cnn(cfg: CNNConfig, seed: int = 0) -> FlatModel:
+    params = cnn_init(cfg, jax.random.PRNGKey(seed))
+    flat, unravel = ravel_pytree(params)
+
+    def train_step(flat_params, images, labels):
+        loss, grads = jax.value_and_grad(lambda p: cnn_loss(cfg, p, (images, labels)))(
+            unravel(flat_params)
+        )
+        return loss, ravel_pytree(grads)[0]
+
+    def eval_step(flat_params, images, labels):
+        logits = cnn_logits(cfg, unravel(flat_params), images)
+        correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        return correct, jnp.asarray(labels.shape[0], jnp.float32)
+
+    img_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.image, cfg.image, 3), jnp.float32)
+    lab_spec = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    return FlatModel(
+        name=cfg.name,
+        dim=flat.shape[0],
+        init_flat=flat,
+        train_step=train_step,
+        eval_step=eval_step,
+        batch_specs=[img_spec, lab_spec],
+        meta={
+            "family": "cnn",
+            "classes": cfg.classes,
+            "channels": list(cfg.channels),
+            "hidden": cfg.hidden,
+            "batch": cfg.batch,
+            "image": cfg.image,
+        },
+    )
+
+
+def build(name: str, seed: int = 0) -> FlatModel:
+    """Build any preset by name (lm_* or cnn_*)."""
+    if name in LM_PRESETS:
+        return build_lm(LM_PRESETS[name], seed)
+    if name in CNN_PRESETS:
+        return build_cnn(CNN_PRESETS[name], seed)
+    raise KeyError(f"unknown preset {name!r}; have {sorted(LM_PRESETS) + sorted(CNN_PRESETS)}")

@@ -1,0 +1,89 @@
+"""AOT path checks: HLO text well-formedness + manifest consistency.
+
+These run the same lowering code `make artifacts` runs (on the tiny preset
+only, to stay fast) and validate the contract the Rust runtime relies on.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as model_lib
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    fm = model_lib.build("lm_tiny")
+    entry = aot.lower_model(fm, out)
+    sp = aot.lower_sparse_pipeline(4096, out)
+    return out, fm, entry, sp
+
+
+def test_hlo_is_text_not_proto(built):
+    out, _, entry, _ = built
+    text = (out / entry["train"]["file"]).read_text()
+    assert text.startswith("HloModule"), text[:40]
+    assert "ENTRY" in text
+
+
+def test_manifest_entry_shapes(built):
+    _, fm, entry, _ = built
+    assert entry["dim"] == fm.dim
+    assert entry["train"]["inputs"][0] == {"shape": [fm.dim], "dtype": "float32"}
+    # outputs: loss scalar + flat grads
+    assert entry["train"]["outputs"] == [
+        {"shape": [], "dtype": "float32"},
+        {"shape": [fm.dim], "dtype": "float32"},
+    ]
+
+
+def test_init_bin_roundtrip(built):
+    out, fm, entry, _ = built
+    raw = np.frombuffer((out / entry["init"]).read_bytes(), dtype="<f4")
+    np.testing.assert_array_equal(raw, np.asarray(fm.init_flat))
+
+
+def test_sparse_pipeline_entry(built):
+    _, _, _, sp = built
+    assert sp["inputs"][0]["shape"] == [4096]
+    assert sp["outputs"][0] == {"shape": [128], "dtype": "int32"}
+
+
+def test_sparse_pipeline_executes(built):
+    """The fused pipeline is jit-executable and matches the oracle."""
+    from compile.kernels import ref
+
+    g = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    m = jax.random.normal(jax.random.PRNGKey(1), (4096,)) * 0.1
+    hi = jnp.log(ref.maxabs(g, m))
+    lo = hi - 16.0
+    hist, out, m_new, nnz, mx = jax.jit(aot.sparse_pipeline)(g, m, lo, hi, jnp.float32(1.5))
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(ref.magnitude_histogram(g, m, lo, hi)))
+    o2, m2, n2 = ref.ef_threshold_apply(g, m, 1.5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_new), np.asarray(m2), rtol=1e-6)
+    assert int(nnz) == int(n2)
+    np.testing.assert_allclose(float(mx), float(ref.maxabs(g, m)), rtol=1e-6)
+
+
+def test_repo_manifest_if_present():
+    """If `make artifacts` has run, the checked-out manifest must be sane."""
+    root = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    man = root / "manifest.json"
+    if not man.exists():
+        pytest.skip("artifacts not built")
+    data = json.loads(man.read_text())
+    for entry in data["models"]:
+        for kind in ("train", "eval"):
+            f = root / entry[kind]["file"]
+            assert f.exists(), f
+            assert f.read_text().startswith("HloModule")
+        init = root / entry["init"]
+        assert init.stat().st_size == 4 * entry["dim"]

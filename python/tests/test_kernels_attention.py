@@ -1,0 +1,90 @@
+"""Pallas blocked attention vs the pure-jnp oracle, fwd and bwd."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as att, ref
+
+
+def _qkv(b, h, s, d, seed, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(jax.random.normal(k, (b, h, s, d)).astype(dtype) for k in ks)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    # seq must divide the (clamped) block; sample powers of two & multiples
+    s=st.sampled_from([16, 32, 64, 128, 256]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_forward_matches_ref(b, h, s, d, causal, seed):
+    q, k, v = _qkv(b, h, s, d, seed)
+    got = att.attention(q, k, v, causal)
+    want = ref.attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.sampled_from([16, 64, 128]),
+    d=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_grads_match_ref(s, d, seed):
+    q, k, v = _qkv(2, 2, s, d, seed)
+
+    def loss_k(f, which, val):
+        args = {"q": q, "k": k, "v": v, which: val}
+        return jnp.sum(f(args["q"], args["k"], args["v"], True) ** 2)
+
+    for which, val in (("q", q), ("k", k), ("v", v)):
+        g1 = jax.grad(lambda t: loss_k(att.attention, which, t))(val)
+        g2 = jax.grad(lambda t: loss_k(ref.attention, which, t))(val)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_bf16():
+    q, k, v = _qkv(1, 2, 64, 32, 3, dtype=jnp.bfloat16)
+    got = att.attention(q, k, v, True).astype(jnp.float32)
+    want = ref.attention(q, k, v, True).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_causal_mask_is_actually_causal():
+    """Perturbing a future token must not change earlier outputs."""
+    q, k, v = _qkv(1, 1, 64, 16, 11)
+    o1 = att.attention(q, k, v, True)
+    k2 = k.at[0, 0, -1, :].add(100.0)
+    v2 = v.at[0, 0, -1, :].add(-50.0)
+    o2 = att.attention(q, k2, v2, True)
+    np.testing.assert_allclose(
+        np.asarray(o1[:, :, :-1, :]), np.asarray(o2[:, :, :-1, :]), rtol=1e-6
+    )
+    # but the last position must change
+    assert not np.allclose(np.asarray(o1[:, :, -1, :]), np.asarray(o2[:, :, -1, :]))
+
+
+def test_rejects_non_divisible_seq():
+    q, k, v = _qkv(1, 1, 48, 16, 0)  # 48 not divisible by clamped block 48? it is
+    # 48 % min(128,48)=48 == 0, so craft a truly bad case: seq=72, block=72 ok too.
+    # The clamp makes every seq <= 128 divisible; test a large non-multiple.
+    q, k, v = _qkv(1, 1, 192, 16, 0)  # 192 % 128 != 0
+    with pytest.raises(AssertionError):
+        att.attention(q, k, v, True)
+
+
+def test_softmax_rows_sum_via_uniform_v():
+    """With v = ones, attention output must be exactly ones (softmax sums to 1)."""
+    q, k, _ = _qkv(1, 2, 128, 32, 5)
+    v = jnp.ones_like(q)
+    o = att.attention(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(o), 1.0, rtol=1e-5)

@@ -1,0 +1,136 @@
+"""Pallas sparsification kernels vs the pure-jnp oracle (core L1 signal).
+
+Hypothesis sweeps sizes (including ragged final blocks), dtypes, and value
+distributions; every property asserts allclose (or exact equality for
+integer outputs) against ``kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, topk_threshold as tk
+
+# Small block so ragged/multi-block paths are exercised cheaply.
+BLOCK = 1024
+
+sizes = st.integers(min_value=1, max_value=5000)
+dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _vecs(n: int, seed: int, dtype, scale_m: float = 0.25):
+    kg, km = jax.random.split(jax.random.PRNGKey(seed))
+    g = (jax.random.normal(kg, (n,)) * 3.0).astype(dtype)
+    m = (jax.random.normal(km, (n,)) * scale_m).astype(dtype)
+    return g, m
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=sizes, seed=seeds, dtype=dtypes)
+def test_maxabs_matches_ref(n, seed, dtype):
+    g, m = _vecs(n, seed, dtype)
+    got = tk.maxabs(g, m, block=BLOCK)
+    want = ref.maxabs(g, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=sizes, seed=seeds, dtype=dtypes)
+def test_histogram_matches_ref_exactly(n, seed, dtype):
+    g, m = _vecs(n, seed, dtype)
+    hi = jnp.log(ref.maxabs(g, m) + 1e-30)
+    lo = hi - 16.0
+    got = tk.magnitude_histogram(g, m, lo, hi, block=BLOCK)
+    want = ref.magnitude_histogram(g, m, lo, hi)
+    assert int(got.sum()) == n, "histogram must count every element once"
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=sizes, seed=seeds, dtype=dtypes, tq=st.floats(0.0, 1.0))
+def test_apply_matches_ref(n, seed, dtype, tq):
+    g, m = _vecs(n, seed, dtype)
+    thresh = float(tq) * float(ref.maxabs(g, m))
+    got = tk.ef_threshold_apply(g, m, thresh, block=BLOCK)
+    want = ref.ef_threshold_apply(g, m, thresh)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=sizes, seed=seeds, tq=st.floats(0.0, 1.0))
+def test_apply_conservation_invariant(n, seed, tq):
+    """out + m_new == g + m exactly (error-feedback conservation)."""
+    g, m = _vecs(n, seed, jnp.float32)
+    thresh = float(tq) * float(ref.maxabs(g, m))
+    out, m_new, nnz = tk.ef_threshold_apply(g, m, thresh, block=BLOCK)
+    np.testing.assert_array_equal(np.asarray(out + m_new), np.asarray(g + m))
+    # kept and residual have disjoint supports
+    assert not np.any((np.asarray(out) != 0) & (np.asarray(m_new) != 0))
+    assert int(nnz) == int(np.count_nonzero(np.abs(np.asarray(g + m)) >= thresh))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(64, 4000), seed=seeds, frac=st.floats(0.01, 0.5))
+def test_histogram_threshold_rank_accuracy(n, seed, frac):
+    """The histogram-CDF threshold selects ~r elements (within one bin)."""
+    g, m = _vecs(n, seed, jnp.float32)
+    r = max(1, int(n * frac))
+    acc = np.abs(np.asarray(g) + np.asarray(m))
+    hi = float(np.log(acc.max() + 1e-30))
+    lo = hi - 16.0
+    hist = np.asarray(tk.magnitude_histogram(g, m, lo, hi, block=BLOCK))
+    nbins = hist.shape[0]
+    # walk bins from the top until >= r elements are above the edge
+    cum = 0
+    edge_idx = nbins
+    while edge_idx > 0 and cum < r:
+        edge_idx -= 1
+        cum += hist[edge_idx]
+    thresh = float(np.exp(lo + (hi - lo) * edge_idx / nbins))
+    selected = int((acc >= thresh).sum())
+    # one log-bin of slack on each side
+    lo_bound = r
+    hi_bound = r + int(hist[edge_idx])
+    assert lo_bound <= selected <= max(hi_bound, r), (selected, r, hist[edge_idx])
+
+
+def test_zero_input_all_bin_zero():
+    g = jnp.zeros((100,))
+    m = jnp.zeros((100,))
+    hist = tk.magnitude_histogram(g, m, jnp.float32(-10.0), jnp.float32(0.0), block=BLOCK)
+    assert int(hist[0]) == 100
+    assert int(hist.sum()) == 100
+
+
+def test_apply_inf_threshold_keeps_nothing():
+    g, m = _vecs(257, 7, jnp.float32)
+    out, m_new, nnz = tk.ef_threshold_apply(g, m, jnp.inf, block=BLOCK)
+    assert int(nnz) == 0
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    np.testing.assert_allclose(np.asarray(m_new), np.asarray(g + m))
+
+
+def test_apply_zero_threshold_keeps_everything():
+    g, m = _vecs(257, 8, jnp.float32)
+    out, m_new, nnz = tk.ef_threshold_apply(g, m, 0.0, block=BLOCK)
+    assert int(nnz) == 257
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g + m))
+
+
+@pytest.mark.parametrize("n", [1, BLOCK - 1, BLOCK, BLOCK + 1, 3 * BLOCK])
+def test_block_boundaries(n):
+    g, m = _vecs(n, 13, jnp.float32)
+    got = tk.maxabs(g, m, block=BLOCK)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.maxabs(g, m)), rtol=1e-6)
+    hi = jnp.log(got + 1e-30)
+    lo = hi - 16.0
+    np.testing.assert_array_equal(
+        np.asarray(tk.magnitude_histogram(g, m, lo, hi, block=BLOCK)),
+        np.asarray(ref.magnitude_histogram(g, m, lo, hi)),
+    )

@@ -1,0 +1,131 @@
+"""L2 model checks: shapes, flat ABI, gradient correctness, loss sanity."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+
+
+@pytest.fixture(scope="module")
+def lm():
+    return model_lib.build("lm_tiny")
+
+
+@pytest.fixture(scope="module")
+def cnn():
+    return model_lib.build("cnn_tiny")
+
+
+def _lm_batch(fm, seed=0):
+    cfg = fm.meta
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (cfg["batch"], cfg["seq"] + 1), 0, cfg["vocab"], jnp.int32
+    )
+
+
+def _cnn_batch(fm, seed=0):
+    cfg = fm.meta
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    images = jax.random.normal(k1, (cfg["batch"], cfg["image"], cfg["image"], 3))
+    labels = jax.random.randint(k2, (cfg["batch"],), 0, cfg["classes"], jnp.int32)
+    return images, labels
+
+
+def test_lm_flat_roundtrip_dims(lm):
+    assert lm.init_flat.shape == (lm.dim,)
+    assert lm.init_flat.dtype == jnp.float32
+
+
+def test_lm_train_step_shapes(lm):
+    loss, grads = jax.jit(lm.train_step)(lm.init_flat, _lm_batch(lm))
+    assert loss.shape == () and grads.shape == (lm.dim,)
+    assert np.isfinite(float(loss)) and np.all(np.isfinite(np.asarray(grads)))
+
+
+def test_lm_initial_loss_near_uniform(lm):
+    """Fresh init => loss ~ log(vocab)."""
+    loss, _ = jax.jit(lm.train_step)(lm.init_flat, _lm_batch(lm))
+    expect = np.log(lm.meta["vocab"])
+    assert abs(float(loss) - expect) < 0.5, (float(loss), expect)
+
+
+def test_lm_grad_descent_reduces_loss(lm):
+    tokens = _lm_batch(lm)
+    step = jax.jit(lm.train_step)
+    flat = lm.init_flat
+    loss0, g = step(flat, tokens)
+    for _ in range(5):
+        flat = flat - 0.5 * g
+        loss, g = step(flat, tokens)
+    assert float(loss) < float(loss0), "SGD on one batch must overfit it"
+
+
+def test_lm_grad_matches_finite_difference(lm):
+    tokens = _lm_batch(lm, seed=3)
+    step = jax.jit(lm.train_step)
+    flat = lm.init_flat
+    _, g = step(flat, tokens)
+    rng = np.random.default_rng(0)
+    idx = rng.choice(lm.dim, size=5, replace=False)
+    eps = 1e-3
+    for i in idx:
+        e = jnp.zeros((lm.dim,)).at[i].set(eps)
+        lp, _ = step(flat + e, tokens)
+        lm_, _ = step(flat - e, tokens)
+        fd = (float(lp) - float(lm_)) / (2 * eps)
+        assert abs(fd - float(g[i])) < 5e-2 * max(1.0, abs(fd)), (i, fd, float(g[i]))
+
+
+def test_lm_eval_step_perplexity_consistent(lm):
+    tokens = _lm_batch(lm)
+    nll_sum, count = jax.jit(lm.eval_step)(lm.init_flat, tokens)
+    loss, _ = jax.jit(lm.train_step)(lm.init_flat, tokens)
+    np.testing.assert_allclose(float(nll_sum) / float(count), float(loss), rtol=1e-5)
+
+
+def test_cnn_train_step_shapes(cnn):
+    images, labels = _cnn_batch(cnn)
+    loss, grads = jax.jit(cnn.train_step)(cnn.init_flat, images, labels)
+    assert loss.shape == () and grads.shape == (cnn.dim,)
+    assert np.isfinite(float(loss))
+
+
+def test_cnn_initial_loss_near_uniform(cnn):
+    # He-init on unit-normal noise images spreads the logits, so the slack
+    # is wider than the LM case (which starts essentially uniform).
+    images, labels = _cnn_batch(cnn)
+    loss, _ = jax.jit(cnn.train_step)(cnn.init_flat, images, labels)
+    assert abs(float(loss) - np.log(cnn.meta["classes"])) < 1.5
+
+
+def test_cnn_eval_counts(cnn):
+    images, labels = _cnn_batch(cnn)
+    correct, count = jax.jit(cnn.eval_step)(cnn.init_flat, images, labels)
+    assert 0 <= float(correct) <= float(count) == cnn.meta["batch"]
+
+
+def test_cnn_overfits_one_batch(cnn):
+    images, labels = _cnn_batch(cnn, seed=9)
+    step = jax.jit(cnn.train_step)
+    flat = cnn.init_flat
+    loss0, g = step(flat, images, labels)
+    for _ in range(20):
+        flat = flat - 0.5 * g
+        loss, g = step(flat, images, labels)
+    assert float(loss) < 0.5 * float(loss0)
+
+
+def test_build_unknown_preset_raises():
+    with pytest.raises(KeyError):
+        model_lib.build("nope")
+
+
+@pytest.mark.parametrize("name", sorted(model_lib.LM_PRESETS))
+def test_lm_presets_consistent(name):
+    cfg = model_lib.LM_PRESETS[name]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert cfg.seq % min(128, cfg.seq) == 0  # attention block divisibility

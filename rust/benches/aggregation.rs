@@ -1,0 +1,65 @@
+//! Leader-side aggregation benchmark: decode n worker messages and
+//! average into the dense update buffer, plus the optimizer step —
+//! everything the leader does per round except the broadcast.
+
+use rtopk::comms::codec::{decode, encode, CodecConfig};
+use rtopk::optim::{MomentumSgd, Optimizer};
+use rtopk::sparsify::SparseVec;
+use rtopk::util::bench::{bb, Bench};
+use rtopk::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("aggregation");
+    let mut rng = Rng::new(0);
+    let n = 5;
+
+    for &d in &[100_000usize, 1_000_000] {
+        let k = d / 1000;
+        // pre-encode n messages
+        let messages: Vec<Vec<u8>> = (0..n)
+            .map(|_| {
+                let mut idx = rng.sample_indices(d, k);
+                idx.sort_unstable();
+                let sv = SparseVec {
+                    dim: d,
+                    idx: idx.iter().map(|&i| i as u32).collect(),
+                    val: (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                };
+                let mut buf = Vec::new();
+                encode(&sv, CodecConfig::default(), &mut buf);
+                buf
+            })
+            .collect();
+
+        let mut agg = vec![0.0f32; d];
+        let mut sparse = SparseVec::default();
+        bench.run_elems(&format!("decode+average/n={n}/d={d}/k={k}"), Some(n * k), || {
+            agg.iter_mut().for_each(|a| *a = 0.0);
+            for msg in &messages {
+                decode(msg, &mut sparse).unwrap();
+                sparse.add_scaled_into(1.0 / n as f32, &mut agg);
+            }
+            bb(agg[0]);
+        });
+
+        let mut params = vec![0.0f32; d];
+        let mut opt = MomentumSgd::new(d, 0.1, 0.9);
+        bench.run_elems(&format!("optimizer/momentum/d={d}"), Some(d), || {
+            opt.step(&mut params, &agg);
+            bb(params[0]);
+        });
+
+        // the full leader round body
+        let mut params2 = vec![0.0f32; d];
+        let mut opt2 = MomentumSgd::new(d, 0.1, 0.9);
+        bench.run_elems(&format!("leader-round/n={n}/d={d}/k={k}"), Some(d), || {
+            agg.iter_mut().for_each(|a| *a = 0.0);
+            for msg in &messages {
+                decode(msg, &mut sparse).unwrap();
+                sparse.add_scaled_into(1.0 / n as f32, &mut agg);
+            }
+            opt2.step(&mut params2, &agg);
+            bb(params2[0]);
+        });
+    }
+}

@@ -1,0 +1,46 @@
+//! Sparse message codec benchmarks: encode/decode across formats and
+//! sparsity levels (the per-round wire cost of Algorithm 1).
+
+use rtopk::comms::codec::{decode, encode, CodecConfig, IndexFormat, ValueFormat};
+use rtopk::sparsify::SparseVec;
+use rtopk::util::bench::{bb, Bench};
+use rtopk::util::rng::Rng;
+
+fn random_sparse(rng: &mut Rng, dim: usize, nnz: usize) -> SparseVec {
+    let mut idx = rng.sample_indices(dim, nnz);
+    idx.sort_unstable();
+    SparseVec {
+        dim,
+        idx: idx.iter().map(|&i| i as u32).collect(),
+        val: (0..nnz).map(|_| rng.normal_f32(0.0, 2.0)).collect(),
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new("codec");
+    let mut rng = Rng::new(0);
+    let d = 1_000_000;
+
+    for &nnz in &[1_000usize, 10_000, 100_000] {
+        let sv = random_sparse(&mut rng, d, nnz);
+        let mut buf = Vec::new();
+        let mut back = SparseVec::default();
+
+        for (label, cfg) in [
+            ("fixed-f32", CodecConfig { values: ValueFormat::F32, indices: IndexFormat::FixedWidth }),
+            ("varint-f32", CodecConfig { values: ValueFormat::F32, indices: IndexFormat::DeltaVarint }),
+            ("fixed-bf16", CodecConfig { values: ValueFormat::Bf16, indices: IndexFormat::FixedWidth }),
+        ] {
+            bench.run_elems(&format!("encode/{label}/nnz={nnz}"), Some(nnz), || {
+                encode(&sv, cfg, &mut buf);
+                bb(buf.len());
+            });
+            encode(&sv, cfg, &mut buf);
+            bench.run_elems(&format!("decode/{label}/nnz={nnz}"), Some(nnz), || {
+                decode(&buf, &mut back).unwrap();
+                bb(back.nnz());
+            });
+            println!("    ({label} nnz={nnz}: {} bytes vs dense {})", buf.len(), 4 * d);
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! End-to-end round benchmark: full Algorithm-1 rounds over the in-process
+//! cluster (MockModel gradients so the measurement isolates coordinator
+//! cost: broadcast + worker sparsify/encode + leader decode/average/step).
+//!
+//! This is the bench behind the paper's implicit systems claim: the
+//! sparsification machinery must cost far less than the gradient compute
+//! it saves communication for.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use rtopk::coordinator::{self, OptimKind, TrainConfig, WorkerFactory, WorkerSetup};
+use rtopk::optim::LrSchedule;
+use rtopk::runtime::{Batch, MockModel};
+use rtopk::sparsify::SparsifierKind;
+use rtopk::util::bench::Bench;
+
+fn mock_factory(dim: usize) -> WorkerFactory {
+    Arc::new(move |node| {
+        let mut counter = node as u64 * 1_000_000;
+        Ok(WorkerSetup {
+            runtime: Box::new(MockModel::new(dim, 0.05, 42)),
+            next_batch: Box::new(move |_rng| {
+                counter += 1;
+                Batch::Seed(counter)
+            }),
+            batches_per_epoch: 1_000_000, // irrelevant here
+        })
+    })
+}
+
+fn run_rounds(dim: usize, method: SparsifierKind, compression: f64, rounds: u64) -> f64 {
+    let mut cfg = TrainConfig::image_default(5, method, compression);
+    cfg.rounds = rounds;
+    cfg.warmup_epochs = 0.0;
+    cfg.optim = OptimKind::Sgd { clip: None };
+    cfg.lr = LrSchedule::constant(0.1);
+    cfg.eval_every = rounds + 1;
+    let t0 = Instant::now();
+    let res = coordinator::run(
+        &cfg,
+        "bench",
+        vec![0.0; dim],
+        mock_factory(dim),
+        Box::new(|| Ok(None)),
+    )
+    .unwrap();
+    assert_eq!(res.metrics.records.len() as u64, rounds);
+    t0.elapsed().as_secs_f64() * 1e3 / rounds as f64
+}
+
+fn main() {
+    let quick = std::env::var("RTOPK_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let _ = Bench::new("end_to_end_round"); // header formatting
+    let rounds = if quick { 5 } else { 20 };
+    println!("(ms per round, 5 nodes, MockModel gradients)");
+    for &dim in &[100_000usize, 1_000_000] {
+        for (method, compression) in [
+            (SparsifierKind::Baseline, 0.0),
+            (SparsifierKind::TopK, 0.999),
+            (SparsifierKind::RandomK, 0.999),
+            (SparsifierKind::RTopK, 0.999),
+        ] {
+            let ms = run_rounds(dim, method, compression, rounds);
+            println!(
+                "round/{:?}@{:.1}%/d={dim}: {ms:9.3} ms/round",
+                method,
+                100.0 * compression
+            );
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Estimation-simulator benchmarks: cost of one simulated round and of a
+//! full Monte-Carlo risk point at the figT1 configuration.
+
+use rtopk::estimation::{
+    estimate_risk,
+    schemes::{simulate_round, SubsampleScheme, TruncationScheme},
+    SparseBernoulli, ThetaPrior,
+};
+use rtopk::util::bench::{bb, Bench};
+use rtopk::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("estimation");
+    let mut rng = Rng::new(0);
+    let (d, s, n, k) = (512usize, 32.0f64, 10usize, 100usize);
+    let model = SparseBernoulli::new(d, s);
+    let theta = model.sample_theta(ThetaPrior::HardSparse, &mut rng);
+    let sub = SubsampleScheme { preprocess: false };
+    let trunc = TruncationScheme;
+
+    bench.run_elems(&format!("round/subsample/d={d}/n={n}"), Some(n * d), || {
+        bb(simulate_round(&model, &theta, &sub, n, k, &mut rng));
+    });
+    bench.run_elems(&format!("round/truncate/d={d}/n={n}"), Some(n * d), || {
+        bb(simulate_round(&model, &theta, &trunc, n, k, &mut rng));
+    });
+    bench.run_elems("risk-point/subsample/100-trials", Some(100 * n * d), || {
+        bb(estimate_risk(&model, &sub, n, k, ThetaPrior::HardSparse, 100, &mut rng).risk);
+    });
+}

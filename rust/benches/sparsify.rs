@@ -1,0 +1,73 @@
+//! Sparsification hot-path benchmarks (EXPERIMENTS.md §Perf, L3).
+//!
+//! Covers the selection strategies (exact quickselect vs full sort vs
+//! histogram threshold), the operators at paper-realistic k/d, and the
+//! fused error-feedback step.
+
+use rtopk::sparsify::{
+    select_top_r, threshold_for_rank, CompressionOperator, ErrorFeedback, MagnitudeHistogram,
+    RTopK, RandomK, SparseVec, Threshold, TopK,
+};
+use rtopk::util::bench::{bb, Bench};
+use rtopk::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new("sparsify");
+    let mut rng = Rng::new(0);
+
+    for &d in &[100_000usize, 1_000_000] {
+        let w = rng.normal_vec(d, 0.0, 1.0);
+        let k = d / 1000; // 99.9% compression
+        let r = k * 5; // paper's k/r = 1/5
+
+        // -- selection strategies --
+        let mut scratch = Vec::new();
+        bench.run_elems(&format!("select/quickselect/d={d}/r={r}"), Some(d), || {
+            bb(select_top_r(&w, r, &mut scratch));
+        });
+        bench.run_elems(&format!("select/full-sort/d={d}/r={r}"), Some(d), || {
+            let mut order: Vec<u32> = (0..d as u32).collect();
+            order.sort_unstable_by(|&a, &b| {
+                w[b as usize]
+                    .abs()
+                    .partial_cmp(&w[a as usize].abs())
+                    .unwrap()
+            });
+            bb(&order[..r]);
+        });
+        bench.run_elems(&format!("select/histogram/d={d}/r={r}"), Some(d), || {
+            let h = MagnitudeHistogram::build(&w, 128);
+            bb(threshold_for_rank(&h, r));
+        });
+
+        // -- operators --
+        let mut out = SparseVec::with_capacity(d, r);
+        let topk = TopK::new(k);
+        bench.run_elems(&format!("op/topk/d={d}/k={k}"), Some(d), || {
+            topk.compress(&w, &mut rng, &mut out);
+            bb(out.nnz());
+        });
+        let randk = RandomK::new(k);
+        bench.run_elems(&format!("op/randomk/d={d}/k={k}"), Some(d), || {
+            randk.compress(&w, &mut rng, &mut out);
+            bb(out.nnz());
+        });
+        let rtopk = RTopK::new(k, r);
+        bench.run_elems(&format!("op/rtopk/d={d}/k={k}/r={r}"), Some(d), || {
+            rtopk.compress(&w, &mut rng, &mut out);
+            bb(out.nnz());
+        });
+        let thr = Threshold::Rank(r);
+        bench.run_elems(&format!("op/threshold-rank/d={d}/r={r}"), Some(d), || {
+            thr.compress(&w, &mut rng, &mut out);
+            bb(out.nnz());
+        });
+
+        // -- fused error-feedback step (the per-round worker cost) --
+        let mut ef = ErrorFeedback::new(d);
+        bench.run_elems(&format!("ef/step-rtopk/d={d}/k={k}"), Some(d), || {
+            ef.step(&w, &rtopk, &mut rng, &mut out);
+            bb(out.nnz());
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! Communication substrate: message codec + transports with exact byte
+//! accounting (compression ratios in the experiment tables are *measured*
+//! from these counters, never assumed).
+
+pub mod codec;
+pub mod tcp;
+pub mod transport;
+
+pub use codec::{decode, encode, CodecConfig, IndexFormat, ValueFormat};
+pub use transport::{star, LeaderEndpoints, Message, WorkerEndpoints};

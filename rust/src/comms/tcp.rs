@@ -1,0 +1,350 @@
+//! TCP transport: the same star topology over real sockets.
+//!
+//! Used for multi-process deployments (`rtopk train --transport tcp ...`)
+//! and to validate that the simulated transport's accounting matches what
+//! a real network stack would carry. Framing: 1-byte message tag, u64
+//! round, then tag-specific payload with u32 length prefixes.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+use super::transport::Message;
+
+const TAG_PARAMS: u8 = 1;
+const TAG_UPDATE: u8 = 2;
+const TAG_SHUTDOWN: u8 = 3;
+
+/// Serialize a message to its wire frame.
+pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
+    match msg {
+        Message::Params { round, data } => {
+            w.write_all(&[TAG_PARAMS])?;
+            w.write_all(&round.to_le_bytes())?;
+            w.write_all(&(data.len() as u32).to_le_bytes())?;
+            // bulk little-endian f32s
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for &x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        Message::SparseUpdate { round, worker, payload, loss, examples, mem_norm } => {
+            w.write_all(&[TAG_UPDATE])?;
+            w.write_all(&round.to_le_bytes())?;
+            w.write_all(&(*worker as u32).to_le_bytes())?;
+            w.write_all(&loss.to_le_bytes())?;
+            w.write_all(&examples.to_le_bytes())?;
+            w.write_all(&mem_norm.to_le_bytes())?;
+            w.write_all(&(payload.len() as u32).to_le_bytes())?;
+            w.write_all(payload)?;
+        }
+        Message::Shutdown => {
+            w.write_all(&[TAG_SHUTDOWN])?;
+            w.write_all(&0u64.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one message frame.
+pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let mut round_b = [0u8; 8];
+    r.read_exact(&mut round_b)?;
+    let round = u64::from_le_bytes(round_b);
+    match tag[0] {
+        TAG_PARAMS => {
+            let mut len_b = [0u8; 4];
+            r.read_exact(&mut len_b)?;
+            let len = u32::from_le_bytes(len_b) as usize;
+            let mut buf = vec![0u8; len * 4];
+            r.read_exact(&mut buf)?;
+            let data = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Ok(Message::Params { round, data })
+        }
+        TAG_UPDATE => {
+            let mut w_b = [0u8; 4];
+            r.read_exact(&mut w_b)?;
+            let worker = u32::from_le_bytes(w_b) as usize;
+            let mut l_b = [0u8; 4];
+            r.read_exact(&mut l_b)?;
+            let loss = f32::from_le_bytes(l_b);
+            let mut e_b = [0u8; 8];
+            r.read_exact(&mut e_b)?;
+            let examples = u64::from_le_bytes(e_b);
+            let mut mn_b = [0u8; 4];
+            r.read_exact(&mut mn_b)?;
+            let mem_norm = f32::from_le_bytes(mn_b);
+            let mut len_b = [0u8; 4];
+            r.read_exact(&mut len_b)?;
+            let len = u32::from_le_bytes(len_b) as usize;
+            let mut payload = vec![0u8; len];
+            r.read_exact(&mut payload)?;
+            Ok(Message::SparseUpdate { round, worker, payload, loss, examples, mem_norm })
+        }
+        TAG_SHUTDOWN => Ok(Message::Shutdown),
+        t => anyhow::bail!("unknown message tag {t}"),
+    }
+}
+
+/// Leader side: bind, accept `n` workers, return their streams in worker-id
+/// order (workers send their id as a 4-byte hello).
+pub fn accept_workers(listener: &TcpListener, n: usize) -> anyhow::Result<Vec<TcpStream>> {
+    let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (mut stream, _) = listener.accept()?;
+        stream.set_nodelay(true)?;
+        let mut id_b = [0u8; 4];
+        stream.read_exact(&mut id_b)?;
+        let id = u32::from_le_bytes(id_b) as usize;
+        anyhow::ensure!(id < n, "worker id {id} out of range");
+        anyhow::ensure!(slots[id].is_none(), "duplicate worker id {id}");
+        slots[id] = Some(stream);
+    }
+    Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+}
+
+/// Worker side: connect and say hello with our id.
+pub fn connect_worker(addr: &str, id: usize) -> anyhow::Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.write_all(&(id as u32).to_le_bytes())?;
+    Ok(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip_all_variants() {
+        let msgs = vec![
+            Message::Params { round: 7, data: vec![1.0, -2.5, 3.25] },
+            Message::SparseUpdate {
+                round: 8,
+                worker: 3,
+                payload: vec![1, 2, 3, 4, 5],
+                loss: 0.25,
+                examples: 128,
+                mem_norm: 1.5,
+            },
+            Message::Shutdown,
+        ];
+        for msg in msgs {
+            let mut buf = Vec::new();
+            write_message(&mut buf, &msg).unwrap();
+            let back = read_message(&mut &buf[..]).unwrap();
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn loopback_star() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let n = 3;
+        let handles: Vec<_> = (0..n)
+            .map(|id| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut s = connect_worker(&addr, id).unwrap();
+                    let msg = read_message(&mut s).unwrap();
+                    assert!(matches!(msg, Message::Params { round: 1, .. }));
+                    write_message(
+                        &mut s,
+                        &Message::SparseUpdate {
+                            round: 1,
+                            worker: id,
+                            payload: vec![id as u8; 4],
+                            loss: 0.0,
+                            examples: 1,
+                            mem_norm: 0.5,
+                        },
+                    )
+                    .unwrap();
+                })
+            })
+            .collect();
+        let mut streams = accept_workers(&listener, n).unwrap();
+        for s in streams.iter_mut() {
+            write_message(s, &Message::Params { round: 1, data: vec![0.5; 8] }).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for s in streams.iter_mut() {
+            match read_message(s).unwrap() {
+                Message::SparseUpdate { worker, payload, .. } => {
+                    assert_eq!(payload, vec![worker as u8; 4]);
+                    seen.insert(worker);
+                }
+                _ => panic!("unexpected"),
+            }
+        }
+        assert_eq!(seen.len(), n);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP-bridged star: the coordinator's channel topology carried over real
+// loopback sockets (one forwarding thread pair per direction per worker).
+// Used by `rtopk train --transport tcp` and the transport-equivalence
+// integration test — byte counters then reflect what the kernel's TCP
+// stack actually carried.
+// ---------------------------------------------------------------------------
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+
+use super::transport::{CountedSender, LeaderEndpoints, LinkStats, WorkerEndpoints};
+
+/// Build a star topology over loopback TCP. Drop-in replacement for
+/// [`super::transport::star`]; forwarding threads are detached and exit
+/// when their socket or channel closes (after `Shutdown`).
+pub fn tcp_star(n: usize) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoints>)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+
+    // Workers connect from background threads while the leader accepts.
+    let connectors: Vec<_> = (0..n)
+        .map(|id| {
+            let addr = addr.clone();
+            std::thread::spawn(move || connect_worker(&addr, id))
+        })
+        .collect();
+    let leader_streams = accept_workers(&listener, n)?;
+    let worker_streams: Vec<TcpStream> = connectors
+        .into_iter()
+        .map(|h| h.join().expect("connector thread panicked"))
+        .collect::<anyhow::Result<_>>()?;
+
+    let (up_tx, up_rx) = channel::<Message>();
+    let mut to_workers = Vec::with_capacity(n);
+    let mut workers = Vec::with_capacity(n);
+    let mut down_stats = Vec::with_capacity(n);
+    let mut up_stats = Vec::with_capacity(n);
+
+    for (id, (leader_sock, worker_sock)) in
+        leader_streams.into_iter().zip(worker_streams).enumerate()
+    {
+        let down = Arc::new(LinkStats::default());
+        let up = Arc::new(LinkStats::default());
+
+        // leader -> socket
+        let (dl_tx, dl_rx) = channel::<Message>();
+        let mut sock_w = leader_sock.try_clone()?;
+        std::thread::spawn(move || {
+            while let Ok(msg) = dl_rx.recv() {
+                let quit = matches!(msg, Message::Shutdown);
+                if write_message(&mut sock_w, &msg).is_err() || quit {
+                    return;
+                }
+            }
+        });
+        // socket -> leader inbox
+        let mut sock_r = leader_sock;
+        let up_tx_clone = up_tx.clone();
+        std::thread::spawn(move || {
+            while let Ok(msg) = read_message(&mut sock_r) {
+                if up_tx_clone.send(msg).is_err() {
+                    return;
+                }
+            }
+        });
+        // worker side: socket -> worker inbox
+        let (wk_tx, wk_rx) = channel::<Message>();
+        let mut wsock_r = worker_sock.try_clone()?;
+        std::thread::spawn(move || {
+            while let Ok(msg) = read_message(&mut wsock_r) {
+                let quit = matches!(msg, Message::Shutdown);
+                if wk_tx.send(msg).is_err() || quit {
+                    return;
+                }
+            }
+        });
+        // worker outbox -> socket
+        let (wo_tx, wo_rx) = channel::<Message>();
+        let mut wsock_w = worker_sock;
+        std::thread::spawn(move || {
+            while let Ok(msg) = wo_rx.recv() {
+                if write_message(&mut wsock_w, &msg).is_err() {
+                    return;
+                }
+            }
+        });
+
+        to_workers.push(CountedSender::new(dl_tx, down.clone()));
+        workers.push(WorkerEndpoints {
+            id,
+            from_leader: wk_rx,
+            to_leader: CountedSender::new(wo_tx, up.clone()),
+        });
+        down_stats.push(down);
+        up_stats.push(up);
+    }
+    Ok((
+        LeaderEndpoints { to_workers, from_workers: up_rx, down_stats, up_stats },
+        workers,
+    ))
+}
+
+#[cfg(test)]
+mod bridge_tests {
+    use super::*;
+
+    #[test]
+    fn tcp_star_roundtrip() {
+        let (leader, workers) = tcp_star(2).unwrap();
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|w| {
+                std::thread::spawn(move || loop {
+                    match w.from_leader.recv() {
+                        Ok(Message::Params { round, data }) => {
+                            w.to_leader
+                                .send(Message::SparseUpdate {
+                                    round,
+                                    worker: w.id,
+                                    payload: vec![w.id as u8; 3],
+                                    loss: data[0],
+                                    examples: 1,
+                                    mem_norm: 0.0,
+                                })
+                                .unwrap();
+                        }
+                        _ => return,
+                    }
+                })
+            })
+            .collect();
+        for round in 0..3u64 {
+            for tx in &leader.to_workers {
+                tx.send(Message::Params { round, data: vec![round as f32; 4] }).unwrap();
+            }
+            for _ in 0..2 {
+                match leader.from_workers.recv().unwrap() {
+                    Message::SparseUpdate { round: r, loss, .. } => {
+                        assert_eq!(r, round);
+                        assert_eq!(loss, round as f32);
+                    }
+                    _ => panic!("unexpected"),
+                }
+            }
+        }
+        for tx in &leader.to_workers {
+            tx.send(Message::Shutdown).unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // counters recorded traffic
+        assert!(leader.down_stats[0].snapshot().1 > 0);
+        assert!(leader.up_stats[0].snapshot().1 > 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Experiment configuration for distributed training runs (Algorithm 1).
+
+use crate::comms::CodecConfig;
+use crate::optim::{LrSchedule, WarmupSparsity};
+use crate::sparsify::{
+    CompressionOperator, NoCompression, RTopK, RandomK, SparsifierKind, Threshold, TopK,
+};
+
+/// What one communication round means (paper §IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Each node trains on ONE local batch per round ("distributed").
+    Distributed,
+    /// Each node trains one local epoch per round ("federated").
+    Federated,
+}
+
+/// Which optimizer the leader applies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimKind {
+    /// Momentum SGD (the paper's image setup).
+    Momentum(f32),
+    /// Vanilla SGD with optional global-norm clipping (the paper's PTB setup).
+    Sgd { clip: Option<f32> },
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub nodes: usize,
+    pub rounds: u64,
+    pub mode: RoundMode,
+    pub method: SparsifierKind,
+    /// Target kept fraction k/d (compression ratio = 1 - keep_frac).
+    pub keep_frac: f64,
+    /// k/r for rTop-k. The paper fixes it to 1/n ("each top parameter is
+    /// updated by one node in expectation").
+    pub subsample_ratio: f64,
+    /// DGC warm-up epochs (paper uses 5). Fractional values supported so
+    /// short CPU-scale runs can warm up over a fraction of an epoch.
+    pub warmup_epochs: f64,
+    pub error_feedback: bool,
+    pub lr: LrSchedule,
+    pub optim: OptimKind,
+    pub eval_every: u64,
+    pub codec: CodecConfig,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// The paper's image-domain defaults at a given compression ratio.
+    pub fn image_default(nodes: usize, method: SparsifierKind, compression: f64) -> Self {
+        TrainConfig {
+            nodes,
+            rounds: 200,
+            mode: RoundMode::Distributed,
+            method,
+            keep_frac: 1.0 - compression,
+            subsample_ratio: 1.0 / nodes as f64,
+            warmup_epochs: 5.0,
+            error_feedback: true,
+            lr: LrSchedule::steps(0.05, &[60, 120], 0.2),
+            optim: OptimKind::Momentum(0.9),
+            eval_every: 10,
+            codec: CodecConfig::default(),
+            seed: 0xD15C0,
+        }
+    }
+
+    /// The paper's language-domain defaults.
+    pub fn lm_default(nodes: usize, method: SparsifierKind, compression: f64) -> Self {
+        TrainConfig {
+            nodes,
+            rounds: 300,
+            mode: RoundMode::Distributed,
+            method,
+            keep_frac: 1.0 - compression,
+            subsample_ratio: 1.0 / nodes as f64,
+            warmup_epochs: 5.0,
+            error_feedback: true,
+            lr: LrSchedule::steps(1.0, &[15, 25], 0.5),
+            optim: OptimKind::Sgd { clip: Some(0.25) },
+            eval_every: 20,
+            codec: CodecConfig::default(),
+            seed: 0x17B,
+        }
+    }
+
+    pub fn warmup(&self) -> WarmupSparsity {
+        match self.method {
+            // Baseline never sparsifies; warm-up is a no-op.
+            SparsifierKind::Baseline => WarmupSparsity::none(1.0),
+            _ => WarmupSparsity::new(self.keep_frac.max(1e-9), self.warmup_epochs),
+        }
+    }
+
+    /// Build the sparsifier for a given k at dimension d (k follows the
+    /// warm-up schedule, so operators are reconstructed per round; all of
+    /// them are cheap to construct).
+    pub fn operator_for(&self, k: usize, dim: usize) -> Box<dyn CompressionOperator> {
+        let k = k.clamp(1, dim);
+        match self.method {
+            SparsifierKind::Baseline => Box::new(NoCompression),
+            SparsifierKind::TopK => Box::new(TopK::new(k)),
+            SparsifierKind::RandomK => Box::new(RandomK::new(k)),
+            SparsifierKind::RTopK => {
+                let r = ((k as f64 / self.subsample_ratio).round() as usize).clamp(k, dim);
+                Box::new(RTopK::new(k, r))
+            }
+            SparsifierKind::Threshold => Box::new(Threshold::Rank(k)),
+        }
+    }
+
+    /// Human-readable method label, e.g. "rTop-k @ 99.9%".
+    pub fn method_label(&self) -> String {
+        match self.method {
+            SparsifierKind::Baseline => "Baseline".to_string(),
+            m => format!("{} @ {:.4}%", m.label(), 100.0 * (1.0 - self.keep_frac)),
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.nodes >= 1, "need >= 1 node");
+        anyhow::ensure!(self.rounds >= 1, "need >= 1 round");
+        anyhow::ensure!(
+            self.keep_frac > 0.0 && self.keep_frac <= 1.0,
+            "keep_frac must be in (0, 1], got {}",
+            self.keep_frac
+        );
+        anyhow::ensure!(
+            self.subsample_ratio > 0.0 && self.subsample_ratio <= 1.0,
+            "subsample_ratio must be in (0, 1]"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn operator_dispatch() {
+        let cfg = TrainConfig::image_default(5, SparsifierKind::RTopK, 0.99);
+        let op = cfg.operator_for(10, 1000);
+        assert_eq!(op.name(), "rtop10of50"); // k/r = 1/5
+        let cfg2 = TrainConfig::image_default(5, SparsifierKind::TopK, 0.99);
+        assert_eq!(cfg2.operator_for(10, 1000).name(), "top10");
+    }
+
+    #[test]
+    fn rtopk_r_clamped_to_dim() {
+        let cfg = TrainConfig::image_default(5, SparsifierKind::RTopK, 0.0);
+        let op = cfg.operator_for(900, 1000);
+        // r = 900*5 = 4500 clamps to 1000
+        assert_eq!(op.name(), "rtop900of1000");
+    }
+
+    #[test]
+    fn baseline_warmup_is_noop() {
+        let cfg = TrainConfig::image_default(5, SparsifierKind::Baseline, 0.99);
+        assert_eq!(cfg.warmup().keep_frac(0.0), 1.0);
+    }
+
+    #[test]
+    fn warmup_reaches_target() {
+        let cfg = TrainConfig::image_default(5, SparsifierKind::RTopK, 0.999);
+        let w = cfg.warmup();
+        assert!((w.keep_frac(10.0) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut cfg = TrainConfig::image_default(5, SparsifierKind::TopK, 0.99);
+        cfg.keep_frac = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.keep_frac = 0.5;
+        cfg.nodes = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn labels() {
+        let cfg = TrainConfig::lm_default(5, SparsifierKind::RTopK, 0.999);
+        assert_eq!(cfg.method_label(), "rTop-k @ 99.9000%");
+    }
+}

@@ -1,0 +1,20 @@
+//! The distributed-SGD coordinator — Algorithm 1 of the paper.
+//!
+//! * [`config`] — experiment configuration (round semantics, sparsifier,
+//!   warm-up, optimizer, codec)
+//! * [`worker`] — the per-node loop: local gradient (or local epoch),
+//!   error feedback, sparsify, encode, send
+//! * [`leader`] — broadcast, gather, decode, average, optimizer step,
+//!   metrics, evaluation
+//! * [`cluster`] — thread-per-node orchestration over the in-process star
+//!   transport (TCP variant available in [`crate::comms::tcp`])
+
+pub mod cluster;
+pub mod config;
+pub mod leader;
+pub mod worker;
+
+pub use cluster::{run, run_with, ClusterResult, EvalFactory, Transport, WorkerFactory};
+pub use config::{OptimKind, RoundMode, TrainConfig};
+pub use leader::Evaluator;
+pub use worker::WorkerSetup;

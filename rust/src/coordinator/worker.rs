@@ -1,0 +1,177 @@
+//! The worker-node loop — Algorithm 1's "On Nodes" block.
+//!
+//! Per round: receive omega^t, compute the local (stochastic) gradient
+//! (one batch in distributed mode, one local epoch in federated mode),
+//! compensate with the error memory, sparsify with the scheduled operator,
+//! encode, send. The residual stays in the memory for the next round.
+
+use crate::comms::transport::{Message, WorkerEndpoints};
+use crate::comms::{codec, CodecConfig};
+use crate::runtime::{Batch, ModelRuntime};
+use crate::sparsify::{ErrorFeedback, SparseVec};
+use crate::util::rng::Rng;
+
+use super::config::{RoundMode, TrainConfig};
+
+/// Everything a worker thread owns. Constructed *inside* the thread by the
+/// cluster's factory (model runtimes are not `Send`).
+pub struct WorkerSetup {
+    pub runtime: Box<dyn ModelRuntime>,
+    /// Draws the next local batch.
+    pub next_batch: Box<dyn FnMut(&mut Rng) -> Batch>,
+    /// Batches per local epoch on this shard (drives both federated rounds
+    /// and the warm-up schedule's epoch clock).
+    pub batches_per_epoch: usize,
+}
+
+pub fn run_worker(
+    endpoints: WorkerEndpoints,
+    mut setup: WorkerSetup,
+    cfg: &TrainConfig,
+    mut rng: Rng,
+) -> anyhow::Result<()> {
+    let dim = setup.runtime.dim();
+    let mut ef = if cfg.error_feedback {
+        ErrorFeedback::new(dim)
+    } else {
+        ErrorFeedback::disabled(dim)
+    };
+    let warmup = cfg.warmup();
+    let mut grads: Vec<f32> = Vec::with_capacity(dim);
+    let mut grad_accum: Vec<f32> = vec![0.0; dim];
+    let mut local_params: Vec<f32> = Vec::with_capacity(dim);
+    let mut sparse = SparseVec::with_capacity(dim, 1024);
+    let mut payload: Vec<u8> = Vec::new();
+
+    loop {
+        let (round, params) = match endpoints.from_leader.recv() {
+            Ok(Message::Params { round, data }) => (round, data),
+            Ok(Message::Shutdown) | Err(_) => return Ok(()),
+            Ok(other) => anyhow::bail!("worker got unexpected message {other:?}"),
+        };
+
+        // Epoch clock for schedules.
+        let epoch = match cfg.mode {
+            RoundMode::Distributed => round as f64 / setup.batches_per_epoch as f64,
+            RoundMode::Federated => round as f64,
+        };
+
+        // ---- local gradient / model-update computation ----
+        let (g, loss, examples): (&[f32], f32, u64) = match cfg.mode {
+            RoundMode::Distributed => {
+                let batch = (setup.next_batch)(&mut rng);
+                let loss = setup.runtime.train_step(&params, &batch, &mut grads)?;
+                (&grads, loss, 1)
+            }
+            RoundMode::Federated => {
+                // One local epoch of SGD from omega^t; the communicated
+                // "gradient" is (omega^t - omega_local) / lr  (footnote 1:
+                // g_i is the resultant model update).
+                let lr = cfg.lr.at_epoch(epoch as usize);
+                local_params.clear();
+                local_params.extend_from_slice(&params);
+                let nb = setup.batches_per_epoch;
+                let mut loss_sum = 0.0f64;
+                for _ in 0..nb {
+                    let batch = (setup.next_batch)(&mut rng);
+                    let loss = setup.runtime.train_step(&local_params, &batch, &mut grads)?;
+                    loss_sum += loss as f64;
+                    for (w, &gi) in local_params.iter_mut().zip(&grads) {
+                        *w -= lr * gi;
+                    }
+                }
+                let inv_lr = 1.0 / lr.max(1e-12);
+                for ((a, &w0), &w1) in grad_accum.iter_mut().zip(&params).zip(&local_params) {
+                    *a = (w0 - w1) * inv_lr;
+                }
+                (&grad_accum, (loss_sum / nb as f64) as f32, nb as u64)
+            }
+        };
+
+        // ---- sparsify with the scheduled k ----
+        let k = warmup.k_at(dim, epoch);
+        let op = cfg.operator_for(k, dim);
+        ef.step(g, op.as_ref(), &mut rng, &mut sparse);
+
+        // ---- encode + send ----
+        let codec_cfg: CodecConfig = cfg.codec;
+        codec::encode(&sparse, codec_cfg, &mut payload);
+        endpoints.to_leader.send(Message::SparseUpdate {
+            round,
+            worker: endpoints.id,
+            payload: std::mem::take(&mut payload),
+            loss,
+            examples,
+            mem_norm: ef.memory_l2_sq().sqrt() as f32,
+        })?;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::transport::star;
+    use crate::runtime::MockModel;
+    use crate::sparsify::SparsifierKind;
+
+    fn mock_setup(dim: usize) -> WorkerSetup {
+        let mut counter = 0u64;
+        WorkerSetup {
+            runtime: Box::new(MockModel::new(dim, 0.1, 7)),
+            next_batch: Box::new(move |_rng| {
+                counter += 1;
+                Batch::Seed(counter)
+            }),
+            batches_per_epoch: 4,
+        }
+    }
+
+    #[test]
+    fn worker_round_produces_k_sized_update() {
+        let (leader, mut workers) = star(1);
+        let dim = 128;
+        let mut cfg = TrainConfig::image_default(1, SparsifierKind::TopK, 0.9);
+        cfg.warmup_epochs = 0.0; // no warm-up: k = keep_frac * d immediately
+        let w = workers.remove(0);
+        let handle = std::thread::spawn(move || {
+            run_worker(w, mock_setup(dim), &cfg, Rng::new(0)).unwrap();
+        });
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        let msg = leader.from_workers.recv().unwrap();
+        match msg {
+            Message::SparseUpdate { round, payload, .. } => {
+                assert_eq!(round, 0);
+                let mut sv = SparseVec::default();
+                codec::decode(&payload, &mut sv).unwrap();
+                assert_eq!(sv.dim, dim);
+                assert_eq!(sv.nnz(), 13); // round(0.1 * 128)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn federated_round_runs_one_epoch() {
+        let (leader, mut workers) = star(1);
+        let dim = 64;
+        let mut cfg = TrainConfig::image_default(1, SparsifierKind::Baseline, 0.0);
+        cfg.mode = RoundMode::Federated;
+        let w = workers.remove(0);
+        let handle = std::thread::spawn(move || {
+            run_worker(w, mock_setup(dim), &cfg, Rng::new(1)).unwrap();
+        });
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { examples, .. } => assert_eq!(examples, 4),
+            other => panic!("unexpected {other:?}"),
+        }
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,283 @@
+//! Synthetic token corpus (the Penn Treebank stand-in).
+//!
+//! A hidden-Markov-flavoured generator: tokens follow a first-order Markov
+//! chain whose rows are sparse Zipf-weighted distributions. "Chapters"
+//! (the paper assigns one PTB chapter per node in the federated setting)
+//! each get their own transition structure derived from a shared base plus
+//! chapter-specific perturbation — giving the heterogeneous per-node data
+//! distributions that make the federated PTB experiment interesting.
+//!
+//! A transformer can drive its loss well below the unigram entropy on this
+//! corpus (bigram structure is learnable), so perplexity comparisons
+//! between sparsifiers behave like the paper's.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    /// Tokens per chapter.
+    pub chapter_len: usize,
+    pub chapters: usize,
+    /// Nonzero successors per token row.
+    pub branching: usize,
+    /// 0 = all chapters identical, 1 = fully independent chains.
+    pub heterogeneity: f64,
+    pub seed: u64,
+}
+
+impl CorpusConfig {
+    pub fn ptb_like(vocab: usize, chapters: usize) -> Self {
+        CorpusConfig {
+            vocab,
+            chapter_len: 40_000,
+            chapters,
+            branching: 24,
+            heterogeneity: 0.5,
+            seed: 0x9 + vocab as u64,
+        }
+    }
+}
+
+/// One chapter of generated text.
+#[derive(Debug, Clone)]
+pub struct Chapter {
+    pub tokens: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub cfg: CorpusConfig,
+    pub chapters: Vec<Chapter>,
+    /// Held-out text drawn from the *mixture* of all chapter chains
+    /// (evaluation uses the population distribution, as PTB's test set
+    /// spans the whole corpus).
+    pub test: Vec<u32>,
+}
+
+/// Sparse categorical row: Zipf weights over `branching` successors.
+struct Row {
+    succ: Vec<u32>,
+    cum: Vec<f32>, // cumulative probabilities, last == 1.0
+}
+
+fn make_row(vocab: usize, branching: usize, rng: &mut Rng) -> Row {
+    let succ: Vec<u32> = rng
+        .sample_indices(vocab, branching.min(vocab))
+        .into_iter()
+        .map(|i| i as u32)
+        .collect();
+    // Zipf weights 1/(rank+1)
+    let weights: Vec<f32> = (0..succ.len()).map(|r| 1.0 / (r as f32 + 1.0)).collect();
+    let total: f32 = weights.iter().sum();
+    let mut cum = Vec::with_capacity(weights.len());
+    let mut acc = 0.0;
+    for w in weights {
+        acc += w / total;
+        cum.push(acc);
+    }
+    *cum.last_mut().unwrap() = 1.0;
+    Row { succ, cum }
+}
+
+fn sample_row(row: &Row, rng: &mut Rng) -> u32 {
+    let u = rng.f32();
+    let pos = row.cum.partition_point(|&c| c < u);
+    row.succ[pos.min(row.succ.len() - 1)]
+}
+
+struct Chain {
+    rows: Vec<Row>,
+}
+
+impl Chain {
+    /// Base chain plus per-chapter perturbation: with prob `het` a row is
+    /// replaced by a chapter-specific one.
+    fn chapter_chain(cfg: &CorpusConfig, base_seed: u64, chapter: usize) -> Chain {
+        let mut base_rng = Rng::new(base_seed);
+        let mut chap_rng = Rng::new(base_seed ^ (0xC0DE + chapter as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let rows = (0..cfg.vocab)
+            .map(|_| {
+                let base_row = make_row(cfg.vocab, cfg.branching, &mut base_rng);
+                if chap_rng.bernoulli(cfg.heterogeneity) {
+                    make_row(cfg.vocab, cfg.branching, &mut chap_rng)
+                } else {
+                    base_row
+                }
+            })
+            .collect();
+        Chain { rows }
+    }
+
+    fn generate(&self, len: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut out = Vec::with_capacity(len);
+        let mut cur = rng.index(self.rows.len()) as u32;
+        for _ in 0..len {
+            out.push(cur);
+            cur = sample_row(&self.rows[cur as usize], rng);
+        }
+        out
+    }
+}
+
+pub fn generate(cfg: &CorpusConfig) -> Corpus {
+    let mut root = Rng::new(cfg.seed);
+    let chapters: Vec<Chapter> = (0..cfg.chapters)
+        .map(|c| {
+            let chain = Chain::chapter_chain(cfg, cfg.seed, c);
+            let mut rng = root.fork(10_000 + c as u64);
+            Chapter { tokens: chain.generate(cfg.chapter_len, &mut rng) }
+        })
+        .collect();
+    // test text: alternate segments from each chapter's chain
+    let mut test = Vec::with_capacity(cfg.chapter_len);
+    let seg = (cfg.chapter_len / cfg.chapters.max(1)).max(64);
+    let mut rng = root.fork(99_999);
+    for c in 0..cfg.chapters {
+        let chain = Chain::chapter_chain(cfg, cfg.seed, c);
+        test.extend(chain.generate(seg, &mut rng));
+    }
+    Corpus { cfg: cfg.clone(), chapters, test }
+}
+
+/// Iterate fixed-length (seq+1) training windows over a token stream,
+/// batch-major: fills `out` with batch * (seq+1) i32 tokens.
+pub struct WindowSampler<'a> {
+    tokens: &'a [u32],
+    seq: usize,
+}
+
+impl<'a> WindowSampler<'a> {
+    pub fn new(tokens: &'a [u32], seq: usize) -> Self {
+        assert!(tokens.len() > seq + 1, "stream too short: {} <= {}", tokens.len(), seq + 1);
+        WindowSampler { tokens, seq }
+    }
+
+    /// Sample a batch of random windows (i.i.d. positions).
+    pub fn sample_batch(&self, batch: usize, rng: &mut Rng, out: &mut Vec<i32>) {
+        out.clear();
+        let max_start = self.tokens.len() - (self.seq + 1);
+        for _ in 0..batch {
+            let start = rng.index(max_start + 1);
+            out.extend(
+                self.tokens[start..start + self.seq + 1]
+                    .iter()
+                    .map(|&t| t as i32),
+            );
+        }
+    }
+
+    /// Deterministic sequential batches for evaluation; returns number of
+    /// batches available.
+    pub fn eval_batches(&self, batch: usize) -> usize {
+        (self.tokens.len() - 1) / (self.seq + 1) / batch
+    }
+
+    pub fn eval_batch(&self, batch: usize, idx: usize, out: &mut Vec<i32>) {
+        out.clear();
+        for b in 0..batch {
+            let start = (idx * batch + b) * (self.seq + 1);
+            out.extend(
+                self.tokens[start..start + self.seq + 1]
+                    .iter()
+                    .map(|&t| t as i32),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CorpusConfig {
+        CorpusConfig {
+            vocab: 64,
+            chapter_len: 2_000,
+            chapters: 3,
+            branching: 8,
+            heterogeneity: 0.5,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&small_cfg());
+        let b = generate(&small_cfg());
+        for (ca, cb) in a.chapters.iter().zip(&b.chapters) {
+            assert_eq!(ca.tokens, cb.tokens);
+        }
+        assert_eq!(a.test, b.test);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let c = generate(&small_cfg());
+        for ch in &c.chapters {
+            assert!(ch.tokens.iter().all(|&t| (t as usize) < 64));
+        }
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // Conditional entropy H(next|cur) must be far below log2(vocab):
+        // otherwise the LM experiments cannot separate methods.
+        let c = generate(&small_cfg());
+        let toks = &c.chapters[0].tokens;
+        let v = 64usize;
+        let mut joint = vec![0f64; v * v];
+        let mut marg = vec![0f64; v];
+        for w in toks.windows(2) {
+            joint[w[0] as usize * v + w[1] as usize] += 1.0;
+            marg[w[0] as usize] += 1.0;
+        }
+        let total = (toks.len() - 1) as f64;
+        let mut h_cond = 0.0;
+        for a in 0..v {
+            for b in 0..v {
+                let p_ab = joint[a * v + b] / total;
+                if p_ab > 0.0 {
+                    let p_b_given_a = joint[a * v + b] / marg[a];
+                    h_cond -= p_ab * p_b_given_a.log2();
+                }
+            }
+        }
+        assert!(h_cond < 4.5, "H(next|cur) = {h_cond} bits; log2(64) = 6");
+        assert!(h_cond > 1.0, "chain should not be deterministic: {h_cond}");
+    }
+
+    #[test]
+    fn chapters_are_heterogeneous() {
+        // Different chapters should have visibly different bigram stats.
+        let c = generate(&small_cfg());
+        let v = 64usize;
+        let bigram_counts = |toks: &[u32]| {
+            let mut m = vec![0f64; v * v];
+            for w in toks.windows(2) {
+                m[w[0] as usize * v + w[1] as usize] += 1.0;
+            }
+            let t: f64 = m.iter().sum();
+            m.iter().map(|x| x / t).collect::<Vec<f64>>()
+        };
+        let p0 = bigram_counts(&c.chapters[0].tokens);
+        let p1 = bigram_counts(&c.chapters[1].tokens);
+        let tv: f64 = p0.iter().zip(&p1).map(|(&a, &b)| (a - b).abs()).sum::<f64>() / 2.0;
+        assert!(tv > 0.2, "total variation between chapters {tv}");
+    }
+
+    #[test]
+    fn window_sampler_shapes() {
+        let c = generate(&small_cfg());
+        let ws = WindowSampler::new(&c.chapters[0].tokens, 16);
+        let mut rng = Rng::new(0);
+        let mut out = Vec::new();
+        ws.sample_batch(4, &mut rng, &mut out);
+        assert_eq!(out.len(), 4 * 17);
+        assert!(out.iter().all(|&t| (0..64).contains(&t)));
+        let nb = ws.eval_batches(4);
+        assert!(nb > 0);
+        ws.eval_batch(4, nb - 1, &mut out);
+        assert_eq!(out.len(), 4 * 17);
+    }
+}

@@ -1,0 +1,264 @@
+//! Synthetic structured-image dataset (the CIFAR-10 / ImageNet stand-in).
+//!
+//! No network access and no bundled datasets in this environment, so the
+//! image experiments run on a generated classification task that keeps the
+//! properties the paper's comparison relies on (DESIGN.md §2): learnable
+//! class structure (so accuracy separates methods), per-sample nuisance
+//! variation (noise, shift, brightness — so the task is not trivial), and
+//! deterministic regeneration from a seed (so every sparsifier sees the
+//! same data).
+//!
+//! Each class has a smooth template built from random low-frequency
+//! sinusoids; samples are `template(shifted) * contrast + brightness +
+//! noise`. Difficulty is controlled by the noise scale and the number of
+//! classes.
+
+use crate::util::rng::Rng;
+
+pub const CHANNELS: usize = 3;
+
+#[derive(Debug, Clone)]
+pub struct ImageDatasetConfig {
+    pub classes: usize,
+    pub image: usize,
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+    /// Additive pixel noise sigma ("hardness").
+    pub noise: f32,
+    /// Max circular shift in pixels.
+    pub max_shift: usize,
+    pub seed: u64,
+}
+
+impl ImageDatasetConfig {
+    /// Table I/II analogue: 10 easy-ish classes.
+    pub fn cifar_like() -> Self {
+        ImageDatasetConfig {
+            classes: 10,
+            image: 32,
+            train_per_class: 400,
+            test_per_class: 80,
+            noise: 1.1,
+            max_shift: 6,
+            seed: 0x10AD,
+        }
+    }
+
+    /// Table III analogue: more classes, more nuisance variation.
+    pub fn imagenet_like() -> Self {
+        ImageDatasetConfig {
+            classes: 20,
+            image: 32,
+            train_per_class: 250,
+            test_per_class: 50,
+            noise: 1.5,
+            max_shift: 8,
+            seed: 0x1A6E,
+        }
+    }
+}
+
+/// A labelled image set, NHWC f32.
+#[derive(Debug, Clone)]
+pub struct ImageDataset {
+    pub cfg: ImageDatasetConfig,
+    /// [n * image * image * 3]
+    pub pixels: Vec<f32>,
+    pub labels: Vec<u32>,
+}
+
+impl ImageDataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image_floats(&self) -> usize {
+        self.cfg.image * self.cfg.image * CHANNELS
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let sz = self.image_floats();
+        &self.pixels[i * sz..(i + 1) * sz]
+    }
+
+    /// Gather a batch into caller-provided buffers (no allocation).
+    pub fn gather(&self, ids: &[usize], pixels: &mut Vec<f32>, labels: &mut Vec<i32>) {
+        pixels.clear();
+        labels.clear();
+        for &i in ids {
+            pixels.extend_from_slice(self.image(i));
+            labels.push(self.labels[i] as i32);
+        }
+    }
+}
+
+/// Class template: sum of random low-frequency 2-D sinusoids per channel.
+fn template(cfg: &ImageDatasetConfig, class: usize, rng: &mut Rng) -> Vec<f32> {
+    let side = cfg.image;
+    let mut t = vec![0.0f32; side * side * CHANNELS];
+    let _ = class;
+    let waves = 4;
+    for c in 0..CHANNELS {
+        for _ in 0..waves {
+            let fx = 1.0 + rng.index(3) as f32; // low frequencies only
+            let fy = 1.0 + rng.index(3) as f32;
+            let phase_x = rng.f32() * std::f32::consts::TAU;
+            let phase_y = rng.f32() * std::f32::consts::TAU;
+            let amp = 0.3 + 0.7 * rng.f32();
+            for y in 0..side {
+                for x in 0..side {
+                    let v = amp
+                        * (fx * x as f32 / side as f32 * std::f32::consts::TAU + phase_x).sin()
+                        * (fy * y as f32 / side as f32 * std::f32::consts::TAU + phase_y).cos();
+                    t[(y * side + x) * CHANNELS + c] += v;
+                }
+            }
+        }
+    }
+    t
+}
+
+fn render_sample(
+    cfg: &ImageDatasetConfig,
+    tpl: &[f32],
+    rng: &mut Rng,
+    out: &mut Vec<f32>,
+) {
+    let side = cfg.image;
+    let dx = rng.index(2 * cfg.max_shift + 1) as isize - cfg.max_shift as isize;
+    let dy = rng.index(2 * cfg.max_shift + 1) as isize - cfg.max_shift as isize;
+    let contrast = 0.8 + 0.4 * rng.f32();
+    let brightness = 0.2 * (rng.f32() - 0.5);
+    for y in 0..side {
+        for x in 0..side {
+            let sy = (y as isize + dy).rem_euclid(side as isize) as usize;
+            let sx = (x as isize + dx).rem_euclid(side as isize) as usize;
+            for c in 0..CHANNELS {
+                let v = tpl[(sy * side + sx) * CHANNELS + c] * contrast
+                    + brightness
+                    + cfg.noise * rng.normal_f32(0.0, 1.0);
+                out.push(v);
+            }
+        }
+    }
+}
+
+/// Generate (train, test) splits deterministically from `cfg.seed`.
+pub fn generate(cfg: &ImageDatasetConfig) -> (ImageDataset, ImageDataset) {
+    let mut root = Rng::new(cfg.seed);
+    let templates: Vec<Vec<f32>> = (0..cfg.classes)
+        .map(|cls| {
+            let mut trng = root.fork(cls as u64);
+            template(cfg, cls, &mut trng)
+        })
+        .collect();
+
+    let mut make = |per_class: usize, stream: u64| {
+        let mut rng = root.fork(stream);
+        let n = per_class * cfg.classes;
+        let mut pixels = Vec::with_capacity(n * cfg.image * cfg.image * CHANNELS);
+        let mut labels = Vec::with_capacity(n);
+        // interleave classes, then shuffle index order downstream
+        for i in 0..n {
+            let cls = i % cfg.classes;
+            render_sample(cfg, &templates[cls], &mut rng, &mut pixels);
+            labels.push(cls as u32);
+        }
+        ImageDataset { cfg: cfg.clone(), pixels, labels }
+    };
+
+    (make(cfg.train_per_class, 1_000_001), make(cfg.test_per_class, 2_000_002))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ImageDatasetConfig {
+        ImageDatasetConfig {
+            classes: 4,
+            image: 8,
+            train_per_class: 10,
+            test_per_class: 5,
+            noise: 0.3,
+            max_shift: 2,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = small_cfg();
+        let (a, _) = generate(&cfg);
+        let (b, _) = generate(&cfg);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn sizes_and_labels() {
+        let cfg = small_cfg();
+        let (train, test) = generate(&cfg);
+        assert_eq!(train.len(), 40);
+        assert_eq!(test.len(), 20);
+        assert_eq!(train.pixels.len(), 40 * 8 * 8 * 3);
+        for cls in 0..4u32 {
+            assert_eq!(train.labels.iter().filter(|&&l| l == cls).count(), 10);
+        }
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_correlation() {
+        // Nearest-template classification on noiseless correlation should
+        // beat chance by a wide margin => the task is learnable.
+        let cfg = small_cfg();
+        let (train, _) = generate(&cfg);
+        // estimate per-class mean image as "template"
+        let sz = train.image_floats();
+        let mut means = vec![vec![0.0f64; sz]; cfg.classes];
+        let mut counts = vec![0usize; cfg.classes];
+        for i in 0..train.len() {
+            let c = train.labels[i] as usize;
+            counts[c] += 1;
+            for (m, &p) in means[c].iter_mut().zip(train.image(i)) {
+                *m += p as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..train.len() {
+            let img = train.image(i);
+            let best = (0..cfg.classes)
+                .max_by(|&a, &b| {
+                    let ca: f64 = means[a].iter().zip(img).map(|(&m, &p)| m * p as f64).sum();
+                    let cb: f64 = means[b].iter().zip(img).map(|(&m, &p)| m * p as f64).sum();
+                    ca.partial_cmp(&cb).unwrap()
+                })
+                .unwrap();
+            if best == train.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / train.len() as f64;
+        assert!(acc > 0.5, "template accuracy {acc} (chance 0.25)");
+    }
+
+    #[test]
+    fn gather_no_alloc_shapes() {
+        let cfg = small_cfg();
+        let (train, _) = generate(&cfg);
+        let mut px = Vec::new();
+        let mut lb = Vec::new();
+        train.gather(&[0, 3, 7], &mut px, &mut lb);
+        assert_eq!(px.len(), 3 * train.image_floats());
+        assert_eq!(lb.len(), 3);
+    }
+}

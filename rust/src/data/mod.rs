@@ -1,0 +1,11 @@
+//! Synthetic data substrates (no datasets ship with this offline image;
+//! DESIGN.md §2 documents why each generator preserves the behaviour the
+//! paper's experiments measure).
+
+pub mod corpus;
+pub mod images;
+pub mod shard;
+
+pub use corpus::{Corpus, CorpusConfig, WindowSampler};
+pub use images::{ImageDataset, ImageDatasetConfig};
+pub use shard::{by_group, iid, BatchIter, Shards};

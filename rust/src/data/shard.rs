@@ -1,0 +1,167 @@
+//! Dataset sharding across nodes: i.i.d. (the paper's CIFAR/ImageNet
+//! setup) and heterogeneous by-chapter (the paper's PTB federated setup).
+
+use crate::util::rng::Rng;
+
+/// Index shards, one Vec<usize> of example ids per node.
+#[derive(Debug, Clone)]
+pub struct Shards {
+    pub per_node: Vec<Vec<usize>>,
+}
+
+impl Shards {
+    pub fn node(&self, i: usize) -> &[usize] {
+        &self.per_node[i]
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.per_node.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.per_node.iter().map(|s| s.len()).sum()
+    }
+}
+
+/// Shuffle all example ids, deal them round-robin: each node's shard is an
+/// i.i.d. sample of the full distribution.
+pub fn iid(n_examples: usize, n_nodes: usize, rng: &mut Rng) -> Shards {
+    assert!(n_nodes >= 1);
+    let mut ids: Vec<usize> = (0..n_examples).collect();
+    rng.shuffle(&mut ids);
+    let mut per_node = vec![Vec::with_capacity(n_examples / n_nodes + 1); n_nodes];
+    for (pos, id) in ids.into_iter().enumerate() {
+        per_node[pos % n_nodes].push(id);
+    }
+    Shards { per_node }
+}
+
+/// Sort by a group key (e.g. label, or chapter id) and give each node a
+/// contiguous block: maximal heterogeneity for grouped data.
+pub fn by_group(groups: &[u32], n_nodes: usize) -> Shards {
+    assert!(n_nodes >= 1);
+    let mut ids: Vec<usize> = (0..groups.len()).collect();
+    ids.sort_by_key(|&i| groups[i]);
+    let per = groups.len().div_ceil(n_nodes);
+    let per_node = ids.chunks(per).map(|c| c.to_vec()).collect::<Vec<_>>();
+    let mut per_node = per_node;
+    while per_node.len() < n_nodes {
+        per_node.push(Vec::new());
+    }
+    Shards { per_node }
+}
+
+/// A cycling batch iterator over one shard (reshuffles each epoch).
+#[derive(Debug, Clone)]
+pub struct BatchIter {
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+    rng: Rng,
+    pub epochs_completed: usize,
+}
+
+impl BatchIter {
+    pub fn new(shard: &[usize], batch: usize, rng: Rng) -> Self {
+        assert!(batch >= 1);
+        assert!(!shard.is_empty(), "empty shard");
+        let mut it = BatchIter {
+            order: shard.to_vec(),
+            pos: 0,
+            batch,
+            rng,
+            epochs_completed: 0,
+        };
+        it.rng.shuffle(&mut it.order);
+        it
+    }
+
+    /// Number of batches that constitute one local epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.order.len() / self.batch).max(1)
+    }
+
+    /// Fill `out` with the next batch of example ids (with wrap-around +
+    /// reshuffle at epoch boundaries; short tails are completed from the
+    /// next epoch so batch size is always exact — XLA shapes are static).
+    pub fn next_batch(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        while out.len() < self.batch {
+            if self.pos >= self.order.len() {
+                self.pos = 0;
+                self.epochs_completed += 1;
+                self.rng.shuffle(&mut self.order);
+            }
+            out.push(self.order[self.pos]);
+            self.pos += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_partitions_everything_once() {
+        let mut rng = Rng::new(0);
+        let shards = iid(103, 5, &mut rng);
+        assert_eq!(shards.total(), 103);
+        let mut all: Vec<usize> = shards.per_node.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..103).collect::<Vec<_>>());
+        // balanced within 1
+        let sizes: Vec<usize> = shards.per_node.iter().map(|s| s.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn iid_shards_have_mixed_labels() {
+        let mut rng = Rng::new(1);
+        let labels: Vec<u32> = (0..100).map(|i| (i % 10) as u32).collect();
+        let shards = iid(100, 4, &mut rng);
+        for shard in &shards.per_node {
+            let distinct: std::collections::HashSet<u32> =
+                shard.iter().map(|&i| labels[i]).collect();
+            assert!(distinct.len() >= 8, "iid shard should span most classes");
+        }
+    }
+
+    #[test]
+    fn by_group_is_heterogeneous() {
+        let groups: Vec<u32> = (0..100).map(|i| (i / 25) as u32).collect(); // 4 groups
+        let shards = by_group(&groups, 4);
+        for (node, shard) in shards.per_node.iter().enumerate() {
+            let distinct: std::collections::HashSet<u32> =
+                shard.iter().map(|&i| groups[i]).collect();
+            assert_eq!(distinct.len(), 1, "node {node} spans groups {distinct:?}");
+        }
+    }
+
+    #[test]
+    fn batch_iter_exact_size_and_epoch_detection() {
+        let shard: Vec<usize> = (0..10).collect();
+        let mut it = BatchIter::new(&shard, 4, Rng::new(2));
+        let mut out = Vec::new();
+        assert_eq!(it.batches_per_epoch(), 2);
+        for _ in 0..5 {
+            it.next_batch(&mut out);
+            assert_eq!(out.len(), 4);
+            assert!(out.iter().all(|&i| i < 10));
+        }
+        assert!(it.epochs_completed >= 1);
+    }
+
+    #[test]
+    fn batch_iter_covers_shard() {
+        let shard: Vec<usize> = (10..30).collect();
+        let mut it = BatchIter::new(&shard, 5, Rng::new(3));
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            it.next_batch(&mut out);
+            seen.extend(out.iter().copied());
+        }
+        assert_eq!(seen.len(), 20);
+    }
+}

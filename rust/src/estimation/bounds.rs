@@ -1,0 +1,65 @@
+//! Closed-form bound curves from Theorems 1 and 2, for overlaying against
+//! the Monte-Carlo risks in the figT1 experiment.
+
+/// Theorem 1 (upper bound): C * s^2 log(d) / (n k), valid for
+/// 2 log d <= k <= s log d.
+pub fn theorem1_upper(n: usize, k_bits: usize, d: usize, s: f64, c: f64) -> f64 {
+    c * s * s * (d.max(2) as f64).ln() / (n as f64 * k_bits as f64)
+}
+
+/// Theorem 2 (lower bound): c * max{ s^2 log(d/s) / (nk), s/n }, valid for
+/// nk >= d log(d/s) and s <= d/2.
+pub fn theorem2_lower(n: usize, k_bits: usize, d: usize, s: f64, c: f64) -> f64 {
+    let t1 = s * s * (d as f64 / s).max(std::f64::consts::E).ln() / (n as f64 * k_bits as f64);
+    let t2 = s / n as f64;
+    c * t1.max(t2)
+}
+
+/// Validity window of Theorem 1's rate for a given (d, s).
+pub fn theorem1_k_range(d: usize, s: f64) -> (usize, usize) {
+    let logd = (d.max(2) as f64).ln();
+    ((2.0 * logd).ceil() as usize, (s * logd).floor() as usize)
+}
+
+/// Does (n, k, d, s) satisfy Theorem 2's precondition?
+pub fn theorem2_applies(n: usize, k_bits: usize, d: usize, s: f64) -> bool {
+    s <= d as f64 / 2.0
+        && (n * k_bits) as f64 >= d as f64 * (d as f64 / s).max(std::f64::consts::E).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upper_dominates_lower_with_matched_constants() {
+        // With C = c the theorem-1 curve must sit above the theorem-2 curve
+        // whenever its rate term dominates (log d >= log d/s).
+        for (n, k, d, s) in [(8usize, 64usize, 1024usize, 16.0f64), (32, 256, 4096, 64.0)] {
+            let up = theorem1_upper(n, k, d, s, 1.0);
+            let t1_part = s * s * (d as f64 / s).ln() / (n as f64 * k as f64);
+            assert!(up >= t1_part);
+        }
+    }
+
+    #[test]
+    fn lower_bound_centralized_floor() {
+        // For huge k the lower bound flattens at s/n.
+        let lb = theorem2_lower(10, 1_000_000, 1024, 16.0, 1.0);
+        assert!((lb - 1.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_range_sane() {
+        let (lo, hi) = theorem1_k_range(1024, 32.0);
+        assert!(lo < hi);
+        assert_eq!(lo, (2.0 * (1024f64).ln()).ceil() as usize);
+    }
+
+    #[test]
+    fn applicability_check() {
+        assert!(theorem2_applies(1000, 100, 512, 16.0));
+        assert!(!theorem2_applies(2, 10, 1 << 20, 16.0));
+        assert!(!theorem2_applies(1000, 100, 64, 60.0)); // s > d/2
+    }
+}

@@ -1,0 +1,21 @@
+//! Distributed statistical estimation under communication constraints —
+//! the paper's theory side (§II, §V, §VI), as an executable simulator.
+//!
+//! * [`model`] — the sparse Bernoulli product model and its refinements
+//! * [`schemes`] — the §V subsampling scheme + truncation/random/centralized
+//!   baselines, with honest per-node bit accounting
+//! * [`risk`] — Monte-Carlo minimax risk harness and scaling-law fits
+//! * [`bounds`] — Theorem 1/2 closed-form curves for overlay
+//!
+//! The figT1/figT2 experiments (see `experiments::theory`) verify that the
+//! subsampling scheme's measured risk follows `s^2 log d / (nk)` and beats
+//! truncation — the statistical fact that motivates rTop-k.
+
+pub mod bounds;
+pub mod model;
+pub mod risk;
+pub mod schemes;
+
+pub use model::{Refinement, SparseBernoulli, ThetaPrior};
+pub use risk::{estimate_risk, sweep_k, RiskPoint};
+pub use schemes::{by_name, EstimationScheme};

@@ -1,0 +1,166 @@
+//! Minimax-risk evaluation harness: Monte-Carlo estimates of
+//! `E||theta_hat - theta||^2` for a scheme over an (n, k, d, s) grid.
+
+use super::model::{l2_err, SparseBernoulli, ThetaPrior};
+use super::schemes::{simulate_round, EstimationScheme};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct RiskPoint {
+    pub scheme: String,
+    pub n: usize,
+    pub k_bits: usize,
+    pub d: usize,
+    pub s: f64,
+    pub risk: f64,
+    /// Monte-Carlo standard error of the risk estimate.
+    pub stderr: f64,
+    pub trials: usize,
+}
+
+/// Estimate the risk at one configuration. Each trial draws a fresh theta
+/// from `prior` (worst-case-flavoured priors approximate the sup over
+/// Theta) and a fresh set of n observations.
+pub fn estimate_risk(
+    model: &SparseBernoulli,
+    scheme: &dyn EstimationScheme,
+    n: usize,
+    k_bits: usize,
+    prior: ThetaPrior,
+    trials: usize,
+    rng: &mut Rng,
+) -> RiskPoint {
+    let mut errs = Vec::with_capacity(trials);
+    for _ in 0..trials {
+        let theta = model.sample_theta(prior, rng);
+        let target = model.target(&theta);
+        let est = simulate_round(model, &theta, scheme, n, k_bits, rng);
+        errs.push(l2_err(&est, &target));
+    }
+    let mean = errs.iter().sum::<f64>() / trials as f64;
+    let var = errs.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / trials.max(2) as f64;
+    RiskPoint {
+        scheme: scheme.name().to_string(),
+        n,
+        k_bits,
+        d: model.d,
+        s: model.s,
+        risk: mean,
+        stderr: (var / trials as f64).sqrt(),
+        trials,
+    }
+}
+
+/// Sweep k over a grid for a fixed (n, d, s); the figT1 harness.
+pub fn sweep_k(
+    model: &SparseBernoulli,
+    scheme: &dyn EstimationScheme,
+    n: usize,
+    k_grid: &[usize],
+    prior: ThetaPrior,
+    trials: usize,
+    rng: &mut Rng,
+) -> Vec<RiskPoint> {
+    k_grid
+        .iter()
+        .map(|&k| estimate_risk(model, scheme, n, k, prior, trials, rng))
+        .collect()
+}
+
+/// Fit log(risk) = a + b*log(x) by least squares; returns (a, b).
+/// Used to verify the 1/(nk) scaling predicted by Theorem 1.
+pub fn loglog_slope(points: &[(f64, f64)]) -> (f64, f64) {
+    let n = points.len() as f64;
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+    for &(x, y) in points {
+        let lx = x.ln();
+        let ly = y.max(1e-300).ln();
+        sx += lx;
+        sy += ly;
+        sxx += lx * lx;
+        sxy += lx * ly;
+    }
+    let b = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimation::schemes::SubsampleScheme;
+
+    #[test]
+    fn risk_decreases_with_more_nodes() {
+        let mut rng = Rng::new(0);
+        let model = SparseBernoulli::new(128, 8.0);
+        let scheme = SubsampleScheme { preprocess: false };
+        let r_small = estimate_risk(&model, &scheme, 4, 50, ThetaPrior::HardSparse, 300, &mut rng);
+        let r_large = estimate_risk(&model, &scheme, 32, 50, ThetaPrior::HardSparse, 300, &mut rng);
+        assert!(r_large.risk < r_small.risk, "{} vs {}", r_large.risk, r_small.risk);
+    }
+
+    #[test]
+    fn risk_decreases_with_more_bits() {
+        let mut rng = Rng::new(1);
+        let model = SparseBernoulli::new(256, 16.0);
+        let scheme = SubsampleScheme { preprocess: false };
+        let pts = sweep_k(
+            &model,
+            &scheme,
+            8,
+            &[24, 48, 96, 192],
+            ThetaPrior::HardSparse,
+            300,
+            &mut rng,
+        );
+        for w in pts.windows(2) {
+            assert!(
+                w[1].risk <= w[0].risk * 1.15,
+                "risk should not grow with k: {pts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn theorem1_scaling_one_over_k() {
+        // Under subsampling (busy nodes), risk ~ C s^2 log d / (n k). The
+        // per-node budget converts to k' = (k - log d)/log d keepable ones
+        // (an *affine* map), so the clean 1/x law shows up against k', and
+        // only while subsampling is active (k' << ||X||_1 ~ s). Stay in
+        // that regime and fit log(risk) ~ log(k').
+        let mut rng = Rng::new(2);
+        let d = 512;
+        let s = 48.0;
+        let model = SparseBernoulli::new(d, s);
+        let scheme = SubsampleScheme { preprocess: false };
+        let k_grid = [36, 72, 144]; // k' = 3, 7, 15 << s
+        let pts = sweep_k(&model, &scheme, 8, &k_grid, ThetaPrior::HardSparse, 400, &mut rng);
+        let xy: Vec<(f64, f64)> = pts
+            .iter()
+            .map(|p| (super::super::schemes::keepable(d, p.k_bits) as f64, p.risk))
+            .collect();
+        let (_, slope) = loglog_slope(&xy);
+        assert!(
+            (-1.5..=-0.7).contains(&slope),
+            "expected ~1/k' scaling, got slope {slope}: {xy:?}"
+        );
+    }
+
+    #[test]
+    fn loglog_slope_recovers_known_exponent() {
+        let pts: Vec<(f64, f64)> = (1..10).map(|i| (i as f64, 3.0 / (i as f64).powi(2))).collect();
+        let (a, b) = loglog_slope(&pts);
+        assert!((b + 2.0).abs() < 1e-9);
+        assert!((a - 3f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stderr_reported() {
+        let mut rng = Rng::new(3);
+        let model = SparseBernoulli::new(64, 4.0);
+        let scheme = SubsampleScheme { preprocess: false };
+        let p = estimate_risk(&model, &scheme, 4, 30, ThetaPrior::HardSparse, 100, &mut rng);
+        assert!(p.stderr > 0.0 && p.stderr < p.risk);
+    }
+}

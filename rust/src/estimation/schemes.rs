@@ -1,0 +1,485 @@
+//! Communication schemes for the distributed estimation problem (§V), each
+//! constrained to a k-bit budget per node, plus the baselines they are
+//! compared against in figT1/figT2.
+//!
+//! The bit accounting follows the paper's encoding:
+//!   * `log2 d` bits encode `||X_i||_1`,
+//!   * the remaining `k - log2 d` bits index a codebook of all vectors with
+//!     at most `k'` ones, giving `k' >= (k - log2 d) / log2 d` kept ones.
+
+use super::model::SparseBernoulli;
+use crate::util::rng::Rng;
+
+/// A per-node k-bit encoder plus the centralized estimator.
+pub trait EstimationScheme {
+    /// Simulate encoding node i's observation under a k-bit budget and
+    /// return the decoder-visible content. `bits_used` must be <= k.
+    fn encode(&self, x: &[f64], k_bits: usize, rng: &mut Rng) -> EncodedObs;
+
+    /// Combine n transcripts into an estimate of theta.
+    fn estimate(&self, d: usize, transcripts: &[EncodedObs]) -> Vec<f64>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Decoder-visible content of one node's message.
+#[derive(Debug, Clone)]
+pub struct EncodedObs {
+    /// Kept coordinates (index, value).
+    pub kept: Vec<(usize, f64)>,
+    /// The true number of non-zeros at the node (the l1 header), if sent.
+    pub count_header: Option<usize>,
+    /// Bits this message would occupy.
+    pub bits_used: usize,
+}
+
+/// Elements the codebook lets us keep under budget `k` with dimension `d`:
+/// k' = max(1, floor((k - log2 d) / log2 d)).
+pub fn keepable(d: usize, k_bits: usize) -> usize {
+    let logd = (d.max(2) as f64).log2();
+    (((k_bits as f64 - logd) / logd).floor() as isize).max(1) as usize
+}
+
+fn nonzeros(x: &[f64], eps: f64) -> Vec<usize> {
+    x.iter()
+        .enumerate()
+        .filter(|(_, &v)| v.abs() > eps)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Quantize refinement-(iii) observations back to {0,1} before encoding
+/// (the paper's pre-processing step for continuous perturbations).
+fn binarize(v: f64) -> f64 {
+    if v.abs() >= 0.5 {
+        v.signum()
+    } else {
+        0.0
+    }
+}
+
+/// The paper's §V scheme: send the l1 header, then a *uniformly random*
+/// k'-subset of the nonzero coordinates; estimate by inverse-propensity
+/// weighting `theta_hat = (1/n) sum X~_i / S_i`. Unbiased; order-optimal.
+pub struct SubsampleScheme {
+    /// Apply the binarization pre-processing (refinement (iii)).
+    pub preprocess: bool,
+}
+
+impl EstimationScheme for SubsampleScheme {
+    fn encode(&self, x: &[f64], k_bits: usize, rng: &mut Rng) -> EncodedObs {
+        let d = x.len();
+        let kp = keepable(d, k_bits);
+        let proc: Vec<f64> = if self.preprocess {
+            x.iter().map(|&v| binarize(v)).collect()
+        } else {
+            x.to_vec()
+        };
+        let nz = nonzeros(&proc, 0.0);
+        let kept: Vec<(usize, f64)> = if nz.len() > kp {
+            rng.sample_indices(nz.len(), kp)
+                .into_iter()
+                .map(|p| (nz[p], proc[nz[p]]))
+                .collect()
+        } else {
+            nz.iter().map(|&i| (i, proc[i])).collect()
+        };
+        let logd = (d.max(2) as f64).log2().ceil() as usize;
+        EncodedObs {
+            bits_used: logd + kept.len() * logd,
+            count_header: Some(nz.len()),
+            kept,
+        }
+    }
+
+    fn estimate(&self, d: usize, transcripts: &[EncodedObs]) -> Vec<f64> {
+        let n = transcripts.len().max(1) as f64;
+        let mut theta = vec![0.0f64; d];
+        for t in transcripts {
+            let count = t.count_header.unwrap_or(t.kept.len());
+            // S_i = k'/||X||_1 when subsampled, else 1.
+            let s_i = if count > t.kept.len() && !t.kept.is_empty() {
+                t.kept.len() as f64 / count as f64
+            } else {
+                1.0
+            };
+            for &(i, v) in &t.kept {
+                theta[i] += v / s_i / n;
+            }
+        }
+        theta
+    }
+
+    fn name(&self) -> &'static str {
+        "subsample-ipw"
+    }
+}
+
+/// Deterministic truncation baseline: send the *first* k' nonzeros (for
+/// binary data "first" == "top" since all magnitudes tie; for perturbed
+/// data, the k' largest magnitudes). No header, no reweighting — the
+/// estimation-layer analog of plain top-k. Biased low on busy nodes.
+pub struct TruncationScheme;
+
+impl EstimationScheme for TruncationScheme {
+    fn encode(&self, x: &[f64], k_bits: usize, rng: &mut Rng) -> EncodedObs {
+        let _ = rng;
+        let d = x.len();
+        let kp = keepable(d, k_bits);
+        let mut nz: Vec<usize> = nonzeros(x, 0.0);
+        // order by decreasing magnitude (stable for ties -> index order)
+        nz.sort_by(|&a, &b| x[b].abs().partial_cmp(&x[a].abs()).unwrap().then(a.cmp(&b)));
+        let kept: Vec<(usize, f64)> = nz.iter().take(kp).map(|&i| (i, x[i])).collect();
+        let logd = (d.max(2) as f64).log2().ceil() as usize;
+        EncodedObs { bits_used: kept.len() * logd, count_header: None, kept }
+    }
+
+    fn estimate(&self, d: usize, transcripts: &[EncodedObs]) -> Vec<f64> {
+        let n = transcripts.len().max(1) as f64;
+        let mut theta = vec![0.0f64; d];
+        for t in transcripts {
+            for &(i, v) in &t.kept {
+                theta[i] += v / n;
+            }
+        }
+        theta
+    }
+
+    fn name(&self) -> &'static str {
+        "truncate-topk"
+    }
+}
+
+/// Random-coordinate baseline: each node samples k' coordinates of [d]
+/// uniformly (not of its support) and sends those values; estimator uses
+/// inverse propensity d/k'. The estimation-layer analog of random-k.
+pub struct RandomCoordScheme;
+
+impl EstimationScheme for RandomCoordScheme {
+    fn encode(&self, x: &[f64], k_bits: usize, rng: &mut Rng) -> EncodedObs {
+        let d = x.len();
+        let kp = keepable(d, k_bits).min(d);
+        let kept: Vec<(usize, f64)> =
+            rng.sample_indices(d, kp).into_iter().map(|i| (i, x[i])).collect();
+        let logd = (d.max(2) as f64).log2().ceil() as usize;
+        // values are binary -> 1 bit each on top of the index
+        EncodedObs { bits_used: kept.len() * (logd + 1), count_header: None, kept }
+    }
+
+    fn estimate(&self, d: usize, transcripts: &[EncodedObs]) -> Vec<f64> {
+        let n = transcripts.len().max(1) as f64;
+        let mut theta = vec![0.0f64; d];
+        for t in transcripts {
+            let kp = t.kept.len().max(1) as f64;
+            let w = d as f64 / kp;
+            for &(i, v) in &t.kept {
+                theta[i] += w * v / n;
+            }
+        }
+        theta
+    }
+
+    fn name(&self) -> &'static str {
+        "random-coord"
+    }
+}
+
+/// Unconstrained baseline: the empirical mean of the raw observations
+/// (centralized performance, the s/n term in Theorem 2).
+pub struct CentralizedScheme;
+
+impl EstimationScheme for CentralizedScheme {
+    fn encode(&self, x: &[f64], _k_bits: usize, _rng: &mut Rng) -> EncodedObs {
+        EncodedObs {
+            kept: x.iter().enumerate().map(|(i, &v)| (i, v)).collect(),
+            count_header: None,
+            bits_used: usize::MAX, // explicitly unbounded
+        }
+    }
+
+    fn estimate(&self, d: usize, transcripts: &[EncodedObs]) -> Vec<f64> {
+        let n = transcripts.len().max(1) as f64;
+        let mut theta = vec![0.0f64; d];
+        for t in transcripts {
+            for &(i, v) in &t.kept {
+                theta[i] += v / n;
+            }
+        }
+        theta
+    }
+
+    fn name(&self) -> &'static str {
+        "centralized"
+    }
+}
+
+/// Build a scheme by name (experiment configs / CLI).
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn EstimationScheme>> {
+    Ok(match name {
+        "subsample" | "subsample-ipw" => Box::new(SubsampleScheme { preprocess: false }),
+        "subsample-preprocess" => Box::new(SubsampleScheme { preprocess: true }),
+        "truncate" | "truncate-topk" => Box::new(TruncationScheme),
+        "random" | "random-coord" => Box::new(RandomCoordScheme),
+        "centralized" => Box::new(CentralizedScheme),
+        "dense-quant" | "gaussian" => Box::new(DenseQuantScheme),
+        other => anyhow::bail!("unknown estimation scheme {other:?}"),
+    })
+}
+
+/// All budgeted schemes, for sweep experiments.
+pub fn budgeted_schemes() -> Vec<Box<dyn EstimationScheme>> {
+    vec![
+        Box::new(SubsampleScheme { preprocess: false }),
+        Box::new(TruncationScheme),
+        Box::new(RandomCoordScheme),
+    ]
+}
+
+/// Helper used by tests and the risk harness: one full simulated round.
+pub fn simulate_round(
+    model: &SparseBernoulli,
+    theta: &[f64],
+    scheme: &dyn EstimationScheme,
+    n: usize,
+    k_bits: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let transcripts: Vec<EncodedObs> = (0..n)
+        .map(|_| {
+            let x = model.sample_obs(theta, rng);
+            scheme.encode(&x, k_bits, rng)
+        })
+        .collect();
+    scheme.estimate(model.d, &transcripts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimation::model::{l2_err, Refinement, ThetaPrior};
+
+    #[test]
+    fn keepable_matches_paper_accounting() {
+        // d = 1024 (log2 d = 10), k = 100 bits -> k' = floor(90/10) = 9.
+        assert_eq!(keepable(1024, 100), 9);
+        // tiny budgets floor at 1
+        assert_eq!(keepable(1 << 20, 10), 1);
+    }
+
+    #[test]
+    fn subsample_respects_bit_budget() {
+        let mut rng = Rng::new(0);
+        let model = SparseBernoulli::new(512, 40.0);
+        let theta = model.sample_theta(ThetaPrior::HardSparse, &mut rng);
+        let scheme = SubsampleScheme { preprocess: false };
+        for k_bits in [20, 100, 400] {
+            for _ in 0..20 {
+                let x = model.sample_obs(&theta, &mut rng);
+                let enc = scheme.encode(&x, k_bits, &mut rng);
+                assert!(enc.bits_used <= k_bits.max(2 * 9), "bits {}", enc.bits_used);
+                assert!(enc.kept.len() <= keepable(512, k_bits));
+            }
+        }
+    }
+
+    #[test]
+    fn subsample_estimator_is_unbiased() {
+        let mut rng = Rng::new(1);
+        let model = SparseBernoulli::new(64, 16.0);
+        let theta = model.sample_theta(ThetaPrior::HardSparse, &mut rng);
+        let scheme = SubsampleScheme { preprocess: false };
+        let (n, k_bits, trials) = (10, 30, 4000);
+        let mut mean = vec![0.0f64; 64];
+        for _ in 0..trials {
+            let est = simulate_round(&model, &theta, &scheme, n, k_bits, &mut rng);
+            for (m, &e) in mean.iter_mut().zip(&est) {
+                *m += e / trials as f64;
+            }
+        }
+        for (j, (&m, &t)) in mean.iter().zip(&theta).enumerate() {
+            assert!((m - t).abs() < 0.05, "coord {j}: {m} vs {t}");
+        }
+    }
+
+    #[test]
+    fn truncation_is_biased_down_on_busy_nodes() {
+        // With many active coordinates and a small budget, truncation
+        // systematically under-counts late/small coordinates.
+        let mut rng = Rng::new(2);
+        let d = 128;
+        let model = SparseBernoulli::new(d, 64.0);
+        let theta = vec![0.5f64; d]; // sum = 64 = s
+        let trunc = TruncationScheme;
+        let sub = SubsampleScheme { preprocess: false };
+        let (n, k_bits, trials) = (20, 60, 300);
+        let mut err_trunc = 0.0;
+        let mut err_sub = 0.0;
+        for _ in 0..trials {
+            let e1 = simulate_round(&model, &theta, &trunc, n, k_bits, &mut rng);
+            let e2 = simulate_round(&model, &theta, &sub, n, k_bits, &mut rng);
+            err_trunc += l2_err(&e1, &theta) / trials as f64;
+            err_sub += l2_err(&e2, &theta) / trials as f64;
+        }
+        assert!(
+            err_sub < err_trunc,
+            "subsample {err_sub} should beat truncation {err_trunc}"
+        );
+    }
+
+    #[test]
+    fn centralized_beats_all_budgeted() {
+        let mut rng = Rng::new(3);
+        let model = SparseBernoulli::new(256, 16.0);
+        let theta = model.sample_theta(ThetaPrior::HardSparse, &mut rng);
+        let (n, k_bits, trials) = (16, 40, 200);
+        let central = CentralizedScheme;
+        let mut err_central = 0.0;
+        for _ in 0..trials {
+            let e = simulate_round(&model, &theta, &central, n, k_bits, &mut rng);
+            err_central += l2_err(&e, &theta) / trials as f64;
+        }
+        for scheme in budgeted_schemes() {
+            let mut err = 0.0;
+            for _ in 0..trials {
+                let e = simulate_round(&model, &theta, scheme.as_ref(), n, k_bits, &mut rng);
+                err += l2_err(&e, &theta) / trials as f64;
+            }
+            assert!(
+                err_central <= err * 1.05,
+                "{}: centralized {err_central} should be <= {err}",
+                scheme.name()
+            );
+        }
+    }
+
+    #[test]
+    fn preprocessing_handles_perturbed_observations() {
+        let mut rng = Rng::new(4);
+        let model = SparseBernoulli::new(128, 8.0).with_refinement(Refinement::Perturbed(0.45));
+        let theta = model.sample_theta(ThetaPrior::HardSparse, &mut rng);
+        let scheme = SubsampleScheme { preprocess: true };
+        let (n, k_bits, trials) = (30, 60, 500);
+        let mut mean = vec![0.0f64; 128];
+        for _ in 0..trials {
+            let est = simulate_round(&model, &theta, &scheme, n, k_bits, &mut rng);
+            for (m, &e) in mean.iter_mut().zip(&est) {
+                *m += e / trials as f64;
+            }
+        }
+        // Unbiased for theta despite the continuous noise.
+        let err: f64 = l2_err(&mean, &theta);
+        assert!(err < 0.1, "bias^2 {err}");
+    }
+
+    #[test]
+    fn by_name_builds_everything() {
+        for n in ["subsample", "truncate", "random", "centralized", "subsample-preprocess"] {
+            assert!(by_name(n).is_ok());
+        }
+        assert!(by_name("nope").is_err());
+    }
+}
+
+/// Per-coordinate stochastic 1-bit quantization — the scheme family that is
+/// optimal for the (dense) Gaussian location model the paper contrasts
+/// against (§II-C): spend the k-bit budget quantizing the first k
+/// coordinates independently, ignoring sparsity structure. Nodes are
+/// assigned rotating coordinate blocks so that collectively all d
+/// coordinates get covered when nk >= d.
+///
+/// Under the sparse Bernoulli model this wastes budget exactly the way the
+/// paper argues: the bits needed scale with d, not with s log d.
+pub struct DenseQuantScheme;
+
+impl EstimationScheme for DenseQuantScheme {
+    fn encode(&self, x: &[f64], k_bits: usize, rng: &mut Rng) -> EncodedObs {
+        let d = x.len();
+        let k = k_bits.min(d).max(1);
+        // rotating block start so n nodes jointly cover [0, d)
+        let start = rng.index(d);
+        let kept: Vec<(usize, f64)> = (0..k)
+            .map(|j| {
+                let i = (start + j) % d;
+                // 1-bit stochastic quantization of x_i in [0, 1] (binary
+                // observations are already bits; refinements quantize
+                // their continuous value stochastically)
+                let v = x[i].clamp(0.0, 1.0);
+                let bit = if rng.bernoulli(v) { 1.0 } else { 0.0 };
+                (i, bit)
+            })
+            .collect();
+        EncodedObs { bits_used: k + (d.max(2) as f64).log2().ceil() as usize, count_header: None, kept }
+    }
+
+    fn estimate(&self, d: usize, transcripts: &[EncodedObs]) -> Vec<f64> {
+        // Per-coordinate mean over the nodes that covered the coordinate.
+        let mut sum = vec![0.0f64; d];
+        let mut cnt = vec![0u32; d];
+        for t in transcripts {
+            for &(i, v) in &t.kept {
+                sum[i] += v;
+                cnt[i] += 1;
+            }
+        }
+        sum.iter()
+            .zip(&cnt)
+            .map(|(&s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "dense-quant"
+    }
+}
+
+#[cfg(test)]
+mod dense_quant_tests {
+    use super::*;
+    use crate::estimation::model::{l2_err, ThetaPrior};
+
+    #[test]
+    fn dense_quant_unbiased_where_covered() {
+        let mut rng = Rng::new(0);
+        let d = 64;
+        let model = SparseBernoulli::new(d, 8.0);
+        let theta = model.sample_theta(ThetaPrior::HardSparse, &mut rng);
+        let scheme = DenseQuantScheme;
+        // enough nodes/bits that every coordinate is covered many times
+        let (n, k_bits, trials) = (40, 64, 1500);
+        let mut mean = vec![0.0f64; d];
+        for _ in 0..trials {
+            let est = simulate_round(&model, &theta, &scheme, n, k_bits, &mut rng);
+            for (m, &e) in mean.iter_mut().zip(&est) {
+                *m += e / trials as f64;
+            }
+        }
+        assert!(l2_err(&mean, &theta) < 0.05, "bias^2 {}", l2_err(&mean, &theta));
+    }
+
+    #[test]
+    fn subsample_beats_dense_quant_on_sparse_model() {
+        // The paper's §II-C point: structure-blind per-coordinate schemes
+        // need ~d bits; the subsampling scheme needs ~s log d. At a budget
+        // far below d the dense scheme can't even cover the coordinates.
+        let mut rng = Rng::new(1);
+        let d = 1024;
+        let model = SparseBernoulli::new(d, 16.0);
+        let theta = model.sample_theta(ThetaPrior::HardSparse, &mut rng);
+        let k_bits = 110; // ~ s log2 d, << d
+        let (n, trials) = (10, 150);
+        let sub = SubsampleScheme { preprocess: false };
+        let dq = DenseQuantScheme;
+        let mut e_sub = 0.0;
+        let mut e_dq = 0.0;
+        for _ in 0..trials {
+            let a = simulate_round(&model, &theta, &sub, n, k_bits, &mut rng);
+            let b = simulate_round(&model, &theta, &dq, n, k_bits, &mut rng);
+            e_sub += l2_err(&a, &theta) / trials as f64;
+            e_dq += l2_err(&b, &theta) / trials as f64;
+        }
+        assert!(
+            e_sub < 0.5 * e_dq,
+            "subsample {e_sub} should beat dense quantization {e_dq} at k << d"
+        );
+    }
+}

@@ -1,0 +1,104 @@
+//! Ablation experiments for the design choices DESIGN.md calls out:
+//!
+//! * `figA1` — the k/r coupling: the paper fixes k/r = 1/n with the
+//!   "each top parameter updated by one node in expectation" argument.
+//!   Sweep the subsample ratio across {1, 1/2, 1/n, 1/2n, 1/4n} at fixed
+//!   k and report final accuracy (CNN task) — the 1/n choice should sit
+//!   at or near the optimum.
+//! * `figA2` — error feedback on/off for every sparsifier (the paper
+//!   always enables it, citing [1]/[26]; this quantifies why).
+
+use std::io::Write;
+
+use crate::coordinator::{self, TrainConfig};
+use crate::data::images::ImageDatasetConfig;
+use crate::optim::LrSchedule;
+use crate::runtime::RustNetConfig;
+use crate::sparsify::SparsifierKind;
+
+use super::tables::ExperimentOptions;
+use super::tasks::ImageTask;
+
+fn small_image_task(opts: &ExperimentOptions) -> ImageTask {
+    let mut data_cfg = ImageDatasetConfig::cifar_like();
+    data_cfg.train_per_class = if opts.quick { 60 } else { 200 };
+    data_cfg.test_per_class = if opts.quick { 20 } else { 50 };
+    ImageTask::new(&data_cfg, RustNetConfig::cifar(), opts.nodes, 32)
+}
+
+fn run_once(
+    task: &ImageTask,
+    cfg: &TrainConfig,
+    name: &str,
+) -> anyhow::Result<f64> {
+    let ev = task.evaluator()?;
+    let res = coordinator::run(
+        cfg,
+        name,
+        task.init_params(),
+        task.worker_factory(),
+        Box::new(move || Ok(Some(ev))),
+    )?;
+    Ok(res.metrics.best_eval().unwrap_or(0.0))
+}
+
+pub fn run_fig_a1(opts: &ExperimentOptions) -> anyhow::Result<()> {
+    let task = small_image_task(opts);
+    let bpe = (task.shards.node(0).len() / task.batch).max(1);
+    let epochs = if opts.quick { 4 } else { 10 };
+    let n = opts.nodes as f64;
+    println!("\n=== figA1: rTop-k subsample-ratio (k/r) ablation, n={} nodes ===", opts.nodes);
+    println!("{:<14} {:>10} {:>14}", "k/r", "r/k", "Top-1 Acc (%)");
+    let dir = opts.out_dir.join("figA1");
+    std::fs::create_dir_all(&dir)?;
+    let mut csv = std::io::BufWriter::new(std::fs::File::create(dir.join("ratio_sweep.csv"))?);
+    writeln!(csv, "ratio,acc")?;
+    for (label, ratio) in [
+        ("1 (top-k)", 1.0),
+        ("1/2", 0.5),
+        ("1/n", 1.0 / n),
+        ("1/2n", 0.5 / n),
+        ("1/4n", 0.25 / n),
+    ] {
+        let mut cfg = TrainConfig::image_default(opts.nodes, SparsifierKind::RTopK, 0.99);
+        cfg.subsample_ratio = ratio;
+        cfg.rounds = (bpe * epochs) as u64;
+        cfg.eval_every = bpe as u64;
+        cfg.warmup_epochs = 1.0;
+        cfg.seed = opts.seed;
+        cfg.lr = LrSchedule::steps(0.04, &[epochs / 2], 0.25);
+        let acc = run_once(&task, &cfg, &format!("figA1-{label}"))? * 100.0;
+        println!("{label:<14} {:>10.1} {acc:>14.2}", 1.0 / ratio);
+        writeln!(csv, "{ratio},{acc}")?;
+    }
+    println!("(paper's choice k/r = 1/n should sit at/near the optimum)");
+    Ok(())
+}
+
+pub fn run_fig_a2(opts: &ExperimentOptions) -> anyhow::Result<()> {
+    let task = small_image_task(opts);
+    let bpe = (task.shards.node(0).len() / task.batch).max(1);
+    let epochs = if opts.quick { 4 } else { 10 };
+    println!("\n=== figA2: error-feedback ablation (99% compression) ===");
+    println!("{:<12} {:>16} {:>16}", "Method", "with EF (%)", "without EF (%)");
+    let dir = opts.out_dir.join("figA2");
+    std::fs::create_dir_all(&dir)?;
+    let mut csv = std::io::BufWriter::new(std::fs::File::create(dir.join("ef_ablation.csv"))?);
+    writeln!(csv, "method,with_ef,without_ef")?;
+    for method in [SparsifierKind::RTopK, SparsifierKind::TopK, SparsifierKind::RandomK] {
+        let mut accs = [0.0f64; 2];
+        for (slot, ef) in [(0usize, true), (1, false)] {
+            let mut cfg = TrainConfig::image_default(opts.nodes, method, 0.99);
+            cfg.error_feedback = ef;
+            cfg.rounds = (bpe * epochs) as u64;
+            cfg.eval_every = bpe as u64;
+            cfg.warmup_epochs = 1.0;
+            cfg.seed = opts.seed;
+            cfg.lr = LrSchedule::steps(0.04, &[epochs / 2], 0.25);
+            accs[slot] = run_once(&task, &cfg, &format!("figA2-{method:?}-ef{ef}"))? * 100.0;
+        }
+        println!("{:<12} {:>16.2} {:>16.2}", method.label(), accs[0], accs[1]);
+        writeln!(csv, "{},{},{}", method.label(), accs[0], accs[1])?;
+    }
+    Ok(())
+}

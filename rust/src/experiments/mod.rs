@@ -1,0 +1,8 @@
+//! Experiment harness: one runner per paper table/figure (DESIGN.md §4).
+
+pub mod ablations;
+pub mod tables;
+pub mod tasks;
+pub mod theory;
+
+pub use tables::{run_experiment, ExperimentOptions};

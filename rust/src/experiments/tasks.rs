@@ -1,0 +1,167 @@
+//! Task wiring: turn (dataset, model preset, sharding) into the worker /
+//! evaluator factories the cluster consumes.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::{Evaluator, WorkerFactory, WorkerSetup};
+use crate::data::{corpus, images, shard};
+use crate::runtime::{Batch, ModelRuntime, RustNet, RustNetConfig, XlaModel};
+use crate::util::rng::Rng;
+
+/// Image-domain task on the pure-Rust CNN runtime.
+pub struct ImageTask {
+    pub train: Arc<images::ImageDataset>,
+    pub test: Arc<images::ImageDataset>,
+    pub net: RustNetConfig,
+    pub batch: usize,
+    pub shards: Arc<shard::Shards>,
+    pub net_seed: u64,
+}
+
+impl ImageTask {
+    pub fn new(cfg: &images::ImageDatasetConfig, net: RustNetConfig, nodes: usize, batch: usize) -> Self {
+        let (train, test) = images::generate(cfg);
+        let mut rng = Rng::new(cfg.seed ^ 0x5A5A);
+        let shards = shard::iid(train.len(), nodes, &mut rng);
+        ImageTask {
+            train: Arc::new(train),
+            test: Arc::new(test),
+            net,
+            batch,
+            shards: Arc::new(shards),
+            net_seed: 0xBEEF,
+        }
+    }
+
+    pub fn init_params(&self) -> Vec<f32> {
+        RustNet::new(self.net.clone(), self.net_seed).init_params()
+    }
+
+    pub fn worker_factory(&self) -> WorkerFactory {
+        let train = self.train.clone();
+        let shards = self.shards.clone();
+        let net = self.net.clone();
+        let batch = self.batch;
+        let net_seed = self.net_seed;
+        Arc::new(move |node| {
+            let runtime = RustNet::new(net.clone(), net_seed);
+            let shard_ids = shards.node(node).to_vec();
+            let mut it = shard::BatchIter::new(&shard_ids, batch, Rng::new(0xF00D + node as u64));
+            let bpe = it.batches_per_epoch();
+            let train = train.clone();
+            let mut ids = Vec::new();
+            Ok(WorkerSetup {
+                runtime: Box::new(runtime),
+                next_batch: Box::new(move |_rng| {
+                    it.next_batch(&mut ids);
+                    let mut pixels = Vec::new();
+                    let mut labels = Vec::new();
+                    train.gather(&ids, &mut pixels, &mut labels);
+                    Batch::Images { pixels, labels }
+                }),
+                batches_per_epoch: bpe,
+            })
+        })
+    }
+
+    pub fn evaluator(&self) -> anyhow::Result<Evaluator> {
+        let runtime = RustNet::new(self.net.clone(), self.net_seed);
+        let mut batches = Vec::new();
+        let bs = self.batch;
+        let n_batches = (self.test.len() / bs).max(1);
+        let mut pixels = Vec::new();
+        let mut labels = Vec::new();
+        for b in 0..n_batches {
+            let ids: Vec<usize> = (b * bs..((b + 1) * bs).min(self.test.len())).collect();
+            self.test.gather(&ids, &mut pixels, &mut labels);
+            batches.push(Batch::Images { pixels: pixels.clone(), labels: labels.clone() });
+        }
+        Ok(Evaluator { runtime: Box::new(runtime), batches })
+    }
+}
+
+/// Language-modelling task on the XLA (AOT artifact) runtime.
+pub struct LmTask {
+    pub corpus: Arc<corpus::Corpus>,
+    pub artifacts: PathBuf,
+    pub preset: String,
+    pub batch: usize,
+    pub seq: usize,
+    /// Max eval batches (bounds leader eval cost).
+    pub eval_batches: usize,
+}
+
+impl LmTask {
+    pub fn new(artifacts: PathBuf, preset: &str, nodes: usize) -> anyhow::Result<Self> {
+        // Probe the manifest for the preset's shapes.
+        let manifest = crate::runtime::Manifest::load(&artifacts)?;
+        let entry = manifest.model(preset)?;
+        let batch = entry.meta.req("batch")?.as_usize().unwrap_or(4);
+        let seq = entry.meta.req("seq")?.as_usize().unwrap_or(32);
+        let vocab = entry.meta.req("vocab")?.as_usize().unwrap_or(256);
+        let cfg = corpus::CorpusConfig::ptb_like(vocab, nodes);
+        let corpus = corpus::generate(&cfg);
+        Ok(LmTask {
+            corpus: Arc::new(corpus),
+            artifacts,
+            preset: preset.to_string(),
+            batch,
+            seq,
+            eval_batches: 8,
+        })
+    }
+
+    pub fn init_params(&self) -> anyhow::Result<Vec<f32>> {
+        Ok(XlaModel::load(&self.artifacts, &self.preset)?.init_params())
+    }
+
+    /// Batches per local epoch (one chapter / (batch * (seq+1))).
+    pub fn batches_per_epoch(&self) -> usize {
+        (self.corpus.chapters[0].tokens.len() / ((self.seq + 1) * self.batch)).max(1)
+    }
+
+    pub fn worker_factory(&self) -> WorkerFactory {
+        let corpus = self.corpus.clone();
+        let artifacts = self.artifacts.clone();
+        let preset = self.preset.clone();
+        let (batch, seq) = (self.batch, self.seq);
+        Arc::new(move |node| {
+            let runtime = XlaModel::load(&artifacts, &preset)?;
+            // Chapter `node` is this node's local data (heterogeneous).
+            let chapter = corpus.chapters[node % corpus.chapters.len()].tokens.clone();
+            let mut tokens = Vec::new();
+            let bpe = (chapter.len() / ((seq + 1) * batch)).max(1);
+            Ok(WorkerSetup {
+                runtime: Box::new(runtime),
+                next_batch: Box::new(move |rng| {
+                    let ws = corpus::WindowSampler::new(&chapter, seq);
+                    ws.sample_batch(batch, rng, &mut tokens);
+                    Batch::Tokens {
+                        tokens: tokens.clone(),
+                        batch,
+                        seq_plus_1: seq + 1,
+                    }
+                }),
+                batches_per_epoch: bpe,
+            })
+        })
+    }
+
+    pub fn evaluator(&self) -> anyhow::Result<Evaluator> {
+        let runtime = XlaModel::load(&self.artifacts, &self.preset)?;
+        let ws = corpus::WindowSampler::new(&self.corpus.test, self.seq);
+        let nb = ws.eval_batches(self.batch).min(self.eval_batches).max(1);
+        let mut batches = Vec::new();
+        let mut tokens = Vec::new();
+        for b in 0..nb {
+            ws.eval_batch(self.batch, b, &mut tokens);
+            batches.push(Batch::Tokens {
+                tokens: tokens.clone(),
+                batch: self.batch,
+                seq_plus_1: self.seq + 1,
+            });
+        }
+        Ok(Evaluator { runtime: Box::new(runtime), batches })
+    }
+}

@@ -1,0 +1,29 @@
+//! # rtopk — rTop-k sparsified distributed SGD (paper reproduction)
+//!
+//! Production-quality reproduction of *"rTop-k: A Statistical Estimation
+//! Approach to Distributed SGD"* (Barnes, Inan, Isik, Özgür, 2020) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the distributed-SGD coordinator: leader /
+//!   workers, sparsified gradient exchange with bit-exact message encoding,
+//!   error feedback, warm-up schedules, metrics ([`coordinator`],
+//!   [`sparsify`], [`comms`], [`optim`], [`metrics`]).
+//! * **Layer 2/1 (build time)** — JAX training steps calling Pallas
+//!   kernels, AOT-lowered to HLO text under `artifacts/` and executed here
+//!   through PJRT ([`runtime`]).
+//! * **Theory** — the paper's statistical estimation results (Theorems 1–2)
+//!   as an executable simulator ([`estimation`]).
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! `examples/quickstart.rs` for the one-minute tour.
+
+pub mod comms;
+pub mod coordinator;
+pub mod data;
+pub mod estimation;
+pub mod experiments;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod sparsify;
+pub mod util;

@@ -1,0 +1,235 @@
+//! `rtopk` — launcher CLI for the rTop-k distributed-SGD system.
+//!
+//! Subcommands:
+//!   info                        environment + artifact status
+//!   train                       one distributed training run (any method)
+//!   experiment --id <tableN|figN|figT1|figT2|all>
+//!                               regenerate a paper table/figure
+//!   estimate                    one statistical-estimation risk point
+//!
+//! Examples:
+//!   rtopk train --task lm --preset lm_tiny --method rtopk --compression 0.99 --rounds 20
+//!   rtopk train --task image --method topk --compression 0.999 --federated
+//!   rtopk experiment --id table1 --quick
+//!   rtopk estimate --scheme subsample --d 512 --s 32 --n 10 --k 100
+
+use std::path::PathBuf;
+
+use rtopk::coordinator::{self, RoundMode, TrainConfig};
+use rtopk::data::images::ImageDatasetConfig;
+use rtopk::estimation::{self, ThetaPrior};
+use rtopk::experiments::{run_experiment, tasks, ExperimentOptions};
+use rtopk::runtime::RustNetConfig;
+use rtopk::sparsify::SparsifierKind;
+use rtopk::util::cli::Args;
+use rtopk::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("estimate") => cmd_estimate(&args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}; try `rtopk help`"),
+    }
+}
+
+const HELP: &str = "\
+rtopk — rTop-k sparsified distributed SGD (paper reproduction)
+
+USAGE: rtopk <subcommand> [--flags]
+
+SUBCOMMANDS
+  info        environment + artifact status
+  train       one distributed training run
+                --task lm|image          (default image)
+                --preset <lm preset>     (lm task; default lm_tiny)
+                --method baseline|topk|randomk|rtopk|threshold
+                --compression 0.99       target compression ratio
+                --nodes 5 --rounds 100 --federated --seed N
+                --transport inproc|tcp
+                --artifacts DIR --out results/train
+  experiment  regenerate a paper table/figure
+                --id table1..table5|fig2..fig6|figT1|figT2|all
+                --quick  --nodes 5  --artifacts DIR  --out results
+                --lm-preset lm_small
+  estimate    one estimation risk point (sparse Bernoulli model)
+                --scheme subsample|truncate|random|centralized
+                --d 512 --s 32 --n 10 --k 100 --trials 400
+";
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    args.reject_unknown()?;
+    println!("rtopk {} — rTop-k distributed SGD", env!("CARGO_PKG_VERSION"));
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!(
+            "PJRT: platform={} devices={}",
+            c.platform_name(),
+            c.device_count()
+        ),
+        Err(e) => println!("PJRT: UNAVAILABLE ({e})"),
+    }
+    match rtopk::runtime::Manifest::load(&artifacts) {
+        Ok(m) => {
+            println!("artifacts ({}):", artifacts.display());
+            for e in &m.models {
+                println!("  model {:<10} d={:<9} family={}", e.name, e.dim, e.family);
+            }
+            for p in &m.sparse_pipelines {
+                println!("  sparse_pipeline d={}", p.dim);
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    Ok(())
+}
+
+fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
+    let method = SparsifierKind::parse(&args.str_or("method", "rtopk"))?;
+    let compression = args.f64_or("compression", 0.99)?;
+    let nodes = args.usize_or("nodes", 5)?;
+    let task = args.str_or("task", "image");
+    let mut cfg = if task == "lm" {
+        TrainConfig::lm_default(nodes, method, compression)
+    } else {
+        TrainConfig::image_default(nodes, method, compression)
+    };
+    cfg.rounds = args.u64_or("rounds", cfg.rounds)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    if args.bool_or("federated", false)? {
+        cfg.mode = RoundMode::Federated;
+    }
+    cfg.warmup_epochs = args.f64_or("warmup-epochs", cfg.warmup_epochs)?;
+    if !args.bool_or("error-feedback", true)? {
+        cfg.error_feedback = false;
+    }
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    Ok((cfg, artifacts))
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let (cfg, artifacts) = parse_common(args)?;
+    let task = args.str_or("task", "image");
+    let out = PathBuf::from(args.str_or("out", "results/train"));
+    let preset = args.str_or("preset", "lm_tiny");
+    args.reject_unknown()?;
+
+    eprintln!(
+        "training: task={task} method={} nodes={} rounds={} mode={:?}",
+        cfg.method_label(),
+        cfg.nodes,
+        cfg.rounds,
+        cfg.mode
+    );
+    let transport = match args.str_or("transport", "inproc").as_str() {
+        "inproc" | "channel" => coordinator::Transport::InProcess,
+        "tcp" => coordinator::Transport::Tcp,
+        other => anyhow::bail!("unknown transport {other:?} (inproc|tcp)"),
+    };
+    let metrics = match task.as_str() {
+        "lm" => {
+            let t = tasks::LmTask::new(artifacts, &preset, cfg.nodes)?;
+            let ev = t.evaluator()?;
+            let init = t.init_params()?;
+            coordinator::run_with(
+                &cfg,
+                "train-lm",
+                init,
+                t.worker_factory(),
+                Box::new(move || Ok(Some(ev))),
+                transport,
+            )?
+            .metrics
+        }
+        "image" => {
+            let t = tasks::ImageTask::new(
+                &ImageDatasetConfig::cifar_like(),
+                RustNetConfig::cifar(),
+                cfg.nodes,
+                32,
+            );
+            let ev = t.evaluator()?;
+            coordinator::run_with(
+                &cfg,
+                "train-image",
+                t.init_params(),
+                t.worker_factory(),
+                Box::new(move || Ok(Some(ev))),
+                transport,
+            )?
+            .metrics
+        }
+        other => anyhow::bail!("unknown task {other:?} (lm|image)"),
+    };
+    std::fs::create_dir_all(&out)?;
+    metrics.write_csv(&out.join("run.csv"))?;
+    println!("{}", metrics.summary_json().to_pretty());
+    if let Some(e) = metrics.final_eval() {
+        println!("final {} = {:.4}", e.label(), e.value());
+    }
+    println!(
+        "measured compression ratio: {:.4}%",
+        100.0 * metrics.compression_ratio(0)
+    );
+    println!("curves: {}", out.join("run.csv").display());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let id = args.req_str("id")?;
+    let opts = ExperimentOptions {
+        quick: args.bool_or("quick", false)?,
+        artifacts: PathBuf::from(args.str_or("artifacts", "artifacts")),
+        out_dir: PathBuf::from(args.str_or("out", "results")),
+        nodes: args.usize_or("nodes", 5)?,
+        seed: args.u64_or("seed", 0xE0)?,
+        lm_preset: args.str_or("lm-preset", "lm_small"),
+    };
+    args.reject_unknown()?;
+    run_experiment(&id, &opts)
+}
+
+fn cmd_estimate(args: &Args) -> anyhow::Result<()> {
+    let scheme = estimation::by_name(&args.str_or("scheme", "subsample"))?;
+    let d = args.usize_or("d", 512)?;
+    let s = args.f64_or("s", 32.0)?;
+    let n = args.usize_or("n", 10)?;
+    let k = args.usize_or("k", 100)?;
+    let trials = args.usize_or("trials", 400)?;
+    let seed = args.u64_or("seed", 1)?;
+    args.reject_unknown()?;
+    let model = estimation::SparseBernoulli::new(d, s);
+    let mut rng = Rng::new(seed);
+    let p = estimation::estimate_risk(
+        &model,
+        scheme.as_ref(),
+        n,
+        k,
+        ThetaPrior::HardSparse,
+        trials,
+        &mut rng,
+    );
+    println!(
+        "scheme={} d={d} s={s} n={n} k={k}: risk={:.5} (stderr {:.5}, {} trials)",
+        p.scheme, p.risk, p.stderr, p.trials
+    );
+    println!(
+        "theorem1 upper (C=1): {:.5}   theorem2 lower (c=1): {:.5}",
+        estimation::bounds::theorem1_upper(n, k, d, s, 1.0),
+        estimation::bounds::theorem2_lower(n, k, d, s, 1.0),
+    );
+    Ok(())
+}

@@ -1,0 +1,258 @@
+//! Training metrics: per-round records, aggregate summaries, CSV/JSON
+//! emission. The experiment harness turns these into the paper's tables
+//! (final accuracy / perplexity + measured compression ratio) and figures
+//! (loss / accuracy curves).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+/// One record per communication round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub epoch: f64,
+    /// Mean worker training loss this round.
+    pub train_loss: f64,
+    /// Evaluation metric, when an eval ran this round.
+    pub eval: Option<EvalRecord>,
+    /// Uplink bytes actually sent by all workers this round.
+    pub uplink_bytes: u64,
+    /// Gradient coordinates (entries) actually sent by all workers.
+    pub uplink_coords: u64,
+    /// Bytes a dense f32 exchange would have cost (n * 4d).
+    pub dense_bytes: u64,
+    /// Mean residual-memory norm across workers (error-feedback health).
+    pub memory_norm: f64,
+    pub k_used: usize,
+    pub lr: f32,
+    pub wall_ms: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum EvalRecord {
+    /// Classification accuracy in [0,1].
+    Accuracy(f64),
+    /// LM perplexity (exp of mean NLL).
+    Perplexity(f64),
+}
+
+impl EvalRecord {
+    pub fn value(&self) -> f64 {
+        match self {
+            EvalRecord::Accuracy(a) => *a,
+            EvalRecord::Perplexity(p) => *p,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvalRecord::Accuracy(_) => "accuracy",
+            EvalRecord::Perplexity(_) => "perplexity",
+        }
+    }
+}
+
+/// Full run history plus identity of the run.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub name: String,
+    pub method: String,
+    pub records: Vec<RoundRecord>,
+}
+
+impl RunMetrics {
+    pub fn new(name: &str, method: &str) -> Self {
+        RunMetrics { name: name.to_string(), method: method.to_string(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.records.push(r);
+    }
+
+    /// Measured byte-level compression ratio: 1 - sent/dense over the run
+    /// (excluding warm-up rounds if `skip_warmup_rounds` > 0, matching how
+    /// the paper states target ratios for the post-warm-up regime).
+    pub fn compression_ratio(&self, skip_warmup_rounds: usize) -> f64 {
+        let recs = &self.records[skip_warmup_rounds.min(self.records.len())..];
+        let sent: u64 = recs.iter().map(|r| r.uplink_bytes).sum();
+        let dense: u64 = recs.iter().map(|r| r.dense_bytes).sum();
+        if dense == 0 {
+            0.0
+        } else {
+            1.0 - sent as f64 / dense as f64
+        }
+    }
+
+    /// Measured entry-level compression ratio: 1 - coords_sent/coords_dense
+    /// — the paper's "Compression" column counts gradient entries, not
+    /// wire bytes (indices cost extra bytes; see the codec).
+    pub fn entry_compression_ratio(&self, skip_warmup_rounds: usize) -> f64 {
+        let recs = &self.records[skip_warmup_rounds.min(self.records.len())..];
+        let sent: u64 = recs.iter().map(|r| r.uplink_coords).sum();
+        let dense: u64 = recs.iter().map(|r| r.dense_bytes / 4).sum();
+        if dense == 0 {
+            0.0
+        } else {
+            1.0 - sent as f64 / dense as f64
+        }
+    }
+
+    pub fn final_eval(&self) -> Option<EvalRecord> {
+        self.records.iter().rev().find_map(|r| r.eval)
+    }
+
+    /// Best (max accuracy / min perplexity) evaluation over the run.
+    pub fn best_eval(&self) -> Option<f64> {
+        let evals: Vec<&EvalRecord> =
+            self.records.iter().filter_map(|r| r.eval.as_ref()).collect();
+        if evals.is_empty() {
+            return None;
+        }
+        Some(match evals[0] {
+            EvalRecord::Accuracy(_) => evals
+                .iter()
+                .map(|e| e.value())
+                .fold(f64::NEG_INFINITY, f64::max),
+            EvalRecord::Perplexity(_) => {
+                evals.iter().map(|e| e.value()).fold(f64::INFINITY, f64::min)
+            }
+        })
+    }
+
+    pub fn final_train_loss(&self) -> Option<f64> {
+        self.records.last().map(|r| r.train_loss)
+    }
+
+    /// Write the per-round curve as CSV (one row per round).
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(
+            f,
+            "round,epoch,train_loss,eval_metric,eval_value,uplink_bytes,uplink_coords,dense_bytes,memory_norm,k,lr,wall_ms"
+        )?;
+        for r in &self.records {
+            let (em, ev) = match &r.eval {
+                Some(e) => (e.label(), format!("{}", e.value())),
+                None => ("", String::new()),
+            };
+            writeln!(
+                f,
+                "{},{:.4},{:.6},{},{},{},{},{},{:.6},{},{},{:.3}",
+                r.round,
+                r.epoch,
+                r.train_loss,
+                em,
+                ev,
+                r.uplink_bytes,
+                r.uplink_coords,
+                r.dense_bytes,
+                r.memory_norm,
+                r.k_used,
+                r.lr,
+                r.wall_ms
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Compact JSON summary (used by EXPERIMENTS.md tooling).
+    pub fn summary_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::from(self.name.clone())),
+            ("method", Json::from(self.method.clone())),
+            ("rounds", Json::from(self.records.len())),
+            ("compression_ratio", Json::from(self.compression_ratio(0))),
+        ];
+        if let Some(e) = self.final_eval() {
+            pairs.push(("final_metric", Json::from(e.label())));
+            pairs.push(("final_value", Json::from(e.value())));
+        }
+        if let Some(b) = self.best_eval() {
+            pairs.push(("best_value", Json::from(b)));
+        }
+        if let Some(l) = self.final_train_loss() {
+            pairs.push(("final_train_loss", Json::from(l)));
+        }
+        obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: u64, up: u64, dense: u64, eval: Option<EvalRecord>) -> RoundRecord {
+        RoundRecord {
+            round,
+            epoch: round as f64 / 10.0,
+            train_loss: 1.0 / (round + 1) as f64,
+            eval,
+            uplink_bytes: up,
+            uplink_coords: up / 8,
+            dense_bytes: dense,
+            memory_norm: 0.1,
+            k_used: 10,
+            lr: 0.1,
+            wall_ms: 5.0,
+        }
+    }
+
+    #[test]
+    fn compression_ratio_measured() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        m.push(rec(0, 1000, 1000, None)); // warm-up round, dense
+        m.push(rec(1, 10, 1000, None));
+        m.push(rec(2, 10, 1000, None));
+        assert!((m.compression_ratio(1) - 0.99).abs() < 1e-9);
+        assert!(m.compression_ratio(0) < 0.99);
+    }
+
+    #[test]
+    fn best_and_final_eval() {
+        let mut m = RunMetrics::new("t", "topk");
+        m.push(rec(0, 1, 1, Some(EvalRecord::Accuracy(0.5))));
+        m.push(rec(1, 1, 1, Some(EvalRecord::Accuracy(0.8))));
+        m.push(rec(2, 1, 1, Some(EvalRecord::Accuracy(0.7))));
+        assert_eq!(m.final_eval().unwrap().value(), 0.7);
+        assert_eq!(m.best_eval().unwrap(), 0.8);
+    }
+
+    #[test]
+    fn perplexity_best_is_min() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        m.push(rec(0, 1, 1, Some(EvalRecord::Perplexity(120.0))));
+        m.push(rec(1, 1, 1, Some(EvalRecord::Perplexity(85.0))));
+        m.push(rec(2, 1, 1, Some(EvalRecord::Perplexity(90.0))));
+        assert_eq!(m.best_eval().unwrap(), 85.0);
+    }
+
+    #[test]
+    fn csv_writes_and_parses_back() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        m.push(rec(0, 5, 100, Some(EvalRecord::Accuracy(0.25))));
+        m.push(rec(1, 5, 100, None));
+        let dir = std::env::temp_dir().join("rtopk_test_metrics");
+        let path = dir.join("run.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("round,epoch"));
+        assert!(lines[1].contains("accuracy"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_json_contains_metrics() {
+        let mut m = RunMetrics::new("cifar", "rtopk");
+        m.push(rec(0, 10, 1000, Some(EvalRecord::Accuracy(0.9))));
+        let j = m.summary_json();
+        assert_eq!(j.get("final_value").unwrap().as_f64(), Some(0.9));
+        assert_eq!(j.get("method").unwrap().as_str(), Some("rtopk"));
+    }
+}

@@ -1,0 +1,166 @@
+//! Optimizers and schedules used by the leader (Algorithm 1's "centralized
+//! processor" step) — momentum SGD for the image experiments, vanilla SGD
+//! with global-norm clipping for the LM experiments, exactly matching the
+//! paper's §IV settings.
+
+pub mod schedule;
+
+pub use schedule::{LrSchedule, WarmupSparsity};
+
+/// An optimizer consumes the aggregated (dense) update direction and steps
+/// the flat parameter vector in place.
+pub trait Optimizer: Send {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]);
+    /// Current learning rate (after schedule application).
+    fn lr(&self) -> f32;
+    fn set_lr(&mut self, lr: f32);
+    fn name(&self) -> String;
+}
+
+/// SGD with classical (heavyweight-ball) momentum:
+/// v <- mu v + g;  w <- w - lr v.
+pub struct MomentumSgd {
+    pub lr_value: f32,
+    pub momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl MomentumSgd {
+    pub fn new(dim: usize, lr: f32, momentum: f32) -> Self {
+        MomentumSgd { lr_value: lr, momentum, velocity: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for MomentumSgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.velocity.len());
+        let (mu, lr) = (self.momentum, self.lr_value);
+        for ((w, &g), v) in params.iter_mut().zip(grad).zip(self.velocity.iter_mut()) {
+            *v = mu * *v + g;
+            *w -= lr * *v;
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr_value
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr_value = lr;
+    }
+
+    fn name(&self) -> String {
+        format!("momentum-sgd(mu={})", self.momentum)
+    }
+}
+
+/// Vanilla SGD with optional global-norm gradient clipping (the paper's
+/// PTB configuration).
+pub struct Sgd {
+    pub lr_value: f32,
+    pub clip_norm: Option<f32>,
+    scratch: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr_value: lr, clip_norm: None, scratch: Vec::new() }
+    }
+
+    pub fn with_clip(lr: f32, clip: f32) -> Self {
+        Sgd { lr_value: lr, clip_norm: Some(clip), scratch: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), grad.len());
+        let g = if let Some(clip) = self.clip_norm {
+            let norm = crate::sparsify::l2_sq(grad).sqrt() as f32;
+            if norm > clip {
+                let scale = clip / norm;
+                self.scratch.clear();
+                self.scratch.extend(grad.iter().map(|&x| x * scale));
+                &self.scratch[..]
+            } else {
+                grad
+            }
+        } else {
+            grad
+        };
+        let lr = self.lr_value;
+        for (w, &gi) in params.iter_mut().zip(g) {
+            *w -= lr * gi;
+        }
+    }
+
+    fn lr(&self) -> f32 {
+        self.lr_value
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr_value = lr;
+    }
+
+    fn name(&self) -> String {
+        match self.clip_norm {
+            Some(c) => format!("sgd(clip={c})"),
+            None => "sgd".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step_matches_formula() {
+        let mut opt = Sgd::new(0.1);
+        let mut w = vec![1.0, 2.0];
+        opt.step(&mut w, &[0.5, -0.5]);
+        assert_eq!(w, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn clipping_rescales_only_above_norm() {
+        let mut opt = Sgd::with_clip(1.0, 1.0);
+        let mut w = vec![0.0, 0.0];
+        opt.step(&mut w, &[3.0, 4.0]); // norm 5 -> scaled to 1
+        assert!((w[0] + 0.6).abs() < 1e-6 && (w[1] + 0.8).abs() < 1e-6);
+        let mut w2 = vec![0.0, 0.0];
+        opt.step(&mut w2, &[0.3, 0.4]); // norm 0.5, untouched
+        assert!((w2[0] + 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = MomentumSgd::new(1, 0.1, 0.9);
+        let mut w = vec![0.0];
+        opt.step(&mut w, &[1.0]); // v=1, w=-0.1
+        opt.step(&mut w, &[1.0]); // v=1.9, w=-0.29
+        assert!((w[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_converges_on_quadratic() {
+        // minimize 0.5*||w - 3||^2
+        let mut opt = MomentumSgd::new(1, 0.1, 0.9);
+        let mut w = vec![0.0f32];
+        for _ in 0..200 {
+            let g = vec![w[0] - 3.0];
+            opt.step(&mut w, &g);
+        }
+        assert!((w[0] - 3.0).abs() < 1e-3, "{}", w[0]);
+    }
+
+    #[test]
+    fn set_lr_applies() {
+        let mut opt = Sgd::new(0.1);
+        opt.set_lr(0.01);
+        let mut w = vec![1.0];
+        opt.step(&mut w, &[1.0]);
+        assert!((w[0] - 0.99).abs() < 1e-7);
+    }
+}

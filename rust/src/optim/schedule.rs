@@ -1,0 +1,137 @@
+//! Learning-rate and sparsity schedules.
+//!
+//! * [`LrSchedule`] — piecewise-constant decay (the paper's Theorem 3 needs
+//!   a piecewise schedule for convergence; their experiments decay at fixed
+//!   epochs) plus the PTB-style "decay after epoch E by factor f".
+//! * [`WarmupSparsity`] — the Deep-Gradient-Compression warm-up the paper
+//!   adopts (§IV-A): the kept fraction ramps exponentially from dense to
+//!   the target over the first W epochs.
+
+/// Piecewise-constant learning rate.
+#[derive(Debug, Clone)]
+pub struct LrSchedule {
+    pub base: f32,
+    /// (epoch, multiplicative factor applied from that epoch on).
+    pub milestones: Vec<(usize, f32)>,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        LrSchedule { base, milestones: vec![] }
+    }
+
+    /// Step decay: multiply by `gamma` at each listed epoch.
+    pub fn steps(base: f32, epochs: &[usize], gamma: f32) -> Self {
+        LrSchedule {
+            base,
+            milestones: epochs.iter().map(|&e| (e, gamma)).collect(),
+        }
+    }
+
+    pub fn at_epoch(&self, epoch: usize) -> f32 {
+        let mut lr = self.base;
+        for &(e, f) in &self.milestones {
+            if epoch >= e {
+                lr *= f;
+            }
+        }
+        lr
+    }
+}
+
+/// DGC-style exponential sparsity warm-up. During the first
+/// `warmup_epochs`, the *kept fraction* interpolates exponentially from
+/// `1.0` down to the target `keep_frac`; afterwards it stays at target.
+#[derive(Debug, Clone)]
+pub struct WarmupSparsity {
+    pub target_keep: f64,
+    pub warmup_epochs: f64,
+}
+
+impl WarmupSparsity {
+    pub fn new(target_keep: f64, warmup_epochs: f64) -> Self {
+        assert!(target_keep > 0.0 && target_keep <= 1.0);
+        assert!(warmup_epochs >= 0.0);
+        WarmupSparsity { target_keep, warmup_epochs }
+    }
+
+    pub fn none(target_keep: f64) -> Self {
+        WarmupSparsity { target_keep, warmup_epochs: 0.0 }
+    }
+
+    /// Kept fraction at a (possibly fractional) epoch index.
+    pub fn keep_frac(&self, epoch: f64) -> f64 {
+        if self.warmup_epochs <= 0.0 || epoch >= self.warmup_epochs {
+            return self.target_keep;
+        }
+        // exponential interpolation: keep(e) = target^(e/W)
+        let t = (epoch / self.warmup_epochs).clamp(0.0, 1.0);
+        self.target_keep.powf(t)
+    }
+
+    /// k for a given dimension at a given epoch (>= 1).
+    pub fn k_at(&self, dim: usize, epoch: f64) -> usize {
+        ((self.keep_frac(epoch) * dim as f64).round() as usize).clamp(1, dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_lr() {
+        let s = LrSchedule::constant(0.1);
+        assert_eq!(s.at_epoch(0), 0.1);
+        assert_eq!(s.at_epoch(100), 0.1);
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::steps(1.0, &[10, 20], 0.1);
+        assert_eq!(s.at_epoch(9), 1.0);
+        assert!((s.at_epoch(10) - 0.1).abs() < 1e-7);
+        assert!((s.at_epoch(25) - 0.01).abs() < 1e-8);
+    }
+
+    #[test]
+    fn warmup_starts_dense_ends_at_target() {
+        let w = WarmupSparsity::new(0.001, 5.0);
+        assert!((w.keep_frac(0.0) - 1.0).abs() < 1e-12);
+        assert!((w.keep_frac(5.0) - 0.001).abs() < 1e-12);
+        assert!((w.keep_frac(10.0) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_is_monotone_decreasing() {
+        let w = WarmupSparsity::new(0.01, 5.0);
+        let mut prev = 1.1;
+        for i in 0..=50 {
+            let f = w.keep_frac(i as f64 / 10.0);
+            assert!(f <= prev + 1e-12, "epoch {}: {f} > {prev}", i as f64 / 10.0);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn warmup_exponential_midpoint() {
+        // keep(W/2) = sqrt(target)
+        let w = WarmupSparsity::new(0.0001, 4.0);
+        assert!((w.keep_frac(2.0) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_at_clamps() {
+        let w = WarmupSparsity::new(0.001, 0.0);
+        assert_eq!(w.k_at(100, 0.0), 1); // 0.1 rounds to 0 -> clamp 1
+        assert_eq!(w.k_at(1_000_000, 0.0), 1000);
+        let dense = WarmupSparsity::new(1.0, 0.0);
+        assert_eq!(dense.k_at(100, 0.0), 100);
+    }
+
+    #[test]
+    fn no_warmup_immediately_at_target() {
+        let w = WarmupSparsity::none(0.05);
+        assert_eq!(w.keep_frac(0.0), 0.05);
+    }
+}

@@ -1,0 +1,229 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime. Shapes and dtypes recorded at lowering time are
+//! validated here before any executable is compiled.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    fn from_json(j: &Json) -> anyhow::Result<IoSpec> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        let dtype = j
+            .req("dtype")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("dtype not a string"))?
+            .to_string();
+        Ok(IoSpec { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ProgramEntry {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ProgramEntry {
+    fn from_json(j: &Json) -> anyhow::Result<ProgramEntry> {
+        let specs = |key: &str| -> anyhow::Result<Vec<IoSpec>> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("{key} not an array"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        Ok(ProgramEntry {
+            file: j
+                .req("file")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("file not a string"))?
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dim: usize,
+    pub init_file: String,
+    pub family: String,
+    pub meta: Json,
+    pub train: ProgramEntry,
+    pub eval: ProgramEntry,
+}
+
+#[derive(Debug, Clone)]
+pub struct SparsePipelineEntry {
+    pub name: String,
+    pub dim: usize,
+    pub nbins: usize,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub sparse_pipelines: Vec<SparsePipelineEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("cannot read manifest in {dir:?} (run `make artifacts`): {e}"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let models = j
+            .req("models")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("models not an array"))?
+            .iter()
+            .map(|m| -> anyhow::Result<ModelEntry> {
+                let meta = m.req("meta")?.clone();
+                Ok(ModelEntry {
+                    name: m.req("name")?.as_str().unwrap_or_default().to_string(),
+                    dim: m
+                        .req("dim")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("bad dim"))?,
+                    init_file: m.req("init")?.as_str().unwrap_or_default().to_string(),
+                    family: meta
+                        .get("family")
+                        .and_then(|f| f.as_str())
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    meta,
+                    train: ProgramEntry::from_json(m.req("train")?)?,
+                    eval: ProgramEntry::from_json(m.req("eval")?)?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let sparse_pipelines = match j.get("sparse_pipelines").and_then(|s| s.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .map(|p| -> anyhow::Result<SparsePipelineEntry> {
+                    Ok(SparsePipelineEntry {
+                        name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                        dim: p.req("dim")?.as_usize().unwrap_or(0),
+                        nbins: p.req("nbins")?.as_usize().unwrap_or(0),
+                        file: p.req("file")?.as_str().unwrap_or_default().to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok(Manifest { dir: dir.to_path_buf(), models, sparse_pipelines })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model {name:?} not in manifest (have: {:?}); re-run `make artifacts` with --presets",
+                    self.models.iter().map(|m| &m.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Load a model's raw little-endian f32 init vector.
+    pub fn load_init(&self, entry: &ModelEntry) -> anyhow::Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(&entry.init_file))?;
+        anyhow::ensure!(
+            bytes.len() == 4 * entry.dim,
+            "init file {} has {} bytes, expected {}",
+            entry.init_file,
+            bytes.len(),
+            4 * entry.dim
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "models": [{
+        "name": "lm_tiny", "dim": 8, "init": "lm_tiny.init.bin",
+        "meta": {"family": "lm", "vocab": 256, "batch": 4, "seq": 32},
+        "train": {"file": "lm_tiny.train.hlo.txt",
+          "inputs": [{"shape": [8], "dtype": "float32"},
+                     {"shape": [4, 33], "dtype": "int32"}],
+          "outputs": [{"shape": [], "dtype": "float32"},
+                      {"shape": [8], "dtype": "float32"}],
+          "sha256": "x"},
+        "eval": {"file": "lm_tiny.eval.hlo.txt",
+          "inputs": [{"shape": [8], "dtype": "float32"},
+                     {"shape": [4, 33], "dtype": "int32"}],
+          "outputs": [{"shape": [], "dtype": "float32"},
+                      {"shape": [], "dtype": "float32"}],
+          "sha256": "y"}
+      }],
+      "sparse_pipelines": [{"name": "sparse_pipeline.64", "dim": 64,
+        "nbins": 128, "file": "sparse_pipeline.64.hlo.txt",
+        "inputs": [], "outputs": [], "sha256": "z"}]
+    }"#;
+
+    #[test]
+    fn parses_models_and_pipelines() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let e = m.model("lm_tiny").unwrap();
+        assert_eq!(e.dim, 8);
+        assert_eq!(e.family, "lm");
+        assert_eq!(e.train.inputs[1].shape, vec![4, 33]);
+        assert_eq!(e.train.outputs[1].elements(), 8);
+        assert_eq!(m.sparse_pipelines[0].nbins, 128);
+    }
+
+    #[test]
+    fn unknown_model_helpful_error() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("lm_tiny"), "{err}");
+    }
+
+    #[test]
+    fn init_size_validated() {
+        let dir = std::env::temp_dir().join("rtopk_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("lm_tiny.init.bin"), vec![0u8; 4 * 8]).unwrap();
+        let m = Manifest::parse(&dir, SAMPLE).unwrap();
+        let e = m.model("lm_tiny").unwrap();
+        assert_eq!(m.load_init(e).unwrap().len(), 8);
+        std::fs::write(dir.join("lm_tiny.init.bin"), vec![0u8; 7]).unwrap();
+        assert!(m.load_init(e).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

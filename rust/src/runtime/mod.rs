@@ -1,0 +1,90 @@
+//! Model runtimes: the coordinator's view of "a model" is a flat f32
+//! parameter vector plus `train_step` / `eval_step` — exactly the ABI the
+//! Layer-2 JAX functions expose after AOT lowering.
+//!
+//! * [`xla_runtime::XlaModel`] — loads `artifacts/NAME.{train,eval}.hlo.txt`
+//!   (HLO text produced by `python/compile/aot.py`) and executes through
+//!   the PJRT CPU client. The production path.
+//! * [`rustnet::RustNet`] — pure-Rust CNN with hand-written backprop; runs
+//!   the image experiments without Python anywhere in the loop and serves
+//!   as an artifact-free runtime for tests.
+//! * [`mock::MockModel`] — noisy quadratic with a known optimum; the unit
+//!   and property tests' workhorse.
+
+pub mod manifest;
+pub mod mock;
+pub mod rustnet;
+pub mod xla_runtime;
+
+pub use manifest::{Manifest, ModelEntry};
+pub use mock::MockModel;
+pub use rustnet::{RustNet, RustNetConfig};
+pub use xla_runtime::XlaModel;
+
+/// A training batch, family-specific.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Batch {
+    /// LM: i32 tokens, row-major [batch, seq+1].
+    Tokens { tokens: Vec<i32>, batch: usize, seq_plus_1: usize },
+    /// CNN: f32 NHWC pixels + i32 labels.
+    Images { pixels: Vec<f32>, labels: Vec<i32> },
+    /// Mock: an arbitrary seed the mock uses to derive its noise.
+    Seed(u64),
+}
+
+/// Which evaluation metric `eval_step`'s (sum, count) pair aggregates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalKind {
+    /// sum = total NLL, count = tokens; metric = exp(sum/count).
+    NllSum,
+    /// sum = correct predictions, count = examples; metric = sum/count.
+    CorrectCount,
+}
+
+/// The coordinator-facing model interface.
+///
+/// NOT `Send`: the XLA runtime wraps thread-affine PJRT handles, so each
+/// worker thread constructs its own runtime via the cluster's factory.
+pub trait ModelRuntime {
+    /// Flat parameter dimension d.
+    fn dim(&self) -> usize;
+
+    /// The initial parameter vector omega^0 (shared by all nodes).
+    fn init_params(&self) -> Vec<f32>;
+
+    /// Compute (loss, grads) for `params` on `batch`; writes the flat
+    /// gradient into `grads` (resized to `dim()`).
+    fn train_step(&mut self, params: &[f32], batch: &Batch, grads: &mut Vec<f32>)
+        -> anyhow::Result<f32>;
+
+    /// Evaluation contribution of one batch: (sum, count) per [`EvalKind`].
+    fn eval_step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<(f64, f64)>;
+
+    fn eval_kind(&self) -> EvalKind;
+
+    fn name(&self) -> String;
+}
+
+/// Turn an aggregated (sum, count) pair into the final metric value.
+pub fn eval_metric(kind: EvalKind, sum: f64, count: f64) -> f64 {
+    match kind {
+        EvalKind::NllSum => (sum / count.max(1.0)).exp(),
+        EvalKind::CorrectCount => sum / count.max(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_metric_perplexity() {
+        let ppl = eval_metric(EvalKind::NllSum, 2.0 * 100.0, 100.0);
+        assert!((ppl - 2f64.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_metric_accuracy() {
+        assert_eq!(eval_metric(EvalKind::CorrectCount, 80.0, 100.0), 0.8);
+    }
+}

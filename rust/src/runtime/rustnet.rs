@@ -1,0 +1,674 @@
+//! Pure-Rust convolutional network with hand-written backprop.
+//!
+//! The image experiments (Tables I–III analogues) run on this runtime:
+//! a stride-2 3x3 conv stack + MLP head, the same architecture family the
+//! Layer-2 JAX `cnn_*` presets lower (padding convention matches XLA SAME:
+//! pad_lo = 0, pad_hi = 1 for even inputs). Implemented with im2col +
+//! cache-friendly GEMM so five simulated nodes train in real time without
+//! any artifacts or Python. Gradients are verified against central finite
+//! differences in the tests below.
+
+use super::{Batch, EvalKind, ModelRuntime};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct RustNetConfig {
+    pub classes: usize,
+    pub channels: Vec<usize>,
+    pub hidden: usize,
+    pub image: usize,
+}
+
+impl RustNetConfig {
+    /// CIFAR-analogue (Tables I/II).
+    pub fn cifar() -> Self {
+        RustNetConfig { classes: 10, channels: vec![16, 32, 64], hidden: 128, image: 32 }
+    }
+
+    /// ImageNet-analogue (Table III): wider + more classes.
+    pub fn imagenet() -> Self {
+        RustNetConfig { classes: 20, channels: vec![24, 48, 96], hidden: 192, image: 32 }
+    }
+
+    /// Tiny config for tests.
+    pub fn tiny() -> Self {
+        RustNetConfig { classes: 3, channels: vec![4, 8], hidden: 16, image: 8 }
+    }
+
+    fn final_side(&self) -> usize {
+        self.image >> self.channels.len()
+    }
+
+    fn flat_after_convs(&self) -> usize {
+        let side = self.final_side();
+        side * side * self.channels.last().copied().unwrap_or(3)
+    }
+}
+
+/// (offset, len) of each parameter tensor in the flat vector.
+#[derive(Debug, Clone)]
+struct Layout {
+    conv_w: Vec<(usize, usize)>,
+    conv_b: Vec<(usize, usize)>,
+    fc1_w: (usize, usize),
+    fc1_b: (usize, usize),
+    fc2_w: (usize, usize),
+    fc2_b: (usize, usize),
+    total: usize,
+}
+
+fn layout(cfg: &RustNetConfig) -> Layout {
+    let mut off = 0usize;
+    let mut conv_w = Vec::new();
+    let mut conv_b = Vec::new();
+    let mut cin = 3usize;
+    let alloc = |len: usize, off: &mut usize| {
+        let o = *off;
+        *off += len;
+        (o, len)
+    };
+    for &cout in &cfg.channels {
+        conv_w.push(alloc(3 * 3 * cin * cout, &mut off));
+        conv_b.push(alloc(cout, &mut off));
+        cin = cout;
+    }
+    let flat = cfg.flat_after_convs();
+    let fc1_w = alloc(flat * cfg.hidden, &mut off);
+    let fc1_b = alloc(cfg.hidden, &mut off);
+    let fc2_w = alloc(cfg.hidden * cfg.classes, &mut off);
+    let fc2_b = alloc(cfg.classes, &mut off);
+    Layout { conv_w, conv_b, fc1_w, fc1_b, fc2_w, fc2_b, total: off }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM kernels (row-major). ikj ordering so the inner loop is a
+// vectorizable axpy over contiguous rows.
+// ---------------------------------------------------------------------------
+
+/// c[m,n] += a[m,k] * b[k,n]
+fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in a_row.iter().enumerate() {
+            if aik == 0.0 {
+                continue; // post-ReLU activations are ~50% zeros
+            }
+            let b_row = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += aik * bv;
+            }
+        }
+    }
+}
+
+/// c[m,n] += a^T * b where a is [k,m], b is [k,n]
+fn gemm_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for kk in 0..k {
+        let a_row = &a[kk * m..(kk + 1) * m];
+        let b_row = &b[kk * n..(kk + 1) * n];
+        for (i, &aki) in a_row.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let c_row = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                *cv += aki * bv;
+            }
+        }
+    }
+}
+
+/// c[m,n] += a[m,k] * b^T where b is [n,k]
+fn gemm_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in c_row.iter_mut().enumerate() {
+            let b_row = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in a_row.iter().zip(b_row) {
+                acc += av * bv;
+            }
+            *cv += acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// im2col for 3x3 stride-2, XLA-SAME padding (pad_lo=0, pad_hi=1)
+// ---------------------------------------------------------------------------
+
+/// x: [side, side, cin] -> cols: [oside*oside, 9*cin]
+fn im2col(x: &[f32], side: usize, cin: usize, cols: &mut [f32]) {
+    let oside = side / 2;
+    debug_assert_eq!(cols.len(), oside * oside * 9 * cin);
+    cols.iter_mut().for_each(|c| *c = 0.0);
+    for oy in 0..oside {
+        for ox in 0..oside {
+            let base = (oy * oside + ox) * 9 * cin;
+            for ky in 0..3 {
+                let iy = oy * 2 + ky;
+                if iy >= side {
+                    continue;
+                }
+                for kx in 0..3 {
+                    let ix = ox * 2 + kx;
+                    if ix >= side {
+                        continue;
+                    }
+                    let src = (iy * side + ix) * cin;
+                    let dst = base + (ky * 3 + kx) * cin;
+                    cols[dst..dst + cin].copy_from_slice(&x[src..src + cin]);
+                }
+            }
+        }
+    }
+}
+
+/// Transpose of im2col: scatter col-gradients back to the input image.
+fn col2im(dcols: &[f32], side: usize, cin: usize, dx: &mut [f32]) {
+    let oside = side / 2;
+    dx.iter_mut().for_each(|v| *v = 0.0);
+    for oy in 0..oside {
+        for ox in 0..oside {
+            let base = (oy * oside + ox) * 9 * cin;
+            for ky in 0..3 {
+                let iy = oy * 2 + ky;
+                if iy >= side {
+                    continue;
+                }
+                for kx in 0..3 {
+                    let ix = ox * 2 + kx;
+                    if ix >= side {
+                        continue;
+                    }
+                    let dst = (iy * side + ix) * cin;
+                    let src = base + (ky * 3 + kx) * cin;
+                    for c in 0..cin {
+                        dx[dst + c] += dcols[src + c];
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The model
+// ---------------------------------------------------------------------------
+
+pub struct RustNet {
+    pub cfg: RustNetConfig,
+    lay: Layout,
+    init: Vec<f32>,
+    // scratch reused across calls (per-sample conv buffers + batch fc
+    // buffers); sized lazily on first use.
+    scratch: Scratch,
+}
+
+#[derive(Default)]
+struct Scratch {
+    /// Per conv layer: cached post-ReLU activations for the whole batch
+    /// (acts[0] = input pixels).
+    acts: Vec<Vec<f32>>,
+    cols: Vec<f32>,
+    dcols: Vec<f32>,
+    fc_in: Vec<f32>,
+    h1: Vec<f32>,
+    logits: Vec<f32>,
+    dlogits: Vec<f32>,
+    dh1: Vec<f32>,
+    dfc_in: Vec<f32>,
+    dact: Vec<f32>,
+    dact_next: Vec<f32>,
+}
+
+impl RustNet {
+    pub fn new(cfg: RustNetConfig, seed: u64) -> Self {
+        assert!(cfg.image % (1 << cfg.channels.len()) == 0, "image must be divisible by 2^layers");
+        let lay = layout(&cfg);
+        let mut rng = Rng::new(seed);
+        let mut init = vec![0.0f32; lay.total];
+        let mut cin = 3usize;
+        for (l, &cout) in cfg.channels.iter().enumerate() {
+            let fan_in = 9 * cin;
+            let sigma = (2.0 / fan_in as f32).sqrt();
+            let (o, len) = lay.conv_w[l];
+            for v in &mut init[o..o + len] {
+                *v = rng.normal_f32(0.0, sigma);
+            }
+            cin = cout;
+        }
+        let flat = cfg.flat_after_convs();
+        let (o, len) = lay.fc1_w;
+        let sigma = (2.0 / flat as f32).sqrt();
+        for v in &mut init[o..o + len] {
+            *v = rng.normal_f32(0.0, sigma);
+        }
+        let (o, len) = lay.fc2_w;
+        let sigma = (2.0 / cfg.hidden as f32).sqrt();
+        for v in &mut init[o..o + len] {
+            *v = rng.normal_f32(0.0, sigma);
+        }
+        RustNet { cfg, lay, init, scratch: Scratch::default() }
+    }
+
+    fn view<'a>(p: &'a [f32], slot: (usize, usize)) -> &'a [f32] {
+        &p[slot.0..slot.0 + slot.1]
+    }
+
+    /// Forward the conv stack + head for a batch; fills scratch caches.
+    /// Returns mean loss if labels given (and fills dlogits for backward).
+    fn forward(&mut self, params: &[f32], pixels: &[f32], n: usize) {
+        let cfg = &self.cfg;
+        let s = &mut self.scratch;
+        let n_layers = cfg.channels.len();
+        s.acts.resize(n_layers + 1, Vec::new());
+        s.acts[0].clear();
+        s.acts[0].extend_from_slice(pixels);
+
+        let mut side = cfg.image;
+        let mut cin = 3usize;
+        for l in 0..n_layers {
+            let cout = cfg.channels[l];
+            let oside = side / 2;
+            let (in_act, out_act) = {
+                // split_at_mut trick to borrow two acts entries
+                let (head, tail) = s.acts.split_at_mut(l + 1);
+                (&head[l], &mut tail[0])
+            };
+            out_act.resize(n * oside * oside * cout, 0.0);
+            out_act.iter_mut().for_each(|v| *v = 0.0);
+            s.cols.resize(oside * oside * 9 * cin, 0.0);
+            let w = Self::view(params, self.lay.conv_w[l]);
+            let b = Self::view(params, self.lay.conv_b[l]);
+            for i in 0..n {
+                let x = &in_act[i * side * side * cin..(i + 1) * side * side * cin];
+                im2col(x, side, cin, &mut s.cols);
+                let y = &mut out_act[i * oside * oside * cout..(i + 1) * oside * oside * cout];
+                // y = cols [os*os, 9cin] @ w [9cin, cout]
+                gemm(oside * oside, 9 * cin, cout, &s.cols, w, y);
+                for row in y.chunks_exact_mut(cout) {
+                    for (v, &bv) in row.iter_mut().zip(b) {
+                        *v = (*v + bv).max(0.0); // bias + ReLU
+                    }
+                }
+            }
+            side = oside;
+            cin = cout;
+        }
+
+        // head
+        let flat = cfg.flat_after_convs();
+        s.fc_in.clear();
+        s.fc_in.extend_from_slice(&s.acts[n_layers]);
+        debug_assert_eq!(s.fc_in.len(), n * flat);
+        s.h1.resize(n * cfg.hidden, 0.0);
+        s.h1.iter_mut().for_each(|v| *v = 0.0);
+        gemm(n, flat, cfg.hidden, &s.fc_in, Self::view(params, self.lay.fc1_w), &mut s.h1);
+        let b1 = Self::view(params, self.lay.fc1_b);
+        for row in s.h1.chunks_exact_mut(cfg.hidden) {
+            for (v, &bv) in row.iter_mut().zip(b1) {
+                *v = (*v + bv).max(0.0);
+            }
+        }
+        s.logits.resize(n * cfg.classes, 0.0);
+        s.logits.iter_mut().for_each(|v| *v = 0.0);
+        gemm(n, cfg.hidden, cfg.classes, &s.h1, Self::view(params, self.lay.fc2_w), &mut s.logits);
+        let b2 = Self::view(params, self.lay.fc2_b);
+        for row in s.logits.chunks_exact_mut(cfg.classes) {
+            for (v, &bv) in row.iter_mut().zip(b2) {
+                *v += bv;
+            }
+        }
+    }
+
+    /// Softmax cross-entropy over cached logits; fills dlogits (mean-reduced).
+    fn loss_and_dlogits(&mut self, labels: &[i32]) -> f32 {
+        let c = self.cfg.classes;
+        let n = labels.len();
+        let s = &mut self.scratch;
+        s.dlogits.resize(n * c, 0.0);
+        let mut loss = 0.0f64;
+        for (i, &lab) in labels.iter().enumerate() {
+            let row = &s.logits[i * c..(i + 1) * c];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for &v in row {
+                z += (v - mx).exp();
+            }
+            let logz = z.ln() + mx;
+            loss += (logz - row[lab as usize]) as f64;
+            let drow = &mut s.dlogits[i * c..(i + 1) * c];
+            for (j, dv) in drow.iter_mut().enumerate() {
+                let p = (row[j] - logz).exp();
+                *dv = (p - if j == lab as usize { 1.0 } else { 0.0 }) / n as f32;
+            }
+        }
+        (loss / n as f64) as f32
+    }
+
+    fn backward(&mut self, params: &[f32], n: usize, grads: &mut [f32]) {
+        let cfg = self.cfg.clone();
+        let lay = self.lay.clone();
+        let s = &mut self.scratch;
+        let flat = cfg.flat_after_convs();
+        grads.iter_mut().for_each(|g| *g = 0.0);
+
+        // ---- fc2 ----
+        {
+            let (o, len) = lay.fc2_w;
+            gemm_tn(cfg.hidden, n, cfg.classes, &s.h1, &s.dlogits, &mut grads[o..o + len]);
+            let (ob, _) = lay.fc2_b;
+            for row in s.dlogits.chunks_exact(cfg.classes) {
+                for (g, &d) in grads[ob..ob + cfg.classes].iter_mut().zip(row) {
+                    *g += d;
+                }
+            }
+            s.dh1.resize(n * cfg.hidden, 0.0);
+            s.dh1.iter_mut().for_each(|v| *v = 0.0);
+            gemm_nt(n, cfg.classes, cfg.hidden, &s.dlogits, Self::view(params, lay.fc2_w), &mut s.dh1);
+        }
+        // ReLU mask of h1
+        for (d, &h) in s.dh1.iter_mut().zip(&s.h1) {
+            if h <= 0.0 {
+                *d = 0.0;
+            }
+        }
+        // ---- fc1 ----
+        {
+            let (o, len) = lay.fc1_w;
+            gemm_tn(flat, n, cfg.hidden, &s.fc_in, &s.dh1, &mut grads[o..o + len]);
+            let (ob, _) = lay.fc1_b;
+            for row in s.dh1.chunks_exact(cfg.hidden) {
+                for (g, &d) in grads[ob..ob + cfg.hidden].iter_mut().zip(row) {
+                    *g += d;
+                }
+            }
+            s.dfc_in.resize(n * flat, 0.0);
+            s.dfc_in.iter_mut().for_each(|v| *v = 0.0);
+            gemm_nt(n, cfg.hidden, flat, &s.dh1, Self::view(params, lay.fc1_w), &mut s.dfc_in);
+        }
+
+        // ---- conv stack, last to first ----
+        let n_layers = cfg.channels.len();
+        s.dact.clear();
+        s.dact.extend_from_slice(&s.dfc_in);
+        for l in (0..n_layers).rev() {
+            let cout = cfg.channels[l];
+            let cin = if l == 0 { 3 } else { cfg.channels[l - 1] };
+            let oside = cfg.image >> (l + 1);
+            let side = cfg.image >> l;
+            // ReLU mask of this layer's output
+            for (d, &a) in s.dact.iter_mut().zip(&s.acts[l + 1]) {
+                if a <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+            let (ow, wlen) = lay.conv_w[l];
+            let (ob, _) = lay.conv_b[l];
+            s.cols.resize(oside * oside * 9 * cin, 0.0);
+            s.dcols.resize(oside * oside * 9 * cin, 0.0);
+            s.dact_next.resize(n * side * side * cin, 0.0);
+            for i in 0..n {
+                let x = &s.acts[l][i * side * side * cin..(i + 1) * side * side * cin];
+                im2col(x, side, cin, &mut s.cols);
+                let dy = &s.dact[i * oside * oside * cout..(i + 1) * oside * oside * cout];
+                // dW += cols^T dY
+                gemm_tn(9 * cin, oside * oside, cout, &s.cols, dy, &mut grads[ow..ow + wlen]);
+                // db += column sums of dY
+                for row in dy.chunks_exact(cout) {
+                    for (g, &d) in grads[ob..ob + cout].iter_mut().zip(row) {
+                        *g += d;
+                    }
+                }
+                // dcols = dY @ W^T  (W stored [9cin, cout] -> W^T via gemm_nt)
+                s.dcols.iter_mut().for_each(|v| *v = 0.0);
+                gemm_nt(oside * oside, cout, 9 * cin, dy, &params[ow..ow + wlen], &mut s.dcols);
+                let dx = &mut s.dact_next[i * side * side * cin..(i + 1) * side * side * cin];
+                col2im(&s.dcols, side, cin, dx);
+            }
+            std::mem::swap(&mut s.dact, &mut s.dact_next);
+        }
+    }
+}
+
+impl ModelRuntime for RustNet {
+    fn dim(&self) -> usize {
+        self.lay.total
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn train_step(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grads: &mut Vec<f32>,
+    ) -> anyhow::Result<f32> {
+        let (pixels, labels) = match batch {
+            Batch::Images { pixels, labels } => (pixels, labels),
+            _ => anyhow::bail!("RustNet expects Batch::Images"),
+        };
+        let n = labels.len();
+        let img_sz = self.cfg.image * self.cfg.image * 3;
+        anyhow::ensure!(pixels.len() == n * img_sz, "pixel/label mismatch");
+        anyhow::ensure!(params.len() == self.lay.total, "param dim mismatch");
+        let pixels = pixels.clone();
+        let labels = labels.clone();
+        self.forward(params, &pixels, n);
+        let loss = self.loss_and_dlogits(&labels);
+        grads.resize(self.lay.total, 0.0);
+        self.backward(params, n, grads);
+        Ok(loss)
+    }
+
+    fn eval_step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<(f64, f64)> {
+        let (pixels, labels) = match batch {
+            Batch::Images { pixels, labels } => (pixels.clone(), labels.clone()),
+            _ => anyhow::bail!("RustNet expects Batch::Images"),
+        };
+        let n = labels.len();
+        self.forward(params, &pixels, n);
+        let c = self.cfg.classes;
+        let mut correct = 0usize;
+        for (i, &lab) in labels.iter().enumerate() {
+            let row = &self.scratch.logits[i * c..(i + 1) * c];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == lab as usize {
+                correct += 1;
+            }
+        }
+        Ok((correct as f64, n as f64))
+    }
+
+    fn eval_kind(&self) -> EvalKind {
+        EvalKind::CorrectCount
+    }
+
+    fn name(&self) -> String {
+        format!("rustnet(d={})", self.lay.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_batch(cfg: &RustNetConfig, n: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed);
+        let pixels = rng.normal_vec(n * cfg.image * cfg.image * 3, 0.0, 1.0);
+        let labels = (0..n).map(|_| rng.index(cfg.classes) as i32).collect();
+        Batch::Images { pixels, labels }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let cfg = RustNetConfig::tiny();
+        let mut net = RustNet::new(cfg.clone(), 0);
+        let params = net.init_params();
+        let batch = tiny_batch(&cfg, 4, 1);
+        let mut grads = Vec::new();
+        let loss = net.train_step(&params, &batch, &mut grads).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_eq!(grads.len(), net.dim());
+        assert!(grads.iter().all(|g| g.is_finite()));
+    }
+
+    #[test]
+    fn initial_loss_near_uniform() {
+        let cfg = RustNetConfig::tiny();
+        let mut net = RustNet::new(cfg.clone(), 0);
+        let params = net.init_params();
+        let mut grads = Vec::new();
+        let loss = net.train_step(&params, &tiny_batch(&cfg, 16, 2), &mut grads).unwrap();
+        let uniform = (cfg.classes as f32).ln();
+        assert!((loss - uniform).abs() < 1.0, "loss {loss} vs ln(C) {uniform}");
+    }
+
+    #[test]
+    fn gradcheck_finite_differences() {
+        let cfg = RustNetConfig::tiny();
+        let mut net = RustNet::new(cfg.clone(), 3);
+        let mut params = net.init_params();
+        // move off init so ReLUs aren't at kinks systematically
+        let mut rng = Rng::new(9);
+        for p in params.iter_mut() {
+            *p += rng.normal_f32(0.0, 0.01);
+        }
+        let batch = tiny_batch(&cfg, 3, 4);
+        let mut grads = Vec::new();
+        net.train_step(&params, &batch, &mut grads).unwrap();
+        let eps = 3e-3f32;
+        let mut checked = 0;
+        let dim = net.dim();
+        let idxs: Vec<usize> = (0..20).map(|_| rng.index(dim)).collect();
+        for &i in &idxs {
+            let mut p1 = params.clone();
+            p1[i] += eps;
+            let mut p2 = params.clone();
+            p2[i] -= eps;
+            let mut tmp = Vec::new();
+            let l1 = net.train_step(&p1, &batch, &mut tmp).unwrap();
+            let l2 = net.train_step(&p2, &batch, &mut tmp).unwrap();
+            let fd = (l1 - l2) / (2.0 * eps);
+            let an = grads[i];
+            // f32 forward differences are noisy; accept 10% + abs slack
+            if fd.abs() > 1e-3 || an.abs() > 1e-3 {
+                assert!(
+                    (fd - an).abs() <= 0.1 * fd.abs().max(an.abs()) + 2e-3,
+                    "param {i}: fd={fd} analytic={an}"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked >= 5, "too few informative coordinates ({checked})");
+    }
+
+    #[test]
+    fn overfits_one_batch() {
+        let cfg = RustNetConfig::tiny();
+        let mut net = RustNet::new(cfg.clone(), 5);
+        let mut params = net.init_params();
+        let batch = tiny_batch(&cfg, 8, 6);
+        let mut grads = Vec::new();
+        let loss0 = net.train_step(&params, &batch, &mut grads).unwrap();
+        let mut loss = loss0;
+        for _ in 0..60 {
+            loss = net.train_step(&params, &batch, &mut grads).unwrap();
+            for (w, &g) in params.iter_mut().zip(&grads) {
+                *w -= 0.5 * g;
+            }
+        }
+        assert!(loss < 0.5 * loss0, "loss {loss0} -> {loss}");
+    }
+
+    #[test]
+    fn eval_counts_bounded() {
+        let cfg = RustNetConfig::tiny();
+        let mut net = RustNet::new(cfg.clone(), 7);
+        let params = net.init_params();
+        let (c, n) = net.eval_step(&params, &tiny_batch(&cfg, 12, 8)).unwrap();
+        assert!(c >= 0.0 && c <= n && n == 12.0);
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> (adjoint property)
+        let mut rng = Rng::new(10);
+        let (side, cin) = (8usize, 3usize);
+        let oside = side / 2;
+        let x = rng.normal_vec(side * side * cin, 0.0, 1.0);
+        let y = rng.normal_vec(oside * oside * 9 * cin, 0.0, 1.0);
+        let mut cols = vec![0.0; oside * oside * 9 * cin];
+        im2col(&x, side, cin, &mut cols);
+        let lhs: f64 = cols.iter().zip(&y).map(|(&a, &b)| (a * b) as f64).sum();
+        let mut dx = vec![0.0; side * side * cin];
+        col2im(&y, side, cin, &mut dx);
+        let rhs: f64 = x.iter().zip(&dx).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn gemm_variants_agree_with_naive() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (5, 7, 4);
+        let a = rng.normal_vec(m * k, 0.0, 1.0);
+        let b = rng.normal_vec(k * n, 0.0, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        gemm(m, k, n, &a, &b, &mut c1);
+        // naive
+        let mut c2 = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    c2[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // gemm_tn: a stored transposed
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut c3 = vec![0.0; m * n];
+        gemm_tn(m, k, n, &at, &b, &mut c3);
+        for (x, y) in c3.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // gemm_nt: b stored transposed
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut c4 = vec![0.0; m * n];
+        gemm_nt(m, k, n, &a, &bt, &mut c4);
+        for (x, y) in c4.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! PJRT-backed model runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU client, and
+//! serves `train_step` / `eval_step` on the Rust hot path. Python is never
+//! involved at run time.
+//!
+//! Pattern follows /opt/xla-example/load_hlo.rs: HLO *text* (not serialized
+//! proto — xla_extension 0.5.1 rejects jax >= 0.5's 64-bit instruction
+//! ids) -> `HloModuleProto::from_text_file` -> `XlaComputation::from_proto`
+//! -> `client.compile` -> `execute`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::manifest::{Manifest, ModelEntry};
+use super::{Batch, EvalKind, ModelRuntime};
+
+/// A compiled executable shared across worker threads.
+///
+/// SAFETY: the `xla` crate's wrappers hold raw pointers (hence `!Send`
+/// by default), but the underlying PJRT CPU objects are thread-safe:
+/// `TfrtCpuClient`/`PjRtLoadedExecutable::Execute` are documented to
+/// support concurrent invocation (this is what JAX's async dispatch relies
+/// on). We share ONE client and ONE executable per artifact across the
+/// coordinator's worker threads; without this, every worker of every
+/// experiment run would recompile every HLO module (~seconds each) and
+/// spawn its own Eigen thread pool (gross CPU oversubscription).
+struct SharedExec(xla::PjRtLoadedExecutable, usize);
+unsafe impl Send for SharedExec {}
+unsafe impl Sync for SharedExec {}
+
+struct SharedClient(xla::PjRtClient);
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+fn global_client() -> anyhow::Result<&'static SharedClient> {
+    static CLIENT: OnceLock<Result<SharedClient, String>> = OnceLock::new();
+    match CLIENT.get_or_init(|| xla::PjRtClient::cpu().map(SharedClient).map_err(|e| e.to_string()))
+    {
+        Ok(c) => Ok(c),
+        Err(e) => anyhow::bail!("PJRT CPU client unavailable: {e}"),
+    }
+}
+
+fn program_cache() -> &'static Mutex<HashMap<PathBuf, Arc<SharedExec>>> {
+    static CACHE: OnceLock<Mutex<HashMap<PathBuf, Arc<SharedExec>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// One compiled HLO program plus its manifest IO arity.
+#[derive(Clone)]
+struct Program {
+    exe: Arc<SharedExec>,
+}
+
+impl Program {
+    fn load(dir: &Path, file: &str, n_outputs: usize) -> anyhow::Result<Program> {
+        let path = dir.join(file);
+        let mut cache = program_cache().lock().unwrap();
+        if let Some(exe) = cache.get(&path) {
+            return Ok(Program { exe: exe.clone() });
+        }
+        let client = global_client()?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("loading {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .0
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))?;
+        let shared = Arc::new(SharedExec(exe, n_outputs));
+        cache.insert(path, shared.clone());
+        Ok(Program { exe: shared })
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.0.execute::<xla::Literal>(inputs)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True, so output is always a tuple.
+        let parts = tuple.decompose_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.exe.1,
+            "expected {} outputs, got {}",
+            self.exe.1,
+            parts.len()
+        );
+        Ok(parts)
+    }
+}
+
+/// An AOT-compiled model (train + eval executables + init params).
+pub struct XlaModel {
+    pub entry: ModelEntry,
+    train: Program,
+    eval: Program,
+    init: Vec<f32>,
+    /// Cached batch shape expectations from the manifest.
+    family: Family,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Family {
+    Lm,
+    Cnn,
+}
+
+impl XlaModel {
+    /// Load preset `name` from the artifacts directory.
+    pub fn load(artifacts_dir: &Path, name: &str) -> anyhow::Result<XlaModel> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Self::from_manifest(&manifest, name)
+    }
+
+    pub fn from_manifest(manifest: &Manifest, name: &str) -> anyhow::Result<XlaModel> {
+        let entry = manifest.model(name)?.clone();
+        let family = match entry.family.as_str() {
+            "lm" => Family::Lm,
+            "cnn" => Family::Cnn,
+            other => anyhow::bail!("unknown model family {other:?}"),
+        };
+        let train = Program::load(&manifest.dir, &entry.train.file, entry.train.outputs.len())?;
+        let eval = Program::load(&manifest.dir, &entry.eval.file, entry.eval.outputs.len())?;
+        let init = manifest.load_init(&entry)?;
+        Ok(XlaModel { entry, train, eval, init, family })
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> anyhow::Result<Vec<xla::Literal>> {
+        match (self.family, batch) {
+            (Family::Lm, Batch::Tokens { tokens, batch, seq_plus_1 }) => {
+                let spec = &self.entry.train.inputs[1];
+                anyhow::ensure!(
+                    spec.shape == vec![*batch, *seq_plus_1],
+                    "token batch shape {:?} != manifest {:?}",
+                    (batch, seq_plus_1),
+                    spec.shape
+                );
+                anyhow::ensure!(tokens.len() == batch * seq_plus_1, "token count mismatch");
+                let lit = xla::Literal::vec1(tokens.as_slice())
+                    .reshape(&[*batch as i64, *seq_plus_1 as i64])?;
+                Ok(vec![lit])
+            }
+            (Family::Cnn, Batch::Images { pixels, labels }) => {
+                let img_spec = &self.entry.train.inputs[1];
+                anyhow::ensure!(img_spec.shape.len() == 4, "bad image spec");
+                anyhow::ensure!(
+                    pixels.len() == img_spec.elements(),
+                    "pixel count {} != manifest {}",
+                    pixels.len(),
+                    img_spec.elements()
+                );
+                anyhow::ensure!(labels.len() == img_spec.shape[0], "label count mismatch");
+                let dims: Vec<i64> = img_spec.shape.iter().map(|&d| d as i64).collect();
+                let img = xla::Literal::vec1(pixels.as_slice()).reshape(&dims)?;
+                let lab = xla::Literal::vec1(labels.as_slice());
+                Ok(vec![img, lab])
+            }
+            (fam, b) => anyhow::bail!("batch kind {b:?} does not match family {fam:?}"),
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        global_client()
+            .map(|c| c.0.platform_name())
+            .unwrap_or_else(|_| "unavailable".to_string())
+    }
+}
+
+impl ModelRuntime for XlaModel {
+    fn dim(&self) -> usize {
+        self.entry.dim
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn train_step(
+        &mut self,
+        params: &[f32],
+        batch: &Batch,
+        grads: &mut Vec<f32>,
+    ) -> anyhow::Result<f32> {
+        anyhow::ensure!(params.len() == self.entry.dim, "param dim mismatch");
+        let mut inputs = vec![xla::Literal::vec1(params)];
+        inputs.extend(self.batch_literals(batch)?);
+        let outs = self.train.run(&inputs)?;
+        let loss: f32 = outs[0].get_first_element()?;
+        grads.resize(self.entry.dim, 0.0);
+        outs[1].copy_raw_to(grads.as_mut_slice())?;
+        Ok(loss)
+    }
+
+    fn eval_step(&mut self, params: &[f32], batch: &Batch) -> anyhow::Result<(f64, f64)> {
+        let mut inputs = vec![xla::Literal::vec1(params)];
+        inputs.extend(self.batch_literals(batch)?);
+        let outs = self.eval.run(&inputs)?;
+        let sum: f32 = outs[0].get_first_element()?;
+        let count: f32 = outs[1].get_first_element()?;
+        Ok((sum as f64, count as f64))
+    }
+
+    fn eval_kind(&self) -> EvalKind {
+        match self.family {
+            Family::Lm => EvalKind::NllSum,
+            Family::Cnn => EvalKind::CorrectCount,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("xla:{}", self.entry.name)
+    }
+}
+
+/// The fused Layer-1 sparsification pipeline as an XLA executable
+/// (`sparse_pipeline.D.hlo.txt`): used by benches to compare the Pallas
+/// path against the pure-Rust path at matched semantics.
+pub struct XlaSparsePipeline {
+    exe: Program,
+    pub dim: usize,
+    pub nbins: usize,
+}
+
+impl XlaSparsePipeline {
+    pub fn load(manifest: &Manifest, dim: usize) -> anyhow::Result<XlaSparsePipeline> {
+        let entry = manifest
+            .sparse_pipelines
+            .iter()
+            .find(|p| p.dim == dim)
+            .ok_or_else(|| anyhow::anyhow!("no sparse_pipeline for dim {dim} in manifest"))?;
+        Ok(XlaSparsePipeline {
+            exe: Program::load(&manifest.dir, &entry.file, 5)?,
+            dim: entry.dim,
+            nbins: entry.nbins,
+        })
+    }
+
+    /// Run (g, m, log_lo, log_hi, thresh) ->
+    /// (hist i32[nbins], out f32[d], m_new f32[d], nnz i32, maxabs f32).
+    #[allow(clippy::type_complexity)]
+    pub fn run(
+        &self,
+        g: &[f32],
+        m: &[f32],
+        log_lo: f32,
+        log_hi: f32,
+        thresh: f32,
+    ) -> anyhow::Result<(Vec<i32>, Vec<f32>, Vec<f32>, i32, f32)> {
+        anyhow::ensure!(g.len() == self.dim && m.len() == self.dim);
+        let inputs = vec![
+            xla::Literal::vec1(g),
+            xla::Literal::vec1(m),
+            xla::Literal::scalar(log_lo),
+            xla::Literal::scalar(log_hi),
+            xla::Literal::scalar(thresh),
+        ];
+        let parts = self.exe.run(&inputs)?;
+        let hist = parts[0].to_vec::<i32>()?;
+        let out = parts[1].to_vec::<f32>()?;
+        let m_new = parts[2].to_vec::<f32>()?;
+        let nnz: i32 = parts[3].get_first_element()?;
+        let mx: f32 = parts[4].get_first_element()?;
+        Ok((hist, out, m_new, nnz, mx))
+    }
+}

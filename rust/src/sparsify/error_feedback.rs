@@ -1,0 +1,171 @@
+//! Error feedback ("memory") — the `m_i` state of Algorithm 1.
+//!
+//! Each worker accumulates the coordinates its sparsifier did not send and
+//! re-injects them into the next round's gradient:
+//!
+//! ```text
+//! g    <- g + m          (compensate)
+//! ĝ    <- Comp_k(g)      (sparsify)
+//! m'   <- g - ĝ          (remember the residual)
+//! ```
+//!
+//! The conservation identity `g + m == ĝ + m'` holds *exactly* (not just in
+//! expectation): this module computes `m'` by subtracting the kept entries
+//! from the compensated vector, so no mass is ever created or destroyed —
+//! property-tested in `rust/tests/prop_invariants.rs`.
+
+use super::{CompressionOperator, SparseVec};
+use crate::util::rng::Rng;
+
+/// Per-worker error-feedback state and the fused compensate→sparsify→update
+/// step. Buffers are preallocated at `dim`; the round loop allocates nothing.
+#[derive(Debug, Clone)]
+pub struct ErrorFeedback {
+    /// The residual memory m (dense, dimension d).
+    pub memory: Vec<f32>,
+    /// Scratch for the compensated gradient acc = g + m.
+    acc: Vec<f32>,
+    pub enabled: bool,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize) -> Self {
+        ErrorFeedback { memory: vec![0.0; dim], acc: vec![0.0; dim], enabled: true }
+    }
+
+    /// Error feedback disabled: sparsify the raw gradient, discard residual.
+    /// (Used by the ablation benches — the paper always enables it.)
+    pub fn disabled(dim: usize) -> Self {
+        ErrorFeedback { memory: vec![0.0; dim], acc: vec![0.0; dim], enabled: false }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.memory.len()
+    }
+
+    /// One Algorithm-1 worker step: compensate `grad` with the memory,
+    /// sparsify into `out`, and update the memory with the residual.
+    pub fn step(
+        &mut self,
+        grad: &[f32],
+        op: &dyn CompressionOperator,
+        rng: &mut Rng,
+        out: &mut SparseVec,
+    ) {
+        assert_eq!(grad.len(), self.memory.len(), "gradient dim mismatch");
+        if self.enabled {
+            for ((a, &g), &m) in self.acc.iter_mut().zip(grad).zip(&self.memory) {
+                *a = g + m;
+            }
+        } else {
+            self.acc.copy_from_slice(grad);
+        }
+        op.compress(&self.acc, rng, out);
+        if self.enabled {
+            // m' = acc - ĝ : start from acc, zero out the kept coordinates.
+            self.memory.copy_from_slice(&self.acc);
+            for (&i, &v) in out.idx.iter().zip(&out.val) {
+                // Kept entries carry the full acc value; subtracting gives 0
+                // exactly. (Operators that scale, e.g. unbiased random-k,
+                // leave the honest residual.)
+                self.memory[i as usize] = self.acc[i as usize] - v;
+            }
+        }
+    }
+
+    /// Squared norm of the residual memory (monitored in metrics).
+    pub fn memory_l2_sq(&self) -> f64 {
+        super::l2_sq(&self.memory)
+    }
+
+    pub fn reset(&mut self) {
+        self.memory.iter_mut().for_each(|m| *m = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::{RTopK, TopK};
+
+    #[test]
+    fn conservation_exact() {
+        let mut rng = Rng::new(0);
+        let dim = 256;
+        let mut ef = ErrorFeedback::new(dim);
+        let op = RTopK::new(8, 32);
+        let mut out = SparseVec::default();
+        // Run several rounds; at each, g + m_before == ĝ + m_after exactly.
+        for round in 0..10 {
+            let g: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let m_before = ef.memory.clone();
+            ef.step(&g, &op, &mut rng, &mut out);
+            let dense = out.to_dense();
+            for j in 0..dim {
+                let lhs = g[j] + m_before[j];
+                let rhs = dense[j] + ef.memory[j];
+                assert!(
+                    (lhs - rhs).abs() == 0.0,
+                    "round {round} coord {j}: {lhs} != {rhs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kept_coordinates_have_zero_memory() {
+        let mut rng = Rng::new(1);
+        let dim = 64;
+        let mut ef = ErrorFeedback::new(dim);
+        let op = TopK::new(8);
+        let mut out = SparseVec::default();
+        let g: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        ef.step(&g, &op, &mut rng, &mut out);
+        for &i in &out.idx {
+            assert_eq!(ef.memory[i as usize], 0.0);
+        }
+    }
+
+    #[test]
+    fn unsent_mass_eventually_sent() {
+        // With a constant gradient and top-1, error feedback must cycle
+        // through all coordinates (the DGC "all important gradients are
+        // communicated eventually" property).
+        let dim = 8;
+        let g: Vec<f32> = (0..dim).map(|i| 1.0 + 0.01 * i as f32).collect();
+        let mut ef = ErrorFeedback::new(dim);
+        let op = TopK::new(1);
+        let mut rng = Rng::new(2);
+        let mut out = SparseVec::default();
+        let mut sent = std::collections::HashSet::new();
+        for _ in 0..2 * dim {
+            ef.step(&g, &op, &mut rng, &mut out);
+            sent.extend(out.idx.iter().copied());
+        }
+        assert_eq!(sent.len(), dim, "all coordinates must be sent: {sent:?}");
+    }
+
+    #[test]
+    fn disabled_mode_keeps_memory_zero() {
+        let mut rng = Rng::new(3);
+        let mut ef = ErrorFeedback::disabled(32);
+        let op = TopK::new(4);
+        let mut out = SparseVec::default();
+        let g: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        ef.step(&g, &op, &mut rng, &mut out);
+        assert_eq!(ef.memory_l2_sq(), 0.0);
+    }
+
+    #[test]
+    fn reset_clears_memory() {
+        let mut rng = Rng::new(4);
+        let mut ef = ErrorFeedback::new(16);
+        let op = TopK::new(2);
+        let mut out = SparseVec::default();
+        let g: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        ef.step(&g, &op, &mut rng, &mut out);
+        assert!(ef.memory_l2_sq() > 0.0);
+        ef.reset();
+        assert_eq!(ef.memory_l2_sq(), 0.0);
+    }
+}

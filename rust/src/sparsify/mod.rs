@@ -1,0 +1,149 @@
+//! Gradient sparsification operators — the paper's algorithmic contribution.
+//!
+//! Implements Definitions 1–3 of the paper as [`CompressionOperator`]s over
+//! a flat gradient vector, plus the magnitude-threshold variant and the
+//! error-feedback machinery of Algorithm 1:
+//!
+//! * [`TopK`] — deterministic top-k by magnitude (Def. 1, "top_r")
+//! * [`RandomK`] — uniform random k-subset (Def. 2)
+//! * [`RTopK`] — **the paper's operator**: random k-subset of the top-r
+//!   magnitudes (Def. 3); the statistically optimal scheme under the sparse
+//!   Bernoulli model of §II-C
+//! * [`Threshold`] — keep everything with |w_i| >= t (Aji–Heafield style)
+//! * [`NoCompression`] — identity (the "Baseline" rows in Tables I–V)
+//!
+//! All operators write into a reusable [`SparseVec`] so the hot round loop
+//! allocates nothing in steady state.
+
+mod error_feedback;
+mod operator;
+mod randomk;
+mod rtopk;
+pub mod select;
+mod threshold;
+mod topk;
+
+pub use error_feedback::ErrorFeedback;
+pub use operator::{CompressionOperator, NoCompression, SparsifierKind};
+pub use randomk::RandomK;
+pub use rtopk::RTopK;
+pub use select::{select_top_r, threshold_for_rank, MagnitudeHistogram};
+pub use threshold::Threshold;
+pub use topk::TopK;
+
+/// A sparse view of a length-`dim` gradient: parallel (index, value) arrays.
+///
+/// Invariants (checked in debug builds by [`SparseVec::debug_validate`]):
+/// indices strictly increasing, all < dim, `idx.len() == val.len()`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseVec {
+    pub dim: usize,
+    pub idx: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn with_capacity(dim: usize, cap: usize) -> Self {
+        SparseVec { dim, idx: Vec::with_capacity(cap), val: Vec::with_capacity(cap) }
+    }
+
+    pub fn clear(&mut self, dim: usize) {
+        self.dim = dim;
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    pub fn push(&mut self, i: u32, v: f32) {
+        self.idx.push(i);
+        self.val.push(v);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Sort entries by index (operators that sample produce unsorted output).
+    pub fn sort_by_index(&mut self) {
+        let mut order: Vec<u32> = (0..self.idx.len() as u32).collect();
+        order.sort_unstable_by_key(|&p| self.idx[p as usize]);
+        let idx = order.iter().map(|&p| self.idx[p as usize]).collect();
+        let val = order.iter().map(|&p| self.val[p as usize]).collect();
+        self.idx = idx;
+        self.val = val;
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            out[i as usize] = v;
+        }
+        out
+    }
+
+    /// Add `scale * self` into a dense accumulator.
+    pub fn add_scaled_into(&self, scale: f32, dense: &mut [f32]) {
+        debug_assert_eq!(dense.len(), self.dim);
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            dense[i as usize] += scale * v;
+        }
+    }
+
+    pub fn l2_sq(&self) -> f64 {
+        self.val.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    #[track_caller]
+    pub fn debug_validate(&self) {
+        debug_assert_eq!(self.idx.len(), self.val.len());
+        debug_assert!(self.idx.iter().all(|&i| (i as usize) < self.dim));
+        debug_assert!(self.idx.windows(2).all(|w| w[0] < w[1]), "indices must be sorted+unique");
+    }
+}
+
+/// ||w||^2 over a dense slice, accumulated in f64.
+pub fn l2_sq(w: &[f32]) -> f64 {
+    w.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_roundtrip_dense() {
+        let mut s = SparseVec::with_capacity(6, 3);
+        s.dim = 6;
+        s.push(1, 2.0);
+        s.push(4, -3.0);
+        assert_eq!(s.to_dense(), vec![0.0, 2.0, 0.0, 0.0, -3.0, 0.0]);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn sort_by_index_orders_pairs() {
+        let mut s = SparseVec { dim: 10, idx: vec![7, 2, 5], val: vec![70.0, 20.0, 50.0] };
+        s.sort_by_index();
+        assert_eq!(s.idx, vec![2, 5, 7]);
+        assert_eq!(s.val, vec![20.0, 50.0, 70.0]);
+        s.debug_validate();
+    }
+
+    #[test]
+    fn add_scaled_accumulates() {
+        let s = SparseVec { dim: 4, idx: vec![0, 3], val: vec![1.0, 2.0] };
+        let mut dense = vec![1.0; 4];
+        s.add_scaled_into(0.5, &mut dense);
+        assert_eq!(dense, vec![1.5, 1.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn l2_matches_dense() {
+        let s = SparseVec { dim: 5, idx: vec![1, 2], val: vec![3.0, 4.0] };
+        assert_eq!(s.l2_sq(), 25.0);
+        assert_eq!(l2_sq(&s.to_dense()), 25.0);
+    }
+}

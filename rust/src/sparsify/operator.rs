@@ -1,0 +1,107 @@
+//! The compression-operator interface (paper Definition 4).
+
+use super::SparseVec;
+use crate::util::rng::Rng;
+
+/// A (possibly randomized) sparsifier `Comp_k : R^d -> R^d` satisfying
+/// `E||w - Comp_k(w)||^2 <= (1 - gamma) ||w||^2` for some `gamma in (0, 1]`
+/// (paper Definition 4). Implementations write the kept coordinates into
+/// `out` (sorted by index) and must not allocate when `out` has capacity.
+pub trait CompressionOperator: Send + Sync {
+    /// Sparsify `w` into `out`. `rng` drives any randomness.
+    fn compress(&self, w: &[f32], rng: &mut Rng, out: &mut SparseVec);
+
+    /// The contraction constant `gamma` from Definition 4 for dimension `d`
+    /// (worst case over inputs). rTop-k's is `k/d` — paper Proposition 1.
+    fn gamma(&self, dim: usize) -> f64;
+
+    /// Nominal number of coordinates communicated per call (k), used for
+    /// compression-ratio accounting. Threshold operators return their
+    /// expected k under calibration.
+    fn nominal_k(&self, dim: usize) -> usize;
+
+    fn name(&self) -> String;
+}
+
+/// Identity operator — the paper's uncompressed "Baseline".
+#[derive(Debug, Clone)]
+pub struct NoCompression;
+
+impl CompressionOperator for NoCompression {
+    fn compress(&self, w: &[f32], _rng: &mut Rng, out: &mut SparseVec) {
+        out.clear(w.len());
+        for (i, &v) in w.iter().enumerate() {
+            // Keep exact zeros too: baseline must be the identity so that
+            // `distributed run == single-node SGD` holds bitwise.
+            out.push(i as u32, v);
+        }
+    }
+
+    fn gamma(&self, _dim: usize) -> f64 {
+        1.0
+    }
+
+    fn nominal_k(&self, dim: usize) -> usize {
+        dim
+    }
+
+    fn name(&self) -> String {
+        "baseline".to_string()
+    }
+}
+
+/// Which sparsifier to build — the experiment configs name these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparsifierKind {
+    Baseline,
+    TopK,
+    RandomK,
+    RTopK,
+    Threshold,
+}
+
+impl SparsifierKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "baseline" | "none" | "identity" => SparsifierKind::Baseline,
+            "topk" | "top-k" | "top_k" => SparsifierKind::TopK,
+            "randomk" | "random-k" | "random_k" => SparsifierKind::RandomK,
+            "rtopk" | "rtop-k" | "rtop_k" => SparsifierKind::RTopK,
+            "threshold" => SparsifierKind::Threshold,
+            other => anyhow::bail!("unknown sparsifier {other:?}"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SparsifierKind::Baseline => "Baseline",
+            SparsifierKind::TopK => "Top-k",
+            SparsifierKind::RandomK => "Random-k",
+            SparsifierKind::RTopK => "rTop-k",
+            SparsifierKind::Threshold => "Threshold",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_is_identity() {
+        let w = vec![1.0, 0.0, -2.0];
+        let mut out = SparseVec::default();
+        NoCompression.compress(&w, &mut Rng::new(0), &mut out);
+        assert_eq!(out.to_dense(), w);
+        assert_eq!(out.nnz(), 3);
+        out.debug_validate();
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(SparsifierKind::parse("rTop-k").unwrap(), SparsifierKind::RTopK);
+        assert_eq!(SparsifierKind::parse("topk").unwrap(), SparsifierKind::TopK);
+        assert_eq!(SparsifierKind::parse("baseline").unwrap(), SparsifierKind::Baseline);
+        assert!(SparsifierKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Random-k sparsification (paper Definition 2; Konečný et al. [9]).
+
+use super::{operator::CompressionOperator, SparseVec};
+use crate::util::rng::Rng;
+
+/// Keep a uniformly random k-subset of all d coordinates.
+///
+/// `unbiased_scaling` optionally multiplies kept values by d/k, making the
+/// operator an unbiased estimator of w (the classical "rand-k with scaling"
+/// variant). The paper's experiments use the plain selection (no scaling)
+/// with error feedback; both are provided and tested.
+#[derive(Debug, Clone)]
+pub struct RandomK {
+    pub k: usize,
+    pub unbiased_scaling: bool,
+}
+
+impl RandomK {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "k must be >= 1");
+        RandomK { k, unbiased_scaling: false }
+    }
+
+    pub fn unbiased(k: usize) -> Self {
+        RandomK { k, unbiased_scaling: true }
+    }
+}
+
+impl CompressionOperator for RandomK {
+    fn compress(&self, w: &[f32], rng: &mut Rng, out: &mut SparseVec) {
+        let d = w.len();
+        let k = self.k.min(d);
+        let mut chosen = rng.sample_indices(d, k);
+        chosen.sort_unstable();
+        let scale = if self.unbiased_scaling { d as f32 / k as f32 } else { 1.0 };
+        out.clear(d);
+        for i in chosen {
+            out.push(i as u32, w[i] * scale);
+        }
+    }
+
+    /// E||w - rand_k(w)||^2 = (1 - k/d)||w||^2 exactly (plain variant).
+    fn gamma(&self, dim: usize) -> f64 {
+        (self.k as f64 / dim.max(1) as f64).min(1.0)
+    }
+
+    fn nominal_k(&self, dim: usize) -> usize {
+        self.k.min(dim)
+    }
+
+    fn name(&self) -> String {
+        format!("random{}{}", self.k, if self.unbiased_scaling { "-unbiased" } else { "" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::l2_sq;
+
+    #[test]
+    fn keeps_exactly_k() {
+        let w = vec![1.0f32; 100];
+        let mut out = SparseVec::default();
+        RandomK::new(17).compress(&w, &mut Rng::new(0), &mut out);
+        assert_eq!(out.nnz(), 17);
+        out.debug_validate();
+    }
+
+    #[test]
+    fn values_match_source() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..50).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut out = SparseVec::default();
+        RandomK::new(10).compress(&w, &mut rng, &mut out);
+        for (&i, &v) in out.idx.iter().zip(&out.val) {
+            assert_eq!(v, w[i as usize]);
+        }
+    }
+
+    #[test]
+    fn expected_contraction_matches_k_over_d() {
+        // Average over trials: E||w - rand_k(w)||^2 = (1-k/d)||w||^2.
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let norm = l2_sq(&w);
+        let (k, trials) = (16usize, 4000usize);
+        let op = RandomK::new(k);
+        let mut sum_err = 0.0;
+        let mut out = SparseVec::default();
+        for _ in 0..trials {
+            op.compress(&w, &mut rng, &mut out);
+            sum_err += norm - out.l2_sq();
+        }
+        let mean_err = sum_err / trials as f64;
+        let expect = (1.0 - k as f64 / 64.0) * norm;
+        assert!((mean_err - expect).abs() / expect < 0.05, "{mean_err} vs {expect}");
+    }
+
+    #[test]
+    fn unbiased_variant_mean_recovers_w() {
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let op = RandomK::unbiased(8);
+        let trials = 8000;
+        let mut mean = vec![0.0f64; 32];
+        let mut out = SparseVec::default();
+        for _ in 0..trials {
+            op.compress(&w, &mut rng, &mut out);
+            for (&i, &v) in out.idx.iter().zip(&out.val) {
+                mean[i as usize] += v as f64 / trials as f64;
+            }
+        }
+        for (j, &m) in mean.iter().enumerate() {
+            assert!((m - w[j] as f64).abs() < 0.15, "coord {j}: {m} vs {}", w[j]);
+        }
+    }
+
+    #[test]
+    fn different_rng_states_differ() {
+        let w = vec![1.0f32; 40];
+        let mut a = SparseVec::default();
+        let mut b = SparseVec::default();
+        RandomK::new(5).compress(&w, &mut Rng::new(1), &mut a);
+        RandomK::new(5).compress(&w, &mut Rng::new(2), &mut b);
+        assert_ne!(a.idx, b.idx);
+    }
+}

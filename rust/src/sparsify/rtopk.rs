@@ -1,0 +1,171 @@
+//! rTop-k sparsification — the paper's contribution (Definition 3).
+//!
+//! First select the r largest-magnitude coordinates (top-r), then keep a
+//! uniformly random k-subset of those r. The statistical estimation model
+//! of §II-C shows this random subsampling of the large coordinates — not
+//! deterministic truncation — is minimax optimal under communication
+//! constraints; empirically it combines top-k's focus with random-k's bias
+//! reduction.
+//!
+//! The paper fixes `k/r = 1/n` (n = number of nodes) so that a parameter
+//! in every node's top set is updated by one node per round in expectation.
+
+use super::{operator::CompressionOperator, select::select_top_r, SparseVec};
+use crate::util::rng::Rng;
+
+#[derive(Debug)]
+pub struct RTopK {
+    pub k: usize,
+    pub r: usize,
+    scratch: std::sync::Mutex<Vec<u32>>,
+}
+
+impl RTopK {
+    pub fn new(k: usize, r: usize) -> Self {
+        assert!(k >= 1, "k must be >= 1");
+        assert!(k <= r, "need k <= r (got k={k}, r={r})");
+        RTopK { k, r, scratch: std::sync::Mutex::new(Vec::new()) }
+    }
+
+    /// The paper's default coupling: given a target k and node count n,
+    /// use r = k * n (i.e. k/r = 1/n).
+    pub fn with_ratio(k: usize, n_nodes: usize) -> Self {
+        Self::new(k, k.saturating_mul(n_nodes.max(1)))
+    }
+}
+
+impl CompressionOperator for RTopK {
+    fn compress(&self, w: &[f32], rng: &mut Rng, out: &mut SparseVec) {
+        let d = w.len();
+        let r = self.r.min(d);
+        let k = self.k.min(r);
+        let mut scratch = self.scratch.lock().unwrap();
+        let top = select_top_r(w, r, &mut scratch); // sorted index list, len r
+        // Uniform k-subset of the top-r index set (Def. 3's U ~ Unif(U_k)).
+        let mut keep = rng.sample_indices(r, k);
+        keep.sort_unstable();
+        out.clear(d);
+        for pos in keep {
+            let i = top[pos];
+            out.push(i, w[i as usize]);
+        }
+    }
+
+    /// Proposition 1: rTop-k is a compression operator with gamma = k/d.
+    fn gamma(&self, dim: usize) -> f64 {
+        (self.k as f64 / dim.max(1) as f64).min(1.0)
+    }
+
+    fn nominal_k(&self, dim: usize) -> usize {
+        self.k.min(dim)
+    }
+
+    fn name(&self) -> String {
+        format!("rtop{}of{}", self.k, self.r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::{l2_sq, TopK};
+
+    #[test]
+    fn output_is_subset_of_top_r() {
+        let mut rng = Rng::new(0);
+        let w: Vec<f32> = (0..200).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (k, r) = (10, 40);
+        let op = RTopK::new(k, r);
+        let mut scratch = Vec::new();
+        let top: std::collections::HashSet<u32> =
+            select_top_r(&w, r, &mut scratch).into_iter().collect();
+        let mut out = SparseVec::default();
+        for _ in 0..50 {
+            op.compress(&w, &mut rng, &mut out);
+            assert_eq!(out.nnz(), k);
+            assert!(out.idx.iter().all(|i| top.contains(i)));
+            out.debug_validate();
+        }
+    }
+
+    #[test]
+    fn k_equals_r_degenerates_to_topk() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..100).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut a = SparseVec::default();
+        let mut b = SparseVec::default();
+        RTopK::new(15, 15).compress(&w, &mut rng, &mut a);
+        TopK::new(15).compress(&w, &mut rng, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn r_equals_d_degenerates_to_randomk_support_size() {
+        let w = vec![1.0f32; 50];
+        let mut rng = Rng::new(2);
+        let mut out = SparseVec::default();
+        RTopK::new(5, 50).compress(&w, &mut rng, &mut out);
+        assert_eq!(out.nnz(), 5);
+    }
+
+    #[test]
+    fn each_top_r_member_kept_with_prob_k_over_r() {
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..60).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (k, r, trials) = (6usize, 24usize, 20_000usize);
+        let op = RTopK::new(k, r);
+        let mut scratch = Vec::new();
+        let top = select_top_r(&w, r, &mut scratch);
+        let mut counts = std::collections::HashMap::new();
+        let mut out = SparseVec::default();
+        for _ in 0..trials {
+            op.compress(&w, &mut rng, &mut out);
+            for &i in &out.idx {
+                *counts.entry(i).or_insert(0usize) += 1;
+            }
+        }
+        let expect = trials as f64 * k as f64 / r as f64;
+        for i in top {
+            let c = *counts.get(&i).unwrap_or(&0) as f64;
+            assert!((c - expect).abs() / expect < 0.1, "idx {i}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn proposition_1_contraction_in_expectation() {
+        // E||w - rTop_k(w)||^2 = (1 - k/r) sum_{top r} w^2 + sum_{rest} w^2
+        //                     <= (1 - k/d) ||w||^2.
+        let mut rng = Rng::new(4);
+        let w: Vec<f32> = (0..128).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (k, r, trials) = (8usize, 32usize, 4000usize);
+        let op = RTopK::new(k, r);
+        let norm = l2_sq(&w);
+        let mut out = SparseVec::default();
+        let mut sum_err = 0.0;
+        for _ in 0..trials {
+            op.compress(&w, &mut rng, &mut out);
+            sum_err += norm - out.l2_sq();
+        }
+        let mean_err = sum_err / trials as f64;
+        // exact expectation
+        let mut scratch = Vec::new();
+        let top = select_top_r(&w, r, &mut scratch);
+        let top_mass: f64 = top.iter().map(|&i| (w[i as usize] as f64).powi(2)).sum();
+        let exact = (1.0 - k as f64 / r as f64) * top_mass + (norm - top_mass);
+        assert!((mean_err - exact).abs() / exact < 0.03, "{mean_err} vs {exact}");
+        assert!(mean_err <= (1.0 - op.gamma(w.len())) * norm * 1.01);
+    }
+
+    #[test]
+    fn with_ratio_uses_paper_coupling() {
+        let op = RTopK::with_ratio(100, 5);
+        assert_eq!(op.r, 500);
+        assert_eq!(op.k, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "k <= r")]
+    fn rejects_k_greater_than_r() {
+        let _ = RTopK::new(10, 5);
+    }
+}

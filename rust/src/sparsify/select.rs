@@ -1,0 +1,211 @@
+//! Magnitude rank selection: the top-r hot path.
+//!
+//! Two strategies, mirroring DESIGN.md §Hardware-Adaptation:
+//!
+//! * [`select_top_r`] — exact: quickselect (`select_nth_unstable`) over an
+//!   index permutation keyed by |w_i|. O(d) expected. This is the default
+//!   on the Rust hot path.
+//! * [`MagnitudeHistogram`] + [`threshold_for_rank`] — approximate: one
+//!   streaming pass accumulates a log-spaced magnitude histogram, the CDF
+//!   yields a threshold whose selection count is within one bin of r. This
+//!   is the same algorithm as the Layer-1 Pallas kernels
+//!   (`python/compile/kernels/topk_threshold.py`), kept in lockstep so the
+//!   XLA-accelerated path and the pure-Rust path agree.
+
+/// Exact top-r selection. Returns the indices of the `r` largest-|w|
+/// entries, sorted ascending by index. Ties broken arbitrarily (matching
+/// the paper's Def. 1, where any valid permutation pi is allowed).
+pub fn select_top_r(w: &[f32], r: usize, scratch: &mut Vec<u32>) -> Vec<u32> {
+    assert!(r <= w.len(), "r={r} > d={}", w.len());
+    scratch.clear();
+    scratch.extend(0..w.len() as u32);
+    if r == 0 {
+        return Vec::new();
+    }
+    if r < w.len() {
+        // Partition so the r largest magnitudes occupy scratch[..r].
+        scratch.select_nth_unstable_by(r - 1, |&a, &b| {
+            let ma = w[a as usize].abs();
+            let mb = w[b as usize].abs();
+            mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
+    let mut out: Vec<u32> = scratch[..r].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// Streaming log-spaced magnitude histogram (matches the Pallas kernel's
+/// binning in `kernels/ref.py::log_bin_index` bit-for-bit in intent:
+/// bin = clip(floor((ln|x| - lo) / (hi - lo) * nbins), 0, nbins-1)).
+#[derive(Debug, Clone)]
+pub struct MagnitudeHistogram {
+    pub counts: Vec<u64>,
+    pub log_lo: f32,
+    pub log_hi: f32,
+}
+
+impl MagnitudeHistogram {
+    pub const DEFAULT_NBINS: usize = 128;
+    /// Dynamic range below max|w| covered by the bins (in nats).
+    pub const DEFAULT_SPAN: f32 = 16.0;
+
+    /// Build from data: one pass for max|w|, one pass to bin.
+    pub fn build(w: &[f32], nbins: usize) -> Self {
+        let mut mx = 0f32;
+        for &v in w {
+            mx = mx.max(v.abs());
+        }
+        // Floor the range top at 1e-38 (not the 1e-45 zero-floor used when
+        // binning) so an all-zero vector lands in the catch-all bottom bin
+        // rather than the top bin — threshold_for_rank then degrades to
+        // "keep everything", which is the only correct answer for it.
+        let log_hi = (mx.max(1e-38)).ln();
+        let log_lo = log_hi - Self::DEFAULT_SPAN;
+        let mut h = MagnitudeHistogram { counts: vec![0; nbins], log_lo, log_hi };
+        h.accumulate(w);
+        h
+    }
+
+    pub fn accumulate(&mut self, w: &[f32]) {
+        let nbins = self.counts.len() as f32;
+        let inv_span = 1.0 / (self.log_hi - self.log_lo).max(1e-12);
+        for &v in w {
+            let a = v.abs().max(1e-45).ln();
+            let t = (a - self.log_lo) * inv_span;
+            let idx = ((t * nbins) as i64).clamp(0, self.counts.len() as i64 - 1) as usize;
+            self.counts[idx] += 1;
+        }
+    }
+
+    /// Lower edge (magnitude) of bin `i`.
+    pub fn edge(&self, i: usize) -> f32 {
+        let t = i as f32 / self.counts.len() as f32;
+        (self.log_lo + t * (self.log_hi - self.log_lo)).exp()
+    }
+}
+
+/// Convert a histogram into a magnitude threshold whose selection count is
+/// >= r and at most r + (count of the boundary bin). Walks the CDF from the
+/// top bin downward — exactly what the XLA pipeline's host side does.
+pub fn threshold_for_rank(hist: &MagnitudeHistogram, r: usize) -> f32 {
+    if r == 0 {
+        return f32::INFINITY;
+    }
+    let mut cum = 0u64;
+    let mut edge_idx = hist.counts.len();
+    while edge_idx > 0 && (cum as usize) < r {
+        edge_idx -= 1;
+        cum += hist.counts[edge_idx];
+    }
+    if edge_idx == 0 {
+        // The walk reached the catch-all bottom bin (it holds everything
+        // below the covered dynamic range, including exact zeros): the only
+        // threshold guaranteeing >= r survivors is "keep everything".
+        return 0.0;
+    }
+    hist.edge(edge_idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect()
+    }
+
+    #[test]
+    fn exact_select_matches_sort() {
+        let w = randvec(500, 1);
+        let mut scratch = Vec::new();
+        for r in [0, 1, 5, 100, 499, 500] {
+            let got = select_top_r(&w, r, &mut scratch);
+            let mut order: Vec<u32> = (0..w.len() as u32).collect();
+            order.sort_by(|&a, &b| {
+                w[b as usize].abs().partial_cmp(&w[a as usize].abs()).unwrap()
+            });
+            let mut want: Vec<u32> = order[..r].to_vec();
+            want.sort_unstable();
+            // With distinct magnitudes (generic normals) selection is unique.
+            assert_eq!(got, want, "r={r}");
+        }
+    }
+
+    #[test]
+    fn select_output_sorted_unique() {
+        let w = randvec(200, 2);
+        let mut scratch = Vec::new();
+        let got = select_top_r(&w, 50, &mut scratch);
+        assert!(got.windows(2).all(|p| p[0] < p[1]));
+    }
+
+    #[test]
+    fn select_handles_ties() {
+        let w = vec![1.0f32; 64];
+        let mut scratch = Vec::new();
+        let got = select_top_r(&w, 10, &mut scratch);
+        assert_eq!(got.len(), 10);
+    }
+
+    #[test]
+    fn select_r_equals_d() {
+        let w = randvec(32, 3);
+        let mut scratch = Vec::new();
+        let got = select_top_r(&w, 32, &mut scratch);
+        assert_eq!(got, (0..32).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let w = randvec(10_000, 4);
+        let h = MagnitudeHistogram::build(&w, 128);
+        assert_eq!(h.counts.iter().sum::<u64>(), 10_000);
+    }
+
+    #[test]
+    fn histogram_threshold_rank_within_one_bin() {
+        let w = randvec(20_000, 5);
+        let h = MagnitudeHistogram::build(&w, 128);
+        for r in [1usize, 10, 200, 2_000, 10_000] {
+            let t = threshold_for_rank(&h, r);
+            let selected = w.iter().filter(|v| v.abs() >= t).count();
+            // CDF walk guarantees: at least r selected; overshoot bounded by
+            // the boundary bin's population.
+            assert!(selected >= r, "r={r} selected={selected}");
+            let boundary_bin = h
+                .counts
+                .iter()
+                .enumerate()
+                .rev()
+                .scan(0u64, |cum, (i, &c)| {
+                    *cum += c;
+                    Some((i, *cum))
+                })
+                .find(|&(_, cum)| cum as usize >= r)
+                .map(|(i, _)| h.counts[i])
+                .unwrap_or(0);
+            assert!(
+                selected as u64 <= r as u64 + boundary_bin,
+                "r={r} selected={selected} boundary={boundary_bin}"
+            );
+        }
+    }
+
+    #[test]
+    fn threshold_zero_rank_is_infinite() {
+        let h = MagnitudeHistogram::build(&randvec(100, 6), 32);
+        assert_eq!(threshold_for_rank(&h, 0), f32::INFINITY);
+    }
+
+    #[test]
+    fn threshold_rank_beyond_span_keeps_all() {
+        // All-zero vector: every element lands in bin 0 below the span.
+        let w = vec![0.0f32; 64];
+        let h = MagnitudeHistogram::build(&w, 32);
+        let t = threshold_for_rank(&h, 64);
+        assert!(w.iter().filter(|v| v.abs() >= t).count() == 64);
+    }
+}

@@ -1,0 +1,105 @@
+//! Magnitude-threshold sparsification (Aji & Heafield style), including the
+//! histogram-calibrated variant that mirrors the Layer-1 Pallas pipeline.
+
+use super::{
+    operator::CompressionOperator,
+    select::{threshold_for_rank, MagnitudeHistogram},
+    SparseVec,
+};
+use crate::util::rng::Rng;
+
+/// Keep every coordinate with |w_i| >= t.
+///
+/// Two calibration modes:
+/// * `Fixed(t)` — a constant threshold.
+/// * `Rank(r)` — per-call histogram calibration targeting ~r survivors;
+///   this is the approximate top-r used by the accelerated XLA path (same
+///   histogram walk as `threshold_for_rank`, same Pallas binning).
+#[derive(Debug, Clone)]
+pub enum Threshold {
+    Fixed(f32),
+    Rank(usize),
+}
+
+impl CompressionOperator for Threshold {
+    fn compress(&self, w: &[f32], _rng: &mut Rng, out: &mut SparseVec) {
+        let t = match self {
+            Threshold::Fixed(t) => *t,
+            Threshold::Rank(r) => {
+                let hist = MagnitudeHistogram::build(w, MagnitudeHistogram::DEFAULT_NBINS);
+                threshold_for_rank(&hist, (*r).min(w.len()))
+            }
+        };
+        out.clear(w.len());
+        for (i, &v) in w.iter().enumerate() {
+            if v.abs() >= t {
+                out.push(i as u32, v);
+            }
+        }
+    }
+
+    fn gamma(&self, dim: usize) -> f64 {
+        match self {
+            // Fixed thresholds give no worst-case guarantee (t may exceed
+            // max|w|); report the weakest nonzero constant.
+            Threshold::Fixed(_) => 1.0 / dim.max(1) as f64,
+            Threshold::Rank(r) => ((*r).max(1) as f64 / dim.max(1) as f64).min(1.0),
+        }
+    }
+
+    fn nominal_k(&self, dim: usize) -> usize {
+        match self {
+            Threshold::Fixed(_) => dim, // unknown a priori; worst case
+            Threshold::Rank(r) => (*r).min(dim),
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            Threshold::Fixed(t) => format!("threshold{t}"),
+            Threshold::Rank(r) => format!("threshold-rank{r}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fixed_keeps_only_above() {
+        let w = vec![0.5, -1.5, 2.0, -0.1];
+        let mut out = SparseVec::default();
+        Threshold::Fixed(1.0).compress(&w, &mut Rng::new(0), &mut out);
+        assert_eq!(out.idx, vec![1, 2]);
+        assert_eq!(out.val, vec![-1.5, 2.0]);
+    }
+
+    #[test]
+    fn fixed_boundary_inclusive() {
+        let w = vec![1.0, -1.0, 0.999];
+        let mut out = SparseVec::default();
+        Threshold::Fixed(1.0).compress(&w, &mut Rng::new(0), &mut out);
+        assert_eq!(out.nnz(), 2);
+    }
+
+    #[test]
+    fn rank_calibration_close_to_target() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..50_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let r = 500;
+        let mut out = SparseVec::default();
+        Threshold::Rank(r).compress(&w, &mut rng, &mut out);
+        // within one histogram bin of the target (loose factor-2 sanity)
+        assert!(out.nnz() >= r && out.nnz() < 2 * r, "got {}", out.nnz());
+    }
+
+    #[test]
+    fn huge_threshold_keeps_nothing() {
+        let w = vec![1.0, 2.0, 3.0];
+        let mut out = SparseVec::default();
+        Threshold::Fixed(f32::INFINITY).compress(&w, &mut Rng::new(0), &mut out);
+        assert_eq!(out.nnz(), 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Micro-benchmark harness (the image vendors no criterion).
+//!
+//! Bench targets are `harness = false` binaries that call [`Bench::new`]
+//! and register closures with [`Bench::run`]. Output mirrors criterion's
+//! essentials: median / mean / p95 wall time per iteration plus derived
+//! throughput, printed as aligned rows so `cargo bench` output is directly
+//! pasteable into EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Optimizer barrier (criterion's `black_box` equivalent).
+#[inline]
+pub fn bb<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems: Option<usize>,
+}
+
+impl Stats {
+    pub fn throughput_m_elems_s(&self) -> Option<f64> {
+        self.elems.map(|e| e as f64 / self.median_ns * 1e3)
+    }
+}
+
+pub struct Bench {
+    pub group: String,
+    /// Target per-measurement budget.
+    pub budget: Duration,
+    pub results: Vec<Stats>,
+    /// Quick mode (RTOPK_BENCH_QUICK=1) shrinks budgets ~10x for CI.
+    quick: bool,
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1e6 {
+        format!("{:8.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2} ms", ns / 1e6)
+    } else {
+        format!("{:8.2} s ", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        let quick = std::env::var("RTOPK_BENCH_QUICK").is_ok_and(|v| v == "1");
+        println!("\n== bench group: {group} {}==", if quick { "(quick) " } else { "" });
+        println!(
+            "{:<44} {:>11} {:>11} {:>11} {:>12}",
+            "benchmark", "median", "mean", "p95", "throughput"
+        );
+        Bench {
+            group: group.to_string(),
+            budget: if quick { Duration::from_millis(120) } else { Duration::from_millis(900) },
+            results: Vec::new(),
+            quick,
+        }
+    }
+
+    /// Time `f`, which performs ONE iteration of the workload per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> &Stats {
+        self.run_elems(name, None, f)
+    }
+
+    /// Time `f` and report throughput as `elems` elements per iteration.
+    pub fn run_elems<F: FnMut()>(&mut self, name: &str, elems: Option<usize>, mut f: F) -> &Stats {
+        // Warmup: run until ~10% of budget or 3 iterations.
+        let warm_budget = self.budget / 10;
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_iters < 3 || warm_start.elapsed() < warm_budget {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+
+        // Measurement: collect enough samples to fill the budget, with
+        // batching for very fast closures so timer overhead stays < 1%.
+        let batch = (100.0 / per_iter.max(1.0)).ceil().max(1.0) as usize;
+        let target_samples = if self.quick { 12 } else { 30 };
+        let mut samples: Vec<f64> = Vec::with_capacity(target_samples);
+        let meas_start = Instant::now();
+        while samples.len() < target_samples && meas_start.elapsed() < self.budget {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        if samples.is_empty() {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(min_idx(samples.len()));
+        let p95 = samples[p95_idx];
+        let stats = Stats {
+            name: format!("{}/{name}", self.group),
+            iters: samples.len() * batch,
+            median_ns: median,
+            mean_ns: mean,
+            p95_ns: p95,
+            elems,
+        };
+        let tput = stats
+            .throughput_m_elems_s()
+            .map(|t| format!("{t:9.1} Me/s"))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "{:<44} {} {} {} {:>12}",
+            stats.name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+            tput
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+}
+
+// small helper: clamp index
+fn min_idx(len: usize) -> usize {
+    len - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        std::env::set_var("RTOPK_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        let s = b.run("noop-ish", || {
+            acc = bb(acc.wrapping_add(1));
+        });
+        assert!(s.median_ns > 0.0 && s.median_ns < 1e6);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn throughput_derived_from_elems() {
+        std::env::set_var("RTOPK_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest2");
+        let v = vec![1.0f32; 1024];
+        let s = b
+            .run_elems("sum1k", Some(1024), || {
+                bb(v.iter().sum::<f32>());
+            })
+            .clone();
+        assert!(s.throughput_m_elems_s().unwrap() > 0.0);
+    }
+}

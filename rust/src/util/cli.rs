@@ -1,0 +1,196 @@
+//! Minimal command-line argument parser (the image vendors no clap).
+//!
+//! Supports the subset the `rtopk` binary needs: a positional subcommand,
+//! `--key value`, `--key=value`, boolean `--flag`, and typed extraction
+//! with defaults and error messages.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens after the subcommand.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    anyhow::bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag
+                    // (then it's a boolean flag).
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            args.flags.insert(rest.to_string(), v);
+                        }
+                        _ => {
+                            args.flags.insert(rest.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    /// Raw string value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req_str(&self, key: &str) -> anyhow::Result<String> {
+        self.get(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => anyhow::bail!("--{key} expects a boolean, got {v:?}"),
+        }
+    }
+
+    /// Error on any flag that was provided but never read — catches typos.
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<_> = self
+            .flags
+            .keys()
+            .filter(|k| !seen.contains(*k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown flag(s): {}", unknown.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --nodes 5 --ratio 0.99 --federated");
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("nodes", 1).unwrap(), 5);
+        assert_eq!(a.f64_or("ratio", 0.0).unwrap(), 0.99);
+        assert!(a.bool_or("federated", false).unwrap());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("x --k=32 --name=lm_tiny");
+        assert_eq!(a.usize_or("k", 0).unwrap(), 32);
+        assert_eq!(a.str_or("name", ""), "lm_tiny");
+    }
+
+    #[test]
+    fn flag_before_another_flag_is_boolean() {
+        let a = parse("x --verbose --k 3");
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.usize_or("k", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse("x");
+        assert!(a.req_str("model").is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("x");
+        assert_eq!(a.usize_or("nodes", 5).unwrap(), 5);
+        assert_eq!(a.f64_or("lr", 0.1).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let a = parse("x --k abc");
+        assert!(a.usize_or("k", 0).is_err());
+    }
+
+    #[test]
+    fn reject_unknown_catches_typos() {
+        let a = parse("x --nodse 5");
+        let _ = a.usize_or("nodes", 1);
+        assert!(a.reject_unknown().is_err());
+        let b = parse("x --nodes 5");
+        let _ = b.usize_or("nodes", 1);
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn positional_tokens() {
+        let a = parse("experiment table1 table2 --quick");
+        assert_eq!(a.command.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["table1", "table2"]);
+    }
+}

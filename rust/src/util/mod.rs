@@ -1,0 +1,17 @@
+//! Support substrates the offline image does not provide as crates.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure
+//! (no tokio / clap / serde / rand / criterion / proptest), so this module
+//! implements the slices of each that the system needs:
+//!
+//! * [`rng`] — xoshiro256++ PRNG (replaces `rand`)
+//! * [`json`] — JSON parser/writer (replaces `serde_json`)
+//! * [`cli`] — argument parsing (replaces `clap`)
+//! * [`bench`] — micro-benchmark harness (replaces `criterion`)
+//! * [`proptest`] — property-test driver (replaces `proptest`)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,123 @@
+//! Lightweight property-based testing (the image vendors no proptest).
+//!
+//! [`check`] runs a property over many generated cases with independent,
+//! reproducible sub-seeds; on failure it reports the failing case seed so
+//! the case replays with `check_seed`. Generation helpers cover the vector
+//! shapes the invariant tests need (dense, sparse, adversarial values).
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with RTOPK_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("RTOPK_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` over `cases` generated cases. `prop` gets a fresh seeded RNG
+/// per case and returns `Err(reason)` on violation.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let base = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by its reported seed.
+pub fn check_seed<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property {name:?} failed on replay (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper that produces `Result<(), String>` bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// A random dense vector with occasionally-adversarial values
+/// (zeros, ties, huge/tiny magnitudes, negatives).
+pub fn gen_vector(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+    let n = 1 + rng.index(max_len);
+    let style = rng.index(5);
+    (0..n)
+        .map(|_| match style {
+            0 => rng.normal_f32(0.0, 1.0),
+            1 => rng.normal_f32(0.0, 1e-6),                 // tiny magnitudes
+            2 => rng.normal_f32(0.0, 1e6),                  // huge magnitudes
+            3 => rng.index(5) as f32 - 2.0,               // heavy ties incl. zeros
+            _ => {
+                if rng.bernoulli(0.8) {
+                    0.0                                      // sparse
+                } else {
+                    rng.normal_f32(0.0, 3.0)
+                }
+            }
+        })
+        .collect()
+}
+
+/// A (dim, k, r) triple with 1 <= k <= r <= dim.
+pub fn gen_kr(rng: &mut Rng, dim: usize) -> (usize, usize) {
+    let r = 1 + rng.index(dim);
+    let k = 1 + rng.index(r);
+    (k, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("true", 16, |_rng| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn check_reports_failure_with_seed() {
+        check("fails-sometimes", 16, |rng| {
+            if rng.index(4) == 0 {
+                Err("boom".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn gen_vector_within_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = gen_vector(&mut rng, 100);
+            assert!(!v.is_empty() && v.len() <= 100);
+        }
+    }
+
+    #[test]
+    fn gen_kr_ordering() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let dim = 1 + rng.index(1000);
+            let (k, r) = gen_kr(&mut rng, dim);
+            assert!(1 <= k && k <= r && r <= dim);
+        }
+    }
+}

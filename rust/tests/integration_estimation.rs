@@ -1,0 +1,164 @@
+//! Integration tests for the statistical-estimation simulator: the
+//! empirical content of Theorems 1–2 at test scale.
+
+use rtopk::estimation::{
+    bounds, estimate_risk,
+    schemes::{keepable, CentralizedScheme, RandomCoordScheme, SubsampleScheme, TruncationScheme},
+    Refinement, SparseBernoulli, ThetaPrior,
+};
+use rtopk::experiments::theory;
+use rtopk::util::rng::Rng;
+
+#[test]
+fn subsample_scheme_beats_truncation() {
+    assert!(theory::subsample_beats_truncation(0xABC));
+}
+
+#[test]
+fn subsample_beats_random_coordinates_on_sparse_theta() {
+    // Random coordinates waste budget on the (d - s) dead coordinates;
+    // the paper's scheme only spends bits on the support.
+    let model = SparseBernoulli::new(512, 16.0);
+    let mut rng = Rng::new(1);
+    let sub = SubsampleScheme { preprocess: false };
+    let rnd = RandomCoordScheme;
+    let (n, k, trials) = (10, 54, 300);
+    let a = estimate_risk(&model, &sub, n, k, ThetaPrior::HardSparse, trials, &mut rng);
+    let b = estimate_risk(&model, &rnd, n, k, ThetaPrior::HardSparse, trials, &mut rng);
+    assert!(
+        a.risk < 0.5 * b.risk,
+        "subsample {} should crush random coords {}",
+        a.risk,
+        b.risk
+    );
+}
+
+#[test]
+fn risk_sandwiched_between_theorem_curves() {
+    // With generous constants, measured risk of the paper's scheme sits
+    // between c * lower and C * upper throughout Theorem 1's k-window.
+    let (d, s, n) = (512usize, 32.0f64, 10usize);
+    let model = SparseBernoulli::new(d, s);
+    let sub = SubsampleScheme { preprocess: false };
+    let mut rng = Rng::new(2);
+    let (k_lo, k_hi) = bounds::theorem1_k_range(d, s);
+    for k in [k_lo.max(20), (k_lo + k_hi) / 2, k_hi] {
+        let p = estimate_risk(&model, &sub, n, k, ThetaPrior::HardSparse, 300, &mut rng);
+        let up = bounds::theorem1_upper(n, k, d, s, 20.0);
+        let lo = bounds::theorem2_lower(n, k, d, s, 0.005);
+        assert!(
+            p.risk <= up,
+            "k={k}: measured {} above generous upper {up}",
+            p.risk
+        );
+        assert!(
+            p.risk >= lo,
+            "k={k}: measured {} below generous lower {lo}",
+            p.risk
+        );
+    }
+}
+
+#[test]
+fn centralized_floor_matches_s_over_n_order() {
+    // Theorem 2's second term: centralized risk ~ sum_j theta_j (1-theta_j) / n.
+    let (d, s) = (256usize, 16.0f64);
+    let model = SparseBernoulli::new(d, s);
+    let central = CentralizedScheme;
+    let mut rng = Rng::new(3);
+    for n in [5usize, 20, 80] {
+        let p = estimate_risk(&model, &central, n, 0, ThetaPrior::HardSparse, 400, &mut rng);
+        // risk should scale ~1/n: compare to s/n within a small factor
+        let ref_val = s / n as f64;
+        assert!(
+            p.risk < ref_val && p.risk > 0.005 * ref_val,
+            "n={n}: centralized risk {} vs s/n {ref_val}",
+            p.risk
+        );
+    }
+}
+
+#[test]
+fn refinements_preserve_scheme_ordering() {
+    // §II-C: signs, scaling, and perturbations don't change which scheme
+    // wins. (Scaling inflates absolute risk by M^2 for every scheme.)
+    let mut rng = Rng::new(4);
+    let (d, s, n, k, trials) = (256usize, 16.0f64, 10usize, 80usize, 300usize);
+    for (refinement, preprocess) in [
+        (Refinement::Plain, false),
+        (Refinement::Signed, false),
+        (Refinement::Scaled(4.0), false),
+        (Refinement::Perturbed(0.45), true),
+    ] {
+        let model = SparseBernoulli::new(d, s).with_refinement(refinement);
+        let sub = SubsampleScheme { preprocess };
+        let trunc = TruncationScheme;
+        let a = estimate_risk(&model, &sub, n, k, ThetaPrior::HardSparse, trials, &mut rng);
+        let b = estimate_risk(&model, &trunc, n, k, ThetaPrior::HardSparse, trials, &mut rng);
+        assert!(
+            a.risk < b.risk,
+            "{refinement:?}: subsample {} should beat truncation {}",
+            a.risk,
+            b.risk
+        );
+    }
+}
+
+#[test]
+fn truncation_bias_persists_as_n_grows() {
+    // The defining failure of deterministic truncation on the dense
+    // worst-case theta: its risk is bias-dominated, so it does NOT vanish
+    // as n grows, while the unbiased subsampling scheme's variance decays
+    // ~1/n and overtakes it. (At small n the IPW variance can exceed the
+    // truncation bias — the advantage is asymptotic.)
+    let model = SparseBernoulli::new(128, 32.0);
+    let trunc = TruncationScheme;
+    let sub = SubsampleScheme { preprocess: false };
+    let mut rng = Rng::new(5);
+    let t_small = estimate_risk(&model, &trunc, 10, 60, ThetaPrior::DenseWorstCase, 200, &mut rng);
+    let t_large = estimate_risk(&model, &trunc, 100, 60, ThetaPrior::DenseWorstCase, 200, &mut rng);
+    let s_small = estimate_risk(&model, &sub, 10, 60, ThetaPrior::DenseWorstCase, 200, &mut rng);
+    let s_large = estimate_risk(&model, &sub, 100, 60, ThetaPrior::DenseWorstCase, 200, &mut rng);
+    // subsample decays ~1/n
+    assert!(
+        s_large.risk < 0.25 * s_small.risk,
+        "subsample risk should decay ~1/n: {} -> {}",
+        s_small.risk,
+        s_large.risk
+    );
+    // truncation barely improves (bias floor)
+    assert!(
+        t_large.risk > 0.5 * t_small.risk,
+        "truncation should be bias-floored: {} -> {}",
+        t_small.risk,
+        t_large.risk
+    );
+    // and at large n the ordering is decisively the paper's
+    assert!(
+        s_large.risk < 0.5 * t_large.risk,
+        "n=100: subsample {} vs truncation {}",
+        s_large.risk,
+        t_large.risk
+    );
+}
+
+#[test]
+fn bit_budget_arithmetic_consistent() {
+    // keepable() implements k' >= (k - log2 d)/log2 d from §V step (ii).
+    for d in [64usize, 1024, 1 << 16] {
+        let logd = (d as f64).log2();
+        for k in [2 * logd as usize, 10 * logd as usize, 100 * logd as usize] {
+            let kp = keepable(d, k);
+            assert!(kp >= 1);
+            assert!(
+                kp as f64 >= ((k as f64 - logd) / logd).floor().min(1.0),
+                "d={d} k={k}"
+            );
+            // never exceeds the information-theoretic budget
+            assert!(
+                (kp as f64) * logd <= k as f64 + logd,
+                "d={d} k={k} kp={kp} overshoots budget"
+            );
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Integration tests over the XLA (PJRT) runtime and the AOT artifacts.
+//!
+//! These need `make artifacts` to have produced `artifacts/` (the tiny
+//! presets suffice); they skip — loudly — when artifacts are absent so
+//! `cargo test` still works in a fresh checkout.
+
+use std::path::PathBuf;
+
+use rtopk::runtime::{Batch, Manifest, ModelRuntime, XlaModel};
+use rtopk::runtime::xla_runtime::XlaSparsePipeline;
+use rtopk::sparsify::select::MagnitudeHistogram;
+use rtopk::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn lm_batch(model: &XlaModel, seed: u64) -> Batch {
+    let meta = &model.entry.meta;
+    let batch = meta.get("batch").unwrap().as_usize().unwrap();
+    let seq = meta.get("seq").unwrap().as_usize().unwrap();
+    let vocab = meta.get("vocab").unwrap().as_usize().unwrap();
+    let mut rng = Rng::new(seed);
+    let tokens: Vec<i32> = (0..batch * (seq + 1))
+        .map(|_| rng.index(vocab) as i32)
+        .collect();
+    Batch::Tokens { tokens, batch, seq_plus_1: seq + 1 }
+}
+
+#[test]
+fn lm_tiny_initial_loss_near_uniform() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = XlaModel::load(&dir, "lm_tiny").unwrap();
+    let params = model.init_params();
+    let vocab = model.entry.meta.get("vocab").unwrap().as_usize().unwrap();
+    let mut grads = Vec::new();
+    let loss = model
+        .train_step(&params, &lm_batch(&model, 0), &mut grads)
+        .unwrap();
+    let expect = (vocab as f32).ln();
+    assert!(
+        (loss - expect).abs() < 0.5,
+        "initial loss {loss} vs ln(vocab) {expect}"
+    );
+    assert_eq!(grads.len(), model.dim());
+    assert!(grads.iter().all(|g| g.is_finite()));
+}
+
+#[test]
+fn lm_tiny_descent_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = XlaModel::load(&dir, "lm_tiny").unwrap();
+    let mut params = model.init_params();
+    let batch = lm_batch(&model, 1);
+    let mut grads = Vec::new();
+    let loss0 = model.train_step(&params, &batch, &mut grads).unwrap();
+    let mut loss = loss0;
+    for _ in 0..5 {
+        for (w, &g) in params.iter_mut().zip(&grads) {
+            *w -= 0.5 * g;
+        }
+        loss = model.train_step(&params, &batch, &mut grads).unwrap();
+    }
+    assert!(loss < loss0, "one-batch SGD must overfit: {loss0} -> {loss}");
+}
+
+#[test]
+fn lm_tiny_eval_matches_train_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = XlaModel::load(&dir, "lm_tiny").unwrap();
+    let params = model.init_params();
+    let batch = lm_batch(&model, 2);
+    let mut grads = Vec::new();
+    let loss = model.train_step(&params, &batch, &mut grads).unwrap();
+    let (nll_sum, count) = model.eval_step(&params, &batch).unwrap();
+    assert!(
+        ((nll_sum / count) - loss as f64).abs() < 1e-4,
+        "eval {} vs train {loss}",
+        nll_sum / count
+    );
+}
+
+#[test]
+fn cnn_tiny_loads_and_evaluates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = XlaModel::load(&dir, "cnn_tiny").unwrap();
+    let params = model.init_params();
+    let meta = &model.entry.meta;
+    let batch = meta.get("batch").unwrap().as_usize().unwrap();
+    let image = meta.get("image").unwrap().as_usize().unwrap();
+    let classes = meta.get("classes").unwrap().as_usize().unwrap();
+    let mut rng = Rng::new(3);
+    let pixels = rng.normal_vec(batch * image * image * 3, 0.0, 1.0);
+    let labels: Vec<i32> = (0..batch).map(|_| rng.index(classes) as i32).collect();
+    let b = Batch::Images { pixels, labels };
+    let mut grads = Vec::new();
+    let loss = model.train_step(&params, &b, &mut grads).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    let (correct, count) = model.eval_step(&params, &b).unwrap();
+    assert!(correct >= 0.0 && correct <= count);
+    assert_eq!(count as usize, batch);
+}
+
+#[test]
+fn batch_shape_mismatch_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut model = XlaModel::load(&dir, "lm_tiny").unwrap();
+    let params = model.init_params();
+    let bad = Batch::Tokens { tokens: vec![0; 10], batch: 2, seq_plus_1: 5 };
+    let mut grads = Vec::new();
+    assert!(model.train_step(&params, &bad, &mut grads).is_err());
+    let wrong_family = Batch::Images { pixels: vec![0.0; 12], labels: vec![0] };
+    assert!(model.train_step(&params, &wrong_family, &mut grads).is_err());
+}
+
+#[test]
+fn sparse_pipeline_matches_pure_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let Some(entry) = manifest.sparse_pipelines.first() else {
+        eprintln!("SKIP: no sparse pipeline in manifest");
+        return;
+    };
+    let pipe = XlaSparsePipeline::load(&manifest, entry.dim).unwrap();
+    let d = pipe.dim;
+    let mut rng = Rng::new(4);
+    let g = rng.normal_vec(d, 0.0, 1.5);
+    let m = rng.normal_vec(d, 0.0, 0.2);
+    // host side computes acc = g + m for the reference paths
+    let acc: Vec<f32> = g.iter().zip(&m).map(|(&a, &b)| a + b).collect();
+    let mx_ref = acc.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    let log_hi = mx_ref.max(1e-38).ln();
+    let log_lo = log_hi - MagnitudeHistogram::DEFAULT_SPAN;
+    let thresh = 1.0f32;
+
+    let (hist, out, m_new, nnz, mx) = pipe.run(&g, &m, log_lo, log_hi, thresh).unwrap();
+
+    // maxabs agrees
+    assert!((mx - mx_ref).abs() < 1e-5 * mx_ref, "{mx} vs {mx_ref}");
+
+    // histogram agrees with the Rust implementation up to f32 bin-edge
+    // rounding (identical formula, different evaluation order)
+    let mut rust_hist = MagnitudeHistogram {
+        counts: vec![0; pipe.nbins],
+        log_lo,
+        log_hi,
+    };
+    rust_hist.accumulate(&acc);
+    let total_xla: i64 = hist.iter().map(|&c| c as i64).sum();
+    assert_eq!(total_xla as usize, d, "histogram must count all elements");
+    let l1_diff: u64 = hist
+        .iter()
+        .zip(&rust_hist.counts)
+        .map(|(&a, &b)| (a as i64 - b as i64).unsigned_abs())
+        .sum();
+    assert!(
+        l1_diff <= (d / 500 + 2) as u64,
+        "histograms diverge: L1 diff {l1_diff} of {d}"
+    );
+
+    // threshold apply agrees exactly with the definition
+    let mut expect_nnz = 0;
+    for j in 0..d {
+        let keep = acc[j].abs() >= thresh;
+        if keep {
+            expect_nnz += 1;
+            assert!((out[j] - acc[j]).abs() < 1e-6, "out[{j}]");
+            assert_eq!(m_new[j], 0.0, "m_new[{j}]");
+        } else {
+            assert_eq!(out[j], 0.0, "out[{j}]");
+            assert!((m_new[j] - acc[j]).abs() < 1e-6, "m_new[{j}]");
+        }
+    }
+    assert_eq!(nnz as usize, expect_nnz);
+}
+
+#[test]
+fn manifest_hashes_match_files() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    for m in &manifest.models {
+        for prog in [&m.train, &m.eval] {
+            let text = std::fs::read_to_string(dir.join(&prog.file)).unwrap();
+            assert!(text.starts_with("HloModule"), "{} is not HLO text", prog.file);
+        }
+        // flat-param contract: input 0 and grad output are both f32[dim]
+        assert_eq!(m.train.inputs[0].shape, vec![m.dim]);
+        assert_eq!(m.train.outputs[1].shape, vec![m.dim]);
+    }
+}

@@ -1,0 +1,305 @@
+//! Property-based invariant tests over the coordinator's building blocks.
+//!
+//! Uses the crate's own property-test driver (`util::proptest`) since the
+//! offline image vendors no proptest crate. Each property runs over many
+//! seeded random cases including adversarial value distributions (ties,
+//! zeros, huge/tiny magnitudes — see `gen_vector`).
+
+use rtopk::comms::codec::{self, CodecConfig, IndexFormat, ValueFormat};
+use rtopk::prop_assert;
+use rtopk::sparsify::{
+    l2_sq, select_top_r, CompressionOperator, ErrorFeedback, NoCompression, RTopK, RandomK,
+    SparseVec, TopK,
+};
+use rtopk::util::proptest::{check, default_cases, gen_kr, gen_vector};
+
+fn ops_for(k: usize, r: usize) -> Vec<Box<dyn CompressionOperator>> {
+    vec![
+        Box::new(TopK::new(k)),
+        Box::new(RandomK::new(k)),
+        Box::new(RTopK::new(k, r)),
+        Box::new(NoCompression),
+    ]
+}
+
+#[test]
+fn prop_operators_emit_sorted_unique_indices_within_dim() {
+    check("sorted-unique", default_cases(), |rng| {
+        let w = gen_vector(rng, 300);
+        let (k, r) = gen_kr(rng, w.len());
+        let mut out = SparseVec::default();
+        for op in ops_for(k, r) {
+            op.compress(&w, rng, &mut out);
+            prop_assert!(out.dim == w.len(), "{}: dim mismatch", op.name());
+            prop_assert!(
+                out.idx.windows(2).all(|p| p[0] < p[1]),
+                "{}: indices not sorted/unique: {:?}",
+                op.name(),
+                out.idx
+            );
+            prop_assert!(
+                out.idx.iter().all(|&i| (i as usize) < w.len()),
+                "{}: index out of range",
+                op.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selection_operators_copy_values_verbatim() {
+    check("values-verbatim", default_cases(), |rng| {
+        let w = gen_vector(rng, 300);
+        let (k, r) = gen_kr(rng, w.len());
+        let mut out = SparseVec::default();
+        for op in ops_for(k, r) {
+            op.compress(&w, rng, &mut out);
+            for (&i, &v) in out.idx.iter().zip(&out.val) {
+                prop_assert!(
+                    v == w[i as usize],
+                    "{}: value at {i} is {v}, expected {}",
+                    op.name(),
+                    w[i as usize]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rtopk_support_subset_of_top_r_with_exactly_k() {
+    check("rtopk-support", default_cases(), |rng| {
+        let w = gen_vector(rng, 300);
+        let (k, r) = gen_kr(rng, w.len());
+        let op = RTopK::new(k, r);
+        let mut out = SparseVec::default();
+        op.compress(&w, rng, &mut out);
+        prop_assert!(out.nnz() == k.min(w.len()), "nnz {} != k {}", out.nnz(), k);
+        // Kept magnitudes can't be below the top-r cutoff magnitude (for
+        // ties the index set may differ, magnitudes cannot).
+        let mut scratch = Vec::new();
+        let top = select_top_r(&w, r.min(w.len()), &mut scratch);
+        let cutoff = top
+            .iter()
+            .map(|&i| w[i as usize].abs())
+            .fold(f32::INFINITY, f32::min);
+        for &i in &out.idx {
+            prop_assert!(
+                w[i as usize].abs() >= cutoff,
+                "kept |{}| < top-r cutoff {cutoff}",
+                w[i as usize]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_compression_contraction_definition4() {
+    check("contraction", default_cases() / 2, |rng| {
+        let w = gen_vector(rng, 200);
+        let (k, r) = gen_kr(rng, w.len());
+        let norm = l2_sq(&w);
+        let mut out = SparseVec::default();
+        // deterministic: top-k satisfies the bound per-draw
+        let op = TopK::new(k);
+        op.compress(&w, rng, &mut out);
+        let err = norm - out.l2_sq();
+        prop_assert!(
+            err <= (1.0 - op.gamma(w.len())) * norm + 1e-6 + 1e-9 * norm,
+            "topk contraction violated: err={err} bound={}",
+            (1.0 - op.gamma(w.len())) * norm
+        );
+        // randomized: average over repeats (Proposition 1 is in expectation)
+        let op = RTopK::new(k, r);
+        let trials = 60;
+        let mut mean_err = 0.0;
+        for _ in 0..trials {
+            op.compress(&w, rng, &mut out);
+            mean_err += (norm - out.l2_sq()) / trials as f64;
+        }
+        prop_assert!(
+            mean_err <= (1.0 - op.gamma(w.len())) * norm * 1.15 + 1e-6,
+            "rtopk mean contraction violated: {mean_err} vs {}",
+            (1.0 - op.gamma(w.len())) * norm
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_feedback_conserves_mass_exactly() {
+    check("ef-conservation", default_cases(), |rng| {
+        let dim = 1 + rng.index(200);
+        let (k, r) = gen_kr(rng, dim);
+        let mut ef = ErrorFeedback::new(dim);
+        let op = RTopK::new(k, r);
+        let mut out = SparseVec::default();
+        for _ in 0..5 {
+            let g: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let m_before = ef.memory.clone();
+            ef.step(&g, &op, rng, &mut out);
+            let dense = out.to_dense();
+            for j in 0..dim {
+                let lhs = g[j] + m_before[j];
+                let rhs = dense[j] + ef.memory[j];
+                prop_assert!(lhs == rhs, "coord {j}: {lhs} != {rhs} (exact identity)");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_roundtrip_all_formats() {
+    check("codec-roundtrip", default_cases(), |rng| {
+        let dim = 1 + rng.index(50_000);
+        let nnz = rng.index(dim.min(2_000) + 1);
+        let mut idx = rng.sample_indices(dim, nnz);
+        idx.sort_unstable();
+        let sv = SparseVec {
+            dim,
+            idx: idx.iter().map(|&i| i as u32).collect(),
+            val: (0..nnz).map(|_| rng.normal_f32(0.0, 10.0)).collect(),
+        };
+        for indices in [IndexFormat::FixedWidth, IndexFormat::DeltaVarint] {
+            let cfg = CodecConfig { values: ValueFormat::F32, indices };
+            let mut buf = Vec::new();
+            codec::encode(&sv, cfg, &mut buf);
+            let mut back = SparseVec::default();
+            codec::decode(&buf, &mut back).map_err(|e| e.to_string())?;
+            prop_assert!(back == sv, "roundtrip mismatch for {indices:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_never_larger_than_planned_size() {
+    check("codec-size", default_cases(), |rng| {
+        let dim = 1 + rng.index(100_000);
+        let nnz = rng.index(dim.min(1_000) + 1);
+        let mut idx = rng.sample_indices(dim, nnz);
+        idx.sort_unstable();
+        let sv = SparseVec {
+            dim,
+            idx: idx.iter().map(|&i| i as u32).collect(),
+            val: vec![1.0; nnz],
+        };
+        let cfg = CodecConfig::default();
+        let mut buf = Vec::new();
+        codec::encode(&sv, cfg, &mut buf);
+        prop_assert!(
+            buf.len() <= codec::encoded_size(dim, nnz, cfg),
+            "encoded {} > planned {}",
+            buf.len(),
+            codec::encoded_size(dim, nnz, cfg)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregation_equals_average_of_decoded_messages() {
+    check("aggregation-linearity", default_cases() / 2, |rng| {
+        let dim = 1 + rng.index(500);
+        let n = 1 + rng.index(8);
+        let mut dense_sum = vec![0.0f64; dim];
+        let mut agg = vec![0.0f32; dim];
+        let scale = 1.0 / n as f32;
+        for _ in 0..n {
+            let (k, r) = gen_kr(rng, dim);
+            let op = RTopK::new(k, r);
+            let g: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let mut out = SparseVec::default();
+            op.compress(&g, rng, &mut out);
+            // transport roundtrip
+            let mut buf = Vec::new();
+            codec::encode(&out, CodecConfig::default(), &mut buf);
+            let mut back = SparseVec::default();
+            codec::decode(&buf, &mut back).map_err(|e| e.to_string())?;
+            back.add_scaled_into(scale, &mut agg);
+            for (&i, &v) in out.idx.iter().zip(&out.val) {
+                dense_sum[i as usize] += v as f64 / n as f64;
+            }
+        }
+        for j in 0..dim {
+            prop_assert!(
+                (agg[j] as f64 - dense_sum[j]).abs() < 1e-4 * dense_sum[j].abs().max(1.0),
+                "coord {j}: {} vs {}",
+                agg[j],
+                dense_sum[j]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_keeps_the_heaviest_mass() {
+    // ||top_k(w)||^2 >= ||any other k-selection||^2, in particular random-k.
+    check("topk-heaviest", default_cases(), |rng| {
+        let w = gen_vector(rng, 300);
+        let k = 1 + rng.index(w.len());
+        let mut a = SparseVec::default();
+        let mut b = SparseVec::default();
+        TopK::new(k).compress(&w, rng, &mut a);
+        RandomK::new(k).compress(&w, rng, &mut b);
+        prop_assert!(
+            a.l2_sq() >= b.l2_sq() - 1e-9,
+            "topk mass {} < randomk mass {}",
+            a.l2_sq(),
+            b.l2_sq()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warmup_schedule_monotone_and_bounded() {
+    check("warmup-monotone", default_cases(), |rng| {
+        let target = 10f64.powf(-(1.0 + 3.0 * rng.f64())); // 1e-1 .. 1e-4
+        let epochs = 1 + rng.index(10);
+        let w = rtopk::optim::WarmupSparsity::new(target, epochs as f64);
+        let mut prev = f64::INFINITY;
+        for i in 0..=(epochs * 4) {
+            let e = i as f64 / 2.0;
+            let f = w.keep_frac(e);
+            prop_assert!(f <= prev + 1e-12, "not monotone at {e}");
+            prop_assert!(f >= target - 1e-15 && f <= 1.0, "out of bounds at {e}: {f}");
+            prev = f;
+        }
+        prop_assert!(
+            (w.keep_frac(epochs as f64) - target).abs() < 1e-12,
+            "did not reach target"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_select_top_r_magnitudes_dominate_rest() {
+    check("select-dominates", default_cases(), |rng| {
+        let w = gen_vector(rng, 400);
+        let r = 1 + rng.index(w.len());
+        let mut scratch = Vec::new();
+        let top: std::collections::HashSet<u32> =
+            select_top_r(&w, r, &mut scratch).into_iter().collect();
+        let min_in = top
+            .iter()
+            .map(|&i| w[i as usize].abs())
+            .fold(f32::INFINITY, f32::min);
+        for i in 0..w.len() as u32 {
+            if !top.contains(&i) {
+                prop_assert!(
+                    w[i as usize].abs() <= min_in + 1e-9,
+                    "excluded |{}| > included min {min_in}",
+                    w[i as usize]
+                );
+            }
+        }
+        Ok(())
+    });
+}
