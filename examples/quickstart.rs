@@ -1,10 +1,12 @@
-//! Quickstart: the rTop-k operator, error feedback, and a 60-round
-//! distributed run — all in one minute, no artifacts required.
+//! Quickstart: the rTop-k operator, the composable compression pipeline,
+//! error feedback, and a 60-round distributed run — all in one minute, no
+//! artifacts required.
 //!
 //!     cargo run --release --example quickstart
 
 use std::sync::Arc;
 
+use rtopk::compress::{GradientCompressor, Select};
 use rtopk::coordinator::{self, OptimKind, TrainConfig, WorkerFactory, WorkerSetup};
 use rtopk::optim::LrSchedule;
 use rtopk::runtime::{Batch, MockModel, ModelRuntime};
@@ -36,7 +38,33 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // ---- 2. error feedback (Algorithm 1's memory) ----
+    // ---- 2. the composable pipeline: selection | values | indices ----
+    // rTop-k is literally top_r composed with random_k; one compressor
+    // fuses selection and bit-packing into a single call.
+    let mut gc = GradientCompressor::builder(Select::top_r(8).then_random_k(4)).build();
+    let mut wire = Vec::new();
+    let stats = gc.compress(&w, &mut rng, &mut wire);
+    println!(
+        "\npipeline {}: kept {} of {} coords in {} wire bytes (dense = {} B)",
+        gc.label(),
+        stats.nnz,
+        stats.dim,
+        stats.payload_bytes,
+        stats.dense_bytes
+    );
+    // ...or build the whole pipeline from one spec string:
+    let mut gc = GradientCompressor::from_spec("rtopk:r=2k,k=4|bf16|delta", 4, w.len())?;
+    let stats = gc.compress(&w, &mut rng, &mut wire);
+    println!(
+        "pipeline {}: {} wire bytes; decompress recovers the kept coords",
+        gc.label(),
+        stats.payload_bytes
+    );
+    let mut recovered = SparseVec::default();
+    GradientCompressor::decompress_into(&wire, &mut recovered)?;
+    assert_eq!(recovered.idx, gc.kept().idx);
+
+    // ---- 3. error feedback (Algorithm 1's memory) ----
     let mut ef = ErrorFeedback::new(w.len());
     let op = RTopK::new(4, 8);
     ef.step(&w, &op, &mut rng, &mut out);
@@ -46,7 +74,7 @@ fn main() -> anyhow::Result<()> {
         ef.memory_l2_sq()
     );
 
-    // ---- 3. a full distributed run (5 nodes, mock gradients) ----
+    // ---- 4. a full distributed run (5 nodes, mock gradients) ----
     let dim = 1024;
     let model = MockModel::new(dim, 0.05, 42);
     let factory: WorkerFactory = Arc::new(move |node| {

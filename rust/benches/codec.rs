@@ -1,8 +1,12 @@
-//! Sparse message codec benchmarks: encode/decode across formats and
-//! sparsity levels (the per-round wire cost of Algorithm 1).
+//! Wire-format benchmarks: encode/decode across value × index stages and
+//! sparsity levels (the per-round wire cost of Algorithm 1), plus the
+//! pipeline-level comparison that gates the fused compress path — one
+//! `GradientCompressor::compress` call must be no slower than the seed's
+//! two-step sparsify-then-encode.
 
-use rtopk::comms::codec::{decode, encode, CodecConfig, IndexFormat, ValueFormat};
-use rtopk::sparsify::SparseVec;
+use rtopk::compress::{GradientCompressor, Select};
+use rtopk::comms::codec::{bitmap_wins, decode, encode, CodecConfig, IndexFormat, ValueFormat};
+use rtopk::sparsify::{CompressionOperator, SparseVec, TopK};
 use rtopk::util::bench::{bb, Bench};
 use rtopk::util::rng::Rng;
 
@@ -16,31 +20,110 @@ fn random_sparse(rng: &mut Rng, dim: usize, nnz: usize) -> SparseVec {
     }
 }
 
-fn main() {
-    let mut bench = Bench::new("codec");
-    let mut rng = Rng::new(0);
-    let d = 1_000_000;
+const WIRE_FORMATS: [(&str, CodecConfig); 4] = [
+    ("f32|fixed", CodecConfig { values: ValueFormat::F32, indices: IndexFormat::FixedWidth }),
+    ("f32|delta", CodecConfig { values: ValueFormat::F32, indices: IndexFormat::DeltaVarint }),
+    ("bf16|fixed", CodecConfig { values: ValueFormat::Bf16, indices: IndexFormat::FixedWidth }),
+    ("bf16|delta", CodecConfig { values: ValueFormat::Bf16, indices: IndexFormat::DeltaVarint }),
+];
 
-    for &nnz in &[1_000usize, 10_000, 100_000] {
-        let sv = random_sparse(&mut rng, d, nnz);
+/// Raw codec throughput: encode/decode an already-sparsified message.
+fn bench_codec_stages(bench: &mut Bench, rng: &mut Rng) {
+    let d = 1_000_000;
+    for &keep in &[0.001f64, 0.01, 0.1] {
+        let nnz = (keep * d as f64) as usize;
+        let sv = random_sparse(rng, d, nnz);
         let mut buf = Vec::new();
         let mut back = SparseVec::default();
-
-        for (label, cfg) in [
-            ("fixed-f32", CodecConfig { values: ValueFormat::F32, indices: IndexFormat::FixedWidth }),
-            ("varint-f32", CodecConfig { values: ValueFormat::F32, indices: IndexFormat::DeltaVarint }),
-            ("fixed-bf16", CodecConfig { values: ValueFormat::Bf16, indices: IndexFormat::FixedWidth }),
-        ] {
-            bench.run_elems(&format!("encode/{label}/nnz={nnz}"), Some(nnz), || {
+        for (label, cfg) in WIRE_FORMATS {
+            bench.run_elems(&format!("encode/{label}/k_d={keep}"), Some(nnz), || {
                 encode(&sv, cfg, &mut buf);
                 bb(buf.len());
             });
             encode(&sv, cfg, &mut buf);
-            bench.run_elems(&format!("decode/{label}/nnz={nnz}"), Some(nnz), || {
+            bench.run_elems(&format!("decode/{label}/k_d={keep}"), Some(nnz), || {
                 decode(&buf, &mut back).unwrap();
                 bb(back.nnz());
             });
-            println!("    ({label} nnz={nnz}: {} bytes vs dense {})", buf.len(), 4 * d);
+            println!(
+                "    ({label} k/d={keep}: {} bytes = {:.5} x dense{})",
+                buf.len(),
+                buf.len() as f64 / (4 * d) as f64,
+                if bitmap_wins(d, nnz, cfg.indices) { " [auto-bitmap layout]" } else { "" }
+            );
         }
     }
+}
+
+/// Full pipeline sweep: one fused compress per wire format × sparsity
+/// (selection + value stage + index stage, straight from the dense
+/// gradient), so the compression-ratio/throughput trade-off is measured
+/// end to end.
+fn bench_pipeline_sweep(bench: &mut Bench, rng: &mut Rng) {
+    let d = 1_000_000;
+    let w = rng.normal_vec(d, 0.0, 1.0);
+    for &keep in &[0.001f64, 0.01, 0.1] {
+        let k = (keep * d as f64) as usize;
+        for (label, cfg) in WIRE_FORMATS {
+            let mut gc = GradientCompressor::builder(Select::top_k(k))
+                .values(cfg.values)
+                .indices(cfg.indices)
+                .build();
+            let mut buf = Vec::new();
+            bench.run_elems(&format!("pipeline/top_k/{label}/k_d={keep}"), Some(d), || {
+                let stats = gc.compress(&w, rng, &mut buf);
+                bb(stats.payload_bytes);
+            });
+            let stats = gc.compress(&w, rng, &mut buf);
+            println!(
+                "    (pipeline {label} k/d={keep}: {} bytes = {:.5} x dense{})",
+                stats.payload_bytes,
+                stats.payload_bytes as f64 / stats.dense_bytes as f64,
+                if bitmap_wins(d, k, cfg.indices) { " [auto-bitmap layout]" } else { "" }
+            );
+        }
+    }
+}
+
+/// The acceptance gate: fused compress+encode vs the seed's two-step
+/// sparsify-then-encode at matched selection and wire format.
+fn bench_fused_vs_two_step(bench: &mut Bench, rng: &mut Rng) {
+    let d = 1_000_000;
+    let w = rng.normal_vec(d, 0.0, 1.0);
+    let k = d / 1000;
+    let cfg = CodecConfig::default();
+
+    let op = TopK::new(k);
+    let mut sv = SparseVec::with_capacity(d, k);
+    let mut buf = Vec::new();
+    let two_step = bench
+        .run_elems(&format!("two-step/sparsify-then-encode/d={d}/k={k}"), Some(d), || {
+            op.compress(&w, rng, &mut sv);
+            encode(&sv, cfg, &mut buf);
+            bb(buf.len());
+        })
+        .median_ns;
+
+    let mut gc = GradientCompressor::builder(Select::top_k(k)).build();
+    let fused = bench
+        .run_elems(&format!("fused/compress/d={d}/k={k}"), Some(d), || {
+            let stats = gc.compress(&w, rng, &mut buf);
+            bb(stats.payload_bytes);
+        })
+        .median_ns;
+
+    println!(
+        "    (fused {:.2} ms vs two-step {:.2} ms: {:+.1}%)",
+        fused / 1e6,
+        two_step / 1e6,
+        100.0 * (fused - two_step) / two_step
+    );
+}
+
+fn main() {
+    let mut bench = Bench::new("codec");
+    let mut rng = Rng::new(0);
+    bench_codec_stages(&mut bench, &mut rng);
+    bench_pipeline_sweep(&mut bench, &mut rng);
+    bench_fused_vs_two_step(&mut bench, &mut rng);
 }

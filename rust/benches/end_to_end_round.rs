@@ -12,7 +12,6 @@ use std::time::Instant;
 use rtopk::coordinator::{self, OptimKind, TrainConfig, WorkerFactory, WorkerSetup};
 use rtopk::optim::LrSchedule;
 use rtopk::runtime::{Batch, MockModel};
-use rtopk::sparsify::SparsifierKind;
 use rtopk::util::bench::Bench;
 
 fn mock_factory(dim: usize) -> WorkerFactory {
@@ -29,8 +28,8 @@ fn mock_factory(dim: usize) -> WorkerFactory {
     })
 }
 
-fn run_rounds(dim: usize, method: SparsifierKind, compression: f64, rounds: u64) -> f64 {
-    let mut cfg = TrainConfig::image_default(5, method, compression);
+fn run_rounds(dim: usize, pipeline: &str, compression: f64, rounds: u64) -> f64 {
+    let mut cfg = TrainConfig::image_spec(5, pipeline, compression).unwrap();
     cfg.rounds = rounds;
     cfg.warmup_epochs = 0.0;
     cfg.optim = OptimKind::Sgd { clip: None };
@@ -55,16 +54,16 @@ fn main() {
     let rounds = if quick { 5 } else { 20 };
     println!("(ms per round, 5 nodes, MockModel gradients)");
     for &dim in &[100_000usize, 1_000_000] {
-        for (method, compression) in [
-            (SparsifierKind::Baseline, 0.0),
-            (SparsifierKind::TopK, 0.999),
-            (SparsifierKind::RandomK, 0.999),
-            (SparsifierKind::RTopK, 0.999),
+        for (pipeline, compression) in [
+            ("baseline", 0.0),
+            ("topk", 0.999),
+            ("randomk", 0.999),
+            ("rtopk", 0.999),
+            ("rtopk|bf16|delta", 0.999),
         ] {
-            let ms = run_rounds(dim, method, compression, rounds);
+            let ms = run_rounds(dim, pipeline, compression, rounds);
             println!(
-                "round/{:?}@{:.1}%/d={dim}: {ms:9.3} ms/round",
-                method,
+                "round/{pipeline}@{:.1}%/d={dim}: {ms:9.3} ms/round",
                 100.0 * compression
             );
         }

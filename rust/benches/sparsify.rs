@@ -1,9 +1,11 @@
 //! Sparsification hot-path benchmarks (EXPERIMENTS.md §Perf, L3).
 //!
 //! Covers the selection strategies (exact quickselect vs full sort vs
-//! histogram threshold), the operators at paper-realistic k/d, and the
-//! fused error-feedback step.
+//! histogram threshold), the operator adapters at paper-realistic k/d,
+//! the composed `GradientCompressor` pipelines built from spec strings,
+//! and the fused error-feedback step.
 
+use rtopk::compress::GradientCompressor;
 use rtopk::sparsify::{
     select_top_r, threshold_for_rank, CompressionOperator, ErrorFeedback, MagnitudeHistogram,
     RTopK, RandomK, SparseVec, Threshold, TopK,
@@ -63,11 +65,30 @@ fn main() {
             bb(out.nnz());
         });
 
+        // -- composed pipelines from spec strings (selection + encode) --
+        let mut payload = Vec::new();
+        for spec in ["topk", "randomk", "rtopk", "rtopk|bf16|delta", "threshold"] {
+            let mut gc = GradientCompressor::from_spec(spec, k, d).unwrap();
+            bench.run_elems(&format!("pipeline/{spec}/d={d}/k={k}"), Some(d), || {
+                let stats = gc.compress(&w, &mut rng, &mut payload);
+                bb(stats.payload_bytes);
+            });
+        }
+
         // -- fused error-feedback step (the per-round worker cost) --
         let mut ef = ErrorFeedback::new(d);
         bench.run_elems(&format!("ef/step-rtopk/d={d}/k={k}"), Some(d), || {
             ef.step(&w, &rtopk, &mut rng, &mut out);
             bb(out.nnz());
+        });
+
+        // -- the worker's full pipeline path: compensate -> compress -> residual --
+        let mut gc = GradientCompressor::from_spec("rtopk", k, d).unwrap();
+        bench.run_elems(&format!("ef/pipeline-rtopk/d={d}/k={k}"), Some(d), || {
+            let acc_ptr = ef.compensate(&w);
+            let stats = gc.compress(acc_ptr, &mut rng, &mut payload);
+            ef.update_residual(gc.kept());
+            bb(stats.payload_bytes);
         });
     }
 }

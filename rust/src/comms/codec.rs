@@ -1,39 +1,52 @@
-//! Bit-exact sparse gradient message codec.
+//! Bit-exact sparse gradient wire format — the **value/index stage
+//! internals** of the [`crate::compress::GradientCompressor`] pipeline.
 //!
 //! The paper accounts communication as `k` coordinates, each costing
 //! `log2 d` index bits plus a constant-precision value (§III: "the index
-//! for each component can be referred to with log d bits"). This codec
+//! for each component can be referred to with log d bits"). This module
 //! makes that accounting *measured rather than assumed*: messages are
 //! actually bit-packed, and the transport layer reports real byte counts
 //! that the metrics turn into compression ratios.
+//!
+//! Layering: `compress::GradientCompressor` owns the pipeline (selection →
+//! value stage → index stage) and calls [`encode_with`], the fused entry
+//! point that bit-packs straight from the selection's survivor list and the
+//! dense gradient — no intermediate sorted/realloc'd `SparseVec` on the hot
+//! path. [`encode`]/[`decode`] remain as the `SparseVec`-level wrappers the
+//! tests and tools use.
 //!
 //! Wire format (little-endian):
 //!   magic  u16 = 0x5254 ("RT")
 //!   flags  u8  : bit0 value-format (0 = f32, 1 = bf16)
 //!              : bit1 index-format (0 = fixed-width, 1 = delta-varint)
+//!              : bit2 bitmap index layout (auto-selected; overrides bit1)
 //!   _pad   u8
 //!   dim    u32
 //!   nnz    u32
 //!   indices: fixed — ceil(log2 dim) bits each, bit-packed;
 //!            delta — LEB128 varints of successive index gaps (requires
-//!            sorted indices; wins when k/d is large)
+//!            sorted indices; wins when indices cluster);
+//!            bitmap — dim occupancy bits (chosen automatically whenever
+//!            it is smaller than per-entry indices, i.e. k ~ d)
 //!   values : nnz * 4 bytes (f32) or nnz * 2 bytes (bf16)
 
 use crate::sparsify::SparseVec;
 
+/// Value-stage precision on the wire.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ValueFormat {
     F32,
     Bf16,
 }
 
+/// Index-stage layout on the wire (the bitmap layout is auto-selected).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum IndexFormat {
     FixedWidth,
     DeltaVarint,
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CodecConfig {
     pub values: ValueFormat,
     pub indices: IndexFormat,
@@ -45,15 +58,24 @@ impl Default for CodecConfig {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CodecError {
-    #[error("message too short ({0} bytes)")]
     Truncated(usize),
-    #[error("bad magic {0:#x}")]
     BadMagic(u16),
-    #[error("corrupt payload: {0}")]
     Corrupt(&'static str),
 }
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Truncated(n) => write!(f, "message too short ({n} bytes)"),
+            CodecError::BadMagic(m) => write!(f, "bad magic {m:#x}"),
+            CodecError::Corrupt(msg) => write!(f, "corrupt payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 /// Bits needed to address a coordinate of a dim-`d` vector.
 pub fn index_bits(dim: usize) -> u32 {
@@ -64,15 +86,25 @@ pub fn index_bits(dim: usize) -> u32 {
     }
 }
 
-fn f32_to_bf16(x: f32) -> u16 {
-    // round-to-nearest-even truncation of the low mantissa bits
+/// The bf16 value stage: round-to-nearest-even truncation of the low
+/// mantissa bits. Public so tests can state the exact quantization a
+/// bf16 pipeline applies.
+pub fn f32_to_bf16(x: f32) -> u16 {
     let bits = x.to_bits();
     let round = ((bits >> 16) & 1) + 0x7FFF;
     ((bits + round) >> 16) as u16
 }
 
-fn bf16_to_f32(h: u16) -> f32 {
+pub fn bf16_to_f32(h: u16) -> f32 {
     f32::from_bits((h as u32) << 16)
+}
+
+/// The exact value a decoder recovers for `v` under the given value stage.
+pub fn value_roundtrip(v: f32, values: ValueFormat) -> f32 {
+    match values {
+        ValueFormat::F32 => v,
+        ValueFormat::Bf16 => bf16_to_f32(f32_to_bf16(v)),
+    }
 }
 
 struct BitWriter<'a> {
@@ -169,17 +201,39 @@ fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, CodecError> {
 
 const MAGIC: u16 = 0x5254;
 
-/// Encode a sparse gradient. Indices must be sorted ascending (all
-/// operators in this crate emit sorted output).
+/// Whether the occupancy-bitmap layout beats the configured per-entry
+/// index stage. Fixed-width costs exactly `nnz * index_bits` bits; the
+/// cheapest possible delta-varint message costs 1 byte per entry (every
+/// gap < 128), so the bitmap (dim/8 bytes) is only a guaranteed win past
+/// that bound — below it delta is data-dependent and usually smaller.
+pub fn bitmap_wins(dim: usize, nnz: usize, indices: IndexFormat) -> bool {
+    match indices {
+        IndexFormat::FixedWidth => nnz as u64 * index_bits(dim) as u64 > dim as u64,
+        IndexFormat::DeltaVarint => nnz as u64 > (dim as u64).div_ceil(8),
+    }
+}
+
+/// Fused encode: bit-pack a message straight from a sorted survivor index
+/// list and a position-indexed value source (`val_at(j)` is the value of
+/// the j-th kept coordinate, parallel to `idx[j]`). This is the pipeline's
+/// hot path — the selection's survivor buffer feeds it directly, with no
+/// intermediate `SparseVec` construction, sort, or reallocation.
 ///
-/// When the vector is dense enough that per-entry indices would cost more
-/// than a plain occupancy bitmap (nnz * index_bits > dim), the encoder
-/// automatically switches to a bitmap layout (flag bit2) — this keeps
-/// warm-up rounds (k ~ d) from costing *more* than a dense send.
-pub fn encode(sv: &SparseVec, cfg: CodecConfig, out: &mut Vec<u8>) {
+/// When the vector is dense enough that per-entry indices are guaranteed
+/// to cost more than a plain occupancy bitmap (see [`bitmap_wins`]), the
+/// encoder automatically switches to a bitmap layout (flag bit2) — this
+/// keeps warm-up rounds (k ~ d) from costing *more* than a dense send.
+pub fn encode_with(
+    dim: usize,
+    idx: &[u32],
+    mut val_at: impl FnMut(usize) -> f32,
+    cfg: CodecConfig,
+    out: &mut Vec<u8>,
+) {
     out.clear();
-    debug_assert!(sv.idx.windows(2).all(|w| w[0] < w[1]), "indices must be sorted");
-    let use_bitmap = sv.nnz() as u64 * index_bits(sv.dim) as u64 > sv.dim as u64;
+    debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must be sorted");
+    let nnz = idx.len();
+    let use_bitmap = bitmap_wins(dim, nnz, cfg.indices);
     let flags: u8 = match cfg.values {
         ValueFormat::F32 => 0,
         ValueFormat::Bf16 => 1,
@@ -194,49 +248,61 @@ pub fn encode(sv: &SparseVec, cfg: CodecConfig, out: &mut Vec<u8>) {
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(flags);
     out.push(0);
-    out.extend_from_slice(&(sv.dim as u32).to_le_bytes());
-    out.extend_from_slice(&(sv.nnz() as u32).to_le_bytes());
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    out.extend_from_slice(&(nnz as u32).to_le_bytes());
 
     if use_bitmap {
         // occupancy bitmap, LSB-first
-        let mut bitmap = vec![0u8; sv.dim.div_ceil(8)];
-        for &i in &sv.idx {
+        let start = out.len();
+        out.resize(start + dim.div_ceil(8), 0);
+        let bitmap = &mut out[start..];
+        for &i in idx {
             bitmap[i as usize / 8] |= 1 << (i % 8);
         }
-        out.extend_from_slice(&bitmap);
-        write_values(sv, cfg, out);
+        write_values(nnz, &mut val_at, cfg.values, out);
         return;
     }
     match cfg.indices {
         IndexFormat::FixedWidth => {
-            let bits = index_bits(sv.dim);
+            let bits = index_bits(dim);
             let mut bw = BitWriter::new(out);
-            for &i in &sv.idx {
+            for &i in idx {
                 bw.put(i as u64, bits);
             }
             bw.finish();
         }
         IndexFormat::DeltaVarint => {
             let mut prev: i64 = -1;
-            for &i in &sv.idx {
+            for &i in idx {
                 put_varint(out, (i as i64 - prev - 1) as u64);
                 prev = i as i64;
             }
         }
     }
-    write_values(sv, cfg, out);
+    write_values(nnz, &mut val_at, cfg.values, out);
 }
 
-fn write_values(sv: &SparseVec, cfg: CodecConfig, out: &mut Vec<u8>) {
-    match cfg.values {
+/// Encode a `SparseVec`. Indices must be sorted ascending (all selection
+/// stages in this crate emit sorted output).
+pub fn encode(sv: &SparseVec, cfg: CodecConfig, out: &mut Vec<u8>) {
+    encode_with(sv.dim, &sv.idx, |j| sv.val[j], cfg, out);
+}
+
+fn write_values(
+    nnz: usize,
+    val_at: &mut impl FnMut(usize) -> f32,
+    values: ValueFormat,
+    out: &mut Vec<u8>,
+) {
+    match values {
         ValueFormat::F32 => {
-            for &v in &sv.val {
-                out.extend_from_slice(&v.to_le_bytes());
+            for j in 0..nnz {
+                out.extend_from_slice(&val_at(j).to_le_bytes());
             }
         }
         ValueFormat::Bf16 => {
-            for &v in &sv.val {
-                out.extend_from_slice(&f32_to_bf16(v).to_le_bytes());
+            for j in 0..nnz {
+                out.extend_from_slice(&f32_to_bf16(val_at(j)).to_le_bytes());
             }
         }
     }
@@ -397,6 +463,32 @@ mod tests {
     }
 
     #[test]
+    fn fused_encode_with_matches_sparsevec_encode() {
+        // The fused entry point must produce byte-identical messages to the
+        // SparseVec wrapper for every format combination.
+        let mut rng = Rng::new(7);
+        let dense: Vec<f32> = (0..5000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut idx = rng.sample_indices(dense.len(), 200);
+        idx.sort_unstable();
+        let idx: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
+        let sv = SparseVec {
+            dim: dense.len(),
+            idx: idx.clone(),
+            val: idx.iter().map(|&i| dense[i as usize]).collect(),
+        };
+        for values in [ValueFormat::F32, ValueFormat::Bf16] {
+            for indices in [IndexFormat::FixedWidth, IndexFormat::DeltaVarint] {
+                let cfg = CodecConfig { values, indices };
+                let mut a = Vec::new();
+                let mut b = Vec::new();
+                encode(&sv, cfg, &mut a);
+                encode_with(dense.len(), &idx, |j| dense[idx[j] as usize], cfg, &mut b);
+                assert_eq!(a, b, "{values:?}/{indices:?}");
+            }
+        }
+    }
+
+    #[test]
     fn fixed_width_hits_log_d_bits() {
         // k log2(d) bits for indices, up to byte rounding.
         let dim = 1 << 20;
@@ -417,6 +509,36 @@ mod tests {
         assert_eq!(index_bits(3), 2);
         assert_eq!(index_bits(1024), 10);
         assert_eq!(index_bits(1025), 11);
+    }
+
+    #[test]
+    fn bitmap_only_overrides_delta_when_it_surely_wins() {
+        // At 10% density delta-varint (~1 byte/gap) beats the dim/8 bitmap,
+        // so the encoder must NOT take the bitmap branch for delta there —
+        // while fixed-width (20 bits/idx at this dim) must.
+        let dim = 80_000;
+        let nnz = 8_000;
+        let mut rng = Rng::new(9);
+        let sv = random_sparse(&mut rng, dim, nnz);
+        let fixed = CodecConfig { values: ValueFormat::F32, indices: IndexFormat::FixedWidth };
+        let delta = CodecConfig { values: ValueFormat::F32, indices: IndexFormat::DeltaVarint };
+        assert!(bitmap_wins(dim, nnz, IndexFormat::FixedWidth));
+        assert!(!bitmap_wins(dim, nnz, IndexFormat::DeltaVarint));
+        let mut buf_fixed = Vec::new();
+        let mut buf_delta = Vec::new();
+        encode(&sv, fixed, &mut buf_fixed);
+        encode(&sv, delta, &mut buf_delta);
+        assert_eq!(buf_fixed[2] & 4, 4, "fixed at 10% density takes the bitmap layout");
+        assert_eq!(buf_delta[2] & 4, 0, "delta at 10% density stays per-entry");
+        assert!(buf_delta.len() < buf_fixed.len(), "delta should beat the bitmap here");
+        // Past the sure-win bound the bitmap takes over for delta too.
+        assert!(bitmap_wins(dim, dim / 4, IndexFormat::DeltaVarint));
+        // Both still roundtrip.
+        let mut back = SparseVec::default();
+        decode(&buf_fixed, &mut back).unwrap();
+        assert_eq!(back, sv);
+        decode(&buf_delta, &mut back).unwrap();
+        assert_eq!(back, sv);
     }
 
     #[test]

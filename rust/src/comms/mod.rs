@@ -1,6 +1,7 @@
-//! Communication substrate: message codec + transports with exact byte
-//! accounting (compression ratios in the experiment tables are *measured*
-//! from these counters, never assumed).
+//! Communication substrate: the wire format (the value/index stage
+//! internals of [`crate::compress::GradientCompressor`]) + transports with
+//! exact byte accounting (compression ratios in the experiment tables are
+//! *measured* from these counters, never assumed).
 
 pub mod codec;
 pub mod tcp;

@@ -1,0 +1,341 @@
+//! The gradient-compression pipeline: **selection → value stage → index
+//! stage**, one composable API.
+//!
+//! The paper's rTop-k operator is the composition of two selection
+//! primitives (random-k ∘ top-r); sketch-based and adaptive-k compressors
+//! from the related literature factor the same way. This module makes the
+//! factorization explicit:
+//!
+//! * [`Select`] — a chain of selection stages; rTop-k is literally
+//!   `Select::top_r(r).then_random_k(k)` ([`select`]).
+//! * [`ValueFormat`] — the value stage (`f32` or `bf16` on the wire).
+//! * [`IndexFormat`] — the index stage (fixed-width or delta-varint
+//!   bit-packing, with an automatic bitmap layout for dense rounds).
+//! * [`PipelineSpec`] — the whole pipeline as one parseable string, e.g.
+//!   `"rtopk:r=4k,k=256|bf16|delta"` ([`spec`]).
+//! * [`GradientCompressor`] — the driver: a single
+//!   `compress(&[f32], &mut Rng, &mut Vec<u8>) -> CompressStats` that fuses
+//!   sparsification and bit-packing (the selection's survivor list feeds
+//!   the codec directly — no intermediate `SparseVec` sort or realloc),
+//!   plus the matching [`GradientCompressor::decompress_into`].
+//!
+//! The legacy [`crate::sparsify::CompressionOperator`] trait remains as a
+//! thin adapter over [`Select`] for operator-level callers (error-feedback
+//! unit tests, the estimation layer's simulators, examples).
+
+pub mod select;
+pub mod spec;
+
+pub use select::{Select, SelectScratch, Stage};
+pub use spec::{PipelineSpec, Quant, StageSpec};
+
+use crate::comms::codec::{self, CodecConfig, CodecError, IndexFormat, ValueFormat};
+use crate::sparsify::SparseVec;
+use crate::util::rng::Rng;
+
+/// What one `compress` call produced (per-round accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompressStats {
+    /// Gradient dimension d.
+    pub dim: usize,
+    /// Coordinates kept by the selection chain.
+    pub nnz: usize,
+    /// Encoded message size actually produced.
+    pub payload_bytes: usize,
+    /// Bytes a dense f32 send would have cost (4d).
+    pub dense_bytes: usize,
+}
+
+impl CompressStats {
+    /// Measured byte-level compression ratio, `1 - payload/dense`.
+    /// Negative when the encoded message exceeds a dense f32 send — the
+    /// baseline/dense-ish rounds do this (header + occupancy bitmap on
+    /// top of full values), and callers formatting percentages should
+    /// expect it rather than assume [0, 1).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.dense_bytes == 0 {
+            0.0
+        } else {
+            1.0 - self.payload_bytes as f64 / self.dense_bytes as f64
+        }
+    }
+}
+
+/// A reusable gradient compressor: selection chain + wire formats +
+/// scratch buffers. In steady state (same dimension every round) a
+/// `compress` call allocates nothing beyond the output buffer's growth
+/// and the RNG sampling set.
+#[derive(Debug, Clone)]
+pub struct GradientCompressor {
+    select: Select,
+    values: ValueFormat,
+    indices: IndexFormat,
+    scratch: SelectScratch,
+    kept: SparseVec,
+}
+
+impl GradientCompressor {
+    pub fn new(select: Select, values: ValueFormat, indices: IndexFormat) -> Self {
+        GradientCompressor {
+            select,
+            values,
+            indices,
+            scratch: SelectScratch::default(),
+            kept: SparseVec::default(),
+        }
+    }
+
+    /// Start a builder from a selection chain.
+    pub fn builder(select: Select) -> GradientCompressorBuilder {
+        GradientCompressorBuilder {
+            select,
+            values: ValueFormat::F32,
+            indices: IndexFormat::FixedWidth,
+        }
+    }
+
+    /// Build directly from a pipeline spec string, resolving scheduled
+    /// sizes against `k` (and `auto` couplings against
+    /// [`spec::DEFAULT_SUBSAMPLE_RATIO`] — training configs resolve with
+    /// their own ratio via [`PipelineSpec::build`]).
+    pub fn from_spec(s: &str, k: usize, dim: usize) -> anyhow::Result<GradientCompressor> {
+        let parsed = PipelineSpec::parse(s)?;
+        Ok(parsed.build(k.clamp(1, dim.max(1)), spec::DEFAULT_SUBSAMPLE_RATIO, dim))
+    }
+
+    /// Swap the selection chain (the warm-up schedule retargets k per
+    /// round); scratch and kept buffers are retained.
+    pub fn set_select(&mut self, select: Select) {
+        self.select = select;
+    }
+
+    pub fn select(&self) -> &Select {
+        &self.select
+    }
+
+    pub fn value_format(&self) -> ValueFormat {
+        self.values
+    }
+
+    pub fn index_format(&self) -> IndexFormat {
+        self.indices
+    }
+
+    /// Compact name for bench/metric rows, e.g. `top500>random100|bf16|delta`.
+    pub fn label(&self) -> String {
+        let values = match self.values {
+            ValueFormat::F32 => "f32",
+            ValueFormat::Bf16 => "bf16",
+        };
+        let indices = match self.indices {
+            IndexFormat::FixedWidth => "fixed",
+            IndexFormat::DeltaVarint => "delta",
+        };
+        format!("{}|{values}|{indices}", self.select.label())
+    }
+
+    /// The fused hot path: run the selection chain over `w`, then bit-pack
+    /// the survivors straight into `out` (header + indices + values).
+    ///
+    /// The kept coordinates are also recorded in [`Self::kept`] with the
+    /// values *as the receiver will decode them* (post value-stage
+    /// rounding), so an error-feedback residual settled against them
+    /// compensates the value stage's quantization error too — with bf16 on
+    /// the wire, the rounding error of every sent coordinate re-enters the
+    /// next round's memory instead of being silently dropped.
+    pub fn compress(&mut self, w: &[f32], rng: &mut Rng, out: &mut Vec<u8>) -> CompressStats {
+        self.select.apply(w, rng, &mut self.scratch);
+        let idx = &self.scratch.survivors;
+        self.kept.clear(w.len());
+        for &i in idx {
+            self.kept
+                .push(i, codec::value_roundtrip(w[i as usize], self.values));
+        }
+        let cfg = CodecConfig { values: self.values, indices: self.indices };
+        codec::encode_with(w.len(), idx, |j| w[idx[j] as usize], cfg, out);
+        CompressStats {
+            dim: w.len(),
+            nnz: idx.len(),
+            payload_bytes: out.len(),
+            dense_bytes: codec::dense_bytes(w.len()),
+        }
+    }
+
+    /// The coordinates the last `compress` call kept (sorted by index,
+    /// values as the receiver decodes them — see [`Self::compress`]).
+    pub fn kept(&self) -> &SparseVec {
+        &self.kept
+    }
+
+    /// Decode a message produced by any `GradientCompressor` into `out`
+    /// (the wire format is self-describing; no configuration needed).
+    pub fn decompress_into(buf: &[u8], out: &mut SparseVec) -> Result<(), CodecError> {
+        codec::decode(buf, out)
+    }
+}
+
+/// Builder for [`GradientCompressor`]: chain `.values(..)` / `.indices(..)`
+/// onto a selection.
+#[derive(Debug, Clone)]
+pub struct GradientCompressorBuilder {
+    select: Select,
+    values: ValueFormat,
+    indices: IndexFormat,
+}
+
+impl GradientCompressorBuilder {
+    pub fn values(mut self, values: ValueFormat) -> Self {
+        self.values = values;
+        self
+    }
+
+    pub fn indices(mut self, indices: IndexFormat) -> Self {
+        self.indices = indices;
+        self
+    }
+
+    pub fn build(self) -> GradientCompressor {
+        GradientCompressor::new(self.select, self.values, self.indices)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::codec::value_roundtrip;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn compress_decompress_roundtrip_f32() {
+        let w = randvec(5000, 1);
+        let mut gc = GradientCompressor::builder(Select::top_k(64)).build();
+        let mut buf = Vec::new();
+        let stats = gc.compress(&w, &mut Rng::new(0), &mut buf);
+        assert_eq!(stats.nnz, 64);
+        assert_eq!(stats.payload_bytes, buf.len());
+        assert!(stats.compression_ratio() > 0.95);
+        let mut back = SparseVec::default();
+        GradientCompressor::decompress_into(&buf, &mut back).unwrap();
+        assert_eq!(&back, gc.kept());
+    }
+
+    #[test]
+    fn bf16_pipeline_rounds_values() {
+        let w = randvec(2000, 2);
+        let mut gc = GradientCompressor::builder(Select::top_k(50))
+            .values(ValueFormat::Bf16)
+            .indices(IndexFormat::DeltaVarint)
+            .build();
+        let mut buf = Vec::new();
+        gc.compress(&w, &mut Rng::new(0), &mut buf);
+        let mut back = SparseVec::default();
+        GradientCompressor::decompress_into(&buf, &mut back).unwrap();
+        assert_eq!(back.idx, gc.kept().idx);
+        for (&got, &sent) in back.val.iter().zip(&gc.kept().val) {
+            assert_eq!(got.to_bits(), value_roundtrip(sent, ValueFormat::Bf16).to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_residual_feeds_back_quantization_error() {
+        // kept() carries the values as the receiver decodes them, so an
+        // error-feedback residual settled against it conserves mass against
+        // what the leader actually applies: g + m == decoded + m' exactly,
+        // even with lossy bf16 on the wire (acc - bf16(acc) is exact by
+        // Sterbenz, bf16 rounding being within 2^-8 relative).
+        use crate::sparsify::ErrorFeedback;
+        let dim = 256;
+        let mut rng = Rng::new(11);
+        let mut ef = ErrorFeedback::new(dim);
+        let mut gc = GradientCompressor::builder(Select::top_k(32))
+            .values(ValueFormat::Bf16)
+            .build();
+        let mut buf = Vec::new();
+        for round in 0..5 {
+            let g: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let m_before = ef.memory.clone();
+            let acc = ef.compensate(&g).to_vec();
+            gc.compress(&acc, &mut rng, &mut buf);
+            ef.update_residual(gc.kept());
+            let mut back = SparseVec::default();
+            GradientCompressor::decompress_into(&buf, &mut back).unwrap();
+            let applied = back.to_dense();
+            for j in 0..dim {
+                let lhs = g[j] + m_before[j];
+                let rhs = applied[j] + ef.memory[j];
+                assert_eq!(lhs.to_bits(), rhs.to_bits(), "round {round} coord {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_path_matches_two_step_reference() {
+        // compress() must produce byte-identical output to the two-step
+        // sparsify-then-encode path at matched selection.
+        use crate::sparsify::{CompressionOperator, TopK};
+        let w = randvec(10_000, 3);
+        let k = 100;
+        let mut gc = GradientCompressor::builder(Select::top_k(k)).build();
+        let mut fused = Vec::new();
+        gc.compress(&w, &mut Rng::new(0), &mut fused);
+
+        let mut sv = SparseVec::default();
+        TopK::new(k).compress(&w, &mut Rng::new(0), &mut sv);
+        let mut two_step = Vec::new();
+        codec::encode(&sv, CodecConfig::default(), &mut two_step);
+        assert_eq!(fused, two_step);
+    }
+
+    #[test]
+    fn from_spec_builds_working_compressor() {
+        let w = randvec(4096, 4);
+        let mut gc = GradientCompressor::from_spec("rtopk:r=4k,k=32|bf16|delta", 1, 4096).unwrap();
+        assert_eq!(gc.label(), "top128>random32|bf16|delta");
+        let mut buf = Vec::new();
+        let stats = gc.compress(&w, &mut Rng::new(5), &mut buf);
+        assert_eq!(stats.nnz, 32);
+        let mut back = SparseVec::default();
+        GradientCompressor::decompress_into(&buf, &mut back).unwrap();
+        assert_eq!(back.idx, gc.kept().idx);
+    }
+
+    #[test]
+    fn baseline_pipeline_is_lossless_identity() {
+        let w = randvec(300, 6);
+        let mut gc = GradientCompressor::builder(Select::all()).build();
+        let mut buf = Vec::new();
+        let stats = gc.compress(&w, &mut Rng::new(0), &mut buf);
+        assert_eq!(stats.nnz, w.len());
+        let mut back = SparseVec::default();
+        GradientCompressor::decompress_into(&buf, &mut back).unwrap();
+        assert_eq!(back.to_dense(), w);
+    }
+
+    #[test]
+    fn set_select_retargets_k_between_rounds() {
+        let w = randvec(1000, 7);
+        let mut gc = GradientCompressor::builder(Select::top_k(100)).build();
+        let mut buf = Vec::new();
+        let mut rng = Rng::new(0);
+        assert_eq!(gc.compress(&w, &mut rng, &mut buf).nnz, 100);
+        gc.set_select(Select::top_k(10));
+        assert_eq!(gc.compress(&w, &mut rng, &mut buf).nnz, 10);
+    }
+
+    #[test]
+    fn empty_gradient_roundtrips() {
+        let w: Vec<f32> = vec![];
+        let mut gc = GradientCompressor::builder(Select::top_k(8)).build();
+        let mut buf = Vec::new();
+        let stats = gc.compress(&w, &mut Rng::new(0), &mut buf);
+        assert_eq!((stats.dim, stats.nnz), (0, 0));
+        let mut back = SparseVec::default();
+        GradientCompressor::decompress_into(&buf, &mut back).unwrap();
+        assert_eq!(back.dim, 0);
+        assert!(back.is_empty());
+    }
+}

@@ -1,0 +1,395 @@
+//! Composable selection stages — the "which coordinates" half of the
+//! [`super::GradientCompressor`] pipeline.
+//!
+//! The paper's insight is that rTop-k is a *composition* of two primitive
+//! selections: keep the top-r magnitudes, then keep a uniform random
+//! k-subset of the survivors. This module makes that composition the API:
+//!
+//! ```text
+//! Select::top_r(1024).then_random_k(256)   // rTop-k, literally
+//! Select::top_k(256)                       // Top-k   (Def. 1)
+//! Select::random_k(256)                    // Random-k (Def. 2)
+//! Select::threshold(0.01)                  // Aji–Heafield magnitude cut
+//! Select::all()                            // Baseline (identity)
+//! ```
+//!
+//! A chain is applied left to right: the first stage selects from the full
+//! coordinate range `[0, d)`, each later stage filters the previous
+//! survivor set. The survivor list lives in a caller-provided
+//! [`SelectScratch`] and is always sorted ascending on exit, so the codec
+//! can bit-pack it directly — no intermediate `SparseVec`.
+
+use crate::sparsify::select::{partial_select_by_magnitude, threshold_for_rank, MagnitudeHistogram};
+use crate::util::rng::Rng;
+
+/// One primitive selection stage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Stage {
+    /// Keep every candidate (the uncompressed baseline).
+    All,
+    /// Keep the r largest-|w| candidates (quickselect, O(candidates)).
+    TopR(usize),
+    /// Keep a uniform random k-subset of the candidates (Floyd sampling).
+    RandomK(usize),
+    /// Keep candidates with |w_i| >= t.
+    ThresholdAbs(f32),
+    /// Histogram-calibrated threshold targeting ~r survivors (the same
+    /// log-binned CDF walk as the Pallas/XLA pipeline).
+    ThresholdRank(usize),
+}
+
+/// Reusable buffers for [`Select::apply`]. In steady state (same dim every
+/// round) applying a chain allocates nothing beyond the RNG's sampling
+/// set.
+#[derive(Debug, Clone, Default)]
+pub struct SelectScratch {
+    /// The surviving coordinate indices, sorted ascending after `apply`.
+    pub survivors: Vec<u32>,
+    aux: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+/// A left-to-right chain of selection stages.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Select {
+    stages: Vec<Stage>,
+}
+
+impl Select {
+    /// Build from an explicit stage list (an empty list is the identity).
+    pub fn from_stages(stages: Vec<Stage>) -> Select {
+        Select { stages }
+    }
+
+    /// The identity selection (paper's "Baseline" rows).
+    pub fn all() -> Select {
+        Select { stages: vec![Stage::All] }
+    }
+
+    /// Keep the r largest magnitudes (paper Def. 1's top_r).
+    pub fn top_r(r: usize) -> Select {
+        Select { stages: vec![Stage::TopR(r)] }
+    }
+
+    /// Alias of [`Select::top_r`] under the budget-oriented name.
+    pub fn top_k(k: usize) -> Select {
+        Select::top_r(k)
+    }
+
+    /// Keep a uniform random k-subset of all d coordinates (Def. 2).
+    pub fn random_k(k: usize) -> Select {
+        Select { stages: vec![Stage::RandomK(k)] }
+    }
+
+    /// Keep coordinates with |w_i| >= t.
+    pub fn threshold(t: f32) -> Select {
+        Select { stages: vec![Stage::ThresholdAbs(t)] }
+    }
+
+    /// Histogram-calibrated threshold targeting ~r survivors.
+    pub fn threshold_rank(r: usize) -> Select {
+        Select { stages: vec![Stage::ThresholdRank(r)] }
+    }
+
+    /// The paper's operator (Def. 3) as an explicit composition.
+    pub fn rtop_k(k: usize, r: usize) -> Select {
+        Select::top_r(r).then_random_k(k)
+    }
+
+    /// Append an arbitrary stage.
+    pub fn then(mut self, stage: Stage) -> Select {
+        self.stages.push(stage);
+        self
+    }
+
+    pub fn then_top_r(self, r: usize) -> Select {
+        self.then(Stage::TopR(r))
+    }
+
+    pub fn then_random_k(self, k: usize) -> Select {
+        self.then(Stage::RandomK(k))
+    }
+
+    pub fn then_threshold(self, t: f32) -> Select {
+        self.then(Stage::ThresholdAbs(t))
+    }
+
+    pub fn then_threshold_rank(self, r: usize) -> Select {
+        self.then(Stage::ThresholdRank(r))
+    }
+
+    pub fn stages(&self) -> &[Stage] {
+        &self.stages
+    }
+
+    /// True when the chain keeps everything (no stage ever drops).
+    pub fn is_identity(&self) -> bool {
+        self.stages.iter().all(|s| matches!(s, Stage::All))
+    }
+
+    /// Nominal survivor count at dimension d: the tightest per-stage cap.
+    /// Threshold-abs stages give no a-priori bound and leave the cap as is.
+    pub fn nominal_k(&self, dim: usize) -> usize {
+        let mut cap = dim;
+        for s in &self.stages {
+            cap = match *s {
+                Stage::All | Stage::ThresholdAbs(_) => cap,
+                Stage::TopR(r) => cap.min(r),
+                Stage::RandomK(k) => cap.min(k),
+                Stage::ThresholdRank(r) => cap.min(r),
+            };
+        }
+        cap
+    }
+
+    /// Worst-case contraction constant of Definition 4 (gamma = k/d for
+    /// every k-bounded chain; rTop-k's Proposition 1 value).
+    pub fn gamma(&self, dim: usize) -> f64 {
+        (self.nominal_k(dim) as f64 / dim.max(1) as f64).min(1.0)
+    }
+
+    /// Compact human-readable name, e.g. `top1024>random256`.
+    pub fn label(&self) -> String {
+        let parts: Vec<String> = self
+            .stages
+            .iter()
+            .map(|s| match *s {
+                Stage::All => "all".to_string(),
+                Stage::TopR(r) => format!("top{r}"),
+                Stage::RandomK(k) => format!("random{k}"),
+                Stage::ThresholdAbs(t) => format!("thresh{t}"),
+                Stage::ThresholdRank(r) => format!("threshrank{r}"),
+            })
+            .collect();
+        parts.join(">")
+    }
+
+    /// Run the chain over `w`. On return `scratch.survivors` holds the
+    /// selected coordinate indices, sorted ascending, each < `w.len()`.
+    pub fn apply(&self, w: &[f32], rng: &mut Rng, scratch: &mut SelectScratch) {
+        scratch.survivors.clear();
+        let mut first = true;
+        for &stage in &self.stages {
+            if first {
+                apply_first(stage, w, rng, scratch);
+                first = false;
+            } else {
+                apply_rest(stage, w, rng, scratch);
+            }
+        }
+        if first {
+            // Empty chain: identity.
+            scratch.survivors.extend(0..w.len() as u32);
+        }
+    }
+}
+
+/// First stage: candidates are the full range [0, d).
+fn apply_first(stage: Stage, w: &[f32], rng: &mut Rng, s: &mut SelectScratch) {
+    let d = w.len();
+    match stage {
+        Stage::All => s.survivors.extend(0..d as u32),
+        Stage::TopR(r) => {
+            let r = r.min(d);
+            s.aux.clear();
+            s.aux.extend(0..d as u32);
+            partial_select_by_magnitude(w, &mut s.aux, r);
+            s.survivors.extend_from_slice(&s.aux[..r]);
+            s.survivors.sort_unstable();
+        }
+        Stage::RandomK(k) => {
+            let k = k.min(d);
+            let mut chosen = rng.sample_indices(d, k);
+            chosen.sort_unstable();
+            s.survivors.extend(chosen.iter().map(|&i| i as u32));
+        }
+        Stage::ThresholdAbs(t) => {
+            s.survivors
+                .extend((0..d as u32).filter(|&i| w[i as usize].abs() >= t));
+        }
+        Stage::ThresholdRank(r) => {
+            let hist = MagnitudeHistogram::build(w, MagnitudeHistogram::DEFAULT_NBINS);
+            let t = threshold_for_rank(&hist, r.min(d));
+            s.survivors
+                .extend((0..d as u32).filter(|&i| w[i as usize].abs() >= t));
+        }
+    }
+}
+
+/// Later stages: candidates are the current survivors; filter in place,
+/// preserving ascending index order.
+fn apply_rest(stage: Stage, w: &[f32], rng: &mut Rng, s: &mut SelectScratch) {
+    let n = s.survivors.len();
+    match stage {
+        Stage::All => {}
+        Stage::TopR(r) => {
+            let r = r.min(n);
+            if r < n {
+                partial_select_by_magnitude(w, &mut s.survivors, r);
+                s.survivors.truncate(r);
+                s.survivors.sort_unstable();
+            }
+        }
+        Stage::RandomK(k) => {
+            let k = k.min(n);
+            if k < n {
+                // Sample k survivor *positions*; positions sorted ascending
+                // keep the index order, so the in-place gather is safe.
+                let mut pos = rng.sample_indices(n, k);
+                pos.sort_unstable();
+                for (j, &p) in pos.iter().enumerate() {
+                    s.survivors[j] = s.survivors[p];
+                }
+                s.survivors.truncate(k);
+            }
+        }
+        Stage::ThresholdAbs(t) => s.survivors.retain(|&i| w[i as usize].abs() >= t),
+        Stage::ThresholdRank(r) => {
+            let r = r.min(n);
+            s.vals.clear();
+            s.vals.extend(s.survivors.iter().map(|&i| w[i as usize]));
+            let hist = MagnitudeHistogram::build(&s.vals, MagnitudeHistogram::DEFAULT_NBINS);
+            let t = threshold_for_rank(&hist, r);
+            s.survivors.retain(|&i| w[i as usize].abs() >= t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::select::select_top_r;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    fn apply(sel: &Select, w: &[f32], rng: &mut Rng) -> Vec<u32> {
+        let mut s = SelectScratch::default();
+        sel.apply(w, rng, &mut s);
+        s.survivors
+    }
+
+    #[test]
+    fn all_keeps_everything_in_order() {
+        let w = randvec(37, 0);
+        let got = apply(&Select::all(), &w, &mut Rng::new(0));
+        assert_eq!(got, (0..37).collect::<Vec<u32>>());
+        assert!(Select::all().is_identity());
+    }
+
+    #[test]
+    fn top_r_matches_select_top_r() {
+        let w = randvec(500, 1);
+        let mut scratch = Vec::new();
+        for r in [0usize, 1, 7, 250, 500] {
+            let got = apply(&Select::top_r(r), &w, &mut Rng::new(0));
+            let want = select_top_r(&w, r, &mut scratch);
+            assert_eq!(got, want, "r={r}");
+        }
+    }
+
+    #[test]
+    fn composition_is_subset_chain() {
+        // top_r ∘ random_k: survivors of the chain are a k-subset of top-r.
+        let w = randvec(300, 2);
+        let (k, r) = (10usize, 60usize);
+        let mut scratch = Vec::new();
+        let top: std::collections::HashSet<u32> =
+            select_top_r(&w, r, &mut scratch).into_iter().collect();
+        let mut rng = Rng::new(3);
+        for _ in 0..25 {
+            let got = apply(&Select::top_r(r).then_random_k(k), &w, &mut rng);
+            assert_eq!(got.len(), k);
+            assert!(got.windows(2).all(|p| p[0] < p[1]), "sorted unique");
+            assert!(got.iter().all(|i| top.contains(i)));
+        }
+    }
+
+    #[test]
+    fn rtop_k_constructor_equals_explicit_chain() {
+        let a = Select::rtop_k(8, 32);
+        let b = Select::top_r(32).then_random_k(8);
+        assert_eq!(a, b);
+        assert_eq!(a.stages().len(), 2);
+    }
+
+    #[test]
+    fn threshold_stage_filters_by_magnitude() {
+        let w = vec![0.5f32, -1.5, 2.0, -0.1];
+        let got = apply(&Select::threshold(1.0), &w, &mut Rng::new(0));
+        assert_eq!(got, vec![1, 2]);
+        // composed after top-r it filters the survivor subset
+        let got = apply(&Select::top_r(3).then_threshold(1.9), &w, &mut Rng::new(0));
+        assert_eq!(got, vec![2]);
+    }
+
+    #[test]
+    fn threshold_rank_close_to_target() {
+        let w = randvec(20_000, 4);
+        let got = apply(&Select::threshold_rank(300), &w, &mut Rng::new(0));
+        assert!(got.len() >= 300 && got.len() < 600, "got {}", got.len());
+    }
+
+    #[test]
+    fn nominal_k_and_gamma_fold_the_chain() {
+        let sel = Select::top_r(100).then_random_k(25);
+        assert_eq!(sel.nominal_k(1000), 25);
+        assert!((sel.gamma(1000) - 0.025).abs() < 1e-12);
+        assert_eq!(Select::all().nominal_k(64), 64);
+        assert_eq!(Select::threshold(0.1).nominal_k(64), 64); // no a-priori bound
+        assert_eq!(sel.nominal_k(10), 10); // caps clamp at dim
+    }
+
+    #[test]
+    fn three_stage_chain_applies_left_to_right() {
+        // top-64, then random-16 of those, then drop tiny magnitudes.
+        let w = randvec(256, 5);
+        let mut rng = Rng::new(6);
+        let got = apply(
+            &Select::top_r(64).then_random_k(16).then_threshold(0.0),
+            &w,
+            &mut rng,
+        );
+        assert_eq!(got.len(), 16);
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(Select::top_r(9).then_random_k(3).label(), "top9>random3");
+        assert_eq!(Select::all().label(), "all");
+    }
+
+    #[test]
+    fn scratch_is_reused_across_calls() {
+        let w = randvec(1000, 7);
+        let sel = Select::rtop_k(20, 100);
+        let mut s = SelectScratch::default();
+        let mut rng = Rng::new(8);
+        sel.apply(&w, &mut rng, &mut s);
+        let cap_survivors = s.survivors.capacity();
+        let cap_aux = s.aux.capacity();
+        for _ in 0..10 {
+            sel.apply(&w, &mut rng, &mut s);
+            assert_eq!(s.survivors.len(), 20);
+        }
+        assert_eq!(s.survivors.capacity(), cap_survivors);
+        assert_eq!(s.aux.capacity(), cap_aux);
+    }
+
+    #[test]
+    fn empty_vector_yields_empty_selection() {
+        let w: Vec<f32> = vec![];
+        for sel in [
+            Select::all(),
+            Select::top_k(4),
+            Select::random_k(4),
+            Select::rtop_k(2, 4),
+            Select::threshold(0.5),
+        ] {
+            let got = apply(&sel, &w, &mut Rng::new(0));
+            assert!(got.is_empty(), "{}", sel.label());
+        }
+    }
+}

@@ -1,0 +1,488 @@
+//! Parseable pipeline specifications — one string names the whole
+//! compressor: selection chain, value stage, and index stage.
+//!
+//! Grammar (see DESIGN.md §Pipeline-spec grammar for the full treatment):
+//!
+//! ```text
+//! pipeline := select [ "|" wire ]*          wire ∈ {f32, bf16, fixed, delta}
+//! select   := stage ( ">" stage )*
+//! stage    := name [ ":" key "=" value ( "," key "=" value )* ]
+//! name     := baseline | topk | randomk | rtopk | threshold | top | random
+//! value    := 256        absolute count
+//!           | 4k         multiple of the pipeline's k
+//!           | 0.001d     fraction of the gradient dimension
+//!           | auto       the paper's r = k / subsample_ratio coupling
+//! ```
+//!
+//! Examples:
+//!
+//! ```text
+//! "rtopk"                       rTop-k at the scheduled k, r = k/ratio, f32+fixed wire
+//! "rtopk:r=4k,k=256|bf16|delta" pinned k=256, r=1024, bf16 values, delta-varint indices
+//! "top:r=1024>random:k=256"     the same selection written as an explicit chain
+//! "topk|bf16"                   top-k at the scheduled k, bf16 values
+//! "threshold:t=0.01"            fixed magnitude threshold
+//! ```
+//!
+//! Sizes left unspecified resolve against the *scheduled* k (the DGC
+//! warm-up schedule changes k every round), so one spec string drives an
+//! entire training run.
+
+use super::select::{Select, Stage};
+use super::GradientCompressor;
+use crate::comms::codec::{IndexFormat, ValueFormat};
+use crate::sparsify::SparsifierKind;
+
+/// A stage size that may be relative to the scheduled k or the dimension.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Quant {
+    /// Absolute coordinate count (`256`).
+    Count(usize),
+    /// Multiple of the pipeline's k (`4k`).
+    TimesK(f64),
+    /// Fraction of the gradient dimension (`0.001d`).
+    FracD(f64),
+    /// The scheduled k itself (param omitted).
+    Sched,
+    /// The paper's coupling r = k / subsample_ratio, clamped to [k, d]
+    /// (`auto`; what a bare `rtopk` uses for its top-r stage).
+    Auto,
+}
+
+impl Quant {
+    fn token(&self) -> String {
+        match self {
+            Quant::Count(c) => c.to_string(),
+            Quant::TimesK(m) => format!("{m}k"),
+            Quant::FracD(f) => format!("{f}d"),
+            Quant::Sched => "sched".to_string(),
+            Quant::Auto => "auto".to_string(),
+        }
+    }
+}
+
+/// One stage of the selection chain, sizes unresolved.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StageSpec {
+    All,
+    TopR(Quant),
+    RandomK(Quant),
+    ThresholdAbs(f32),
+    ThresholdRank(Quant),
+}
+
+/// A fully parsed pipeline specification: selection × value × index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSpec {
+    pub select: Vec<StageSpec>,
+    pub values: ValueFormat,
+    pub indices: IndexFormat,
+}
+
+/// Fallback subsample ratio for [`GradientCompressor::from_spec`] when a
+/// spec uses the `auto` coupling outside a training config: the paper's
+/// k/r = 1/n at its default n = 5 nodes.
+pub const DEFAULT_SUBSAMPLE_RATIO: f64 = 0.2;
+
+impl PipelineSpec {
+    /// Parse a pipeline spec string. Wire-format tokens may appear in any
+    /// order after the selection part.
+    pub fn parse(s: &str) -> anyhow::Result<PipelineSpec> {
+        let mut parts = s.split('|').map(str::trim);
+        let sel_part = parts.next().unwrap_or("");
+        let mut spec = PipelineSpec {
+            select: parse_select(sel_part)?,
+            values: ValueFormat::F32,
+            indices: IndexFormat::FixedWidth,
+        };
+        for token in parts {
+            match token.to_ascii_lowercase().as_str() {
+                "f32" => spec.values = ValueFormat::F32,
+                "bf16" => spec.values = ValueFormat::Bf16,
+                "fixed" => spec.indices = IndexFormat::FixedWidth,
+                "delta" | "varint" => spec.indices = IndexFormat::DeltaVarint,
+                other => anyhow::bail!(
+                    "unknown wire-format token {other:?} (expected f32|bf16|fixed|delta)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The canonical spec for a legacy [`SparsifierKind`] method name.
+    pub fn from_kind(kind: SparsifierKind) -> PipelineSpec {
+        let select = match kind {
+            SparsifierKind::Baseline => vec![StageSpec::All],
+            SparsifierKind::TopK => vec![StageSpec::TopR(Quant::Sched)],
+            SparsifierKind::RandomK => vec![StageSpec::RandomK(Quant::Sched)],
+            SparsifierKind::RTopK => {
+                vec![StageSpec::TopR(Quant::Auto), StageSpec::RandomK(Quant::Sched)]
+            }
+            SparsifierKind::Threshold => vec![StageSpec::ThresholdRank(Quant::Sched)],
+        };
+        PipelineSpec { select, values: ValueFormat::F32, indices: IndexFormat::FixedWidth }
+    }
+
+    /// True when the selection keeps everything (the Baseline rows).
+    pub fn is_baseline(&self) -> bool {
+        self.select.iter().all(|s| matches!(s, StageSpec::All))
+    }
+
+    /// Resolve the chain for a concrete scheduled k, subsample ratio and
+    /// dimension. `k` should already be clamped to [1, dim].
+    pub fn select_for(&self, k: usize, subsample_ratio: f64, dim: usize) -> Select {
+        // Base k that `4k`-style multiples and `auto` reference: an
+        // explicit k pinned on a random-k stage wins over the schedule.
+        let k_base = self
+            .select
+            .iter()
+            .rev()
+            .find_map(|s| match s {
+                StageSpec::RandomK(Quant::Count(c)) => Some(*c),
+                _ => None,
+            })
+            .unwrap_or(k);
+        let resolve = |q: &Quant| -> usize {
+            match q {
+                Quant::Count(c) => *c,
+                Quant::TimesK(m) => ((m * k_base as f64).round() as usize).max(1),
+                Quant::FracD(f) => ((f * dim as f64).round() as usize).clamp(1, dim.max(1)),
+                Quant::Sched => k,
+                Quant::Auto => ((k_base as f64 / subsample_ratio.max(1e-12)).round() as usize)
+                    .clamp(k_base, dim.max(k_base)),
+            }
+        };
+        let stages: Vec<Stage> = self
+            .select
+            .iter()
+            .map(|s| match s {
+                StageSpec::All => Stage::All,
+                StageSpec::TopR(q) => Stage::TopR(resolve(q)),
+                StageSpec::RandomK(q) => Stage::RandomK(resolve(q)),
+                StageSpec::ThresholdAbs(t) => Stage::ThresholdAbs(*t),
+                StageSpec::ThresholdRank(q) => Stage::ThresholdRank(resolve(q)),
+            })
+            .collect();
+        Select::from_stages(stages)
+    }
+
+    /// Build a ready-to-use compressor for a concrete k and dimension.
+    pub fn build(&self, k: usize, subsample_ratio: f64, dim: usize) -> GradientCompressor {
+        GradientCompressor::new(
+            self.select_for(k, subsample_ratio, dim),
+            self.values,
+            self.indices,
+        )
+    }
+
+    /// The method family label the experiment tables print ("rTop-k",
+    /// "Top-k", ...); falls back to the explicit chain for custom specs.
+    pub fn method_label(&self) -> String {
+        match self.select.as_slice() {
+            [StageSpec::All] => "Baseline".to_string(),
+            [StageSpec::TopR(_)] => "Top-k".to_string(),
+            [StageSpec::RandomK(_)] => "Random-k".to_string(),
+            [StageSpec::TopR(_), StageSpec::RandomK(_)] => "rTop-k".to_string(),
+            [StageSpec::ThresholdAbs(_)] | [StageSpec::ThresholdRank(_)] => {
+                "Threshold".to_string()
+            }
+            _ => self.select_canonical(),
+        }
+    }
+
+    fn select_canonical(&self) -> String {
+        // Bare method names where the default quants apply.
+        match self.select.as_slice() {
+            [StageSpec::All] => return "baseline".to_string(),
+            [StageSpec::TopR(Quant::Sched)] => return "topk".to_string(),
+            [StageSpec::RandomK(Quant::Sched)] => return "randomk".to_string(),
+            [StageSpec::TopR(Quant::Auto), StageSpec::RandomK(Quant::Sched)] => {
+                return "rtopk".to_string()
+            }
+            [StageSpec::ThresholdRank(Quant::Sched)] => return "threshold".to_string(),
+            _ => {}
+        }
+        let parts: Vec<String> = self
+            .select
+            .iter()
+            .map(|s| match s {
+                StageSpec::All => "baseline".to_string(),
+                StageSpec::TopR(Quant::Sched) => "top".to_string(),
+                StageSpec::TopR(q) => format!("top:r={}", q.token()),
+                StageSpec::RandomK(Quant::Sched) => "random".to_string(),
+                StageSpec::RandomK(q) => format!("random:k={}", q.token()),
+                StageSpec::ThresholdAbs(t) => format!("threshold:t={t}"),
+                StageSpec::ThresholdRank(q) => format!("threshold:rank={}", q.token()),
+            })
+            .collect();
+        parts.join(">")
+    }
+
+    /// Canonical round-trippable spec string:
+    /// `parse(canonical(spec)) == spec`.
+    pub fn canonical(&self) -> String {
+        let values = match self.values {
+            ValueFormat::F32 => "f32",
+            ValueFormat::Bf16 => "bf16",
+        };
+        let indices = match self.indices {
+            IndexFormat::FixedWidth => "fixed",
+            IndexFormat::DeltaVarint => "delta",
+        };
+        format!("{}|{values}|{indices}", self.select_canonical())
+    }
+}
+
+fn parse_quant(v: &str) -> anyhow::Result<Quant> {
+    let v = v.trim();
+    if v.eq_ignore_ascii_case("auto") {
+        return Ok(Quant::Auto);
+    }
+    if v.eq_ignore_ascii_case("sched") {
+        return Ok(Quant::Sched);
+    }
+    if let Some(num) = v.strip_suffix(['k', 'K']) {
+        let m: f64 = num
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad k-multiple {v:?} (expected e.g. 4k)"))?;
+        anyhow::ensure!(m > 0.0, "k-multiple must be positive: {v:?}");
+        return Ok(Quant::TimesK(m));
+    }
+    if let Some(num) = v.strip_suffix(['d', 'D']) {
+        let f: f64 = num
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad dim-fraction {v:?} (expected e.g. 0.001d)"))?;
+        anyhow::ensure!(f > 0.0 && f <= 1.0, "dim-fraction must be in (0, 1]: {v:?}");
+        return Ok(Quant::FracD(f));
+    }
+    let c: usize = v
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad size {v:?} (expected 256, 4k, 0.001d, or auto)"))?;
+    anyhow::ensure!(c >= 1, "size must be >= 1: {v:?}");
+    Ok(Quant::Count(c))
+}
+
+fn parse_params(s: &str) -> anyhow::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for kv in s.split(',') {
+        let (key, value) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("bad stage parameter {kv:?} (expected key=value)"))?;
+        out.push((key.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    Ok(out)
+}
+
+fn one_size_param(
+    name: &str,
+    params: &[(String, String)],
+    keys: &[&str],
+) -> anyhow::Result<Option<Quant>> {
+    let mut found = None;
+    for (k, v) in params {
+        if keys.contains(&k.as_str()) {
+            anyhow::ensure!(found.is_none(), "duplicate size parameter on {name:?}");
+            found = Some(parse_quant(v)?);
+        } else {
+            anyhow::bail!("unknown parameter {k:?} on stage {name:?}");
+        }
+    }
+    Ok(found)
+}
+
+fn parse_select(s: &str) -> anyhow::Result<Vec<StageSpec>> {
+    let s = s.trim();
+    anyhow::ensure!(!s.is_empty(), "empty pipeline spec");
+    let mut stages = Vec::new();
+    for stage_str in s.split('>') {
+        let stage_str = stage_str.trim();
+        let (name, params_str) = match stage_str.split_once(':') {
+            Some((n, p)) => (n.trim().to_ascii_lowercase(), Some(p)),
+            None => (stage_str.to_ascii_lowercase(), None),
+        };
+        let params = match params_str {
+            Some(p) => parse_params(p)?,
+            None => Vec::new(),
+        };
+        match name.as_str() {
+            "baseline" | "none" | "identity" | "all" => {
+                anyhow::ensure!(params.is_empty(), "baseline takes no parameters");
+                stages.push(StageSpec::All);
+            }
+            "topk" | "top-k" | "top_k" | "top" => {
+                let q = one_size_param(&name, &params, &["k", "r"])?.unwrap_or(Quant::Sched);
+                stages.push(StageSpec::TopR(q));
+            }
+            "randomk" | "random-k" | "random_k" | "random" => {
+                let q = one_size_param(&name, &params, &["k"])?.unwrap_or(Quant::Sched);
+                stages.push(StageSpec::RandomK(q));
+            }
+            "rtopk" | "rtop-k" | "rtop_k" => {
+                // Composite: expands to top-r then random-k.
+                let mut k = Quant::Sched;
+                let mut r = Quant::Auto;
+                for (key, value) in &params {
+                    match key.as_str() {
+                        "k" => k = parse_quant(value)?,
+                        "r" => r = parse_quant(value)?,
+                        other => anyhow::bail!("unknown parameter {other:?} on stage \"rtopk\""),
+                    }
+                }
+                stages.push(StageSpec::TopR(r));
+                stages.push(StageSpec::RandomK(k));
+            }
+            "threshold" | "thresh" => {
+                let mut spec = None;
+                for (key, value) in &params {
+                    anyhow::ensure!(spec.is_none(), "threshold takes a single parameter");
+                    match key.as_str() {
+                        "t" => {
+                            let t: f32 = value.parse().map_err(|_| {
+                                anyhow::anyhow!("bad threshold value {value:?}")
+                            })?;
+                            spec = Some(StageSpec::ThresholdAbs(t));
+                        }
+                        "rank" | "r" | "k" => spec = Some(StageSpec::ThresholdRank(parse_quant(value)?)),
+                        other => anyhow::bail!("unknown parameter {other:?} on stage \"threshold\""),
+                    }
+                }
+                stages.push(spec.unwrap_or(StageSpec::ThresholdRank(Quant::Sched)));
+            }
+            other => anyhow::bail!(
+                "unknown selection stage {other:?} (expected baseline|topk|randomk|rtopk|threshold)"
+            ),
+        }
+    }
+    Ok(stages)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_method_names_parse() {
+        for (s, kind) in [
+            ("baseline", SparsifierKind::Baseline),
+            ("topk", SparsifierKind::TopK),
+            ("randomk", SparsifierKind::RandomK),
+            ("rtopk", SparsifierKind::RTopK),
+            ("threshold", SparsifierKind::Threshold),
+        ] {
+            assert_eq!(PipelineSpec::parse(s).unwrap(), PipelineSpec::from_kind(kind), "{s}");
+        }
+    }
+
+    #[test]
+    fn issue_example_spec_parses() {
+        let p = PipelineSpec::parse("rtopk:r=4k,k=256|bf16|delta").unwrap();
+        assert_eq!(
+            p.select,
+            vec![
+                StageSpec::TopR(Quant::TimesK(4.0)),
+                StageSpec::RandomK(Quant::Count(256)),
+            ]
+        );
+        assert_eq!(p.values, ValueFormat::Bf16);
+        assert_eq!(p.indices, IndexFormat::DeltaVarint);
+        // r = 4 * pinned k = 1024 regardless of the scheduled k
+        let sel = p.select_for(999, 0.2, 1 << 20);
+        assert_eq!(
+            sel.stages(),
+            &[super::Stage::TopR(1024), super::Stage::RandomK(256)]
+        );
+    }
+
+    #[test]
+    fn explicit_chain_equals_composite() {
+        let a = PipelineSpec::parse("top:r=1024>random:k=256").unwrap();
+        let b = PipelineSpec::parse("rtopk:r=1024,k=256").unwrap();
+        assert_eq!(
+            a.select_for(10, 0.2, 100_000),
+            b.select_for(10, 0.2, 100_000)
+        );
+    }
+
+    #[test]
+    fn scheduled_sizes_follow_k() {
+        let p = PipelineSpec::parse("rtopk").unwrap();
+        let sel = p.select_for(100, 0.2, 1_000_000);
+        // r = k / ratio = 500, the paper's coupling
+        assert_eq!(sel.stages(), &[super::Stage::TopR(500), super::Stage::RandomK(100)]);
+        let sel = p.select_for(7, 0.5, 1_000_000);
+        assert_eq!(sel.stages(), &[super::Stage::TopR(14), super::Stage::RandomK(7)]);
+    }
+
+    #[test]
+    fn auto_r_clamps_to_dim() {
+        let p = PipelineSpec::parse("rtopk").unwrap();
+        let sel = p.select_for(900, 0.2, 1000);
+        assert_eq!(sel.stages(), &[super::Stage::TopR(1000), super::Stage::RandomK(900)]);
+    }
+
+    #[test]
+    fn dim_fraction_sizes() {
+        let p = PipelineSpec::parse("topk:k=0.001d|bf16").unwrap();
+        let sel = p.select_for(1, 0.2, 1_000_000);
+        assert_eq!(sel.stages(), &[super::Stage::TopR(1000)]);
+        assert_eq!(p.values, ValueFormat::Bf16);
+    }
+
+    #[test]
+    fn wire_tokens_any_order() {
+        let a = PipelineSpec::parse("topk|bf16|delta").unwrap();
+        let b = PipelineSpec::parse("topk|delta|bf16").unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn canonical_roundtrips() {
+        for s in [
+            "baseline",
+            "topk",
+            "randomk",
+            "rtopk",
+            "threshold",
+            "rtopk:r=4k,k=256|bf16|delta",
+            "topk:k=512|bf16",
+            "threshold:t=0.5|delta",
+            "top:r=100>random:k=10>threshold:t=0.001",
+        ] {
+            let p = PipelineSpec::parse(s).unwrap();
+            let again = PipelineSpec::parse(&p.canonical()).unwrap();
+            assert_eq!(p, again, "spec {s:?} canonical {:?}", p.canonical());
+        }
+    }
+
+    #[test]
+    fn method_labels_match_table_names() {
+        assert_eq!(PipelineSpec::parse("baseline").unwrap().method_label(), "Baseline");
+        assert_eq!(PipelineSpec::parse("rtopk").unwrap().method_label(), "rTop-k");
+        assert_eq!(PipelineSpec::parse("topk").unwrap().method_label(), "Top-k");
+        assert_eq!(PipelineSpec::parse("randomk").unwrap().method_label(), "Random-k");
+        assert_eq!(PipelineSpec::parse("threshold").unwrap().method_label(), "Threshold");
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for s in [
+            "",
+            "bogus",
+            "topk:q=3",
+            "rtopk:r=",
+            "topk|mp3",
+            "topk:k=0",
+            "topk:k=-5",
+            "randomk:k=2d",
+            "threshold:t=abc",
+        ] {
+            assert!(PipelineSpec::parse(s).is_err(), "{s:?} should fail");
+        }
+    }
+
+    #[test]
+    fn baseline_detection() {
+        assert!(PipelineSpec::parse("baseline").unwrap().is_baseline());
+        assert!(!PipelineSpec::parse("topk").unwrap().is_baseline());
+    }
+}

@@ -1,10 +1,13 @@
 //! Experiment configuration for distributed training runs (Algorithm 1).
+//!
+//! Method and wire format are specified once, as a compression
+//! [`PipelineSpec`] (e.g. `"rtopk:r=4k,k=256|bf16|delta"`); the leader,
+//! workers, experiment tables and benches all build their
+//! [`GradientCompressor`]s from it.
 
-use crate::comms::CodecConfig;
+use crate::compress::{GradientCompressor, PipelineSpec, Select};
 use crate::optim::{LrSchedule, WarmupSparsity};
-use crate::sparsify::{
-    CompressionOperator, NoCompression, RTopK, RandomK, SparsifierKind, Threshold, TopK,
-};
+use crate::sparsify::SparsifierKind;
 
 /// What one communication round means (paper §IV-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,11 +32,14 @@ pub struct TrainConfig {
     pub nodes: usize,
     pub rounds: u64,
     pub mode: RoundMode,
-    pub method: SparsifierKind,
+    /// The full compression pipeline: selection × value stage × index
+    /// stage. Sizes left scheduled in the spec resolve per round against
+    /// the warm-up schedule's k.
+    pub pipeline: PipelineSpec,
     /// Target kept fraction k/d (compression ratio = 1 - keep_frac).
     pub keep_frac: f64,
-    /// k/r for rTop-k. The paper fixes it to 1/n ("each top parameter is
-    /// updated by one node in expectation").
+    /// k/r for rTop-k's `auto` coupling. The paper fixes it to 1/n ("each
+    /// top parameter is updated by one node in expectation").
     pub subsample_ratio: f64,
     /// DGC warm-up epochs (paper uses 5). Fractional values supported so
     /// short CPU-scale runs can warm up over a fraction of an epoch.
@@ -42,18 +48,16 @@ pub struct TrainConfig {
     pub lr: LrSchedule,
     pub optim: OptimKind,
     pub eval_every: u64,
-    pub codec: CodecConfig,
     pub seed: u64,
 }
 
 impl TrainConfig {
-    /// The paper's image-domain defaults at a given compression ratio.
-    pub fn image_default(nodes: usize, method: SparsifierKind, compression: f64) -> Self {
+    fn image_base(nodes: usize, pipeline: PipelineSpec, compression: f64) -> Self {
         TrainConfig {
             nodes,
             rounds: 200,
             mode: RoundMode::Distributed,
-            method,
+            pipeline,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
             warmup_epochs: 5.0,
@@ -61,18 +65,16 @@ impl TrainConfig {
             lr: LrSchedule::steps(0.05, &[60, 120], 0.2),
             optim: OptimKind::Momentum(0.9),
             eval_every: 10,
-            codec: CodecConfig::default(),
             seed: 0xD15C0,
         }
     }
 
-    /// The paper's language-domain defaults.
-    pub fn lm_default(nodes: usize, method: SparsifierKind, compression: f64) -> Self {
+    fn lm_base(nodes: usize, pipeline: PipelineSpec, compression: f64) -> Self {
         TrainConfig {
             nodes,
             rounds: 300,
             mode: RoundMode::Distributed,
-            method,
+            pipeline,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
             warmup_epochs: 5.0,
@@ -80,41 +82,75 @@ impl TrainConfig {
             lr: LrSchedule::steps(1.0, &[15, 25], 0.5),
             optim: OptimKind::Sgd { clip: Some(0.25) },
             eval_every: 20,
-            codec: CodecConfig::default(),
             seed: 0x17B,
         }
     }
 
+    /// The paper's image-domain defaults at a given compression ratio.
+    pub fn image_default(nodes: usize, method: SparsifierKind, compression: f64) -> Self {
+        Self::image_base(nodes, PipelineSpec::from_kind(method), compression)
+    }
+
+    /// Image-domain defaults with the method given as a pipeline spec
+    /// string (e.g. `"rtopk|bf16|delta"`).
+    pub fn image_spec(nodes: usize, spec: &str, compression: f64) -> anyhow::Result<Self> {
+        Ok(Self::image_base(nodes, PipelineSpec::parse(spec)?, compression))
+    }
+
+    /// The paper's language-domain defaults.
+    pub fn lm_default(nodes: usize, method: SparsifierKind, compression: f64) -> Self {
+        Self::lm_base(nodes, PipelineSpec::from_kind(method), compression)
+    }
+
+    /// Language-domain defaults with the method given as a pipeline spec.
+    pub fn lm_spec(nodes: usize, spec: &str, compression: f64) -> anyhow::Result<Self> {
+        Ok(Self::lm_base(nodes, PipelineSpec::parse(spec)?, compression))
+    }
+
+    /// Replace the pipeline from a spec string (the `--pipeline` flag).
+    pub fn set_pipeline(&mut self, spec: &str) -> anyhow::Result<()> {
+        self.pipeline = PipelineSpec::parse(spec)?;
+        Ok(())
+    }
+
+    /// True when the pipeline keeps everything (the "Baseline" rows).
+    pub fn is_baseline(&self) -> bool {
+        self.pipeline.is_baseline()
+    }
+
     pub fn warmup(&self) -> WarmupSparsity {
-        match self.method {
+        if self.is_baseline() {
             // Baseline never sparsifies; warm-up is a no-op.
-            SparsifierKind::Baseline => WarmupSparsity::none(1.0),
-            _ => WarmupSparsity::new(self.keep_frac.max(1e-9), self.warmup_epochs),
+            WarmupSparsity::none(1.0)
+        } else {
+            WarmupSparsity::new(self.keep_frac.max(1e-9), self.warmup_epochs)
         }
     }
 
-    /// Build the sparsifier for a given k at dimension d (k follows the
-    /// warm-up schedule, so operators are reconstructed per round; all of
-    /// them are cheap to construct).
-    pub fn operator_for(&self, k: usize, dim: usize) -> Box<dyn CompressionOperator> {
-        let k = k.clamp(1, dim);
-        match self.method {
-            SparsifierKind::Baseline => Box::new(NoCompression),
-            SparsifierKind::TopK => Box::new(TopK::new(k)),
-            SparsifierKind::RandomK => Box::new(RandomK::new(k)),
-            SparsifierKind::RTopK => {
-                let r = ((k as f64 / self.subsample_ratio).round() as usize).clamp(k, dim);
-                Box::new(RTopK::new(k, r))
-            }
-            SparsifierKind::Threshold => Box::new(Threshold::Rank(k)),
-        }
+    /// Resolve the selection chain for a scheduled k at dimension d (k
+    /// follows the warm-up schedule, so workers retarget per round; a
+    /// chain is cheap to construct).
+    pub fn select_for(&self, k: usize, dim: usize) -> Select {
+        self.pipeline
+            .select_for(k.clamp(1, dim.max(1)), self.subsample_ratio, dim)
+    }
+
+    /// Build a ready-to-use compressor for a scheduled k at dimension d.
+    pub fn compressor_for(&self, k: usize, dim: usize) -> GradientCompressor {
+        self.pipeline
+            .build(k.clamp(1, dim.max(1)), self.subsample_ratio, dim)
     }
 
     /// Human-readable method label, e.g. "rTop-k @ 99.9%".
     pub fn method_label(&self) -> String {
-        match self.method {
-            SparsifierKind::Baseline => "Baseline".to_string(),
-            m => format!("{} @ {:.4}%", m.label(), 100.0 * (1.0 - self.keep_frac)),
+        if self.is_baseline() {
+            "Baseline".to_string()
+        } else {
+            format!(
+                "{} @ {:.4}%",
+                self.pipeline.method_label(),
+                100.0 * (1.0 - self.keep_frac)
+            )
         }
     }
 
@@ -137,28 +173,42 @@ impl TrainConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Stage;
 
     #[test]
-    fn operator_dispatch() {
+    fn pipeline_dispatch() {
         let cfg = TrainConfig::image_default(5, SparsifierKind::RTopK, 0.99);
-        let op = cfg.operator_for(10, 1000);
-        assert_eq!(op.name(), "rtop10of50"); // k/r = 1/5
+        let sel = cfg.select_for(10, 1000);
+        // k/r = 1/5 -> r = 50
+        assert_eq!(sel.stages(), &[Stage::TopR(50), Stage::RandomK(10)]);
         let cfg2 = TrainConfig::image_default(5, SparsifierKind::TopK, 0.99);
-        assert_eq!(cfg2.operator_for(10, 1000).name(), "top10");
+        assert_eq!(cfg2.select_for(10, 1000).stages(), &[Stage::TopR(10)]);
     }
 
     #[test]
     fn rtopk_r_clamped_to_dim() {
         let cfg = TrainConfig::image_default(5, SparsifierKind::RTopK, 0.0);
-        let op = cfg.operator_for(900, 1000);
+        let sel = cfg.select_for(900, 1000);
         // r = 900*5 = 4500 clamps to 1000
-        assert_eq!(op.name(), "rtop900of1000");
+        assert_eq!(sel.stages(), &[Stage::TopR(1000), Stage::RandomK(900)]);
+    }
+
+    #[test]
+    fn spec_string_drives_config() {
+        let mut cfg = TrainConfig::image_spec(5, "rtopk|bf16|delta", 0.999).unwrap();
+        assert_eq!(cfg.method_label(), "rTop-k @ 99.9000%");
+        let gc = cfg.compressor_for(100, 1_000_000);
+        assert_eq!(gc.label(), "top500>random100|bf16|delta");
+        cfg.set_pipeline("topk:k=64").unwrap();
+        assert_eq!(cfg.compressor_for(5, 1000).label(), "top64|f32|fixed");
+        assert!(cfg.set_pipeline("no-such-stage").is_err());
     }
 
     #[test]
     fn baseline_warmup_is_noop() {
         let cfg = TrainConfig::image_default(5, SparsifierKind::Baseline, 0.99);
         assert_eq!(cfg.warmup().keep_frac(0.0), 1.0);
+        assert!(cfg.is_baseline());
     }
 
     #[test]

@@ -7,7 +7,8 @@
 use std::time::Instant;
 
 use crate::comms::transport::{LeaderEndpoints, Message};
-use crate::comms::{codec, transport};
+use crate::comms::transport;
+use crate::compress::GradientCompressor;
 use crate::metrics::{EvalRecord, RoundRecord, RunMetrics};
 use crate::optim::{MomentumSgd, Optimizer, Sgd};
 use crate::runtime::{eval_metric, Batch, EvalKind, ModelRuntime};
@@ -100,7 +101,7 @@ pub fn run_leader(
         let scale = 1.0 / cfg.nodes as f32;
         let mut coords = 0u64;
         for payload in inbox.iter().flatten() {
-            codec::decode(payload, &mut sparse)?;
+            GradientCompressor::decompress_into(payload, &mut sparse)?;
             anyhow::ensure!(sparse.dim == dim, "dim mismatch in update");
             coords += sparse.nnz() as u64;
             sparse.add_scaled_into(scale, &mut agg);
@@ -146,8 +147,10 @@ pub fn run_leader(
 mod tests {
     use super::*;
     use crate::comms::transport::star;
+    use crate::compress::Select;
     use crate::runtime::MockModel;
     use crate::sparsify::SparsifierKind;
+    use crate::util::rng::Rng;
 
     /// Leader against hand-rolled worker stubs that send a constant
     /// gradient pointing at +1 on every coordinate.
@@ -166,14 +169,12 @@ mod tests {
                 std::thread::spawn(move || loop {
                     match w.from_leader.recv() {
                         Ok(Message::Params { round, data }) => {
-                            // constant gradient = +1 everywhere
-                            let sv = SparseVec {
-                                dim: data.len(),
-                                idx: (0..data.len() as u32).collect(),
-                                val: vec![1.0; data.len()],
-                            };
+                            // constant gradient = +1 everywhere, sent through
+                            // the identity pipeline
+                            let grad = vec![1.0f32; data.len()];
+                            let mut gc = GradientCompressor::builder(Select::all()).build();
                             let mut payload = Vec::new();
-                            codec::encode(&sv, Default::default(), &mut payload);
+                            gc.compress(&grad, &mut Rng::new(0), &mut payload);
                             w.to_leader
                                 .send(Message::SparseUpdate {
                                     round,

@@ -6,9 +6,8 @@
 //! encode, send. The residual stays in the memory for the next round.
 
 use crate::comms::transport::{Message, WorkerEndpoints};
-use crate::comms::{codec, CodecConfig};
 use crate::runtime::{Batch, ModelRuntime};
-use crate::sparsify::{ErrorFeedback, SparseVec};
+use crate::sparsify::ErrorFeedback;
 use crate::util::rng::Rng;
 
 use super::config::{RoundMode, TrainConfig};
@@ -40,7 +39,10 @@ pub fn run_worker(
     let mut grads: Vec<f32> = Vec::with_capacity(dim);
     let mut grad_accum: Vec<f32> = vec![0.0; dim];
     let mut local_params: Vec<f32> = Vec::with_capacity(dim);
-    let mut sparse = SparseVec::with_capacity(dim, 1024);
+    // One compressor for the whole run; the selection chain is retargeted
+    // per round as the warm-up schedule moves k, the scratch buffers and
+    // the kept-coordinate record persist.
+    let mut compressor = cfg.compressor_for(warmup.k_at(dim, 0.0), dim);
     let mut payload: Vec<u8> = Vec::new();
 
     loop {
@@ -88,14 +90,14 @@ pub fn run_worker(
             }
         };
 
-        // ---- sparsify with the scheduled k ----
+        // ---- compensate, then fused sparsify + encode ----
         let k = warmup.k_at(dim, epoch);
-        let op = cfg.operator_for(k, dim);
-        ef.step(g, op.as_ref(), &mut rng, &mut sparse);
+        compressor.set_select(cfg.select_for(k, dim));
+        let acc = ef.compensate(g);
+        compressor.compress(acc, &mut rng, &mut payload);
+        ef.update_residual(compressor.kept());
 
-        // ---- encode + send ----
-        let codec_cfg: CodecConfig = cfg.codec;
-        codec::encode(&sparse, codec_cfg, &mut payload);
+        // ---- send ----
         endpoints.to_leader.send(Message::SparseUpdate {
             round,
             worker: endpoints.id,
@@ -111,8 +113,9 @@ pub fn run_worker(
 mod tests {
     use super::*;
     use crate::comms::transport::star;
+    use crate::compress::GradientCompressor;
     use crate::runtime::MockModel;
-    use crate::sparsify::SparsifierKind;
+    use crate::sparsify::{SparseVec, SparsifierKind};
 
     fn mock_setup(dim: usize) -> WorkerSetup {
         let mut counter = 0u64;
@@ -144,7 +147,7 @@ mod tests {
             Message::SparseUpdate { round, payload, .. } => {
                 assert_eq!(round, 0);
                 let mut sv = SparseVec::default();
-                codec::decode(&payload, &mut sv).unwrap();
+                GradientCompressor::decompress_into(&payload, &mut sv).unwrap();
                 assert_eq!(sv.dim, dim);
                 assert_eq!(sv.nnz(), 13); // round(0.1 * 128)
             }

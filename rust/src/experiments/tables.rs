@@ -9,7 +9,6 @@ use crate::coordinator::{self, RoundMode, TrainConfig};
 use crate::data::images::ImageDatasetConfig;
 use crate::metrics::RunMetrics;
 use crate::runtime::RustNetConfig;
-use crate::sparsify::SparsifierKind;
 use crate::util::json::{obj, Json};
 
 use super::tasks::{ImageTask, LmTask};
@@ -25,6 +24,9 @@ pub struct ExperimentOptions {
     pub seed: u64,
     /// LM preset for table4/5 (lm_tiny for tests, lm_small default).
     pub lm_preset: String,
+    /// Wire-format spec suffix appended to every method's pipeline spec
+    /// (e.g. "bf16|delta"); None keeps each spec's default f32|fixed.
+    pub wire: Option<String>,
 }
 
 impl Default for ExperimentOptions {
@@ -36,39 +38,53 @@ impl Default for ExperimentOptions {
             nodes: 5,
             seed: 0xE0,
             lm_preset: "lm_small".to_string(),
+            wire: None,
         }
     }
 }
 
-/// (method, compression) rows each table compares, straight from the paper.
-fn image_methods() -> Vec<(SparsifierKind, f64)> {
+impl ExperimentOptions {
+    /// A method's selection spec combined with the options' wire override.
+    /// The baseline row is exempt: it is the table's uncompressed f32
+    /// control arm and must stay lossless even under `--wire bf16|...`.
+    fn pipeline_spec(&self, method: &str) -> String {
+        match &self.wire {
+            Some(w) if method != "baseline" => format!("{method}|{w}"),
+            _ => method.to_string(),
+        }
+    }
+}
+
+/// (pipeline spec, compression) rows each table compares, straight from
+/// the paper.
+fn image_methods() -> Vec<(&'static str, f64)> {
     vec![
-        (SparsifierKind::Baseline, 0.0),
-        (SparsifierKind::RTopK, 0.99),
-        (SparsifierKind::RTopK, 0.999),
-        (SparsifierKind::TopK, 0.99),
-        (SparsifierKind::TopK, 0.999),
-        (SparsifierKind::RandomK, 0.99),
+        ("baseline", 0.0),
+        ("rtopk", 0.99),
+        ("rtopk", 0.999),
+        ("topk", 0.99),
+        ("topk", 0.999),
+        ("randomk", 0.99),
     ]
 }
 
-fn lm_methods_distributed() -> Vec<(SparsifierKind, f64)> {
+fn lm_methods_distributed() -> Vec<(&'static str, f64)> {
     vec![
-        (SparsifierKind::Baseline, 0.0),
-        (SparsifierKind::RTopK, 0.999),
-        (SparsifierKind::TopK, 0.999),
-        (SparsifierKind::TopK, 0.99),
-        (SparsifierKind::RandomK, 0.99),
+        ("baseline", 0.0),
+        ("rtopk", 0.999),
+        ("topk", 0.999),
+        ("topk", 0.99),
+        ("randomk", 0.99),
     ]
 }
 
-fn lm_methods_federated() -> Vec<(SparsifierKind, f64)> {
+fn lm_methods_federated() -> Vec<(&'static str, f64)> {
     vec![
-        (SparsifierKind::Baseline, 0.0),
-        (SparsifierKind::RTopK, 0.95),
-        (SparsifierKind::TopK, 0.95),
-        (SparsifierKind::TopK, 0.75),
-        (SparsifierKind::RandomK, 0.95),
+        ("baseline", 0.0),
+        ("rtopk", 0.95),
+        ("topk", 0.95),
+        ("topk", 0.75),
+        ("randomk", 0.95),
     ]
 }
 
@@ -133,7 +149,8 @@ fn run_image_table(
     let mut rows = Vec::new();
     let mut runs = Vec::new();
     for (method, compression) in image_methods() {
-        let mut cfg = TrainConfig::image_default(opts.nodes, method, compression);
+        let mut cfg =
+            TrainConfig::image_spec(opts.nodes, &opts.pipeline_spec(method), compression)?;
         cfg.mode = mode;
         cfg.seed = opts.seed;
         cfg.warmup_epochs = if opts.quick { 0.5 } else { 3.0 };
@@ -165,7 +182,7 @@ fn run_image_table(
         rows.push(TableRow {
             method: cfg.method_label(),
             metric: res.metrics.best_eval().unwrap_or(0.0) * 100.0,
-            measured_compression: if method == SparsifierKind::Baseline {
+            measured_compression: if cfg.is_baseline() {
                 0.0
             } else {
                 res.metrics.entry_compression_ratio(skip)
@@ -183,7 +200,7 @@ fn run_lm_table(
     id: &str,
     title: &str,
     mode: RoundMode,
-    methods: Vec<(SparsifierKind, f64)>,
+    methods: Vec<(&'static str, f64)>,
     opts: &ExperimentOptions,
 ) -> anyhow::Result<Vec<RunMetrics>> {
     let task = LmTask::new(opts.artifacts.clone(), &opts.lm_preset, opts.nodes)?;
@@ -191,7 +208,7 @@ fn run_lm_table(
     let mut rows = Vec::new();
     let mut runs = Vec::new();
     for (method, compression) in methods {
-        let mut cfg = TrainConfig::lm_default(opts.nodes, method, compression);
+        let mut cfg = TrainConfig::lm_spec(opts.nodes, &opts.pipeline_spec(method), compression)?;
         cfg.mode = mode;
         cfg.seed = opts.seed;
         match mode {
@@ -234,7 +251,7 @@ fn run_lm_table(
         rows.push(TableRow {
             method: cfg.method_label(),
             metric: res.metrics.best_eval().unwrap_or(f64::NAN),
-            measured_compression: if method == SparsifierKind::Baseline {
+            measured_compression: if cfg.is_baseline() {
                 0.0
             } else {
                 res.metrics.entry_compression_ratio(skip.min(res.metrics.records.len() / 2))

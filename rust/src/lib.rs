@@ -5,8 +5,10 @@
 //! three-layer Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the distributed-SGD coordinator: leader /
-//!   workers, sparsified gradient exchange with bit-exact message encoding,
-//!   error feedback, warm-up schedules, metrics ([`coordinator`],
+//!   workers, sparsified gradient exchange through the composable
+//!   [`compress`] pipeline (selection → value stage → index stage, one
+//!   spec string like `"rtopk:r=4k,k=256|bf16|delta"`), error feedback,
+//!   warm-up schedules, metrics ([`coordinator`], [`compress`],
 //!   [`sparsify`], [`comms`], [`optim`], [`metrics`]).
 //! * **Layer 2/1 (build time)** — JAX training steps calling Pallas
 //!   kernels, AOT-lowered to HLO text under `artifacts/` and executed here
@@ -18,6 +20,7 @@
 //! `examples/quickstart.rs` for the one-minute tour.
 
 pub mod comms;
+pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod estimation;

@@ -57,6 +57,9 @@ SUBCOMMANDS
                 --task lm|image          (default image)
                 --preset <lm preset>     (lm task; default lm_tiny)
                 --method baseline|topk|randomk|rtopk|threshold
+                --pipeline SPEC          full pipeline spec; overrides
+                                         --method (see DESIGN.md), e.g.
+                                         "rtopk:r=4k,k=256|bf16|delta"
                 --compression 0.99       target compression ratio
                 --nodes 5 --rounds 100 --federated --seed N
                 --transport inproc|tcp
@@ -65,6 +68,7 @@ SUBCOMMANDS
                 --id table1..table5|fig2..fig6|figT1|figT2|all
                 --quick  --nodes 5  --artifacts DIR  --out results
                 --lm-preset lm_small
+                --wire "bf16|delta"      wire-format override for every row
   estimate    one estimation risk point (sparse Bernoulli model)
                 --scheme subsample|truncate|random|centralized
                 --d 512 --s 32 --n 10 --k 100 --trials 400
@@ -115,6 +119,11 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
     cfg.warmup_epochs = args.f64_or("warmup-epochs", cfg.warmup_epochs)?;
     if !args.bool_or("error-feedback", true)? {
         cfg.error_feedback = false;
+    }
+    // A full pipeline spec overrides --method (one string names selection,
+    // value stage, and index stage).
+    if let Some(spec) = args.get("pipeline") {
+        cfg.set_pipeline(spec)?;
     }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     Ok((cfg, artifacts))
@@ -197,8 +206,16 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
         nodes: args.usize_or("nodes", 5)?,
         seed: args.u64_or("seed", 0xE0)?,
         lm_preset: args.str_or("lm-preset", "lm_small"),
+        wire: args.get("wire").map(|s| s.to_string()),
     };
     args.reject_unknown()?;
+    // Validate the wire override up front: a typo must fail in
+    // milliseconds, not after the first (exempt) baseline row has
+    // already trained for minutes.
+    if let Some(w) = &opts.wire {
+        rtopk::compress::PipelineSpec::parse(&format!("topk|{w}"))
+            .map_err(|e| e.context(format!("invalid --wire {w:?}")))?;
+    }
     run_experiment(&id, &opts)
 }
 

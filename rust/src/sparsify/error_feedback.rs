@@ -43,15 +43,11 @@ impl ErrorFeedback {
         self.memory.len()
     }
 
-    /// One Algorithm-1 worker step: compensate `grad` with the memory,
-    /// sparsify into `out`, and update the memory with the residual.
-    pub fn step(
-        &mut self,
-        grad: &[f32],
-        op: &dyn CompressionOperator,
-        rng: &mut Rng,
-        out: &mut SparseVec,
-    ) {
+    /// Phase 1: compensate `grad` with the memory into the internal
+    /// accumulator and return it (`g + m`, or a copy of `g` when
+    /// disabled). The fused pipeline path compresses this slice, then
+    /// settles the residual with [`Self::update_residual`].
+    pub fn compensate(&mut self, grad: &[f32]) -> &[f32] {
         assert_eq!(grad.len(), self.memory.len(), "gradient dim mismatch");
         if self.enabled {
             for ((a, &g), &m) in self.acc.iter_mut().zip(grad).zip(&self.memory) {
@@ -60,17 +56,39 @@ impl ErrorFeedback {
         } else {
             self.acc.copy_from_slice(grad);
         }
-        op.compress(&self.acc, rng, out);
-        if self.enabled {
-            // m' = acc - ĝ : start from acc, zero out the kept coordinates.
-            self.memory.copy_from_slice(&self.acc);
-            for (&i, &v) in out.idx.iter().zip(&out.val) {
-                // Kept entries carry the full acc value; subtracting gives 0
-                // exactly. (Operators that scale, e.g. unbiased random-k,
-                // leave the honest residual.)
-                self.memory[i as usize] = self.acc[i as usize] - v;
-            }
+        &self.acc
+    }
+
+    /// Phase 2: update the memory with the residual after `kept` was sent.
+    /// `m' = acc - ĝ`: start from acc, zero out the kept coordinates.
+    pub fn update_residual(&mut self, kept: &SparseVec) {
+        if !self.enabled {
+            return;
         }
+        debug_assert_eq!(kept.dim, self.memory.len(), "kept dim mismatch");
+        self.memory.copy_from_slice(&self.acc);
+        for (&i, &v) in kept.idx.iter().zip(&kept.val) {
+            // Kept entries carry the full acc value; subtracting gives 0
+            // exactly. (Operators that scale, e.g. unbiased random-k,
+            // leave the honest residual.)
+            self.memory[i as usize] = self.acc[i as usize] - v;
+        }
+    }
+
+    /// One Algorithm-1 worker step: compensate `grad` with the memory,
+    /// sparsify into `out`, and update the memory with the residual.
+    /// (The operator-level path; the coordinator's hot path drives a
+    /// `compress::GradientCompressor` through the two phases directly.)
+    pub fn step(
+        &mut self,
+        grad: &[f32],
+        op: &dyn CompressionOperator,
+        rng: &mut Rng,
+        out: &mut SparseVec,
+    ) {
+        self.compensate(grad);
+        op.compress(&self.acc, rng, out);
+        self.update_residual(out);
     }
 
     /// Squared norm of the residual memory (monitored in metrics).
@@ -143,6 +161,29 @@ mod tests {
             sent.extend(out.idx.iter().copied());
         }
         assert_eq!(sent.len(), dim, "all coordinates must be sent: {sent:?}");
+    }
+
+    #[test]
+    fn two_phase_api_matches_step() {
+        // compensate + update_residual (the fused-pipeline path) must be
+        // bit-identical to the one-shot step().
+        let mut rng_a = Rng::new(9);
+        let mut rng_b = Rng::new(9);
+        let dim = 128;
+        let op = RTopK::new(8, 32);
+        let mut ef_a = ErrorFeedback::new(dim);
+        let mut ef_b = ErrorFeedback::new(dim);
+        let mut out_a = SparseVec::default();
+        let mut out_b = SparseVec::default();
+        for round in 0..5 {
+            let g: Vec<f32> = (0..dim).map(|i| ((i + round) as f32).sin()).collect();
+            ef_a.step(&g, &op, &mut rng_a, &mut out_a);
+            let acc = ef_b.compensate(&g).to_vec();
+            op.compress(&acc, &mut rng_b, &mut out_b);
+            ef_b.update_residual(&out_b);
+            assert_eq!(out_a, out_b, "round {round}");
+            assert_eq!(ef_a.memory, ef_b.memory, "round {round}");
+        }
     }
 
     #[test]

@@ -12,6 +12,14 @@
 //! * [`Threshold`] — keep everything with |w_i| >= t (Aji–Heafield style)
 //! * [`NoCompression`] — identity (the "Baseline" rows in Tables I–V)
 //!
+//! Since the pipeline redesign (DESIGN.md §Compression-pipeline) these
+//! operators are thin adapters over [`crate::compress::Select`], the
+//! composable selection engine — rTop-k is literally
+//! `Select::top_r(r).then_random_k(k)`. The coordinator's hot path drives
+//! a [`crate::compress::GradientCompressor`] instead (fused select +
+//! encode); the operator trait remains for operator-level callers
+//! (error-feedback tests, examples, the theory simulators).
+//!
 //! All operators write into a reusable [`SparseVec`] so the hot round loop
 //! allocates nothing in steady state.
 
@@ -66,14 +74,41 @@ impl SparseVec {
         self.idx.is_empty()
     }
 
-    /// Sort entries by index (operators that sample produce unsorted output).
+    /// Sort entries by index (callers that assemble entries out of order).
+    ///
+    /// Allocation-free, upholding the module's "allocates nothing in
+    /// steady state" contract: an in-place tandem heapsort swaps the
+    /// parallel `idx`/`val` arrays together instead of materializing a
+    /// permutation. O(n log n) worst case, n = nnz (small on every path).
     pub fn sort_by_index(&mut self) {
-        let mut order: Vec<u32> = (0..self.idx.len() as u32).collect();
-        order.sort_unstable_by_key(|&p| self.idx[p as usize]);
-        let idx = order.iter().map(|&p| self.idx[p as usize]).collect();
-        let val = order.iter().map(|&p| self.val[p as usize]).collect();
-        self.idx = idx;
-        self.val = val;
+        let n = self.idx.len();
+        for root in (0..n / 2).rev() {
+            self.sift_down(root, n);
+        }
+        for end in (1..n).rev() {
+            self.idx.swap(0, end);
+            self.val.swap(0, end);
+            self.sift_down(0, end);
+        }
+    }
+
+    /// Max-heap sift-down over `idx[..end]`, carrying `val` along.
+    fn sift_down(&mut self, mut root: usize, end: usize) {
+        loop {
+            let mut child = 2 * root + 1;
+            if child >= end {
+                return;
+            }
+            if child + 1 < end && self.idx[child] < self.idx[child + 1] {
+                child += 1;
+            }
+            if self.idx[root] >= self.idx[child] {
+                return;
+            }
+            self.idx.swap(root, child);
+            self.val.swap(root, child);
+            root = child;
+        }
     }
 
     pub fn to_dense(&self) -> Vec<f32> {
@@ -130,6 +165,28 @@ mod tests {
         assert_eq!(s.idx, vec![2, 5, 7]);
         assert_eq!(s.val, vec![20.0, 50.0, 70.0]);
         s.debug_validate();
+    }
+
+    #[test]
+    fn sort_by_index_random_permutations() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..200 {
+            let n = rng.index(64);
+            let mut idx: Vec<u32> = (0..n as u32).map(|i| i * 3).collect();
+            rng.shuffle(&mut idx);
+            let val: Vec<f32> = idx.iter().map(|&i| i as f32 * 0.5).collect();
+            let mut s = SparseVec { dim: 3 * n + 1, idx, val };
+            let idx_cap = s.idx.capacity();
+            let val_cap = s.val.capacity();
+            s.sort_by_index();
+            // sorted, pairing preserved, and no reallocation happened
+            assert!(s.idx.windows(2).all(|w| w[0] < w[1]));
+            for (&i, &v) in s.idx.iter().zip(&s.val) {
+                assert_eq!(v, i as f32 * 0.5);
+            }
+            assert_eq!(s.idx.capacity(), idx_cap);
+            assert_eq!(s.val.capacity(), val_cap);
+        }
     }
 
     #[test]

@@ -1,6 +1,10 @@
 //! Random-k sparsification (paper Definition 2; Konečný et al. [9]).
+//!
+//! Thin adapter over `compress::Select::random_k`; the unbiased d/k
+//! scaling stays here (it is a value transform, not a selection).
 
 use super::{operator::CompressionOperator, SparseVec};
+use crate::compress::{Select, SelectScratch};
 use crate::util::rng::Rng;
 
 /// Keep a uniformly random k-subset of all d coordinates.
@@ -9,20 +13,21 @@ use crate::util::rng::Rng;
 /// operator an unbiased estimator of w (the classical "rand-k with scaling"
 /// variant). The paper's experiments use the plain selection (no scaling)
 /// with error feedback; both are provided and tested.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct RandomK {
     pub k: usize,
     pub unbiased_scaling: bool,
+    scratch: std::sync::Mutex<SelectScratch>,
 }
 
 impl RandomK {
     pub fn new(k: usize) -> Self {
         assert!(k >= 1, "k must be >= 1");
-        RandomK { k, unbiased_scaling: false }
+        RandomK { k, unbiased_scaling: false, scratch: std::sync::Mutex::new(SelectScratch::default()) }
     }
 
     pub fn unbiased(k: usize) -> Self {
-        RandomK { k, unbiased_scaling: true }
+        RandomK { unbiased_scaling: true, ..Self::new(k) }
     }
 }
 
@@ -30,12 +35,14 @@ impl CompressionOperator for RandomK {
     fn compress(&self, w: &[f32], rng: &mut Rng, out: &mut SparseVec) {
         let d = w.len();
         let k = self.k.min(d);
-        let mut chosen = rng.sample_indices(d, k);
-        chosen.sort_unstable();
-        let scale = if self.unbiased_scaling { d as f32 / k as f32 } else { 1.0 };
+        // Chain built per call so mutating the public `k` keeps working.
+        let select = Select::random_k(self.k);
+        let mut scratch = self.scratch.lock().unwrap();
+        select.apply(w, rng, &mut scratch);
+        let scale = if self.unbiased_scaling && k > 0 { d as f32 / k as f32 } else { 1.0 };
         out.clear(d);
-        for i in chosen {
-            out.push(i as u32, w[i] * scale);
+        for &i in &scratch.survivors {
+            out.push(i, w[i as usize] * scale);
         }
     }
 

@@ -10,21 +10,24 @@
 //! The paper fixes `k/r = 1/n` (n = number of nodes) so that a parameter
 //! in every node's top set is updated by one node per round in expectation.
 
-use super::{operator::CompressionOperator, select::select_top_r, SparseVec};
+use super::{operator::CompressionOperator, SparseVec};
+use crate::compress::{Select, SelectScratch};
 use crate::util::rng::Rng;
 
+/// Thin adapter over the composable selection engine: rTop-k *is* the
+/// two-stage chain `Select::top_r(r).then_random_k(k)`.
 #[derive(Debug)]
 pub struct RTopK {
     pub k: usize,
     pub r: usize,
-    scratch: std::sync::Mutex<Vec<u32>>,
+    scratch: std::sync::Mutex<SelectScratch>,
 }
 
 impl RTopK {
     pub fn new(k: usize, r: usize) -> Self {
         assert!(k >= 1, "k must be >= 1");
         assert!(k <= r, "need k <= r (got k={k}, r={r})");
-        RTopK { k, r, scratch: std::sync::Mutex::new(Vec::new()) }
+        RTopK { k, r, scratch: std::sync::Mutex::new(SelectScratch::default()) }
     }
 
     /// The paper's default coupling: given a target k and node count n,
@@ -36,17 +39,14 @@ impl RTopK {
 
 impl CompressionOperator for RTopK {
     fn compress(&self, w: &[f32], rng: &mut Rng, out: &mut SparseVec) {
-        let d = w.len();
-        let r = self.r.min(d);
-        let k = self.k.min(r);
+        // Stage 1 keeps the top-r magnitudes; stage 2 keeps a uniform
+        // k-subset of those (Def. 3's U ~ Unif(U_k)). Chain built per call
+        // so mutating the public `k`/`r` keeps working.
+        let select = Select::top_r(self.r).then_random_k(self.k);
         let mut scratch = self.scratch.lock().unwrap();
-        let top = select_top_r(w, r, &mut scratch); // sorted index list, len r
-        // Uniform k-subset of the top-r index set (Def. 3's U ~ Unif(U_k)).
-        let mut keep = rng.sample_indices(r, k);
-        keep.sort_unstable();
-        out.clear(d);
-        for pos in keep {
-            let i = top[pos];
+        select.apply(w, rng, &mut scratch);
+        out.clear(w.len());
+        for &i in &scratch.survivors {
             out.push(i, w[i as usize]);
         }
     }
@@ -68,6 +68,7 @@ impl CompressionOperator for RTopK {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparsify::select::select_top_r;
     use crate::sparsify::{l2_sq, TopK};
 
     #[test]

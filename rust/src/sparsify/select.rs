@@ -12,9 +12,24 @@
 //!   (`python/compile/kernels/topk_threshold.py`), kept in lockstep so the
 //!   XLA-accelerated path and the pure-Rust path agree.
 
+/// Partition `idx` so its `r` largest-|w| candidates occupy `idx[..r]`
+/// (quickselect; O(len) expected, in place, allocation-free). This is the
+/// shared primitive behind both [`select_top_r`] and the composable
+/// `compress::Select` top-r stage, which runs it over arbitrary candidate
+/// subsets. Ties broken arbitrarily (paper Def. 1 allows any valid pi).
+pub fn partial_select_by_magnitude(w: &[f32], idx: &mut [u32], r: usize) {
+    if r == 0 || r >= idx.len() {
+        return;
+    }
+    idx.select_nth_unstable_by(r - 1, |&a, &b| {
+        let ma = w[a as usize].abs();
+        let mb = w[b as usize].abs();
+        mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
+    });
+}
+
 /// Exact top-r selection. Returns the indices of the `r` largest-|w|
-/// entries, sorted ascending by index. Ties broken arbitrarily (matching
-/// the paper's Def. 1, where any valid permutation pi is allowed).
+/// entries, sorted ascending by index.
 pub fn select_top_r(w: &[f32], r: usize, scratch: &mut Vec<u32>) -> Vec<u32> {
     assert!(r <= w.len(), "r={r} > d={}", w.len());
     scratch.clear();
@@ -22,14 +37,7 @@ pub fn select_top_r(w: &[f32], r: usize, scratch: &mut Vec<u32>) -> Vec<u32> {
     if r == 0 {
         return Vec::new();
     }
-    if r < w.len() {
-        // Partition so the r largest magnitudes occupy scratch[..r].
-        scratch.select_nth_unstable_by(r - 1, |&a, &b| {
-            let ma = w[a as usize].abs();
-            let mb = w[b as usize].abs();
-            mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
-        });
-    }
+    partial_select_by_magnitude(w, scratch, r);
     let mut out: Vec<u32> = scratch[..r].to_vec();
     out.sort_unstable();
     out

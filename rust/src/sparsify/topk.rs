@@ -1,29 +1,34 @@
 //! Top-k sparsification (paper Definition 1; Lin et al. [1], Aji & Heafield [10]).
+//!
+//! Thin adapter over the composable selection engine: the actual work is
+//! `compress::Select::top_k(k)`.
 
-use super::{operator::CompressionOperator, select::select_top_r, SparseVec};
+use super::{operator::CompressionOperator, SparseVec};
+use crate::compress::{Select, SelectScratch};
 use crate::util::rng::Rng;
 
 /// Keep the k coordinates with largest magnitude, zero the rest.
 #[derive(Debug)]
 pub struct TopK {
     pub k: usize,
-    scratch: std::sync::Mutex<Vec<u32>>,
+    scratch: std::sync::Mutex<SelectScratch>,
 }
 
 impl TopK {
     pub fn new(k: usize) -> Self {
         assert!(k >= 1, "k must be >= 1");
-        TopK { k, scratch: std::sync::Mutex::new(Vec::new()) }
+        TopK { k, scratch: std::sync::Mutex::new(SelectScratch::default()) }
     }
 }
 
 impl CompressionOperator for TopK {
-    fn compress(&self, w: &[f32], _rng: &mut Rng, out: &mut SparseVec) {
-        let k = self.k.min(w.len());
+    fn compress(&self, w: &[f32], rng: &mut Rng, out: &mut SparseVec) {
+        // Chain built per call so mutating the public `k` keeps working.
+        let select = Select::top_k(self.k);
         let mut scratch = self.scratch.lock().unwrap();
-        let chosen = select_top_r(w, k, &mut scratch);
+        select.apply(w, rng, &mut scratch);
         out.clear(w.len());
-        for i in chosen {
+        for &i in &scratch.survivors {
             out.push(i, w[i as usize]);
         }
     }

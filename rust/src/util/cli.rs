@@ -188,6 +188,16 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_spec_values_survive_parsing() {
+        // Pipeline specs carry ':', ',', '|' and '='; both flag forms must
+        // deliver them verbatim (the '=' form splits on the FIRST '=').
+        let a = parse("train --pipeline rtopk:r=4k,k=256|bf16|delta");
+        assert_eq!(a.get("pipeline"), Some("rtopk:r=4k,k=256|bf16|delta"));
+        let b = parse("train --pipeline=topk:k=512|bf16");
+        assert_eq!(b.get("pipeline"), Some("topk:k=512|bf16"));
+    }
+
+    #[test]
     fn positional_tokens() {
         let a = parse("experiment table1 table2 --quick");
         assert_eq!(a.command.as_deref(), Some("experiment"));

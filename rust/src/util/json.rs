@@ -19,12 +19,19 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ---------------- accessors ----------------
@@ -39,7 +46,7 @@ impl Json {
     /// Object member access that errors with a path-like message.
     pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing json key {key:?} in {self:.60?}"))
+            .ok_or_else(|| anyhow::anyhow!("missing json key {:?} in {:.60?}", key, self))
     }
 
     pub fn as_f64(&self) -> Option<f64> {

@@ -5,13 +5,15 @@
 //! seeded random cases including adversarial value distributions (ties,
 //! zeros, huge/tiny magnitudes — see `gen_vector`).
 
-use rtopk::comms::codec::{self, CodecConfig, IndexFormat, ValueFormat};
+use rtopk::comms::codec::{self, value_roundtrip, CodecConfig, IndexFormat, ValueFormat};
+use rtopk::compress::{GradientCompressor, Select};
 use rtopk::prop_assert;
 use rtopk::sparsify::{
     l2_sq, select_top_r, CompressionOperator, ErrorFeedback, NoCompression, RTopK, RandomK,
     SparseVec, TopK,
 };
 use rtopk::util::proptest::{check, default_cases, gen_kr, gen_vector};
+use rtopk::util::rng::Rng;
 
 fn ops_for(k: usize, r: usize) -> Vec<Box<dyn CompressionOperator>> {
     vec![
@@ -174,6 +176,98 @@ fn prop_codec_roundtrip_all_formats() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_pipeline_roundtrip_bit_exact_all_stage_combos() {
+    // decompress(compress(w)) == the kept coordinates, bit-exactly, for
+    // every value × index stage combination — across dims 1..=65537 and
+    // adversarial inputs (all-zero vectors, empty selections). "Bit-exact"
+    // means idx identical and every value equal to the value stage's
+    // documented rounding (identity for f32, bf16 round-trip for bf16).
+    check("pipeline-roundtrip", default_cases(), |rng| {
+        let dim = match rng.index(6) {
+            0 => 1,
+            1 => 65_537,
+            _ => 1 + rng.index(65_537),
+        };
+        let w: Vec<f32> = match rng.index(3) {
+            0 => vec![0.0; dim], // all-zero gradient
+            1 => (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            _ => (0..dim)
+                .map(|_| if rng.bernoulli(0.9) { 0.0 } else { rng.normal_f32(0.0, 5.0) })
+                .collect(),
+        };
+        // k == 0 yields an empty message; k near dim exercises the
+        // automatic bitmap index layout.
+        let k = rng.index(dim.min(2048) + 1);
+        let select = match rng.index(3) {
+            0 => Select::top_k(k),
+            1 => Select::random_k(k),
+            _ => Select::top_r((2 * k).min(dim).max(1)).then_random_k(k),
+        };
+        for values in [ValueFormat::F32, ValueFormat::Bf16] {
+            for indices in [IndexFormat::FixedWidth, IndexFormat::DeltaVarint] {
+                let mut gc = GradientCompressor::builder(select.clone())
+                    .values(values)
+                    .indices(indices)
+                    .build();
+                let mut buf = Vec::new();
+                let stats = gc.compress(&w, rng, &mut buf);
+                prop_assert!(
+                    stats.nnz == gc.kept().nnz(),
+                    "stats nnz {} != kept {}",
+                    stats.nnz,
+                    gc.kept().nnz()
+                );
+                let mut back = SparseVec::default();
+                GradientCompressor::decompress_into(&buf, &mut back)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(back.dim == dim, "dim {} != {dim}", back.dim);
+                prop_assert!(
+                    back.idx == gc.kept().idx,
+                    "{values:?}/{indices:?}: index mismatch (dim {dim}, k {k})"
+                );
+                for (j, (&got, &sent)) in back.val.iter().zip(&gc.kept().val).enumerate() {
+                    let expect = value_roundtrip(sent, values);
+                    prop_assert!(
+                        got.to_bits() == expect.to_bits(),
+                        "{values:?}/{indices:?}: val[{j}] {got} != {expect}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pipeline_roundtrip_empty_and_degenerate_dims() {
+    // The deterministic corners the property above samples around: the
+    // empty gradient (d = 0), d = 1, and the boundary dim 65537, each with
+    // an all-zero vector, across every stage combo.
+    let mut rng = Rng::new(0xE);
+    for dim in [0usize, 1, 65_537] {
+        let w = vec![0.0f32; dim];
+        for values in [ValueFormat::F32, ValueFormat::Bf16] {
+            for indices in [IndexFormat::FixedWidth, IndexFormat::DeltaVarint] {
+                for select in [Select::all(), Select::top_k(4), Select::random_k(4)] {
+                    let mut gc = GradientCompressor::builder(select)
+                        .values(values)
+                        .indices(indices)
+                        .build();
+                    let mut buf = Vec::new();
+                    let stats = gc.compress(&w, &mut rng, &mut buf);
+                    let mut back = SparseVec::default();
+                    GradientCompressor::decompress_into(&buf, &mut back).unwrap();
+                    assert_eq!(back.dim, dim);
+                    assert_eq!(back.idx, gc.kept().idx, "dim {dim} {values:?}/{indices:?}");
+                    assert_eq!(back.nnz(), stats.nnz);
+                    assert!(back.val.iter().all(|&v| v == 0.0));
+                }
+            }
+        }
+    }
 }
 
 #[test]

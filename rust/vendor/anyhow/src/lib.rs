@@ -1,0 +1,173 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The offline build image has no crates.io registry, so the workspace
+//! vendors the subset of anyhow the codebase actually uses:
+//!
+//! * [`Error`] — an opaque error carrying a message chain; any
+//!   `std::error::Error + Send + Sync + 'static` converts into it via `?`
+//!   (the full source chain is flattened into the message chain).
+//! * [`Result`] — `Result<T, Error>` alias with the same defaulted
+//!   type parameter as anyhow's.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros,
+//!   including the message-less `ensure!(cond)` form.
+//! * [`Error::context`] — wrap an error with an outer message; the
+//!   alternate format `{:#}` prints the full `outer: inner: ...` chain,
+//!   matching anyhow's display behaviour.
+//!
+//! Deliberately NOT implemented: backtraces, downcasting, and the
+//! `Context` extension trait on `Result` (unused in this repo).
+
+use std::fmt;
+
+/// An opaque error: a chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>` — the defaulted error parameter mirrors anyhow so
+/// `Result<T>` and `Result<T, E>` both work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (anyhow's `Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like anyhow, `Error` intentionally does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below
+// coherent (no overlap with `impl From<T> for T`).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing file"));
+    }
+
+    #[test]
+    fn context_prepends_and_alternate_prints_chain() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 3);
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(fails(2).unwrap(), 2);
+        assert!(fails(12).unwrap_err().to_string().contains("too big"));
+        assert!(fails(3).unwrap_err().to_string().contains("condition failed"));
+        assert!(fails(5).unwrap_err().to_string().contains("five"));
+        let e = anyhow!("plain {}", 7);
+        assert_eq!(e.to_string(), "plain 7");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

@@ -1,0 +1,178 @@
+//! Stub of the `xla` (PJRT) bindings.
+//!
+//! The offline build image does not ship the native `xla_extension`
+//! library, so this crate provides the exact API surface
+//! `rtopk::runtime::xla_runtime` compiles against, with every entry point
+//! that would touch PJRT returning an "unavailable" error. The coordinator
+//! degrades gracefully: `XlaModel::load` fails with a clear message, the
+//! pure-Rust runtimes (`RustNet`, `MockModel`) cover every test, and
+//! artifact-gated integration tests skip.
+//!
+//! Swapping in the real bindings is a one-line Cargo change; no call site
+//! needs to move.
+
+#![allow(dead_code)]
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`'s role (Display + std::error::Error).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error("XLA/PJRT unavailable: built against the vendored stub (no native xla_extension)".into())
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+    impl Sealed for i32 {}
+    impl Sealed for i64 {}
+    impl Sealed for u8 {}
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Default + sealed::Sealed {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// A host-side tensor. In the stub it is shape-only; all data accessors
+/// error (nothing can produce a populated literal without a client).
+pub struct Literal {
+    _private: PhantomData<()>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal { _private: PhantomData }
+    }
+
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        Literal { _private: PhantomData }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _private: PhantomData })
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(unavailable())
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, _dst: &mut [T]) -> Result<()> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (text form).
+pub struct HloModuleProto {
+    _private: PhantomData<()>,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// A computation ready for compilation.
+pub struct XlaComputation {
+    _private: PhantomData<()>,
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: PhantomData }
+    }
+}
+
+/// The PJRT client handle. `cpu()` always errors in the stub.
+pub struct PjRtClient {
+    _private: PhantomData<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _private: PhantomData<()>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: PhantomData<()>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_constructors_do_not_panic() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_ok());
+        let _ = Literal::scalar(3i32);
+        assert!(Literal::vec1(&[0i32]).to_vec::<i32>().is_err());
+    }
+}
