@@ -308,8 +308,24 @@ fn write_values(
     }
 }
 
-/// Decode into `sv` (reusing its buffers).
+/// Decode into `sv` (reusing its buffers). Accepts any well-formed frame
+/// regardless of dimension; transport-facing callers that already know the
+/// model dimension should use [`decode_expecting`] so a corrupt header
+/// fails fast instead of driving a huge claimed-`dim` allocation.
 pub fn decode(buf: &[u8], sv: &mut SparseVec) -> Result<(), CodecError> {
+    decode_expecting(buf, None, sv)
+}
+
+/// Decode into `sv`, rejecting any frame whose header dimension differs
+/// from `expected_dim` *before* touching the body. With an expected
+/// dimension every allocation this function performs is bounded by
+/// `O(expected_dim)`; without one it is bounded by `O(buf.len())` (the
+/// claimed `nnz` must be backed by actual value bytes).
+pub fn decode_expecting(
+    buf: &[u8],
+    expected_dim: Option<usize>,
+    sv: &mut SparseVec,
+) -> Result<(), CodecError> {
     if buf.len() < 12 {
         return Err(CodecError::Truncated(buf.len()));
     }
@@ -320,11 +336,21 @@ pub fn decode(buf: &[u8], sv: &mut SparseVec) -> Result<(), CodecError> {
     let flags = buf[2];
     let dim = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
     let nnz = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    if expected_dim.is_some_and(|expected| expected != dim) {
+        return Err(CodecError::Corrupt("dim != expected dim"));
+    }
     if nnz > dim {
         return Err(CodecError::Corrupt("nnz > dim"));
     }
-    sv.clear(dim);
     let body = &buf[12..];
+    // The values section is a fixed nnz * width tail; a claimed nnz the
+    // body cannot possibly back is rejected before any index parsing (and
+    // before `sv`'s buffers grow towards it).
+    let vbytes = if flags & 1 == 0 { 4 } else { 2 };
+    if nnz * vbytes > body.len() {
+        return Err(CodecError::Truncated(buf.len()));
+    }
+    sv.clear(dim);
     let mut pos = 0usize;
 
     if flags & 4 != 0 {
@@ -345,19 +371,32 @@ pub fn decode(buf: &[u8], sv: &mut SparseVec) -> Result<(), CodecError> {
     } else if flags & 2 == 0 {
         let bits = index_bits(dim);
         let mut br = BitReader::new(body);
+        let mut prev: i64 = -1;
         for _ in 0..nnz {
-            let i = br.get(bits)? as usize;
-            if i >= dim {
+            let i = br.get(bits)? as i64;
+            if i as usize >= dim {
                 return Err(CodecError::Corrupt("index out of range"));
             }
+            // every encoder emits sorted unique indices; anything else is
+            // corruption (and would double-apply coordinates downstream)
+            if i <= prev {
+                return Err(CodecError::Corrupt("indices not strictly increasing"));
+            }
             sv.idx.push(i as u32);
+            prev = i;
         }
         pos = br.bytes_consumed();
     } else {
         let mut prev: i64 = -1;
         for _ in 0..nnz {
-            let gap = get_varint(body, &mut pos)? as i64;
-            let i = prev + 1 + gap;
+            let gap = get_varint(body, &mut pos)?;
+            // a gap >= dim can never yield a valid index (i >= gap); bound
+            // it before the i64 arithmetic so a corrupt 64-bit varint
+            // cannot overflow `prev + 1 + gap`
+            if gap >= dim as u64 {
+                return Err(CodecError::Corrupt("index out of range"));
+            }
+            let i = prev + 1 + gap as i64;
             if i as usize >= dim {
                 return Err(CodecError::Corrupt("index out of range"));
             }
@@ -366,7 +405,6 @@ pub fn decode(buf: &[u8], sv: &mut SparseVec) -> Result<(), CodecError> {
         }
     }
 
-    let vbytes = if flags & 1 == 0 { 4 } else { 2 };
     if body.len() < pos + nnz * vbytes {
         return Err(CodecError::Truncated(buf.len()));
     }
@@ -383,11 +421,21 @@ pub fn decode(buf: &[u8], sv: &mut SparseVec) -> Result<(), CodecError> {
 }
 
 /// Size in bytes of the encoded message, without encoding (for planning).
+/// Mirrors [`encode_with`] exactly, including the automatic bitmap
+/// override for dense messages ([`bitmap_wins`]) — the dense warm-up
+/// rounds take the bitmap layout on the wire, and a planner that still
+/// priced per-entry indices there would disagree with the measured bytes.
+/// Exact for fixed-width and bitmap layouts; an upper bound for
+/// delta-varint (whose true size is data-dependent).
 pub fn encoded_size(dim: usize, nnz: usize, cfg: CodecConfig) -> usize {
     let header = 12;
-    let idx = match cfg.indices {
-        IndexFormat::FixedWidth => (nnz * index_bits(dim) as usize).div_ceil(8),
-        IndexFormat::DeltaVarint => nnz * 5, // worst case; real is data-dependent
+    let idx = if bitmap_wins(dim, nnz, cfg.indices) {
+        dim.div_ceil(8)
+    } else {
+        match cfg.indices {
+            IndexFormat::FixedWidth => (nnz * index_bits(dim) as usize).div_ceil(8),
+            IndexFormat::DeltaVarint => nnz * 5, // worst case; real is data-dependent
+        }
     };
     let val = nnz * match cfg.values {
         ValueFormat::F32 => 4,
@@ -565,6 +613,96 @@ mod tests {
         buf.extend_from_slice(&[0, 0]);
         buf.extend_from_slice(&5u32.to_le_bytes());
         buf.extend_from_slice(&9u32.to_le_bytes());
+        assert!(decode(&buf, &mut back).is_err());
+    }
+
+    #[test]
+    fn encoded_size_matches_across_bitmap_boundary() {
+        // dim=1000 -> 10 index bits; the bitmap overrides fixed-width
+        // exactly when nnz*10 > 1000, i.e. from nnz=101 up. The planner
+        // must agree with the encoder byte-for-byte on both sides of that
+        // boundary (the dense warm-up rounds live past it).
+        let dim = 1000;
+        let mut rng = Rng::new(21);
+        for values in [ValueFormat::F32, ValueFormat::Bf16] {
+            let cfg = CodecConfig { values, indices: IndexFormat::FixedWidth };
+            for nnz in 90..=110 {
+                let sv = random_sparse(&mut rng, dim, nnz);
+                let mut buf = Vec::new();
+                encode(&sv, cfg, &mut buf);
+                assert_eq!(
+                    buf.len(),
+                    encoded_size(dim, nnz, cfg),
+                    "{values:?} nnz={nnz} (bitmap_wins={})",
+                    bitmap_wins(dim, nnz, cfg.indices)
+                );
+            }
+            // sanity: the sweep actually crossed the boundary
+            assert!(!bitmap_wins(dim, 90, IndexFormat::FixedWidth));
+            assert!(bitmap_wins(dim, 110, IndexFormat::FixedWidth));
+        }
+        // Delta-varint planning stays an upper bound past its own boundary.
+        let cfg = CodecConfig { values: ValueFormat::F32, indices: IndexFormat::DeltaVarint };
+        for nnz in [100, 124, 125, 126, 300] {
+            let sv = random_sparse(&mut rng, dim, nnz);
+            let mut buf = Vec::new();
+            encode(&sv, cfg, &mut buf);
+            assert!(
+                buf.len() <= encoded_size(dim, nnz, cfg),
+                "nnz={nnz}: {} > planned {}",
+                buf.len(),
+                encoded_size(dim, nnz, cfg)
+            );
+        }
+    }
+
+    #[test]
+    fn decode_expecting_rejects_wrong_dim_fast() {
+        let mut rng = Rng::new(22);
+        let sv = random_sparse(&mut rng, 500, 40);
+        let mut buf = Vec::new();
+        encode(&sv, CodecConfig::default(), &mut buf);
+        let mut back = SparseVec::default();
+        // right dim decodes
+        decode_expecting(&buf, Some(500), &mut back).unwrap();
+        assert_eq!(back, sv);
+        // wrong dim fails without parsing the body
+        assert!(matches!(
+            decode_expecting(&buf, Some(501), &mut back),
+            Err(CodecError::Corrupt(_))
+        ));
+        // a header claiming a huge dim with a tiny body fails on the
+        // claimed-nnz-vs-body bound, not with a huge allocation
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&MAGIC.to_le_bytes());
+        evil.extend_from_slice(&[0, 0]);
+        evil.extend_from_slice(&u32::MAX.to_le_bytes()); // dim
+        evil.extend_from_slice(&(u32::MAX - 1).to_le_bytes()); // nnz
+        evil.extend_from_slice(&[0u8; 64]);
+        assert!(decode_expecting(&evil, Some(500), &mut back).is_err());
+        assert!(decode(&evil, &mut back).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_unsorted_fixed_indices() {
+        // Hand-build a fixed-width frame with out-of-order indices: dim=256
+        // -> 8 bits per index, so indices are plain bytes.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC.to_le_bytes());
+        buf.extend_from_slice(&[0, 0]); // flags: f32 + fixed
+        buf.extend_from_slice(&256u32.to_le_bytes());
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&[7u8, 3u8]); // 7 then 3: not increasing
+        buf.extend_from_slice(&1.0f32.to_le_bytes());
+        buf.extend_from_slice(&2.0f32.to_le_bytes());
+        let mut back = SparseVec::default();
+        assert!(matches!(
+            decode(&buf, &mut back),
+            Err(CodecError::Corrupt(_))
+        ));
+        // duplicate indices are corruption too
+        buf[12] = 3;
+        buf[13] = 3;
         assert!(decode(&buf, &mut back).is_err());
     }
 

@@ -7,5 +7,5 @@ pub mod codec;
 pub mod tcp;
 pub mod transport;
 
-pub use codec::{decode, encode, CodecConfig, IndexFormat, ValueFormat};
+pub use codec::{decode, decode_expecting, encode, CodecConfig, IndexFormat, ValueFormat};
 pub use transport::{star, LeaderEndpoints, Message, WorkerEndpoints};

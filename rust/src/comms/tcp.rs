@@ -13,6 +13,27 @@ use super::transport::Message;
 const TAG_PARAMS: u8 = 1;
 const TAG_UPDATE: u8 = 2;
 const TAG_SHUTDOWN: u8 = 3;
+const TAG_DELTA: u8 = 4;
+const TAG_RESYNC: u8 = 5;
+
+/// Upper bound on any single frame's variable-length body. A corrupt or
+/// hostile length prefix must fail fast with an error instead of driving a
+/// multi-gigabyte allocation before the first payload byte is read
+/// (`u32::MAX * 4` for a params frame). 1 GiB comfortably covers every
+/// model dimension this system targets (d ≤ 2^28 f32 params).
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Validate a u32 length prefix scaled to its in-memory byte cost.
+fn checked_frame_len(len: u32, elem_bytes: usize, what: &str) -> anyhow::Result<usize> {
+    let bytes = (len as usize)
+        .checked_mul(elem_bytes)
+        .ok_or_else(|| anyhow::anyhow!("{what} frame length overflows ({len} elems)"))?;
+    anyhow::ensure!(
+        bytes <= MAX_FRAME_BYTES,
+        "{what} frame of {bytes} bytes exceeds the {MAX_FRAME_BYTES}-byte bound"
+    );
+    Ok(len as usize)
+}
 
 /// Serialize a message to its wire frame.
 pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
@@ -38,6 +59,17 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
             w.write_all(&(payload.len() as u32).to_le_bytes())?;
             w.write_all(payload)?;
         }
+        Message::ParamsDelta { round, payload } => {
+            w.write_all(&[TAG_DELTA])?;
+            w.write_all(&round.to_le_bytes())?;
+            w.write_all(&(payload.len() as u32).to_le_bytes())?;
+            w.write_all(payload)?;
+        }
+        Message::ResyncRequest { worker } => {
+            w.write_all(&[TAG_RESYNC])?;
+            w.write_all(&0u64.to_le_bytes())?;
+            w.write_all(&(*worker as u32).to_le_bytes())?;
+        }
         Message::Shutdown => {
             w.write_all(&[TAG_SHUTDOWN])?;
             w.write_all(&0u64.to_le_bytes())?;
@@ -58,7 +90,7 @@ pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
         TAG_PARAMS => {
             let mut len_b = [0u8; 4];
             r.read_exact(&mut len_b)?;
-            let len = u32::from_le_bytes(len_b) as usize;
+            let len = checked_frame_len(u32::from_le_bytes(len_b), 4, "params")?;
             let mut buf = vec![0u8; len * 4];
             r.read_exact(&mut buf)?;
             let data = buf
@@ -82,10 +114,23 @@ pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
             let mem_norm = f32::from_le_bytes(mn_b);
             let mut len_b = [0u8; 4];
             r.read_exact(&mut len_b)?;
-            let len = u32::from_le_bytes(len_b) as usize;
+            let len = checked_frame_len(u32::from_le_bytes(len_b), 1, "update")?;
             let mut payload = vec![0u8; len];
             r.read_exact(&mut payload)?;
             Ok(Message::SparseUpdate { round, worker, payload, loss, examples, mem_norm })
+        }
+        TAG_DELTA => {
+            let mut len_b = [0u8; 4];
+            r.read_exact(&mut len_b)?;
+            let len = checked_frame_len(u32::from_le_bytes(len_b), 1, "delta")?;
+            let mut payload = vec![0u8; len];
+            r.read_exact(&mut payload)?;
+            Ok(Message::ParamsDelta { round, payload: payload.into() })
+        }
+        TAG_RESYNC => {
+            let mut w_b = [0u8; 4];
+            r.read_exact(&mut w_b)?;
+            Ok(Message::ResyncRequest { worker: u32::from_le_bytes(w_b) as usize })
         }
         TAG_SHUTDOWN => Ok(Message::Shutdown),
         t => anyhow::bail!("unknown message tag {t}"),
@@ -133,6 +178,8 @@ mod tests {
                 examples: 128,
                 mem_norm: 1.5,
             },
+            Message::ParamsDelta { round: 9, payload: vec![9u8, 8, 7].into() },
+            Message::ResyncRequest { worker: 2 },
             Message::Shutdown,
         ];
         for msg in msgs {
@@ -141,6 +188,41 @@ mod tests {
             let back = read_message(&mut &buf[..]).unwrap();
             assert_eq!(back, msg);
         }
+    }
+
+    #[test]
+    fn corrupt_length_prefix_fails_without_allocating() {
+        // A params frame claiming u32::MAX elements would try to allocate
+        // 16 GiB before reading a single payload byte; the bound must
+        // reject it (and any > MAX_FRAME_BYTES claim) up front.
+        for (tag, len) in [
+            (TAG_PARAMS, u32::MAX),
+            (TAG_PARAMS, (MAX_FRAME_BYTES / 4 + 1) as u32),
+            (TAG_UPDATE, u32::MAX),
+            (TAG_DELTA, (MAX_FRAME_BYTES + 1) as u32),
+        ] {
+            let mut buf = Vec::new();
+            buf.push(tag);
+            buf.extend_from_slice(&0u64.to_le_bytes());
+            if tag == TAG_UPDATE {
+                // worker + loss + examples + mem_norm come before the len
+                buf.extend_from_slice(&0u32.to_le_bytes());
+                buf.extend_from_slice(&0f32.to_le_bytes());
+                buf.extend_from_slice(&0u64.to_le_bytes());
+                buf.extend_from_slice(&0f32.to_le_bytes());
+            }
+            buf.extend_from_slice(&len.to_le_bytes());
+            let err = read_message(&mut &buf[..]);
+            assert!(err.is_err(), "tag {tag} len {len} must be rejected");
+        }
+        // A frame at a sane length with a truncated body errors too (EOF),
+        // after allocating only its bounded size.
+        let mut buf = Vec::new();
+        buf.push(TAG_DELTA);
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&64u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 3]);
+        assert!(read_message(&mut &buf[..]).is_err());
     }
 
     #[test]
@@ -195,8 +277,15 @@ mod tests {
 // TCP-bridged star: the coordinator's channel topology carried over real
 // loopback sockets (one forwarding thread pair per direction per worker).
 // Used by `rtopk train --transport tcp` and the transport-equivalence
-// integration test — byte counters then reflect what the kernel's TCP
-// stack actually carried.
+// integration test — unicast byte counters then reflect what the kernel's
+// TCP stack actually carried. The one deliberate exception is the shared
+// broadcast frame (`Message::ParamsDelta`): the point-to-point bridge
+// replicates it per socket, but it is still recorded ONCE on
+// `LeaderEndpoints::bcast_stats` — the loopback replication is an artifact
+// of bridging a broadcast onto unicast sockets, and the accounting models
+// the single encode-once frame a broadcast/multicast domain would carry
+// (keeping the two transports' measured bytes identical, which the
+// equivalence test asserts).
 // ---------------------------------------------------------------------------
 
 use std::sync::mpsc::channel;
@@ -289,7 +378,13 @@ pub fn tcp_star(n: usize) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoint
         up_stats.push(up);
     }
     Ok((
-        LeaderEndpoints { to_workers, from_workers: up_rx, down_stats, up_stats },
+        LeaderEndpoints {
+            to_workers,
+            from_workers: up_rx,
+            down_stats,
+            up_stats,
+            bcast_stats: Arc::new(LinkStats::default()),
+        },
         workers,
     ))
 }

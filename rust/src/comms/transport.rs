@@ -6,6 +6,13 @@
 //! every payload's byte length recorded on per-link counters. The TCP
 //! transport in [`super::tcp`] implements the same trait for multi-process
 //! runs; integration tests assert the two produce identical traffic.
+//!
+//! Accounting convention: per-worker unicasts (dense params, resyncs,
+//! worker updates) count once per link; the encode-once broadcast frame
+//! ([`Message::ParamsDelta`], shared via `Arc`) counts ONCE on
+//! [`LeaderEndpoints::bcast_stats`] regardless of n — it models a
+//! broadcast/multicast domain carrying one frame, and both transports
+//! apply the same convention so their measured bytes agree.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -14,8 +21,14 @@ use std::sync::Arc;
 /// Messages exchanged between leader and workers each round.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    /// Leader -> workers: full model broadcast (round t's omega).
+    /// Leader -> workers: full model broadcast (round t's omega). The
+    /// dense fallback of the delta downlink: round 0, periodic resyncs,
+    /// and on-demand [`Message::ResyncRequest`] replies.
     Params { round: u64, data: Vec<f32> },
+    /// Leader -> workers: encoded sparse param delta omega^t - omega^{t-1}
+    /// (codec bytes). Encoded once and shared across all workers — the
+    /// `Arc` payload IS the encode-once broadcast frame.
+    ParamsDelta { round: u64, payload: Arc<[u8]> },
     /// Worker -> leader: encoded sparse update (codec bytes) plus the
     /// worker's round loss and residual-memory norm (metrics side-band).
     SparseUpdate {
@@ -26,6 +39,9 @@ pub enum Message {
         examples: u64,
         mem_norm: f32,
     },
+    /// Worker -> leader: "I cannot apply a delta (no base params); unicast
+    /// me a dense `Params` frame for this round." Control-plane only.
+    ResyncRequest { worker: usize },
     /// Leader -> workers: shut down cleanly.
     Shutdown,
 }
@@ -33,11 +49,14 @@ pub enum Message {
 impl Message {
     /// Wire size in bytes, as a real network would see it (payload only;
     /// we deliberately exclude per-message framing, matching how the paper
-    /// counts "number of gradients communicated").
+    /// counts "number of gradients communicated"). Control messages
+    /// (shutdown, resync requests) cost nothing under that accounting.
     pub fn wire_bytes(&self) -> u64 {
         match self {
             Message::Params { data, .. } => 4 * data.len() as u64,
+            Message::ParamsDelta { payload, .. } => payload.len() as u64,
             Message::SparseUpdate { payload, .. } => payload.len() as u64,
+            Message::ResyncRequest { .. } => 0,
             Message::Shutdown => 0,
         }
     }
@@ -78,6 +97,15 @@ impl CountedSender {
             .send(msg)
             .map_err(|_| anyhow::anyhow!("peer hung up"))
     }
+
+    /// Deliver without touching this link's counters. Used by the
+    /// encode-once broadcast path, whose single shared frame is recorded
+    /// once on [`LeaderEndpoints::bcast_stats`] instead of once per link.
+    pub fn send_uncounted(&self, msg: Message) -> anyhow::Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("peer hung up"))
+    }
 }
 
 /// Endpoints the leader holds.
@@ -86,10 +114,35 @@ pub struct LeaderEndpoints {
     pub to_workers: Vec<CountedSender>,
     /// Single merged receiver for worker updates.
     pub from_workers: Receiver<Message>,
-    /// Downlink (leader->worker) traffic, per worker.
+    /// Downlink (leader->worker) unicast traffic, per worker.
     pub down_stats: Vec<Arc<LinkStats>>,
     /// Uplink (worker->leader) traffic, per worker.
     pub up_stats: Vec<Arc<LinkStats>>,
+    /// Shared-frame broadcast traffic: an encode-once frame delivered to
+    /// every worker is recorded here exactly once (a broadcast medium /
+    /// multicast egress carries it once), while per-worker unicasts (dense
+    /// fallbacks, resyncs) stay on [`Self::down_stats`].
+    pub bcast_stats: Arc<LinkStats>,
+}
+
+impl LeaderEndpoints {
+    /// Send one shared encoded frame to every worker, recording its bytes
+    /// once on the broadcast counter — the encode-once broadcast path.
+    pub fn broadcast_shared(&self, round: u64, payload: Arc<[u8]>) -> anyhow::Result<()> {
+        self.bcast_stats.record(payload.len() as u64);
+        for tx in &self.to_workers {
+            tx.send_uncounted(Message::ParamsDelta { round, payload: payload.clone() })?;
+        }
+        Ok(())
+    }
+
+    /// Total (messages, bytes) the downlink carried: per-worker unicasts
+    /// plus shared broadcast frames.
+    pub fn downlink_total(&self) -> (u64, u64) {
+        let (m, b) = total(&self.down_stats);
+        let (bm, bb) = self.bcast_stats.snapshot();
+        (m + bm, b + bb)
+    }
 }
 
 /// Endpoints one worker holds.
@@ -120,7 +173,13 @@ pub fn star(n: usize) -> (LeaderEndpoints, Vec<WorkerEndpoints>) {
         up_stats.push(up);
     }
     (
-        LeaderEndpoints { to_workers, from_workers: up_rx, down_stats, up_stats },
+        LeaderEndpoints {
+            to_workers,
+            from_workers: up_rx,
+            down_stats,
+            up_stats,
+            bcast_stats: Arc::new(LinkStats::default()),
+        },
         workers,
     )
 }
@@ -210,5 +269,46 @@ mod tests {
     #[test]
     fn shutdown_costs_nothing() {
         assert_eq!(Message::Shutdown.wire_bytes(), 0);
+        assert_eq!(Message::ResyncRequest { worker: 3 }.wire_bytes(), 0);
+    }
+
+    #[test]
+    fn broadcast_shared_counts_frame_once() {
+        let (leader, workers) = star(3);
+        let frame: Arc<[u8]> = vec![0u8; 64].into();
+        leader.broadcast_shared(5, frame).unwrap();
+        // every worker receives the same frame...
+        for w in &workers {
+            match w.from_leader.recv().unwrap() {
+                Message::ParamsDelta { round, payload } => {
+                    assert_eq!(round, 5);
+                    assert_eq!(payload.len(), 64);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // ...but the wire carried it exactly once.
+        assert_eq!(leader.bcast_stats.snapshot(), (1, 64));
+        assert_eq!(total(&leader.down_stats), (0, 0));
+        assert_eq!(leader.downlink_total(), (1, 64));
+        // a dense unicast on top still lands on the per-link counters
+        leader.to_workers[1]
+            .send(Message::Params { round: 5, data: vec![0.0; 10] })
+            .unwrap();
+        assert_eq!(leader.down_stats[1].snapshot(), (1, 40));
+        assert_eq!(leader.downlink_total(), (2, 104));
+    }
+
+    #[test]
+    fn send_uncounted_leaves_counters_alone() {
+        let (leader, workers) = star(1);
+        leader.to_workers[0]
+            .send_uncounted(Message::Params { round: 0, data: vec![1.0; 8] })
+            .unwrap();
+        assert_eq!(leader.down_stats[0].snapshot(), (0, 0));
+        assert!(matches!(
+            workers[0].from_leader.recv().unwrap(),
+            Message::Params { .. }
+        ));
     }
 }

@@ -172,6 +172,19 @@ impl GradientCompressor {
     pub fn decompress_into(buf: &[u8], out: &mut SparseVec) -> Result<(), CodecError> {
         codec::decode(buf, out)
     }
+
+    /// Decode like [`Self::decompress_into`] but reject any frame whose
+    /// header dimension is not `expected_dim` before parsing the body —
+    /// the transport-facing entry point (leader uplink, worker downlink),
+    /// where a corrupt frame must fail fast rather than drive an
+    /// attacker-controlled allocation.
+    pub fn decompress_expecting(
+        buf: &[u8],
+        expected_dim: usize,
+        out: &mut SparseVec,
+    ) -> Result<(), CodecError> {
+        codec::decode_expecting(buf, Some(expected_dim), out)
+    }
 }
 
 /// Builder for [`GradientCompressor`]: chain `.values(..)` / `.indices(..)`

@@ -218,6 +218,43 @@ mod tests {
     }
 
     #[test]
+    fn delta_downlink_converges_and_cuts_downlink_bytes() {
+        // Same task as the dense run, delta downlink on: the cluster must
+        // still converge, and the measured steady-state downlink must sit
+        // far below the n-dense-frames accounting of dense mode.
+        let dim = 512;
+        let mut cfg = base_cfg(SparsifierKind::TopK, 0.9);
+        cfg.set_downlink("delta").unwrap();
+        let model = MockModel::new(dim, 0.05, 42);
+        let res = run(
+            &cfg,
+            "mock-delta-down",
+            model.init_params(),
+            mock_factory(dim, 0.05),
+            Box::new(|| Ok(None)),
+        )
+        .unwrap();
+        let d0 = model.distance_sq(&model.init_params());
+        let d1 = model.distance_sq(&res.params);
+        assert!(d1 < 0.5 * d0, "delta downlink must not break convergence: {d0} -> {d1}");
+        // round 0 is the dense fallback: n * 4d bytes
+        let recs = &res.metrics.records;
+        assert_eq!(recs[0].downlink_bytes, (cfg.nodes * 4 * dim) as u64);
+        // steady state: one shared sparse frame (the union of 4 workers'
+        // top-10% picks is at most 40% of coords; bitmap + f32 values stay
+        // well under one dense frame, let alone n of them)
+        let last = recs.last().unwrap();
+        assert!(last.downlink_bytes > 0);
+        assert!(
+            last.downlink_bytes < (4 * dim) as u64,
+            "steady-state downlink {} should be below one dense frame {}",
+            last.downlink_bytes,
+            4 * dim
+        );
+        assert!(res.metrics.downlink_compression_ratio(1) > 0.7);
+    }
+
+    #[test]
     fn worker_error_propagates() {
         let factory: WorkerFactory = Arc::new(|_node| anyhow::bail!("boom"));
         let cfg = base_cfg(SparsifierKind::TopK, 0.9);

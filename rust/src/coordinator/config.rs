@@ -36,6 +36,19 @@ pub struct TrainConfig {
     /// stage. Sizes left scheduled in the spec resolve per round against
     /// the warm-up schedule's k.
     pub pipeline: PipelineSpec,
+    /// Downlink (leader -> worker) wire path. `None` broadcasts dense f32
+    /// params every round (the legacy path, bitwise-identical to the
+    /// pre-delta trajectory). `Some(spec)` broadcasts the sparse param
+    /// delta omega^{t+1} - omega^t encoded once through this pipeline's
+    /// value/index stages and shared as one frame across all workers; the
+    /// spec's selection must be `baseline` (the delta is already sparse —
+    /// nothing may be dropped, or leader and workers drift apart). Dense
+    /// fallback at round 0, every [`Self::resync_every`] rounds, and on a
+    /// worker's resync request.
+    pub down_pipeline: Option<PipelineSpec>,
+    /// In delta-downlink mode, re-broadcast dense params every this many
+    /// rounds (0 = only round 0 and on demand). Ignored in dense mode.
+    pub resync_every: u64,
     /// Target kept fraction k/d (compression ratio = 1 - keep_frac).
     pub keep_frac: f64,
     /// k/r for rTop-k's `auto` coupling. The paper fixes it to 1/n ("each
@@ -58,6 +71,8 @@ impl TrainConfig {
             rounds: 200,
             mode: RoundMode::Distributed,
             pipeline,
+            down_pipeline: None,
+            resync_every: 0,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
             warmup_epochs: 5.0,
@@ -75,6 +90,8 @@ impl TrainConfig {
             rounds: 300,
             mode: RoundMode::Distributed,
             pipeline,
+            down_pipeline: None,
+            resync_every: 0,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
             warmup_epochs: 5.0,
@@ -110,6 +127,14 @@ impl TrainConfig {
     /// Replace the pipeline from a spec string (the `--pipeline` flag).
     pub fn set_pipeline(&mut self, spec: &str) -> anyhow::Result<()> {
         self.pipeline = PipelineSpec::parse(spec)?;
+        Ok(())
+    }
+
+    /// Set the downlink mode from a flag string (the `--downlink` flag):
+    /// `dense`, `delta` (= `baseline|f32|delta`), or an explicit
+    /// baseline-selection pipeline spec such as `baseline|bf16|delta`.
+    pub fn set_downlink(&mut self, s: &str) -> anyhow::Result<()> {
+        self.down_pipeline = parse_downlink(s)?;
         Ok(())
     }
 
@@ -157,6 +182,9 @@ impl TrainConfig {
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.nodes >= 1, "need >= 1 node");
         anyhow::ensure!(self.rounds >= 1, "need >= 1 round");
+        // The leader computes `round % eval_every`; 0 would be a division
+        // by zero panic mid-run rather than a config error.
+        anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
         anyhow::ensure!(
             self.keep_frac > 0.0 && self.keep_frac <= 1.0,
             "keep_frac must be in (0, 1], got {}",
@@ -166,7 +194,37 @@ impl TrainConfig {
             self.subsample_ratio > 0.0 && self.subsample_ratio <= 1.0,
             "subsample_ratio must be in (0, 1]"
         );
+        if let Some(p) = &self.down_pipeline {
+            anyhow::ensure!(
+                p.is_baseline(),
+                "down_pipeline must use baseline selection (the param delta is \
+                 already sparse; dropping coordinates would desynchronize \
+                 leader and workers), got {:?}",
+                p.canonical()
+            );
+        }
         Ok(())
+    }
+}
+
+/// Parse a `--downlink` flag value into a downlink pipeline:
+/// `dense` -> `None`, `delta` -> the default `baseline|f32|delta`, any
+/// other string -> a full pipeline spec whose selection must be baseline.
+pub fn parse_downlink(s: &str) -> anyhow::Result<Option<PipelineSpec>> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "dense" => Ok(None),
+        "delta" => Ok(Some(
+            PipelineSpec::parse("baseline|f32|delta").expect("builtin spec parses"),
+        )),
+        _ => {
+            let p = PipelineSpec::parse(s)?;
+            anyhow::ensure!(
+                p.is_baseline(),
+                "downlink pipeline must use baseline selection, got {s:?} \
+                 (use e.g. \"baseline|bf16|delta\", \"delta\", or \"dense\")"
+            );
+            Ok(Some(p))
+        }
     }
 }
 
@@ -226,6 +284,44 @@ mod tests {
         cfg.keep_frac = 0.5;
         cfg.nodes = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_eval_every_zero() {
+        // the leader computes `round % eval_every`: 0 would panic with a
+        // division by zero mid-run, so validate must reject it up front
+        let mut cfg = TrainConfig::image_default(5, SparsifierKind::TopK, 0.99);
+        cfg.eval_every = 0;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("eval_every"), "{err}");
+        cfg.eval_every = 1;
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn downlink_flag_parses() {
+        use super::parse_downlink;
+        assert_eq!(parse_downlink("dense").unwrap(), None);
+        let default = parse_downlink("delta").unwrap().unwrap();
+        assert!(default.is_baseline());
+        assert_eq!(default.canonical(), "baseline|f32|delta");
+        let custom = parse_downlink("baseline|bf16|fixed").unwrap().unwrap();
+        assert!(custom.is_baseline());
+        // non-baseline selections would drop delta coordinates and
+        // desynchronize leader and workers
+        assert!(parse_downlink("topk|bf16").is_err());
+        assert!(parse_downlink("no-such-thing").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_lossy_downlink_selection() {
+        let mut cfg = TrainConfig::image_default(5, SparsifierKind::TopK, 0.99);
+        cfg.set_downlink("delta").unwrap();
+        assert!(cfg.validate().is_ok());
+        cfg.down_pipeline = Some(PipelineSpec::parse("topk|bf16").unwrap());
+        assert!(cfg.validate().is_err());
+        cfg.set_downlink("dense").unwrap();
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

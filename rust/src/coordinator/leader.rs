@@ -1,11 +1,25 @@
 //! The leader loop — Algorithm 1's "On Centralized Processor" block.
 //!
-//! Per round: broadcast omega^t, gather n sparse updates, decode, average,
-//! optimizer step, record metrics. Optionally evaluate on held-out data
-//! every `eval_every` rounds.
+//! Per round: broadcast omega^t (dense, or as an encode-once compressed
+//! sparse delta against the last broadcast state — see
+//! `TrainConfig::down_pipeline`), gather n sparse updates, decode,
+//! average, optimizer step, record metrics. Optionally evaluate on
+//! held-out data every `eval_every` rounds.
+//!
+//! Delta downlink: the leader tracks `shadow`, the params as every worker
+//! reconstructs them (round-0 dense base plus the *decoded* value of each
+//! delta). Each round it encodes `params - shadow`'s nonzeros once through
+//! the downlink codec, shares the single `Arc` frame with all workers, and
+//! advances `shadow` by the decoded delta — so any value-stage rounding
+//! (bf16) or float non-associativity re-enters the next round's delta
+//! instead of accumulating as silent drift. Dense `Params` frames are
+//! unicast at round 0, every `resync_every` rounds, and to any worker that
+//! asks (`Message::ResyncRequest`).
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::comms::codec::{self, CodecConfig};
 use crate::comms::transport::{LeaderEndpoints, Message};
 use crate::comms::transport;
 use crate::compress::GradientCompressor;
@@ -61,6 +75,18 @@ pub fn run_leader(
     let mut agg = vec![0.0f32; dim];
     let mut sparse = SparseVec::with_capacity(dim, 1024);
 
+    // Delta-downlink state: the broadcast shadow (params as the workers
+    // hold them) and the codec the down_pipeline's wire stages resolve to.
+    let down_cfg: Option<CodecConfig> = cfg
+        .down_pipeline
+        .as_ref()
+        .map(|p| CodecConfig { values: p.values, indices: p.indices });
+    let mut shadow: Option<Vec<f32>> = down_cfg.map(|_| vec![0.0f32; dim]);
+    let mut delta_sv = SparseVec::with_capacity(dim, 1024);
+    // Reused encode buffer; only the Arc the workers share is allocated
+    // per round (it must own the frame beyond this iteration).
+    let mut down_buf: Vec<u8> = Vec::new();
+
     for round in 0..cfg.rounds {
         let t0 = Instant::now();
         let epoch = match cfg.mode {
@@ -70,28 +96,98 @@ pub fn run_leader(
         opt.set_lr(cfg.lr.at_epoch(epoch as usize));
 
         let up_before = transport::total(&endpoints.up_stats).1;
+        let down_before = endpoints.downlink_total().1;
 
         // ---- broadcast ----
-        for tx in &endpoints.to_workers {
-            tx.send(Message::Params { round, data: params.clone() })?;
+        match (shadow.as_mut(), down_cfg) {
+            (Some(shadow), Some(dcfg)) => {
+                let resync =
+                    round == 0 || (cfg.resync_every > 0 && round % cfg.resync_every == 0);
+                if resync {
+                    // dense fallback: n unicast frames, counted per link
+                    shadow.copy_from_slice(&params);
+                    for tx in &endpoints.to_workers {
+                        tx.send(Message::Params { round, data: params.clone() })?;
+                    }
+                } else {
+                    // One sparse encode of omega^t - omega_hat^{t-1} (at
+                    // most the union of the workers' kept coordinates is
+                    // nonzero under plain SGD), one shared frame for all n
+                    // workers, counted once on the broadcast link.
+                    delta_sv.clear(dim);
+                    for (i, (&p, &s)) in params.iter().zip(shadow.iter()).enumerate() {
+                        let d = p - s;
+                        if d != 0.0 {
+                            delta_sv.push(i as u32, d);
+                        }
+                    }
+                    codec::encode(&delta_sv, dcfg, &mut down_buf);
+                    // advance the shadow by what the workers will decode,
+                    // so value-stage rounding feeds back into next round's
+                    // delta instead of drifting
+                    for (&i, &v) in delta_sv.idx.iter().zip(&delta_sv.val) {
+                        shadow[i as usize] += codec::value_roundtrip(v, dcfg.values);
+                    }
+                    endpoints.broadcast_shared(round, Arc::from(down_buf.as_slice()))?;
+                }
+            }
+            _ => {
+                for tx in &endpoints.to_workers {
+                    tx.send(Message::Params { round, data: params.clone() })?;
+                }
+            }
         }
 
         // ---- gather + aggregate: ĝ = (1/n) sum ĝ_i ----
         // Collect all n messages first, then fold in worker-id order:
         // float addition is not associative, so arrival-order aggregation
-        // would make runs non-reproducible at the last ulp.
+        // would make runs non-reproducible at the last ulp. A worker that
+        // lost its base params may interject a resync request; answer it
+        // with a dense unicast of the current broadcast state and keep
+        // waiting for its update.
         let mut inbox: Vec<Option<Vec<u8>>> = vec![None; cfg.nodes];
+        let mut resynced: Vec<bool> = vec![false; cfg.nodes];
         let mut loss_sum = 0.0f64;
+        let mut example_sum = 0.0f64;
         let mut mem_sum = 0.0f64;
-        for _ in 0..cfg.nodes {
+        let mut got = 0;
+        while got < cfg.nodes {
             match endpoints.from_workers.recv() {
-                Ok(Message::SparseUpdate { round: r, worker, payload, loss, mem_norm, .. }) => {
+                Ok(Message::SparseUpdate {
+                    round: r,
+                    worker,
+                    payload,
+                    loss,
+                    examples,
+                    mem_norm,
+                }) => {
                     anyhow::ensure!(r == round, "round skew: got {r}, expected {round}");
                     anyhow::ensure!(worker < cfg.nodes, "bad worker id {worker}");
                     anyhow::ensure!(inbox[worker].is_none(), "duplicate update from {worker}");
                     inbox[worker] = Some(payload);
-                    loss_sum += loss as f64;
+                    // loss is weighted by examples: federated shards are
+                    // not balanced, and an unweighted mean would let a
+                    // 10-example shard count as much as a 10k one
+                    loss_sum += loss as f64 * examples as f64;
+                    example_sum += examples as f64;
                     mem_sum += mem_norm as f64;
+                    got += 1;
+                }
+                Ok(Message::ResyncRequest { worker }) => {
+                    anyhow::ensure!(worker < cfg.nodes, "bad worker id {worker} in resync");
+                    // one resync per worker per round: a worker that keeps
+                    // requesting without ever sending its update would
+                    // otherwise spin this loop (and a dense unicast) forever
+                    anyhow::ensure!(
+                        !resynced[worker],
+                        "worker {worker} requested a second resync in round {round}"
+                    );
+                    resynced[worker] = true;
+                    // the canonical broadcast state this round: the shadow
+                    // in delta mode (what every other worker holds), the
+                    // params themselves in dense mode
+                    let data = shadow.as_deref().unwrap_or(&params).to_vec();
+                    endpoints.to_workers[worker].send(Message::Params { round, data })?;
                 }
                 Ok(other) => anyhow::bail!("leader got unexpected message {other:?}"),
                 Err(e) => anyhow::bail!("worker channel closed: {e}"),
@@ -101,8 +197,7 @@ pub fn run_leader(
         let scale = 1.0 / cfg.nodes as f32;
         let mut coords = 0u64;
         for payload in inbox.iter().flatten() {
-            GradientCompressor::decompress_into(payload, &mut sparse)?;
-            anyhow::ensure!(sparse.dim == dim, "dim mismatch in update");
+            GradientCompressor::decompress_expecting(payload, dim, &mut sparse)?;
             coords += sparse.nnz() as u64;
             sparse.add_scaled_into(scale, &mut agg);
         }
@@ -112,6 +207,7 @@ pub fn run_leader(
 
         // ---- metrics ----
         let uplink = transport::total(&endpoints.up_stats).1 - up_before;
+        let downlink = endpoints.downlink_total().1 - down_before;
         let eval = if let Some(ev) = evaluator.as_mut() {
             if round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds {
                 Some(ev.evaluate(&params)?)
@@ -124,10 +220,11 @@ pub fn run_leader(
         metrics.push(RoundRecord {
             round,
             epoch,
-            train_loss: loss_sum / cfg.nodes as f64,
+            train_loss: if example_sum > 0.0 { loss_sum / example_sum } else { 0.0 },
             eval,
             uplink_bytes: uplink,
             uplink_coords: coords,
+            downlink_bytes: downlink,
             dense_bytes: (cfg.nodes * 4 * dim) as u64,
             memory_norm: mem_sum / cfg.nodes as f64,
             k_used: warmup.k_at(dim, epoch),
@@ -199,6 +296,209 @@ mod tests {
         }
         assert_eq!(metrics.records.len(), 5);
         assert!(metrics.records[0].uplink_bytes > 0);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// Worker stub for delta-downlink tests: reconstructs params from
+    /// dense frames + deltas exactly as `run_worker` does, optionally
+    /// requesting one resync, and answers with a constant unit gradient.
+    fn delta_tracking_stub(
+        w: crate::comms::transport::WorkerEndpoints,
+        dim: usize,
+        resync_once: bool,
+    ) -> std::thread::JoinHandle<Vec<f32>> {
+        std::thread::spawn(move || {
+            let mut params: Vec<f32> = Vec::new();
+            let mut have = false;
+            let mut asked = !resync_once;
+            let mut sv = SparseVec::default();
+            loop {
+                let round = match w.from_leader.recv() {
+                    Ok(Message::Params { round, data }) => {
+                        assert_eq!(data.len(), dim);
+                        params = data;
+                        have = true;
+                        round
+                    }
+                    Ok(Message::ParamsDelta { round, payload }) => {
+                        if !have || !asked {
+                            // pretend the base was lost: ask for a dense frame
+                            asked = true;
+                            have = false;
+                            w.to_leader
+                                .send(Message::ResyncRequest { worker: w.id })
+                                .unwrap();
+                            continue;
+                        }
+                        GradientCompressor::decompress_expecting(&payload, dim, &mut sv)
+                            .unwrap();
+                        sv.add_scaled_into(1.0, &mut params);
+                        round
+                    }
+                    _ => return params,
+                };
+                let grad = vec![1.0f32; dim];
+                let mut gc = GradientCompressor::builder(Select::all()).build();
+                let mut payload = Vec::new();
+                gc.compress(&grad, &mut Rng::new(0), &mut payload);
+                w.to_leader
+                    .send(Message::SparseUpdate {
+                        round,
+                        worker: w.id,
+                        payload,
+                        loss: 1.0,
+                        examples: 1,
+                        mem_norm: 0.0,
+                    })
+                    .unwrap();
+            }
+        })
+    }
+
+    fn delta_cfg(n: usize, rounds: u64) -> TrainConfig {
+        let mut cfg = TrainConfig::image_default(n, SparsifierKind::Baseline, 0.0);
+        cfg.rounds = rounds;
+        cfg.optim = OptimKind::Sgd { clip: None };
+        cfg.lr = crate::optim::LrSchedule::constant(0.1);
+        cfg.set_downlink("delta").unwrap();
+        cfg
+    }
+
+    #[test]
+    fn delta_downlink_reaches_same_params_and_counts_one_frame() {
+        let dim = 32;
+        let n = 3;
+        let (leader, workers) = star(n);
+        let cfg = delta_cfg(n, 5);
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|w| delta_tracking_stub(w, dim, false))
+            .collect();
+        let (params, metrics) =
+            run_leader(&leader, vec![0.0; dim], None, &cfg, "delta", 10).unwrap();
+        // constant unit gradient -> identical trajectory to the dense run
+        for &p in &params {
+            assert!((p + 0.5).abs() < 1e-6, "{p}");
+        }
+        // the workers' reconstructed params match the leader's shadow: the
+        // broadcast state they ended on is omega^{rounds-1} (the last
+        // delta broadcast carries omega^{t} - omega^{t-1})
+        for h in handles {
+            let wp = h.join().unwrap();
+            for &p in &wp {
+                assert!((p + 0.4).abs() < 1e-6, "worker param {p}");
+            }
+        }
+        // round 0: dense fallback, n frames counted per link
+        assert_eq!(metrics.records[0].downlink_bytes, (n * 4 * dim) as u64);
+        // steady state: ONE shared frame regardless of n, and (with every
+        // coordinate changing under a dense unit gradient) far below the
+        // n-fold dense broadcast
+        let steady = metrics.records[2].downlink_bytes;
+        assert!(steady > 0);
+        assert!(
+            steady < (n * 4 * dim) as u64 / 2,
+            "steady {steady} vs dense {}",
+            n * 4 * dim
+        );
+        let (bmsgs, _) = leader.bcast_stats.snapshot();
+        assert_eq!(bmsgs, 4, "rounds 1..=4 each broadcast one shared frame");
+    }
+
+    #[test]
+    fn resync_request_gets_dense_unicast_mid_round() {
+        let dim = 16;
+        let n = 2;
+        let (leader, workers) = star(n);
+        let cfg = delta_cfg(n, 4);
+        // worker 1 "loses" its base at the first delta and asks for resync
+        let mut handles = Vec::new();
+        for (i, w) in workers.into_iter().enumerate() {
+            handles.push(delta_tracking_stub(w, dim, i == 1));
+        }
+        let (params, metrics) =
+            run_leader(&leader, vec![0.0; dim], None, &cfg, "resync", 10).unwrap();
+        for &p in &params {
+            assert!((p + 0.4).abs() < 1e-6, "{p}");
+        }
+        // the resynced worker converged to the same state as the other
+        let end_states: Vec<Vec<f32>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(end_states[0], end_states[1]);
+        // the resync round carried one shared frame plus one dense unicast
+        assert_eq!(
+            metrics.records[1].downlink_bytes,
+            metrics.records[2].downlink_bytes + (4 * dim) as u64
+        );
+    }
+
+    #[test]
+    fn repeated_resync_requests_error_out() {
+        // A worker that keeps requesting resyncs without ever sending its
+        // update must fail the round, not spin the leader forever.
+        let dim = 8;
+        let (leader, mut workers) = star(1);
+        let cfg = delta_cfg(1, 2);
+        let w = workers.remove(0);
+        let handle = std::thread::spawn(move || {
+            let _ = w.from_leader.recv().unwrap(); // round-0 dense params
+            w.to_leader.send(Message::ResyncRequest { worker: 0 }).unwrap();
+            w.to_leader.send(Message::ResyncRequest { worker: 0 }).unwrap();
+            // drain replies until the leader gives up and hangs up
+            while w.from_leader.recv().is_ok() {}
+        });
+        let err = run_leader(&leader, vec![0.0; dim], None, &cfg, "spin", 10);
+        assert!(err.is_err(), "second resync in one round must be an error");
+        drop(leader); // close the downlink so the stub's drain loop exits
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn train_loss_weighted_by_examples() {
+        // two workers, same loss value but 1 vs 9 examples: the weighted
+        // mean must lean towards the large shard, not average the shards
+        let dim = 8;
+        let n = 2;
+        let (leader, workers) = star(n);
+        let mut cfg = TrainConfig::image_default(n, SparsifierKind::Baseline, 0.0);
+        cfg.rounds = 1;
+        cfg.optim = OptimKind::Sgd { clip: None };
+        cfg.lr = crate::optim::LrSchedule::constant(0.1);
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|w| {
+                std::thread::spawn(move || loop {
+                    match w.from_leader.recv() {
+                        Ok(Message::Params { round, data }) => {
+                            let grad = vec![0.0f32; data.len()];
+                            let mut gc =
+                                GradientCompressor::builder(Select::all()).build();
+                            let mut payload = Vec::new();
+                            gc.compress(&grad, &mut Rng::new(0), &mut payload);
+                            let (loss, examples) =
+                                if w.id == 0 { (10.0, 1) } else { (2.0, 9) };
+                            w.to_leader
+                                .send(Message::SparseUpdate {
+                                    round,
+                                    worker: w.id,
+                                    payload,
+                                    loss,
+                                    examples,
+                                    mem_norm: 0.0,
+                                })
+                                .unwrap();
+                        }
+                        _ => return,
+                    }
+                })
+            })
+            .collect();
+        let (_, metrics) =
+            run_leader(&leader, vec![0.0; dim], None, &cfg, "weighted", 10).unwrap();
+        // weighted: (10*1 + 2*9) / 10 = 2.8; the old unweighted mean was 6
+        assert!((metrics.records[0].train_loss - 2.8).abs() < 1e-9);
         for h in handles {
             h.join().unwrap();
         }

@@ -15,6 +15,6 @@ pub mod leader;
 pub mod worker;
 
 pub use cluster::{run, run_with, ClusterResult, EvalFactory, Transport, WorkerFactory};
-pub use config::{OptimKind, RoundMode, TrainConfig};
+pub use config::{parse_downlink, OptimKind, RoundMode, TrainConfig};
 pub use leader::Evaluator;
 pub use worker::WorkerSetup;

@@ -1,13 +1,18 @@
 //! The worker-node loop — Algorithm 1's "On Nodes" block.
 //!
-//! Per round: receive omega^t, compute the local (stochastic) gradient
-//! (one batch in distributed mode, one local epoch in federated mode),
-//! compensate with the error memory, sparsify with the scheduled operator,
-//! encode, send. The residual stays in the memory for the next round.
+//! Per round: receive omega^t (a dense frame, or a compressed sparse delta
+//! applied to the locally tracked copy — the delta-downlink path), compute
+//! the local (stochastic) gradient (one batch in distributed mode, one
+//! local epoch in federated mode), compensate with the error memory,
+//! sparsify with the scheduled operator, encode, send. The residual stays
+//! in the memory for the next round. A delta that arrives without a base
+//! (mid-stream join) triggers a [`Message::ResyncRequest`]; the leader
+//! answers with a dense unicast for the same round.
 
 use crate::comms::transport::{Message, WorkerEndpoints};
+use crate::compress::GradientCompressor;
 use crate::runtime::{Batch, ModelRuntime};
-use crate::sparsify::ErrorFeedback;
+use crate::sparsify::{ErrorFeedback, SparseVec};
 use crate::util::rng::Rng;
 
 use super::config::{RoundMode, TrainConfig};
@@ -44,12 +49,48 @@ pub fn run_worker(
     // the kept-coordinate record persist.
     let mut compressor = cfg.compressor_for(warmup.k_at(dim, 0.0), dim);
     let mut payload: Vec<u8> = Vec::new();
+    // Locally tracked model state (the delta downlink reconstructs params
+    // in place instead of receiving a fresh dense vector every round).
+    let mut params: Vec<f32> = Vec::new();
+    let mut have_params = false;
+    let mut delta_sv = SparseVec::default();
 
     loop {
-        let (round, params) = match endpoints.from_leader.recv() {
-            Ok(Message::Params { round, data }) => (round, data),
-            Ok(Message::Shutdown) | Err(_) => return Ok(()),
-            Ok(other) => anyhow::bail!("worker got unexpected message {other:?}"),
+        let round = loop {
+            match endpoints.from_leader.recv() {
+                Ok(Message::Params { round, data }) => {
+                    anyhow::ensure!(
+                        data.len() == dim,
+                        "worker {}: params dim {} != model dim {dim}",
+                        endpoints.id,
+                        data.len()
+                    );
+                    params = data;
+                    have_params = true;
+                    break round;
+                }
+                Ok(Message::ParamsDelta { round, payload }) => {
+                    if !have_params {
+                        // joined without a base: ask for a dense frame and
+                        // keep waiting (the leader unicasts one this round)
+                        endpoints
+                            .to_leader
+                            .send(Message::ResyncRequest { worker: endpoints.id })?;
+                        continue;
+                    }
+                    GradientCompressor::decompress_expecting(&payload, dim, &mut delta_sv)
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "worker {}: corrupt downlink delta at round {round}: {e}",
+                                endpoints.id
+                            )
+                        })?;
+                    delta_sv.add_scaled_into(1.0, &mut params);
+                    break round;
+                }
+                Ok(Message::Shutdown) | Err(_) => return Ok(()),
+                Ok(other) => anyhow::bail!("worker got unexpected message {other:?}"),
+            }
         };
 
         // Epoch clock for schedules.
@@ -155,6 +196,138 @@ mod tests {
         }
         leader.to_workers[0].send(Message::Shutdown).unwrap();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn worker_applies_delta_downlink() {
+        // Hand-rolled leader: dense base at round 0, then a sparse delta;
+        // the worker must reconstruct params and keep training. MockModel's
+        // gradient is params - target (+ noise), so the update it sends
+        // back reveals the params it actually used.
+        let (leader, mut workers) = star(1);
+        let dim = 32;
+        let mut cfg = TrainConfig::image_default(1, SparsifierKind::Baseline, 0.0);
+        cfg.set_downlink("delta").unwrap();
+        let w = workers.remove(0);
+        // zero noise: the mock gradient is exactly params - target, so the
+        // reconstruction check below is exact rather than statistical
+        let setup = || {
+            let mut counter = 0u64;
+            WorkerSetup {
+                runtime: Box::new(MockModel::new(dim, 0.0, 7)),
+                next_batch: Box::new(move |_rng| {
+                    counter += 1;
+                    Batch::Seed(counter)
+                }),
+                batches_per_epoch: 4,
+            }
+        };
+        let handle = std::thread::spawn(move || {
+            run_worker(w, setup(), &cfg, Rng::new(3)).unwrap();
+        });
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![1.0; dim] })
+            .unwrap();
+        let g0 = match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { round: 0, payload, .. } => {
+                let mut sv = SparseVec::default();
+                GradientCompressor::decompress_into(&payload, &mut sv).unwrap();
+                sv.to_dense()
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        // delta: +0.5 on coordinate 7 only
+        let delta = SparseVec { dim, idx: vec![7], val: vec![0.5] };
+        let mut frame = Vec::new();
+        crate::comms::codec::encode(
+            &delta,
+            crate::comms::codec::CodecConfig::default(),
+            &mut frame,
+        );
+        leader
+            .broadcast_shared(1, frame.into())
+            .unwrap();
+        let g1 = match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { round: 1, payload, .. } => {
+                let mut sv = SparseVec::default();
+                GradientCompressor::decompress_into(&payload, &mut sv).unwrap();
+                sv.to_dense()
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        // The noiseless mock gradient is exactly params - target, so the
+        // +0.5 param bump shows up as a +0.5 gradient shift on coordinate
+        // 7 and as zero shift everywhere else.
+        for j in 0..dim {
+            let expect = if j == 7 { 0.5 } else { 0.0 };
+            assert!(
+                (g1[j] - g0[j] - expect).abs() < 1e-6,
+                "coordinate {j}: {} -> {}",
+                g0[j],
+                g1[j]
+            );
+        }
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn worker_without_base_requests_resync() {
+        let (leader, mut workers) = star(1);
+        let dim = 16;
+        let cfg = TrainConfig::image_default(1, SparsifierKind::Baseline, 0.0);
+        let w = workers.remove(0);
+        let handle = std::thread::spawn(move || {
+            run_worker(w, mock_setup(dim), &cfg, Rng::new(4)).unwrap();
+        });
+        // a delta with no prior dense base must trigger a resync request
+        let delta = SparseVec { dim, idx: vec![0], val: vec![1.0] };
+        let mut frame = Vec::new();
+        crate::comms::codec::encode(
+            &delta,
+            crate::comms::codec::CodecConfig::default(),
+            &mut frame,
+        );
+        leader.broadcast_shared(0, frame.into()).unwrap();
+        match leader.from_workers.recv().unwrap() {
+            Message::ResyncRequest { worker } => assert_eq!(worker, 0),
+            other => panic!("expected resync, got {other:?}"),
+        }
+        // answer with a dense frame; the worker proceeds with the round
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        assert!(matches!(
+            leader.from_workers.recv().unwrap(),
+            Message::SparseUpdate { round: 0, .. }
+        ));
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn worker_rejects_wrong_dim_delta() {
+        let (leader, mut workers) = star(1);
+        let dim = 16;
+        let cfg = TrainConfig::image_default(1, SparsifierKind::Baseline, 0.0);
+        let w = workers.remove(0);
+        let handle = std::thread::spawn(move || run_worker(w, mock_setup(dim), &cfg, Rng::new(5)));
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        let _ = leader.from_workers.recv().unwrap();
+        // a delta encoded for a different model dimension must be a hard
+        // error (fail fast), not silent corruption
+        let delta = SparseVec { dim: dim * 2, idx: vec![0], val: vec![1.0] };
+        let mut frame = Vec::new();
+        crate::comms::codec::encode(
+            &delta,
+            crate::comms::codec::CodecConfig::default(),
+            &mut frame,
+        );
+        leader.broadcast_shared(1, frame.into()).unwrap();
+        let res = handle.join().unwrap();
+        assert!(res.is_err(), "wrong-dim delta must error out the worker");
     }
 
     #[test]

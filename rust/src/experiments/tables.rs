@@ -27,6 +27,11 @@ pub struct ExperimentOptions {
     /// Wire-format spec suffix appended to every method's pipeline spec
     /// (e.g. "bf16|delta"); None keeps each spec's default f32|fixed.
     pub wire: Option<String>,
+    /// Downlink mode for every non-baseline row: `"dense"`, `"delta"`, or
+    /// a baseline-selection pipeline spec (see `TrainConfig::set_downlink`).
+    /// None runs the default compressed delta downlink — the tables
+    /// measure both directions of the wire, like the paper's accounting.
+    pub downlink: Option<String>,
 }
 
 impl Default for ExperimentOptions {
@@ -39,6 +44,7 @@ impl Default for ExperimentOptions {
             seed: 0xE0,
             lm_preset: "lm_small".to_string(),
             wire: None,
+            downlink: None,
         }
     }
 }
@@ -52,6 +58,19 @@ impl ExperimentOptions {
             Some(w) if method != "baseline" => format!("{method}|{w}"),
             _ => method.to_string(),
         }
+    }
+
+    /// The downlink pipeline a method's row runs with. The baseline row is
+    /// exempt for the same reason as [`Self::pipeline_spec`]: it is the
+    /// fully dense control arm.
+    fn downlink_for(
+        &self,
+        method: &str,
+    ) -> anyhow::Result<Option<crate::compress::PipelineSpec>> {
+        if method == "baseline" {
+            return Ok(None);
+        }
+        crate::coordinator::parse_downlink(self.downlink.as_deref().unwrap_or("delta"))
     }
 }
 
@@ -92,18 +111,32 @@ struct TableRow {
     method: String,
     metric: f64,
     measured_compression: f64,
+    /// Measured byte-level downlink compression (1 - sent/dense), from the
+    /// transport counters like the uplink column.
+    measured_downlink: f64,
 }
 
 fn print_table(id: &str, title: &str, metric_name: &str, rows: &[TableRow]) {
     println!("\n=== {id}: {title} ===");
-    println!("{:<22} {:>14} {:>22}", "Method", metric_name, "Measured compression");
+    println!(
+        "{:<22} {:>14} {:>22} {:>18}",
+        "Method", metric_name, "Measured compression", "Downlink compr."
+    );
     for r in rows {
-        let comp = if r.measured_compression <= 0.0 {
-            "-".to_string()
-        } else {
-            format!("{:.3}%", 100.0 * r.measured_compression)
+        let fmt = |v: f64| {
+            if v <= 0.0 {
+                "-".to_string()
+            } else {
+                format!("{:.3}%", 100.0 * v)
+            }
         };
-        println!("{:<22} {:>14.4} {:>22}", r.method, r.metric, comp);
+        println!(
+            "{:<22} {:>14.4} {:>22} {:>18}",
+            r.method,
+            r.metric,
+            fmt(r.measured_compression),
+            fmt(r.measured_downlink)
+        );
     }
 }
 
@@ -153,6 +186,7 @@ fn run_image_table(
             TrainConfig::image_spec(opts.nodes, &opts.pipeline_spec(method), compression)?;
         cfg.mode = mode;
         cfg.seed = opts.seed;
+        cfg.down_pipeline = opts.downlink_for(method)?;
         cfg.warmup_epochs = if opts.quick { 0.5 } else { 3.0 };
         cfg.lr = crate::optim::LrSchedule::steps(0.04, &[epochs / 2, 3 * epochs / 4], 0.25);
         match mode {
@@ -187,6 +221,11 @@ fn run_image_table(
             } else {
                 res.metrics.entry_compression_ratio(skip)
             },
+            measured_downlink: if cfg.down_pipeline.is_none() {
+                0.0
+            } else {
+                res.metrics.downlink_compression_ratio(skip)
+            },
         });
         runs.push(res.metrics);
     }
@@ -211,6 +250,7 @@ fn run_lm_table(
         let mut cfg = TrainConfig::lm_spec(opts.nodes, &opts.pipeline_spec(method), compression)?;
         cfg.mode = mode;
         cfg.seed = opts.seed;
+        cfg.down_pipeline = opts.downlink_for(method)?;
         match mode {
             RoundMode::Distributed => {
                 // override for horizon studies: RTOPK_LM_ROUNDS=2000
@@ -248,13 +288,19 @@ fn run_lm_table(
             RoundMode::Distributed => (cfg.warmup_epochs * bpe as f64).ceil() as usize,
             RoundMode::Federated => cfg.warmup_epochs.ceil() as usize,
         };
+        let skip = skip.min(res.metrics.records.len() / 2);
         rows.push(TableRow {
             method: cfg.method_label(),
             metric: res.metrics.best_eval().unwrap_or(f64::NAN),
             measured_compression: if cfg.is_baseline() {
                 0.0
             } else {
-                res.metrics.entry_compression_ratio(skip.min(res.metrics.records.len() / 2))
+                res.metrics.entry_compression_ratio(skip)
+            },
+            measured_downlink: if cfg.down_pipeline.is_none() {
+                0.0
+            } else {
+                res.metrics.downlink_compression_ratio(skip)
             },
         });
         runs.push(res.metrics);

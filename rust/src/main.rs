@@ -63,12 +63,24 @@ SUBCOMMANDS
                 --compression 0.99       target compression ratio
                 --nodes 5 --rounds 100 --federated --seed N
                 --transport inproc|tcp
+                --downlink dense|delta|SPEC
+                                         leader->worker wire path: dense
+                                         params every round (default), or
+                                         an encode-once compressed sparse
+                                         param delta (SPEC like
+                                         "baseline|bf16|delta")
+                --resync-every N         dense re-broadcast period in
+                                         delta mode (0 = round 0 only)
                 --artifacts DIR --out results/train
   experiment  regenerate a paper table/figure
                 --id table1..table5|fig2..fig6|figT1|figT2|all
                 --quick  --nodes 5  --artifacts DIR  --out results
                 --lm-preset lm_small
                 --wire "bf16|delta"      wire-format override for every row
+                --downlink dense|delta|SPEC
+                                         downlink mode for every row
+                                         (default delta; baseline rows
+                                         stay dense)
   estimate    one estimation risk point (sparse Bernoulli model)
                 --scheme subsample|truncate|random|centralized
                 --d 512 --s 32 --n 10 --k 100 --trials 400
@@ -125,6 +137,11 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
     if let Some(spec) = args.get("pipeline") {
         cfg.set_pipeline(spec)?;
     }
+    // Downlink wire path: dense params (default) or compressed delta.
+    if let Some(d) = args.get("downlink") {
+        cfg.set_downlink(d)?;
+    }
+    cfg.resync_every = args.u64_or("resync-every", cfg.resync_every)?;
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     Ok((cfg, artifacts))
 }
@@ -134,6 +151,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let task = args.str_or("task", "image");
     let out = PathBuf::from(args.str_or("out", "results/train"));
     let preset = args.str_or("preset", "lm_tiny");
+    // read --transport before reject_unknown, or the documented flag
+    // itself trips the unknown-flag check
+    let transport = match args.str_or("transport", "inproc").as_str() {
+        "inproc" | "channel" => coordinator::Transport::InProcess,
+        "tcp" => coordinator::Transport::Tcp,
+        other => anyhow::bail!("unknown transport {other:?} (inproc|tcp)"),
+    };
     args.reject_unknown()?;
 
     eprintln!(
@@ -143,11 +167,6 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         cfg.rounds,
         cfg.mode
     );
-    let transport = match args.str_or("transport", "inproc").as_str() {
-        "inproc" | "channel" => coordinator::Transport::InProcess,
-        "tcp" => coordinator::Transport::Tcp,
-        other => anyhow::bail!("unknown transport {other:?} (inproc|tcp)"),
-    };
     let metrics = match task.as_str() {
         "lm" => {
             let t = tasks::LmTask::new(artifacts, &preset, cfg.nodes)?;
@@ -193,6 +212,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "measured compression ratio: {:.4}%",
         100.0 * metrics.compression_ratio(0)
     );
+    if cfg.down_pipeline.is_some() {
+        println!(
+            "measured downlink compression ratio: {:.4}%",
+            100.0 * metrics.downlink_compression_ratio(0)
+        );
+    }
     println!("curves: {}", out.join("run.csv").display());
     Ok(())
 }
@@ -207,14 +232,19 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
         seed: args.u64_or("seed", 0xE0)?,
         lm_preset: args.str_or("lm-preset", "lm_small"),
         wire: args.get("wire").map(|s| s.to_string()),
+        downlink: args.get("downlink").map(|s| s.to_string()),
     };
     args.reject_unknown()?;
-    // Validate the wire override up front: a typo must fail in
-    // milliseconds, not after the first (exempt) baseline row has
+    // Validate the wire and downlink overrides up front: a typo must fail
+    // in milliseconds, not after the first (exempt) baseline row has
     // already trained for minutes.
     if let Some(w) = &opts.wire {
         rtopk::compress::PipelineSpec::parse(&format!("topk|{w}"))
             .map_err(|e| e.context(format!("invalid --wire {w:?}")))?;
+    }
+    if let Some(d) = &opts.downlink {
+        coordinator::parse_downlink(d)
+            .map_err(|e| e.context(format!("invalid --downlink {d:?}")))?;
     }
     run_experiment(&id, &opts)
 }

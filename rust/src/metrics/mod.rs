@@ -21,7 +21,12 @@ pub struct RoundRecord {
     pub uplink_bytes: u64,
     /// Gradient coordinates (entries) actually sent by all workers.
     pub uplink_coords: u64,
-    /// Bytes a dense f32 exchange would have cost (n * 4d).
+    /// Downlink bytes the leader's broadcast actually carried this round
+    /// (one shared frame counted once in delta mode, n dense frames in
+    /// dense mode, plus any unicast resyncs).
+    pub downlink_bytes: u64,
+    /// Bytes a dense f32 exchange would have cost (n * 4d) — the paper's
+    /// reference budget for either direction.
     pub dense_bytes: u64,
     /// Mean residual-memory norm across workers (error-feedback health).
     pub memory_norm: f64,
@@ -85,6 +90,20 @@ impl RunMetrics {
         }
     }
 
+    /// Measured byte-level downlink compression ratio: 1 - sent/dense over
+    /// the run (same accounting as [`Self::compression_ratio`], leader ->
+    /// worker direction; dense reference is the same n*4d per round).
+    pub fn downlink_compression_ratio(&self, skip_warmup_rounds: usize) -> f64 {
+        let recs = &self.records[skip_warmup_rounds.min(self.records.len())..];
+        let sent: u64 = recs.iter().map(|r| r.downlink_bytes).sum();
+        let dense: u64 = recs.iter().map(|r| r.dense_bytes).sum();
+        if dense == 0 {
+            0.0
+        } else {
+            1.0 - sent as f64 / dense as f64
+        }
+    }
+
     /// Measured entry-level compression ratio: 1 - coords_sent/coords_dense
     /// — the paper's "Compression" column counts gradient entries, not
     /// wire bytes (indices cost extra bytes; see the codec).
@@ -133,7 +152,7 @@ impl RunMetrics {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(
             f,
-            "round,epoch,train_loss,eval_metric,eval_value,uplink_bytes,uplink_coords,dense_bytes,memory_norm,k,lr,wall_ms"
+            "round,epoch,train_loss,eval_metric,eval_value,uplink_bytes,uplink_coords,downlink_bytes,dense_bytes,memory_norm,k,lr,wall_ms"
         )?;
         for r in &self.records {
             let (em, ev) = match &r.eval {
@@ -142,7 +161,7 @@ impl RunMetrics {
             };
             writeln!(
                 f,
-                "{},{:.4},{:.6},{},{},{},{},{},{:.6},{},{},{:.3}",
+                "{},{:.4},{:.6},{},{},{},{},{},{},{:.6},{},{},{:.3}",
                 r.round,
                 r.epoch,
                 r.train_loss,
@@ -150,6 +169,7 @@ impl RunMetrics {
                 ev,
                 r.uplink_bytes,
                 r.uplink_coords,
+                r.downlink_bytes,
                 r.dense_bytes,
                 r.memory_norm,
                 r.k_used,
@@ -167,6 +187,10 @@ impl RunMetrics {
             ("method", Json::from(self.method.clone())),
             ("rounds", Json::from(self.records.len())),
             ("compression_ratio", Json::from(self.compression_ratio(0))),
+            (
+                "downlink_compression_ratio",
+                Json::from(self.downlink_compression_ratio(0)),
+            ),
         ];
         if let Some(e) = self.final_eval() {
             pairs.push(("final_metric", Json::from(e.label())));
@@ -194,6 +218,7 @@ mod tests {
             eval,
             uplink_bytes: up,
             uplink_coords: up / 8,
+            downlink_bytes: up / 2,
             dense_bytes: dense,
             memory_norm: 0.1,
             k_used: 10,
@@ -210,6 +235,17 @@ mod tests {
         m.push(rec(2, 10, 1000, None));
         assert!((m.compression_ratio(1) - 0.99).abs() < 1e-9);
         assert!(m.compression_ratio(0) < 0.99);
+    }
+
+    #[test]
+    fn downlink_ratio_measured_independently() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        m.push(rec(0, 1000, 1000, None)); // down = 500
+        m.push(rec(1, 100, 1000, None)); // down = 50
+        assert!((m.downlink_compression_ratio(1) - 0.95).abs() < 1e-9);
+        assert!((m.downlink_compression_ratio(0) - (1.0 - 550.0 / 2000.0)).abs() < 1e-9);
+        let j = m.summary_json();
+        assert!(j.get("downlink_compression_ratio").is_some());
     }
 
     #[test]

@@ -264,26 +264,108 @@ fn image_dataset_shared_across_factories() {
 fn tcp_transport_matches_inprocess_bitwise() {
     // Same config + seed over loopback TCP must produce the exact same
     // trained parameters as the in-process channels (the transport is
-    // pure plumbing; framing must not perturb payloads).
+    // pure plumbing; framing must not perturb payloads) — in BOTH
+    // downlink modes: dense params and the compressed sparse delta.
     let dim = 96;
-    let cfg = quick_cfg(SparsifierKind::RTopK, 0.9, 12);
-    let run_on = |t: coordinator::Transport| {
-        coordinator::run_with(
-            &cfg,
-            "transport-eq",
+    for downlink in ["dense", "delta", "baseline|bf16|delta"] {
+        let mut cfg = quick_cfg(SparsifierKind::RTopK, 0.9, 12);
+        cfg.set_downlink(downlink).unwrap();
+        let run_on = |t: coordinator::Transport| {
+            coordinator::run_with(
+                &cfg,
+                "transport-eq",
+                vec![0.0; dim],
+                mock_factory(dim, 0.1),
+                Box::new(|| Ok(None)),
+                t,
+            )
+            .unwrap()
+        };
+        let a = run_on(coordinator::Transport::InProcess);
+        let b = run_on(coordinator::Transport::Tcp);
+        assert_eq!(
+            a.params, b.params,
+            "transports must be payload-equivalent (downlink={downlink})"
+        );
+        // entry counts match exactly; byte counts also match because the
+        // counter records codec payload bytes in both cases — for the
+        // downlink too (dense frames per link, delta frames once).
+        let coords_a: u64 = a.metrics.records.iter().map(|r| r.uplink_coords).sum();
+        let coords_b: u64 = b.metrics.records.iter().map(|r| r.uplink_coords).sum();
+        assert_eq!(coords_a, coords_b, "downlink={downlink}");
+        let up_a: u64 = a.metrics.records.iter().map(|r| r.uplink_bytes).sum();
+        let up_b: u64 = b.metrics.records.iter().map(|r| r.uplink_bytes).sum();
+        assert_eq!(up_a, up_b, "downlink={downlink}");
+        let down_a: u64 = a.metrics.records.iter().map(|r| r.downlink_bytes).sum();
+        let down_b: u64 = b.metrics.records.iter().map(|r| r.downlink_bytes).sum();
+        assert_eq!(down_a, down_b, "downlink={downlink}");
+    }
+}
+
+#[test]
+fn dense_downlink_identical_to_delta_off() {
+    // `--downlink dense` IS the legacy path: the config flag must not
+    // perturb the trajectory in any way.
+    let dim = 128;
+    let cfg_a = quick_cfg(SparsifierKind::RTopK, 0.95, 15);
+    let mut cfg_b = quick_cfg(SparsifierKind::RTopK, 0.95, 15);
+    cfg_b.set_downlink("dense").unwrap();
+    let run = |cfg: &coordinator::TrainConfig| {
+        coordinator::run(
+            cfg,
+            "dense-eq",
             vec![0.0; dim],
             mock_factory(dim, 0.1),
             Box::new(|| Ok(None)),
-            t,
         )
         .unwrap()
+        .params
     };
-    let a = run_on(coordinator::Transport::InProcess);
-    let b = run_on(coordinator::Transport::Tcp);
-    assert_eq!(a.params, b.params, "transports must be payload-equivalent");
-    // entry counts match exactly; byte counts also match because the
-    // counter records codec payload bytes in both cases.
-    let coords_a: u64 = a.metrics.records.iter().map(|r| r.uplink_coords).sum();
-    let coords_b: u64 = b.metrics.records.iter().map(|r| r.uplink_coords).sum();
-    assert_eq!(coords_a, coords_b);
+    assert_eq!(run(&cfg_a), run(&cfg_b));
+}
+
+#[test]
+fn delta_downlink_meets_quarter_budget_at_table1_settings() {
+    // The acceptance bar: with the delta pipeline on, steady-state
+    // downlink bytes/round — measured on the transport counters, not
+    // computed — stay below 25% of the dense 4*d*n broadcast, under
+    // table1's optimizer settings (momentum 0.9, whose velocity densifies
+    // the param delta over time: the worst case for this path).
+    let dim = 4096;
+    let nodes = 5;
+    let mut cfg = TrainConfig::image_default(nodes, SparsifierKind::RTopK, 0.99);
+    cfg.rounds = 30;
+    cfg.warmup_epochs = 0.5;
+    cfg.eval_every = 30;
+    cfg.set_downlink("delta").unwrap();
+    let res = coordinator::run(
+        &cfg,
+        "table1-quick-downlink",
+        vec![0.0; dim],
+        mock_factory(dim, 0.05),
+        Box::new(|| Ok(None)),
+    )
+    .unwrap();
+    let recs = &res.metrics.records;
+    assert_eq!(recs.len(), 30);
+    // round 0 is the dense fallback at full n * 4d cost
+    let dense_per_round = (nodes * 4 * dim) as u64;
+    assert_eq!(recs[0].downlink_bytes, dense_per_round);
+    // steady state (last 10 rounds): every round under 25% of dense
+    for r in &recs[20..] {
+        assert!(
+            r.downlink_bytes > 0,
+            "round {}: downlink must be measured, not assumed",
+            r.round
+        );
+        assert!(
+            4 * r.downlink_bytes < dense_per_round,
+            "round {}: downlink {} >= 25% of dense {}",
+            r.round,
+            r.downlink_bytes,
+            dense_per_round
+        );
+    }
+    // and the run-level measured ratio agrees
+    assert!(res.metrics.downlink_compression_ratio(20) > 0.75);
 }

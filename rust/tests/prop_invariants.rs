@@ -397,3 +397,130 @@ fn prop_select_top_r_magnitudes_dominate_rest() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Decode robustness: arbitrary and corrupted payloads must produce errors,
+// never panics — and with an expected dimension, never allocations past it.
+// Covers the bounded decode path the transport uses (leader uplink and the
+// delta downlink both decode with `decode_expecting`).
+// ---------------------------------------------------------------------------
+
+/// Invariants any successful decode must uphold, whatever the input bytes.
+fn assert_decoded_invariants(sv: &SparseVec, expected_dim: Option<usize>) -> Result<(), String> {
+    if let Some(d) = expected_dim {
+        prop_assert!(sv.dim == d, "decoded dim {} != expected {d}", sv.dim);
+        prop_assert!(sv.nnz() <= d, "nnz {} past expected dim {d}", sv.nnz());
+    }
+    prop_assert!(
+        sv.idx.len() == sv.val.len(),
+        "idx/val length skew: {} vs {}",
+        sv.idx.len(),
+        sv.val.len()
+    );
+    prop_assert!(
+        sv.idx.iter().all(|&i| (i as usize) < sv.dim),
+        "decoded index out of range"
+    );
+    prop_assert!(
+        sv.idx.windows(2).all(|w| w[0] < w[1]),
+        "decoded indices not sorted unique"
+    );
+    Ok(())
+}
+
+#[test]
+fn prop_decode_random_garbage_errors_never_panics() {
+    check("decode-garbage", default_cases() * 4, |rng| {
+        let expected_dim = 1 + rng.index(10_000);
+        let len = rng.index(512);
+        let mut buf: Vec<u8> = (0..len).map(|_| rng.index(256) as u8).collect();
+        // half the cases get a valid magic so the parser goes deeper than
+        // the first two bytes
+        if rng.bernoulli(0.5) && buf.len() >= 2 {
+            buf[0] = 0x54;
+            buf[1] = 0x52;
+        }
+        let mut sv = SparseVec::default();
+        match codec::decode_expecting(&buf, Some(expected_dim), &mut sv) {
+            Err(_) => {}
+            Ok(()) => assert_decoded_invariants(&sv, Some(expected_dim))?,
+        }
+        // the unchecked-dim entry point must also never panic, and is
+        // still bounded by the buffer it was given
+        let mut sv2 = SparseVec::default();
+        if codec::decode(&buf, &mut sv2).is_ok() {
+            assert_decoded_invariants(&sv2, None)?;
+            prop_assert!(
+                sv2.nnz() * 2 <= buf.len(),
+                "claimed nnz {} not backed by {} payload bytes",
+                sv2.nnz(),
+                buf.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_decode_bitflipped_frames_error_or_stay_sane() {
+    check("decode-bitflip", default_cases() * 2, |rng| {
+        let dim = 1 + rng.index(50_000);
+        let nnz = rng.index(dim.min(500) + 1);
+        let mut idx = rng.sample_indices(dim, nnz);
+        idx.sort_unstable();
+        let sv = SparseVec {
+            dim,
+            idx: idx.iter().map(|&i| i as u32).collect(),
+            val: (0..nnz).map(|_| rng.normal_f32(0.0, 5.0)).collect(),
+        };
+        let indices = if rng.bernoulli(0.5) {
+            IndexFormat::FixedWidth
+        } else {
+            IndexFormat::DeltaVarint
+        };
+        let values = if rng.bernoulli(0.5) { ValueFormat::F32 } else { ValueFormat::Bf16 };
+        let mut buf = Vec::new();
+        codec::encode(&sv, CodecConfig { values, indices }, &mut buf);
+        // flip 1..=4 random bits anywhere in the frame
+        for _ in 0..1 + rng.index(4) {
+            let bit = rng.index(buf.len() * 8);
+            buf[bit / 8] ^= 1 << (bit % 8);
+        }
+        let mut back = SparseVec::default();
+        match codec::decode_expecting(&buf, Some(dim), &mut back) {
+            // a flip in the values region (or one that cancels out) can
+            // still decode; it must just never violate the structural
+            // invariants or panic
+            Ok(()) => assert_decoded_invariants(&back, Some(dim))?,
+            Err(_) => {}
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_truncated_frames_error() {
+    check("decode-truncated", default_cases(), |rng| {
+        let dim = 1 + rng.index(20_000);
+        let nnz = 1 + rng.index(dim.min(300));
+        let mut idx = rng.sample_indices(dim, nnz);
+        idx.sort_unstable();
+        let sv = SparseVec {
+            dim,
+            idx: idx.iter().map(|&i| i as u32).collect(),
+            val: vec![1.0; nnz],
+        };
+        let mut buf = Vec::new();
+        codec::encode(&sv, CodecConfig::default(), &mut buf);
+        // any strict prefix must fail (the values tail backs the claimed
+        // nnz, so dropping bytes starves either indices or values)
+        let cut = rng.index(buf.len());
+        let mut back = SparseVec::default();
+        prop_assert!(
+            codec::decode_expecting(&buf[..cut], Some(dim), &mut back).is_err(),
+            "prefix of {cut}/{} bytes decoded",
+            buf.len()
+        );
+        Ok(())
+    });
+}
