@@ -1,9 +1,18 @@
-//! Leader-side aggregation benchmark: decode n worker messages and
-//! average into the dense update buffer, plus the optimizer step —
-//! everything the leader does per round except the broadcast.
+//! Leader-side aggregation benchmark: everything the leader does per round
+//! except the broadcast, in both aggregation domains:
+//!
+//! * dense reference — zero an O(d) accumulator, decode n messages,
+//!   scatter-add, dense optimizer step (the pre-engine path);
+//! * sparse merge — decode n messages, k-way merge into the union
+//!   `SparseVec`, sparse SGD step (the RoundEngine path for plain SGD).
+//!
+//! The merge is gated against the dense reference: at the paper's regime
+//! (k/d ≤ 0.01, n ≥ 4, d ≥ 10^5) `decode+merge` must beat `decode+average`
+//! or the bench aborts — run by CI in quick mode.
 
+use rtopk::compress::aggregate::merge_scaled_into;
 use rtopk::comms::codec::{decode, encode, CodecConfig};
-use rtopk::optim::{MomentumSgd, Optimizer};
+use rtopk::optim::{MomentumSgd, Optimizer, Sgd};
 use rtopk::sparsify::SparseVec;
 use rtopk::util::bench::{bb, Bench};
 use rtopk::util::rng::Rng;
@@ -12,54 +21,110 @@ fn main() {
     let mut bench = Bench::new("aggregation");
     let mut rng = Rng::new(0);
     let n = 5;
+    let mut gates: Vec<(String, f64)> = Vec::new();
 
     for &d in &[100_000usize, 1_000_000] {
-        let k = d / 1000;
-        // pre-encode n messages
-        let messages: Vec<Vec<u8>> = (0..n)
-            .map(|_| {
-                let mut idx = rng.sample_indices(d, k);
-                idx.sort_unstable();
-                let sv = SparseVec {
-                    dim: d,
-                    idx: idx.iter().map(|&i| i as u32).collect(),
-                    val: (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
-                };
-                let mut buf = Vec::new();
-                encode(&sv, CodecConfig::default(), &mut buf);
-                buf
-            })
-            .collect();
+        // k/d = 0.001 and 0.01 — the paper's operating band
+        for &k in &[d / 1000, d / 100] {
+            // pre-encode n messages
+            let messages: Vec<Vec<u8>> = (0..n)
+                .map(|_| {
+                    let mut idx = rng.sample_indices(d, k);
+                    idx.sort_unstable();
+                    let sv = SparseVec {
+                        dim: d,
+                        idx: idx.iter().map(|&i| i as u32).collect(),
+                        val: (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                    };
+                    let mut buf = Vec::new();
+                    encode(&sv, CodecConfig::default(), &mut buf);
+                    buf
+                })
+                .collect();
 
-        let mut agg = vec![0.0f32; d];
-        let mut sparse = SparseVec::default();
-        bench.run_elems(&format!("decode+average/n={n}/d={d}/k={k}"), Some(n * k), || {
-            agg.iter_mut().for_each(|a| *a = 0.0);
-            for msg in &messages {
-                decode(msg, &mut sparse).unwrap();
-                sparse.add_scaled_into(1.0 / n as f32, &mut agg);
+            // --- dense reference: zero + decode + scatter-add ---
+            let mut agg = vec![0.0f32; d];
+            let mut sparse = SparseVec::default();
+            let dense_stats = bench
+                .run_elems(&format!("decode+average/n={n}/d={d}/k={k}"), Some(n * k), || {
+                    agg.iter_mut().for_each(|a| *a = 0.0);
+                    for msg in &messages {
+                        decode(msg, &mut sparse).unwrap();
+                        sparse.add_scaled_into(1.0 / n as f32, &mut agg);
+                    }
+                    bb(agg[0]);
+                })
+                .clone();
+
+            // --- sparse path: decode + k-way merge into the union ---
+            let mut decoded: Vec<SparseVec> = (0..n).map(|_| SparseVec::default()).collect();
+            let mut merged = SparseVec::default();
+            let merge_stats = bench
+                .run_elems(&format!("decode+merge/n={n}/d={d}/k={k}"), Some(n * k), || {
+                    for (sv, msg) in decoded.iter_mut().zip(&messages) {
+                        decode(msg, sv).unwrap();
+                    }
+                    merge_scaled_into(&decoded, 1.0 / n as f32, d, &mut merged);
+                    bb(merged.nnz());
+                })
+                .clone();
+            gates.push((format!("d={d}/k={k}"), dense_stats.median_ns / merge_stats.median_ns));
+
+            if k == d / 1000 {
+                // optimizer step comparison at the sparse regime: dense
+                // momentum (O(d), state forces it) vs sparse SGD (O(union))
+                let mut params = vec![0.0f32; d];
+                let mut opt = MomentumSgd::new(d, 0.1, 0.9);
+                bench.run_elems(&format!("optimizer/momentum-dense/d={d}"), Some(d), || {
+                    opt.step(&mut params, &agg);
+                    bb(params[0]);
+                });
+                let mut params_s = vec![0.0f32; d];
+                let mut opt_s = Sgd::new(0.1);
+                bench.run_elems(
+                    &format!("optimizer/sgd-sparse/d={d}/union={}", merged.nnz()),
+                    Some(merged.nnz()),
+                    || {
+                        assert!(opt_s.step_sparse(&mut params_s, &merged));
+                        bb(params_s[0]);
+                    },
+                );
+
+                // the full leader round body, both domains
+                let mut params2 = vec![0.0f32; d];
+                let mut opt2 = MomentumSgd::new(d, 0.1, 0.9);
+                bench.run_elems(&format!("leader-round/dense/n={n}/d={d}/k={k}"), Some(d), || {
+                    agg.iter_mut().for_each(|a| *a = 0.0);
+                    for msg in &messages {
+                        decode(msg, &mut sparse).unwrap();
+                        sparse.add_scaled_into(1.0 / n as f32, &mut agg);
+                    }
+                    opt2.step(&mut params2, &agg);
+                    bb(params2[0]);
+                });
+                let mut params3 = vec![0.0f32; d];
+                let mut opt3 = Sgd::new(0.1);
+                bench.run_elems(&format!("leader-round/sparse/n={n}/d={d}/k={k}"), Some(d), || {
+                    for (sv, msg) in decoded.iter_mut().zip(&messages) {
+                        decode(msg, sv).unwrap();
+                    }
+                    merge_scaled_into(&decoded, 1.0 / n as f32, d, &mut merged);
+                    opt3.step_sparse(&mut params3, &merged);
+                    bb(params3[0]);
+                });
             }
-            bb(agg[0]);
-        });
-
-        let mut params = vec![0.0f32; d];
-        let mut opt = MomentumSgd::new(d, 0.1, 0.9);
-        bench.run_elems(&format!("optimizer/momentum/d={d}"), Some(d), || {
-            opt.step(&mut params, &agg);
-            bb(params[0]);
-        });
-
-        // the full leader round body
-        let mut params2 = vec![0.0f32; d];
-        let mut opt2 = MomentumSgd::new(d, 0.1, 0.9);
-        bench.run_elems(&format!("leader-round/n={n}/d={d}/k={k}"), Some(d), || {
-            agg.iter_mut().for_each(|a| *a = 0.0);
-            for msg in &messages {
-                decode(msg, &mut sparse).unwrap();
-                sparse.add_scaled_into(1.0 / n as f32, &mut agg);
-            }
-            opt2.step(&mut params2, &agg);
-            bb(params2[0]);
-        });
+        }
     }
+
+    println!("\n-- merge-vs-dense aggregation gate (speedup = dense/merge median) --");
+    let mut failed = false;
+    for (label, speedup) in &gates {
+        let ok = *speedup > 1.0;
+        failed |= !ok;
+        println!("gate {label}: {speedup:.2}x {}", if ok { "PASS" } else { "FAIL" });
+    }
+    assert!(
+        !failed,
+        "sparse k-way merge must beat the dense decode+add reference at k/d <= 0.01, n >= 4, d >= 1e5"
+    );
 }

@@ -6,35 +6,24 @@
 //! sparsification machinery must cost far less than the gradient compute
 //! it saves communication for.
 
-use std::sync::Arc;
 use std::time::Instant;
 
-use rtopk::coordinator::{self, OptimKind, TrainConfig, WorkerFactory, WorkerSetup};
+use rtopk::coordinator::{self, mock_worker_factory, OptimKind, TrainConfig, WorkerFactory};
 use rtopk::optim::LrSchedule;
-use rtopk::runtime::{Batch, MockModel};
 use rtopk::util::bench::Bench;
 
 fn mock_factory(dim: usize) -> WorkerFactory {
-    Arc::new(move |node| {
-        let mut counter = node as u64 * 1_000_000;
-        Ok(WorkerSetup {
-            runtime: Box::new(MockModel::new(dim, 0.05, 42)),
-            next_batch: Box::new(move |_rng| {
-                counter += 1;
-                Batch::Seed(counter)
-            }),
-            batches_per_epoch: 1_000_000, // irrelevant here
-        })
-    })
+    mock_worker_factory(dim, 0.05, 1_000_000) // batches_per_epoch irrelevant here
 }
 
-fn run_rounds(dim: usize, pipeline: &str, compression: f64, rounds: u64) -> f64 {
+fn run_rounds(dim: usize, pipeline: &str, compression: f64, rounds: u64, gather: &str) -> f64 {
     let mut cfg = TrainConfig::image_spec(5, pipeline, compression).unwrap();
     cfg.rounds = rounds;
     cfg.warmup_epochs = 0.0;
     cfg.optim = OptimKind::Sgd { clip: None };
     cfg.lr = LrSchedule::constant(0.1);
     cfg.eval_every = rounds + 1;
+    cfg.set_gather(gather).unwrap();
     let t0 = Instant::now();
     let res = coordinator::run(
         &cfg,
@@ -54,6 +43,8 @@ fn main() {
     let rounds = if quick { 5 } else { 20 };
     println!("(ms per round, 5 nodes, MockModel gradients)");
     for &dim in &[100_000usize, 1_000_000] {
+        // plain SGD drives the engine's sparse aggregation + sparse step on
+        // every sparsified row; `baseline` exercises the dense fallback
         for (pipeline, compression) in [
             ("baseline", 0.0),
             ("topk", 0.999),
@@ -61,11 +52,15 @@ fn main() {
             ("rtopk", 0.999),
             ("rtopk|bf16|delta", 0.999),
         ] {
-            let ms = run_rounds(dim, pipeline, compression, rounds);
+            let ms = run_rounds(dim, pipeline, compression, rounds, "full");
             println!(
                 "round/{pipeline}@{:.1}%/d={dim}: {ms:9.3} ms/round",
                 100.0 * compression
             );
         }
+        // a gather-policy swap is one config string — the round cost must
+        // stay in the same regime when every worker is healthy
+        let ms = run_rounds(dim, "rtopk", 0.999, rounds, "quorum:m=4,timeout_ms=2");
+        println!("round/rtopk@99.9%+quorum:m=4/d={dim}: {ms:9.3} ms/round");
     }
 }

@@ -15,6 +15,7 @@ const TAG_UPDATE: u8 = 2;
 const TAG_SHUTDOWN: u8 = 3;
 const TAG_DELTA: u8 = 4;
 const TAG_RESYNC: u8 = 5;
+const TAG_FAILED: u8 = 6;
 
 /// Upper bound on any single frame's variable-length body. A corrupt or
 /// hostile length prefix must fail fast with an error instead of driving a
@@ -67,6 +68,11 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
         }
         Message::ResyncRequest { worker } => {
             w.write_all(&[TAG_RESYNC])?;
+            w.write_all(&0u64.to_le_bytes())?;
+            w.write_all(&(*worker as u32).to_le_bytes())?;
+        }
+        Message::WorkerFailed { worker } => {
+            w.write_all(&[TAG_FAILED])?;
             w.write_all(&0u64.to_le_bytes())?;
             w.write_all(&(*worker as u32).to_le_bytes())?;
         }
@@ -132,6 +138,11 @@ pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
             r.read_exact(&mut w_b)?;
             Ok(Message::ResyncRequest { worker: u32::from_le_bytes(w_b) as usize })
         }
+        TAG_FAILED => {
+            let mut w_b = [0u8; 4];
+            r.read_exact(&mut w_b)?;
+            Ok(Message::WorkerFailed { worker: u32::from_le_bytes(w_b) as usize })
+        }
         TAG_SHUTDOWN => Ok(Message::Shutdown),
         t => anyhow::bail!("unknown message tag {t}"),
     }
@@ -180,6 +191,7 @@ mod tests {
             },
             Message::ParamsDelta { round: 9, payload: vec![9u8, 8, 7].into() },
             Message::ResyncRequest { worker: 2 },
+            Message::WorkerFailed { worker: 1 },
             Message::Shutdown,
         ];
         for msg in msgs {
@@ -392,6 +404,32 @@ pub fn tcp_star(n: usize) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoint
 #[cfg(test)]
 mod bridge_tests {
     use super::*;
+
+    #[test]
+    fn tcp_bridge_supports_recv_timeout() {
+        // The quorum gather's drain deadline must work over the TCP wire
+        // exactly like in-process: the bridge forwards socket reads into
+        // the leader's channel, so recv_timeout observes them.
+        let (leader, workers) = tcp_star(1).unwrap();
+        assert!(leader
+            .recv_timeout(std::time::Duration::from_millis(5))
+            .unwrap()
+            .is_none());
+        workers[0]
+            .to_leader
+            .send(Message::ResyncRequest { worker: 0 })
+            .unwrap();
+        match leader
+            .recv_timeout(std::time::Duration::from_millis(2000))
+            .unwrap()
+        {
+            Some(Message::ResyncRequest { worker: 0 }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        for tx in &leader.to_workers {
+            tx.send(Message::Shutdown).unwrap();
+        }
+    }
 
     #[test]
     fn tcp_star_roundtrip() {

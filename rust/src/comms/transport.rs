@@ -15,8 +15,9 @@
 //! apply the same convention so their measured bytes agree.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Messages exchanged between leader and workers each round.
 #[derive(Debug, Clone, PartialEq)]
@@ -42,6 +43,12 @@ pub enum Message {
     /// Worker -> leader: "I cannot apply a delta (no base params); unicast
     /// me a dense `Params` frame for this round." Control-plane only.
     ResyncRequest { worker: usize },
+    /// Worker -> leader: this worker hit a fatal error and is exiting.
+    /// Without it a FullSync gather would block forever on a quorum that
+    /// can never complete (the other workers keep the channel open); the
+    /// leader aborts the round instead and the cluster surfaces the
+    /// worker's own error. Control-plane only.
+    WorkerFailed { worker: usize },
     /// Leader -> workers: shut down cleanly.
     Shutdown,
 }
@@ -57,6 +64,7 @@ impl Message {
             Message::ParamsDelta { payload, .. } => payload.len() as u64,
             Message::SparseUpdate { payload, .. } => payload.len() as u64,
             Message::ResyncRequest { .. } => 0,
+            Message::WorkerFailed { .. } => 0,
             Message::Shutdown => 0,
         }
     }
@@ -81,6 +89,9 @@ impl LinkStats {
 }
 
 /// A counted sender: records bytes on the shared link stats, then sends.
+/// Clones share the same channel and counters (the cluster keeps one
+/// aside per worker thread to report fatal worker errors).
+#[derive(Clone)]
 pub struct CountedSender {
     tx: Sender<Message>,
     stats: Arc<LinkStats>,
@@ -126,6 +137,27 @@ pub struct LeaderEndpoints {
 }
 
 impl LeaderEndpoints {
+    /// Block for the next worker→leader message. Errors when every worker
+    /// sender has hung up.
+    pub fn recv(&self) -> anyhow::Result<Message> {
+        self.from_workers
+            .recv()
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))
+    }
+
+    /// Wait up to `timeout` for the next worker→leader message; `Ok(None)`
+    /// on timeout. Both transports support this: the in-process star is a
+    /// channel, and the TCP bridge forwards socket reads into the same
+    /// channel — so a quorum gather's drain deadline behaves identically
+    /// on either wire.
+    pub fn recv_timeout(&self, timeout: Duration) -> anyhow::Result<Option<Message>> {
+        match self.from_workers.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!("worker channel closed")),
+        }
+    }
+
     /// Send one shared encoded frame to every worker, recording its bytes
     /// once on the broadcast counter — the encode-once broadcast path.
     pub fn broadcast_shared(&self, round: u64, payload: Arc<[u8]>) -> anyhow::Result<()> {
@@ -270,6 +302,7 @@ mod tests {
     fn shutdown_costs_nothing() {
         assert_eq!(Message::Shutdown.wire_bytes(), 0);
         assert_eq!(Message::ResyncRequest { worker: 3 }.wire_bytes(), 0);
+        assert_eq!(Message::WorkerFailed { worker: 1 }.wire_bytes(), 0);
     }
 
     #[test]
@@ -297,6 +330,28 @@ mod tests {
             .unwrap();
         assert_eq!(leader.down_stats[1].snapshot(), (1, 40));
         assert_eq!(leader.downlink_total(), (2, 104));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (leader, workers) = star(1);
+        // empty queue: timeout yields Ok(None), not an error
+        assert!(leader
+            .recv_timeout(Duration::from_millis(5))
+            .unwrap()
+            .is_none());
+        workers[0]
+            .to_leader
+            .send(Message::ResyncRequest { worker: 0 })
+            .unwrap();
+        match leader.recv_timeout(Duration::from_millis(100)).unwrap() {
+            Some(Message::ResyncRequest { worker: 0 }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // all senders gone: disconnected is a hard error on both recvs
+        drop(workers);
+        assert!(leader.recv_timeout(Duration::from_millis(1)).is_err());
+        assert!(leader.recv().is_err());
     }
 
     #[test]

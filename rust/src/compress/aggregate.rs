@@ -1,0 +1,258 @@
+//! Sparse-domain aggregation: the leader's gather→average step without the
+//! dense detour.
+//!
+//! Algorithm 1 averages n sparse updates whose union support is far below d
+//! in the paper's operating regime (k/d ≤ 1%, and Shi et al. show the union
+//! of n workers' top-k picks grows far slower than n·k). The pre-engine
+//! leader nonetheless paid O(d) per round: zero a dense accumulator, decode
+//! each payload, scatter-add. This module k-way-merges the n *sorted*
+//! decoded payloads directly into one union [`SparseVec`], which then
+//! drives the optimizer step, the uplink-entry accounting, and the
+//! delta-downlink construction — all in O(Σ nnz_i) instead of O(d).
+//!
+//! Bitwise contract: for every union coordinate the per-worker
+//! contributions are folded in worker-id order starting from 0.0, which is
+//! the exact float-op sequence the dense reference
+//! (`SparseVec::add_scaled_into` per worker, in worker order, into a
+//! zeroed accumulator) performs for that coordinate. Scattering the merged
+//! vector into a zeroed dense buffer therefore reproduces the dense
+//! accumulator bit for bit — the engine's dense fallback (momentum, or
+//! near-dense warm-up rounds) relies on this.
+
+use crate::comms::codec::CodecError;
+use crate::sparsify::SparseVec;
+
+use super::GradientCompressor;
+
+/// Merge sorted sparse inputs into `out`: for each union coordinate,
+/// `out[i] = Σ_w scale * inputs[w][i]`, folded in input order. Inputs must
+/// have strictly increasing indices (the codec enforces this on decode).
+///
+/// Cost: O(n · |union|) cursor probes — a linear min-scan over the n input
+/// heads per emitted coordinate, deliberately chosen over a loser-tree /
+/// heap k-way merge. At the coordinator's n (≤ ~16 worker threads) the
+/// branch-free scan over L1-resident heads beats heap bookkeeping, and the
+/// worker-id fold order that the bitwise contract requires falls out for
+/// free (a heap pops equal keys in arbitrary order and would need a
+/// per-coordinate regroup-and-sort). If n ever grows past ~32, swap the
+/// scan for a tournament tree *inside this function* — the contract to
+/// preserve is only the per-coordinate fold order.
+pub fn merge_scaled_into(inputs: &[SparseVec], scale: f32, dim: usize, out: &mut SparseVec) {
+    out.clear(dim);
+    if inputs.is_empty() {
+        return;
+    }
+    for sv in inputs {
+        sv.debug_validate();
+    }
+    let mut cursors = vec![0usize; inputs.len()];
+    loop {
+        // Lowest pending index across all inputs, plus how many inputs sit
+        // on it (the top-k regime is overlap-poor, so `hits == 1` is the
+        // hot case and skips the second pass entirely).
+        let mut next = u32::MAX;
+        let mut any = false;
+        let mut hits = 0usize;
+        let mut first = 0usize;
+        for (w, sv) in inputs.iter().enumerate() {
+            if let Some(&i) = sv.idx.get(cursors[w]) {
+                if !any || i < next {
+                    next = i;
+                    any = true;
+                    hits = 1;
+                    first = w;
+                } else if i == next {
+                    hits += 1;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+        if hits == 1 {
+            let c = cursors[first];
+            // the explicit `0.0 +` mirrors the dense accumulator's fold
+            // exactly (it maps a lone -0.0 contribution to +0.0, like
+            // `acc += x` from a zeroed buffer does)
+            out.push(next, 0.0f32 + scale * inputs[first].val[c]);
+            cursors[first] = c + 1;
+            continue;
+        }
+        // Fold the overlapping contributions for `next` in worker-id order
+        // (bitwise contract above).
+        let mut acc = 0.0f32;
+        for (w, sv) in inputs.iter().enumerate() {
+            let c = cursors[w];
+            if sv.idx.get(c) == Some(&next) {
+                acc += scale * sv.val[c];
+                cursors[w] = c + 1;
+            }
+        }
+        out.push(next, acc);
+    }
+}
+
+/// Reusable leader-side aggregation state: per-worker decode buffers plus
+/// the merged union. In steady state (stable nnz per worker) a round
+/// allocates nothing beyond buffer growth.
+#[derive(Debug, Default)]
+pub struct SparseAggregator {
+    decoded: Vec<SparseVec>,
+    used: usize,
+    /// The union aggregate of the last [`Self::merge_scaled`] call.
+    pub merged: SparseVec,
+}
+
+impl SparseAggregator {
+    pub fn new() -> Self {
+        SparseAggregator::default()
+    }
+
+    /// Start a new round: forget the previous round's decoded inputs (their
+    /// buffers are retained for reuse). `merged` is left untouched — the
+    /// engine reads the *previous* round's union during its broadcast phase.
+    pub fn begin(&mut self) {
+        self.used = 0;
+    }
+
+    /// Decode one worker payload into the next reusable slot; returns its
+    /// nnz. Call in worker-id order so the merge's fold order matches the
+    /// dense reference.
+    pub fn decode_payload(&mut self, payload: &[u8], dim: usize) -> Result<usize, CodecError> {
+        if self.used == self.decoded.len() {
+            self.decoded.push(SparseVec::default());
+        }
+        let slot = &mut self.decoded[self.used];
+        GradientCompressor::decompress_expecting(payload, dim, slot)?;
+        self.used += 1;
+        Ok(slot.nnz())
+    }
+
+    /// The payloads decoded since [`Self::begin`], in decode order.
+    pub fn decoded(&self) -> &[SparseVec] {
+        &self.decoded[..self.used]
+    }
+
+    /// K-way merge the decoded payloads into [`Self::merged`].
+    pub fn merge_scaled(&mut self, scale: f32, dim: usize) -> &SparseVec {
+        merge_scaled_into(&self.decoded[..self.used], scale, dim, &mut self.merged);
+        &self.merged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::codec::{self, CodecConfig};
+    use crate::util::rng::Rng;
+
+    fn random_sparse(dim: usize, k: usize, rng: &mut Rng) -> SparseVec {
+        let mut idx = rng.sample_indices(dim, k);
+        idx.sort_unstable();
+        SparseVec {
+            dim,
+            idx: idx.iter().map(|&i| i as u32).collect(),
+            val: (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        }
+    }
+
+    /// The dense reference the merge must reproduce bitwise.
+    fn dense_reference(inputs: &[SparseVec], scale: f32, dim: usize) -> Vec<f32> {
+        let mut agg = vec![0.0f32; dim];
+        for sv in inputs {
+            sv.add_scaled_into(scale, &mut agg);
+        }
+        agg
+    }
+
+    #[test]
+    fn merge_matches_dense_reference_bitwise() {
+        let mut rng = Rng::new(7);
+        for &(n, dim, k) in &[(1usize, 64usize, 8usize), (4, 512, 32), (5, 1000, 100), (3, 100, 90)]
+        {
+            let inputs: Vec<SparseVec> =
+                (0..n).map(|_| random_sparse(dim, k, &mut rng)).collect();
+            let scale = 1.0 / n as f32;
+            let mut merged = SparseVec::default();
+            merge_scaled_into(&inputs, scale, dim, &mut merged);
+            merged.debug_validate();
+            let dense = dense_reference(&inputs, scale, dim);
+            let scattered = merged.to_dense();
+            for j in 0..dim {
+                assert_eq!(
+                    scattered[j].to_bits(),
+                    dense[j].to_bits(),
+                    "coordinate {j} (n={n}, dim={dim}, k={k})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_union_is_sorted_and_minimal() {
+        // Fully overlapping inputs collapse to one entry per coordinate;
+        // disjoint inputs concatenate.
+        let a = SparseVec { dim: 10, idx: vec![1, 3, 5], val: vec![1.0, 1.0, 1.0] };
+        let b = SparseVec { dim: 10, idx: vec![1, 3, 5], val: vec![2.0, 2.0, 2.0] };
+        let mut out = SparseVec::default();
+        merge_scaled_into(&[a.clone(), b.clone()], 1.0, 10, &mut out);
+        assert_eq!(out.idx, vec![1, 3, 5]);
+        assert_eq!(out.val, vec![3.0, 3.0, 3.0]);
+        let c = SparseVec { dim: 10, idx: vec![0, 2], val: vec![4.0, 4.0] };
+        merge_scaled_into(&[a, c], 1.0, 10, &mut out);
+        assert_eq!(out.idx, vec![0, 1, 2, 3, 5]);
+    }
+
+    #[test]
+    fn merge_handles_empty_input_sets() {
+        let mut out = SparseVec { dim: 3, idx: vec![0], val: vec![1.0] };
+        merge_scaled_into(&[], 1.0, 8, &mut out);
+        assert_eq!(out.dim, 8);
+        assert!(out.is_empty());
+        let empty = SparseVec { dim: 8, idx: vec![], val: vec![] };
+        let a = SparseVec { dim: 8, idx: vec![4], val: vec![2.0] };
+        merge_scaled_into(&[empty, a], 0.5, 8, &mut out);
+        assert_eq!(out.idx, vec![4]);
+        assert_eq!(out.val, vec![1.0]);
+    }
+
+    #[test]
+    fn aggregator_decodes_and_merges_round_trip() {
+        let dim = 256;
+        let mut rng = Rng::new(11);
+        let inputs: Vec<SparseVec> = (0..4).map(|_| random_sparse(dim, 16, &mut rng)).collect();
+        let payloads: Vec<Vec<u8>> = inputs
+            .iter()
+            .map(|sv| {
+                let mut buf = Vec::new();
+                codec::encode(sv, CodecConfig::default(), &mut buf);
+                buf
+            })
+            .collect();
+        let mut agg = SparseAggregator::new();
+        for round in 0..3 {
+            agg.begin();
+            let mut coords = 0;
+            for p in &payloads {
+                coords += agg.decode_payload(p, dim).unwrap();
+            }
+            assert_eq!(coords, 4 * 16);
+            assert_eq!(agg.decoded().len(), 4);
+            let merged = agg.merge_scaled(0.25, dim).clone();
+            let dense = dense_reference(&inputs, 0.25, dim);
+            assert_eq!(merged.to_dense(), dense, "round {round}");
+        }
+    }
+
+    #[test]
+    fn aggregator_rejects_wrong_dim_payload() {
+        let sv = SparseVec { dim: 16, idx: vec![2], val: vec![1.0] };
+        let mut buf = Vec::new();
+        codec::encode(&sv, CodecConfig::default(), &mut buf);
+        let mut agg = SparseAggregator::new();
+        agg.begin();
+        assert!(agg.decode_payload(&buf, 32).is_err());
+        // a failed decode does not advance the slot count
+        assert_eq!(agg.decoded().len(), 0);
+    }
+}

@@ -13,6 +13,9 @@
 //!   bit-packing, with an automatic bitmap layout for dense rounds).
 //! * [`PipelineSpec`] — the whole pipeline as one parseable string, e.g.
 //!   `"rtopk:r=4k,k=256|bf16|delta"` ([`spec`]).
+//! * [`SparseAggregator`] ([`aggregate`]) — the receive side's dual: k-way
+//!   merge of n decoded sparse updates into one union `SparseVec`, bitwise
+//!   equal to the dense scatter-add reference (the leader's hot path).
 //! * [`GradientCompressor`] — the driver: a single
 //!   `compress(&[f32], &mut Rng, &mut Vec<u8>) -> CompressStats` that fuses
 //!   sparsification and bit-packing (the selection's survivor list feeds
@@ -23,9 +26,11 @@
 //! thin adapter over [`Select`] for operator-level callers (error-feedback
 //! unit tests, the estimation layer's simulators, examples).
 
+pub mod aggregate;
 pub mod select;
 pub mod spec;
 
+pub use aggregate::SparseAggregator;
 pub use select::{Select, SelectScratch, Stage};
 pub use spec::{PipelineSpec, Quant, StageSpec};
 

@@ -9,8 +9,9 @@
 use std::sync::Arc;
 
 use crate::comms::tcp::tcp_star;
-use crate::comms::transport::star;
+use crate::comms::transport::{star, CountedSender, Message};
 use crate::metrics::RunMetrics;
+use crate::runtime::{Batch, MockModel};
 use crate::util::rng::Rng;
 
 use super::config::TrainConfig;
@@ -19,6 +20,42 @@ use super::worker::{run_worker, WorkerSetup};
 
 /// Builds a worker's runtime + batcher inside the worker thread.
 pub type WorkerFactory = Arc<dyn Fn(usize) -> anyhow::Result<WorkerSetup> + Send + Sync>;
+
+/// A ready-made [`WorkerFactory`] over [`MockModel`] — benches, the figS1
+/// straggler sweep, and the cluster/integration tests share it so the
+/// mock-worker convention (shared target seed 42, per-node batch-counter
+/// spacing of 1e6) has exactly one home.
+pub fn mock_worker_factory(dim: usize, noise: f32, batches_per_epoch: usize) -> WorkerFactory {
+    Arc::new(move |node| {
+        let mut counter = node as u64 * 1_000_000;
+        Ok(WorkerSetup {
+            runtime: Box::new(MockModel::new(dim, noise, 42)),
+            next_batch: Box::new(move |_rng| {
+                counter += 1;
+                Batch::Seed(counter)
+            }),
+            batches_per_epoch,
+        })
+    })
+}
+
+/// Reports [`Message::WorkerFailed`] on drop unless disarmed: covers both
+/// the `Err` return path AND a panicking worker body (the unwind drops the
+/// guard), so the leader's gather aborts instead of waiting forever on a
+/// worker that will never send its update.
+struct FailureGuard {
+    tx: CountedSender,
+    worker: usize,
+    armed: bool,
+}
+
+impl Drop for FailureGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.tx.send(Message::WorkerFailed { worker: self.worker });
+        }
+    }
+}
 
 /// Builds the leader's evaluator (runs in the leader thread).
 pub type EvalFactory = Box<dyn FnOnce() -> anyhow::Result<Option<Evaluator>>>;
@@ -65,33 +102,65 @@ pub fn run_with(
     };
     let mut root_rng = Rng::new(cfg.seed);
 
-    // Probe batches_per_epoch once (worker 0's shard defines the epoch
-    // clock; shards are balanced so they all agree up to rounding).
-    let probe = worker_factory(0)?;
-    let batches_per_epoch = probe.batches_per_epoch;
-    drop(probe);
-
+    // Worker 0's shard defines the epoch clock (shards are balanced so
+    // they all agree up to rounding). Its thread reports
+    // `batches_per_epoch` over a one-shot channel right after building its
+    // setup — and then REUSES that setup, instead of the old probe that
+    // invoked `worker_factory(0)` on the main thread and threw the result
+    // away (double-building matters once factories load real shards; the
+    // setup itself cannot cross threads, model runtimes are not `Send`).
+    let (bpe_tx, bpe_rx) = std::sync::mpsc::channel::<usize>();
     let mut handles = Vec::with_capacity(cfg.nodes);
     for eps in worker_eps {
         let factory = worker_factory.clone();
         let cfg = cfg.clone();
         let rng = root_rng.fork(1_000 + eps.id as u64);
+        let probe_tx = if eps.id == 0 { Some(bpe_tx.clone()) } else { None };
         handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
-            let setup = factory(eps.id)?;
-            run_worker(eps, setup, &cfg, rng)
+            // the guard's sender is kept aside so a fatal worker error is
+            // reported even after `run_worker` consumed the endpoints, and
+            // even if the worker body panics instead of returning Err
+            let mut guard =
+                FailureGuard { tx: eps.to_leader.clone(), worker: eps.id, armed: true };
+            let result = (move || -> anyhow::Result<()> {
+                let setup = factory(eps.id)?;
+                if let Some(tx) = probe_tx {
+                    let _ = tx.send(setup.batches_per_epoch);
+                }
+                run_worker(eps, setup, &cfg, rng)
+            })();
+            if result.is_ok() {
+                guard.armed = false;
+            }
+            result
         }));
     }
+    drop(bpe_tx);
 
-    let evaluator = eval_factory()?;
-    let result = run_leader(
-        &leader_eps,
-        init_params,
-        evaluator,
-        cfg,
-        run_name,
-        batches_per_epoch,
-    );
+    let result = match bpe_rx.recv() {
+        Ok(batches_per_epoch) => {
+            let evaluator = eval_factory()?;
+            run_leader(
+                &leader_eps,
+                init_params,
+                evaluator,
+                cfg,
+                run_name,
+                batches_per_epoch,
+            )
+        }
+        // worker 0 died before reporting (factory error / panic): skip the
+        // leader entirely and surface the worker error below
+        Err(_) => Err(anyhow::anyhow!("worker 0 exited before reporting batches_per_epoch")),
+    };
 
+    if result.is_err() {
+        // A leader that errored out mid-run never sent Shutdown; workers
+        // blocked on the next broadcast would make the joins below hang.
+        for tx in &leader_eps.to_workers {
+            let _ = tx.send(Message::Shutdown);
+        }
+    }
     let mut first_err: Option<anyhow::Error> = None;
     for h in handles {
         match h.join() {
@@ -104,10 +173,12 @@ pub fn run_with(
             }
         }
     }
-    let (params, metrics) = result?;
+    // a worker failure is the root cause; it outranks the leader error it
+    // usually induces (hung-up channel)
     if let Some(e) = first_err {
         return Err(e.context("worker failed"));
     }
+    let (params, metrics) = result?;
     Ok(ClusterResult { params, metrics })
 }
 
@@ -120,17 +191,7 @@ mod tests {
     use crate::sparsify::SparsifierKind;
 
     fn mock_factory(dim: usize, noise: f32) -> WorkerFactory {
-        Arc::new(move |node| {
-            let mut counter = node as u64 * 1_000_000;
-            Ok(WorkerSetup {
-                runtime: Box::new(MockModel::new(dim, noise, 42)),
-                next_batch: Box::new(move |_rng| {
-                    counter += 1;
-                    Batch::Seed(counter)
-                }),
-                batches_per_epoch: 8,
-            })
-        })
+        mock_worker_factory(dim, noise, 8)
     }
 
     fn base_cfg(method: SparsifierKind, compression: f64) -> TrainConfig {
@@ -165,19 +226,27 @@ mod tests {
     #[test]
     fn baseline_equals_singlenode_sgd_bitwise() {
         // With NoCompression, identical worker data, and plain SGD, the
-        // distributed run must equal a local simulation exactly.
+        // distributed run must equal a local simulation exactly — the
+        // pre-RoundEngine trajectory. Covered in three engine configs: the
+        // implicit FullSync default, the explicit `--gather full` spec, and
+        // the sparse-aggregation path (rTop-k-style tiny updates are k-way
+        // merged + sparse-stepped; here the baseline's dense payloads take
+        // the dense fallback, which must be bit-identical too).
         let dim = 64;
         let mut cfg = base_cfg(SparsifierKind::Baseline, 0.0);
         cfg.nodes = 2;
         cfg.rounds = 10;
-        let res = run(
-            &cfg,
-            "mock-baseline",
-            vec![0.0; dim],
-            mock_factory(dim, 0.1),
-            Box::new(|| Ok(None)),
-        )
-        .unwrap();
+        let run_cfg = |cfg: &TrainConfig| {
+            run(
+                cfg,
+                "mock-baseline",
+                vec![0.0; dim],
+                mock_factory(dim, 0.1),
+                Box::new(|| Ok(None)),
+            )
+            .unwrap()
+        };
+        let res = run_cfg(&cfg);
         // local replica: average gradient of the two mock workers
         let mut m0 = MockModel::new(dim, 0.1, 42);
         let mut params = vec![0.0f32; dim];
@@ -196,6 +265,55 @@ mod tests {
         }
         for (a, b) in res.params.iter().zip(&params) {
             assert_eq!(a, b, "distributed baseline must equal local SGD bitwise");
+        }
+        // explicit `--gather full` spec: byte-for-byte the same machinery
+        let mut cfg_full = cfg.clone();
+        cfg_full.set_gather("full").unwrap();
+        assert_eq!(run_cfg(&cfg_full).params, params);
+        // every round reports full participation and no stale drops
+        for r in &res.metrics.records {
+            assert_eq!((r.participants, r.stale_updates), (2, 0));
+        }
+        assert_eq!(res.metrics.worker_participation, vec![10, 10]);
+    }
+
+    #[test]
+    fn momentum_baseline_equals_local_replica_bitwise() {
+        // The engine's dense fallback (momentum forces it) must reproduce
+        // the classic dense-accumulator trajectory bit for bit.
+        let dim = 32;
+        let mut cfg = base_cfg(SparsifierKind::Baseline, 0.0);
+        cfg.nodes = 2;
+        cfg.rounds = 8;
+        cfg.optim = OptimKind::Momentum(0.9);
+        let res = run(
+            &cfg,
+            "mock-momentum",
+            vec![0.0; dim],
+            mock_factory(dim, 0.1),
+            Box::new(|| Ok(None)),
+        )
+        .unwrap();
+        let mut m0 = MockModel::new(dim, 0.1, 42);
+        let mut params = vec![0.0f32; dim];
+        let mut velocity = vec![0.0f32; dim];
+        let (mut c0, mut c1) = (0u64, 1_000_000u64);
+        let mut g0 = Vec::new();
+        let mut g1 = Vec::new();
+        for _ in 0..8 {
+            c0 += 1;
+            c1 += 1;
+            m0.train_step(&params, &Batch::Seed(c0), &mut g0).unwrap();
+            m0.train_step(&params, &Batch::Seed(c1), &mut g1).unwrap();
+            for (j, w) in params.iter_mut().enumerate() {
+                // the leader's dense accumulator: 0.0 + 0.5*g0 then += 0.5*g1
+                let g = 0.0 + 0.5 * g0[j] + 0.5 * g1[j];
+                velocity[j] = 0.9 * velocity[j] + g;
+                *w -= 0.3 * velocity[j];
+            }
+        }
+        for (a, b) in res.params.iter().zip(&params) {
+            assert_eq!(a, b, "momentum dense fallback must match the replica bitwise");
         }
     }
 
@@ -260,5 +378,107 @@ mod tests {
         let cfg = base_cfg(SparsifierKind::TopK, 0.9);
         let err = run(&cfg, "bad", vec![0.0; 8], factory, Box::new(|| Ok(None)));
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn single_worker_failure_errors_instead_of_hanging() {
+        // One bad worker among healthy ones: the leader's FullSync gather
+        // can never complete, and before the WorkerFailed control message
+        // this deadlocked the whole run (the healthy workers keep the
+        // channel open, so recv() blocks forever).
+        let dim = 32;
+        let factory: WorkerFactory = Arc::new(move |node| {
+            anyhow::ensure!(node != 1, "node 1 boom");
+            let mut counter = node as u64 * 1_000_000;
+            Ok(WorkerSetup {
+                runtime: Box::new(MockModel::new(dim, 0.05, 42)),
+                next_batch: Box::new(move |_rng| {
+                    counter += 1;
+                    Batch::Seed(counter)
+                }),
+                batches_per_epoch: 8,
+            })
+        });
+        let mut cfg = base_cfg(SparsifierKind::TopK, 0.9);
+        cfg.nodes = 3;
+        cfg.rounds = 5;
+        let err = match run(&cfg, "half-bad", vec![0.0; dim], factory, Box::new(|| Ok(None))) {
+            Err(e) => e,
+            Ok(_) => panic!("a failed worker must error the run, not hang it"),
+        };
+        assert!(format!("{err:#}").contains("node 1 boom"), "{err:#}");
+    }
+
+    #[test]
+    fn worker_panic_errors_instead_of_hanging() {
+        // A worker body that PANICS (not Err) must also unblock the run:
+        // the FailureGuard's drop reports WorkerFailed during the unwind.
+        let dim = 32;
+        let factory: WorkerFactory = Arc::new(move |node| {
+            if node == 2 {
+                panic!("node 2 panicked");
+            }
+            let inner = mock_worker_factory(dim, 0.05, 8);
+            inner(node)
+        });
+        let mut cfg = base_cfg(SparsifierKind::TopK, 0.9);
+        cfg.nodes = 3;
+        cfg.rounds = 5;
+        let err = run(&cfg, "panicky", vec![0.0; dim], factory, Box::new(|| Ok(None)));
+        assert!(err.is_err(), "a panicking worker must error the run, not hang it");
+    }
+
+    #[test]
+    fn worker_factory_invoked_exactly_once_per_node() {
+        // The old batches_per_epoch probe built worker 0's setup twice
+        // (once on the main thread, thrown away). The probe now rides on
+        // worker 0's own thread and the setup is reused.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let dim = 64;
+        let calls: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..3).map(|_| AtomicUsize::new(0)).collect());
+        let calls_in = calls.clone();
+        let inner = mock_worker_factory(dim, 0.05, 8);
+        let factory: WorkerFactory = Arc::new(move |node| {
+            calls_in[node].fetch_add(1, Ordering::SeqCst);
+            inner(node)
+        });
+        let mut cfg = base_cfg(SparsifierKind::TopK, 0.9);
+        cfg.nodes = 3;
+        cfg.rounds = 5;
+        let res = run(&cfg, "probe", vec![0.0; dim], factory, Box::new(|| Ok(None))).unwrap();
+        assert_eq!(res.metrics.records.len(), 5);
+        for (node, c) in calls.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "node {node} setups built");
+        }
+    }
+
+    #[test]
+    fn quorum_full_cluster_matches_fullsync_bitwise() {
+        // Quorum with m = n blocks for everyone, exactly like FullSync: no
+        // timeout ever arms, so the trajectory must be bit-identical.
+        let dim = 128;
+        let cfg_full = base_cfg(SparsifierKind::RTopK, 0.9);
+        let mut cfg_quorum = base_cfg(SparsifierKind::RTopK, 0.9);
+        cfg_quorum.set_gather("quorum:m=4,timeout_ms=50").unwrap();
+        let run_one = |cfg: &TrainConfig| {
+            run(
+                cfg,
+                "gather-eq",
+                vec![0.0; dim],
+                mock_factory(dim, 0.1),
+                Box::new(|| Ok(None)),
+            )
+            .unwrap()
+        };
+        let a = run_one(&cfg_full);
+        let b = run_one(&cfg_quorum);
+        assert_eq!(a.params, b.params);
+        for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+            assert_eq!(ra.participants, 4);
+            assert_eq!(rb.participants, 4);
+            assert_eq!(ra.stale_updates + rb.stale_updates, 0);
+        }
+        assert_eq!(b.metrics.worker_participation, vec![60; 4]);
     }
 }

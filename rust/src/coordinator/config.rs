@@ -9,6 +9,35 @@ use crate::compress::{GradientCompressor, PipelineSpec, Select};
 use crate::optim::{LrSchedule, WarmupSparsity};
 use crate::sparsify::SparsifierKind;
 
+use super::engine::GatherPolicy;
+
+/// Artificial per-round compute delay injected into one worker — the
+/// straggler simulation behind the `figS1` sweep and the quorum tests
+/// (CLI: `--straggler-sim <delay_ms>` or `<worker>:<delay_ms>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StragglerSim {
+    pub worker: usize,
+    pub delay_ms: u64,
+}
+
+impl StragglerSim {
+    /// Parse `"<delay_ms>"` (delays worker 0) or `"<worker>:<delay_ms>"`.
+    pub fn parse(s: &str) -> anyhow::Result<StragglerSim> {
+        let t = s.trim();
+        let (worker, delay) = match t.split_once(':') {
+            Some((w, d)) => (w.trim(), d.trim()),
+            None => ("0", t),
+        };
+        let worker = worker
+            .parse()
+            .map_err(|_| anyhow::anyhow!("straggler-sim: worker expects an integer, got {s:?}"))?;
+        let delay_ms = delay
+            .parse()
+            .map_err(|_| anyhow::anyhow!("straggler-sim: delay expects milliseconds, got {s:?}"))?;
+        Ok(StragglerSim { worker, delay_ms })
+    }
+}
+
 /// What one communication round means (paper §IV-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoundMode {
@@ -49,6 +78,13 @@ pub struct TrainConfig {
     /// In delta-downlink mode, re-broadcast dense params every this many
     /// rounds (0 = only round 0 and on demand). Ignored in dense mode.
     pub resync_every: u64,
+    /// How the leader's gather phase collects worker updates (CLI
+    /// `--gather full|quorum:m=...,timeout_ms=...`). The default
+    /// [`GatherPolicy::FullSync`] is bitwise-identical to the classic
+    /// synchronous loop.
+    pub gather: GatherPolicy,
+    /// Optional injected worker delay (straggler simulation).
+    pub straggler: Option<StragglerSim>,
     /// Target kept fraction k/d (compression ratio = 1 - keep_frac).
     pub keep_frac: f64,
     /// k/r for rTop-k's `auto` coupling. The paper fixes it to 1/n ("each
@@ -73,6 +109,8 @@ impl TrainConfig {
             pipeline,
             down_pipeline: None,
             resync_every: 0,
+            gather: GatherPolicy::FullSync,
+            straggler: None,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
             warmup_epochs: 5.0,
@@ -92,6 +130,8 @@ impl TrainConfig {
             pipeline,
             down_pipeline: None,
             resync_every: 0,
+            gather: GatherPolicy::FullSync,
+            straggler: None,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
             warmup_epochs: 5.0,
@@ -135,6 +175,13 @@ impl TrainConfig {
     /// baseline-selection pipeline spec such as `baseline|bf16|delta`.
     pub fn set_downlink(&mut self, s: &str) -> anyhow::Result<()> {
         self.down_pipeline = parse_downlink(s)?;
+        Ok(())
+    }
+
+    /// Set the gather policy from a flag string (the `--gather` flag):
+    /// `full` or `quorum:m=<count>[,timeout_ms=<ms>]`.
+    pub fn set_gather(&mut self, s: &str) -> anyhow::Result<()> {
+        self.gather = GatherPolicy::parse(s)?;
         Ok(())
     }
 
@@ -194,6 +241,15 @@ impl TrainConfig {
             self.subsample_ratio > 0.0 && self.subsample_ratio <= 1.0,
             "subsample_ratio must be in (0, 1]"
         );
+        self.gather.validate(self.nodes)?;
+        if let Some(st) = self.straggler {
+            anyhow::ensure!(
+                st.worker < self.nodes,
+                "straggler-sim worker {} out of range (nodes={})",
+                st.worker,
+                self.nodes
+            );
+        }
         if let Some(p) = &self.down_pipeline {
             anyhow::ensure!(
                 p.is_baseline(),
@@ -328,5 +384,39 @@ mod tests {
     fn labels() {
         let cfg = TrainConfig::lm_default(5, SparsifierKind::RTopK, 0.999);
         assert_eq!(cfg.method_label(), "rTop-k @ 99.9000%");
+    }
+
+    #[test]
+    fn gather_flag_drives_config_and_validates() {
+        let mut cfg = TrainConfig::image_default(4, SparsifierKind::RTopK, 0.99);
+        assert_eq!(cfg.gather, GatherPolicy::FullSync);
+        cfg.set_gather("quorum:m=3,timeout_ms=25").unwrap();
+        assert_eq!(cfg.gather, GatherPolicy::Quorum { quorum: 3, timeout_ms: 25 });
+        assert!(cfg.validate().is_ok());
+        // quorum larger than the cluster is a config error, not a hang
+        cfg.set_gather("quorum:m=5").unwrap();
+        assert!(cfg.validate().is_err());
+        assert!(cfg.set_gather("bogus").is_err());
+        cfg.set_gather("full").unwrap();
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn straggler_sim_parses_and_validates() {
+        assert_eq!(
+            StragglerSim::parse("40").unwrap(),
+            StragglerSim { worker: 0, delay_ms: 40 }
+        );
+        assert_eq!(
+            StragglerSim::parse("3:250").unwrap(),
+            StragglerSim { worker: 3, delay_ms: 250 }
+        );
+        assert!(StragglerSim::parse("x:1").is_err());
+        assert!(StragglerSim::parse("").is_err());
+        let mut cfg = TrainConfig::image_default(2, SparsifierKind::RTopK, 0.99);
+        cfg.straggler = Some(StragglerSim { worker: 2, delay_ms: 10 });
+        assert!(cfg.validate().is_err(), "worker id must be < nodes");
+        cfg.straggler = Some(StragglerSim { worker: 1, delay_ms: 10 });
+        assert!(cfg.validate().is_ok());
     }
 }

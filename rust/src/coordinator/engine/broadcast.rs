@@ -1,0 +1,281 @@
+//! Broadcast phase: dense params or the encode-once compressed sparse
+//! delta, with an O(support) delta scan when the optimizer stepped in the
+//! sparse domain.
+//!
+//! The delta downlink tracks `shadow` — the params as every worker
+//! reconstructs them (round-0 dense base plus the *decoded* value of each
+//! delta). The pre-engine leader found the delta's nonzeros with a full
+//! `params - shadow` scan, O(d) per round even when the step touched nnz ≪
+//! d coordinates. The engine instead passes in the support of the last
+//! sparse optimizer step; combined with the `dirty` residue set (coords
+//! where a lossy value stage left `shadow ≠ params` last round) that is a
+//! complete candidate list:
+//!
+//! * the optimizer only moved support coordinates since the last broadcast,
+//! * every other divergence was already present last round and is, by
+//!   construction, recorded in `dirty`.
+//!
+//! So `candidates = dirty ∪ support` and the scan is O(|candidates|). A
+//! dense optimizer step (momentum) falls back to the full scan — its
+//! velocity densifies the delta anyway. Either path emits the exact frame
+//! the full scan would (same coords, same values), so switching between
+//! them never perturbs the wire.
+
+use std::sync::Arc;
+
+use crate::comms::codec::{self, CodecConfig};
+use crate::comms::transport::{LeaderEndpoints, Message};
+use crate::sparsify::SparseVec;
+
+use super::super::config::TrainConfig;
+
+/// Reusable broadcast state: the shadow, the rounding-residue set, and the
+/// encode buffers.
+pub struct BroadcastPhase {
+    down_cfg: Option<CodecConfig>,
+    resync_every: u64,
+    shadow: Option<Vec<f32>>,
+    /// Sorted coords where `shadow` may still differ from params after the
+    /// last broadcast (value-stage rounding residue; empty for f32 wires).
+    dirty: Vec<u32>,
+    candidates: Vec<u32>,
+    delta_sv: SparseVec,
+    buf: Vec<u8>,
+}
+
+/// Sorted-set union of two strictly increasing u32 slices.
+fn sorted_union_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                out.push(a[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out.push(b[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+}
+
+impl BroadcastPhase {
+    pub fn new(cfg: &TrainConfig, dim: usize) -> Self {
+        let down_cfg = cfg
+            .down_pipeline
+            .as_ref()
+            .map(|p| CodecConfig { values: p.values, indices: p.indices });
+        BroadcastPhase {
+            down_cfg,
+            resync_every: cfg.resync_every,
+            shadow: down_cfg.map(|_| vec![0.0f32; dim]),
+            dirty: Vec::new(),
+            candidates: Vec::new(),
+            delta_sv: SparseVec::with_capacity(dim, 1024),
+            buf: Vec::new(),
+        }
+    }
+
+    /// The canonical broadcast state this round — what a resyncing worker
+    /// must receive: the shadow in delta mode (what every other worker
+    /// holds), the params themselves in dense mode.
+    pub fn resync_source<'a>(&'a self, params: &'a [f32]) -> &'a [f32] {
+        self.shadow.as_deref().unwrap_or(params)
+    }
+
+    /// Broadcast omega^t. `sparse_support` is the sorted support of the
+    /// last optimizer step when it ran in the sparse domain (restricting
+    /// the delta scan), or `None` after a dense step (full scan).
+    pub fn broadcast(
+        &mut self,
+        endpoints: &LeaderEndpoints,
+        round: u64,
+        params: &[f32],
+        sparse_support: Option<&[u32]>,
+    ) -> anyhow::Result<()> {
+        let (Some(shadow), Some(dcfg)) = (self.shadow.as_mut(), self.down_cfg) else {
+            // dense downlink: n unicast frames, counted per link
+            for tx in &endpoints.to_workers {
+                tx.send(Message::Params { round, data: params.to_vec() })?;
+            }
+            return Ok(());
+        };
+        let resync = round == 0 || (self.resync_every > 0 && round % self.resync_every == 0);
+        if resync {
+            // dense fallback: the workers' state becomes exactly omega^t
+            shadow.copy_from_slice(params);
+            self.dirty.clear();
+            for tx in &endpoints.to_workers {
+                tx.send(Message::Params { round, data: params.to_vec() })?;
+            }
+            return Ok(());
+        }
+
+        // One sparse encode of omega^t - omega_hat^{t-1}, one shared frame
+        // for all n workers, counted once on the broadcast link.
+        let dim = params.len();
+        self.delta_sv.clear(dim);
+        match sparse_support {
+            Some(support) => {
+                sorted_union_into(&self.dirty, support, &mut self.candidates);
+                for &i in &self.candidates {
+                    let d = params[i as usize] - shadow[i as usize];
+                    if d != 0.0 {
+                        self.delta_sv.push(i, d);
+                    }
+                }
+            }
+            None => {
+                for (i, (&p, &s)) in params.iter().zip(shadow.iter()).enumerate() {
+                    let d = p - s;
+                    if d != 0.0 {
+                        self.delta_sv.push(i as u32, d);
+                    }
+                }
+            }
+        }
+        codec::encode(&self.delta_sv, dcfg, &mut self.buf);
+        // Advance the shadow by what the workers will decode, so
+        // value-stage rounding feeds back into next round's delta instead
+        // of drifting; whatever residue remains becomes the next round's
+        // dirty set.
+        self.dirty.clear();
+        for (&i, &v) in self.delta_sv.idx.iter().zip(&self.delta_sv.val) {
+            shadow[i as usize] += codec::value_roundtrip(v, dcfg.values);
+        }
+        for &i in &self.delta_sv.idx {
+            if params[i as usize] != shadow[i as usize] {
+                self.dirty.push(i);
+            }
+        }
+        endpoints.broadcast_shared(round, Arc::from(self.buf.as_slice()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::transport::star;
+    use crate::compress::GradientCompressor;
+    use crate::sparsify::SparsifierKind;
+
+    fn delta_cfg(downlink: &str) -> TrainConfig {
+        let mut cfg = TrainConfig::image_default(2, SparsifierKind::Baseline, 0.0);
+        cfg.set_downlink(downlink).unwrap();
+        cfg
+    }
+
+    #[test]
+    fn sorted_union_merges_and_dedups() {
+        let mut out = Vec::new();
+        sorted_union_into(&[1, 4, 9], &[2, 4, 10], &mut out);
+        assert_eq!(out, vec![1, 2, 4, 9, 10]);
+        sorted_union_into(&[], &[3, 5], &mut out);
+        assert_eq!(out, vec![3, 5]);
+        sorted_union_into(&[7], &[], &mut out);
+        assert_eq!(out, vec![7]);
+    }
+
+    /// The support-restricted scan must emit byte-identical frames to the
+    /// full O(d) scan, round after round, including with a lossy (bf16)
+    /// value stage whose rounding residue must re-enter via the dirty set.
+    #[test]
+    fn sparse_scan_emits_same_frames_as_full_scan() {
+        for downlink in ["delta", "baseline|bf16|delta"] {
+            let dim = 64;
+            let cfg = delta_cfg(downlink);
+            let (leader_a, workers_a) = star(2);
+            let (leader_b, workers_b) = star(2);
+            let mut full = BroadcastPhase::new(&cfg, dim);
+            let mut sparse = BroadcastPhase::new(&cfg, dim);
+            let mut params = vec![0.5f32; dim];
+            // round 0: dense resync on both
+            full.broadcast(&leader_a, 0, &params, None).unwrap();
+            sparse.broadcast(&leader_b, 0, &params, Some(&[])).unwrap();
+            for round in 1..6u64 {
+                // "optimizer step": bump a small support with awkward values
+                let mut support: Vec<u32> =
+                    vec![round as u32, (round as u32 * 7) % dim as u32, 60];
+                support.sort_unstable();
+                support.dedup();
+                for &i in &support {
+                    params[i as usize] += 0.1 + 1e-4 * round as f32;
+                }
+                full.broadcast(&leader_a, round, &params, None).unwrap();
+                sparse.broadcast(&leader_b, round, &params, Some(&support)).unwrap();
+            }
+            // drain both worker inboxes and compare frame for frame
+            for (wa, wb) in workers_a.iter().zip(&workers_b) {
+                loop {
+                    let (ma, mb) = (wa.from_leader.try_recv(), wb.from_leader.try_recv());
+                    match (ma, mb) {
+                        (Ok(a), Ok(b)) => assert_eq!(a, b, "downlink={downlink}"),
+                        (Err(_), Err(_)) => break,
+                        (a, b) => panic!("frame count mismatch: {a:?} vs {b:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_mode_unicasts_params() {
+        let dim = 8;
+        let cfg = TrainConfig::image_default(2, SparsifierKind::Baseline, 0.0);
+        let (leader, workers) = star(2);
+        let mut phase = BroadcastPhase::new(&cfg, dim);
+        let params = vec![1.0f32; dim];
+        assert_eq!(phase.resync_source(&params), &params[..]);
+        phase.broadcast(&leader, 3, &params, Some(&[])).unwrap();
+        for w in &workers {
+            match w.from_leader.try_recv().unwrap() {
+                Message::Params { round: 3, data } => assert_eq!(data, params),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn delta_frames_reconstruct_worker_state() {
+        // A worker applying round-0 dense + every delta ends bit-identical
+        // to the phase's shadow (= resync_source).
+        let dim = 32;
+        let cfg = delta_cfg("baseline|bf16|delta");
+        let (leader, workers) = star(1);
+        let mut phase = BroadcastPhase::new(&cfg, dim);
+        let mut params: Vec<f32> = (0..dim).map(|i| i as f32 * 0.123).collect();
+        let mut worker_state: Vec<f32> = Vec::new();
+        let mut sv = SparseVec::default();
+        let mut support: Vec<u32> = Vec::new();
+        for round in 0..5u64 {
+            phase.broadcast(&leader, round, &params, Some(&support)).unwrap();
+            match workers[0].from_leader.try_recv().unwrap() {
+                Message::Params { data, .. } => worker_state = data,
+                Message::ParamsDelta { payload, .. } => {
+                    GradientCompressor::decompress_expecting(&payload, dim, &mut sv).unwrap();
+                    sv.add_scaled_into(1.0, &mut worker_state);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            // next "step": nudge three coordinates by a bf16-unfriendly eps
+            support = vec![1, 5, 17];
+            for &i in &support {
+                params[i as usize] += 0.001 + round as f32 * 1e-5;
+            }
+        }
+        let shadow = phase.resync_source(&params).to_vec();
+        for (a, b) in worker_state.iter().zip(&shadow) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! Gather phase: pluggable policies for collecting worker updates.
+//!
+//! The pre-engine leader was hard-wired to `while got < n { recv() }` — a
+//! synchronous star that cannot express stragglers or partial
+//! participation. [`GatherPolicy`] makes the collection rule a value:
+//!
+//! * [`GatherPolicy::FullSync`] — block until all n workers respond.
+//!   Bitwise-identical to the classic loop (no timeouts touched at all).
+//! * [`GatherPolicy::Quorum`] — block until `m` fresh updates arrived,
+//!   then drain late arrivals for at most `timeout_ms` before closing the
+//!   round. Updates from *earlier* rounds are deterministic no-ops: dropped
+//!   and counted (`stale`), never aggregated — a straggler can therefore
+//!   delay metrics by at most one counter bump, never corrupt the model.
+//!
+//! Per-worker participation is tracked across the run
+//! ([`GatherPhase::participation`]) and per-round counts are surfaced in
+//! [`crate::metrics::RoundRecord`].
+
+use std::time::{Duration, Instant};
+
+use crate::comms::transport::{LeaderEndpoints, Message};
+
+/// How the leader collects worker updates each round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GatherPolicy {
+    /// Wait for every worker (the default; classic synchronous SGD).
+    #[default]
+    FullSync,
+    /// Proceed once `quorum` fresh updates arrived; after the quorum is
+    /// met, keep draining late arrivals for at most `timeout_ms`.
+    /// `timeout_ms = 0` closes the round the moment the quorum is met.
+    Quorum { quorum: usize, timeout_ms: u64 },
+}
+
+impl GatherPolicy {
+    /// Parse a `--gather` spec: `full` | `quorum:m=<count>[,timeout_ms=<ms>]`.
+    pub fn parse(s: &str) -> anyhow::Result<GatherPolicy> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "full" || t == "fullsync" {
+            return Ok(GatherPolicy::FullSync);
+        }
+        if let Some(rest) = t.strip_prefix("quorum:") {
+            let mut quorum: Option<usize> = None;
+            let mut timeout_ms: u64 = 0;
+            for kv in rest.split(',') {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("gather spec: expected key=value, got {kv:?}"))?;
+                match k.trim() {
+                    "m" => {
+                        quorum = Some(v.trim().parse().map_err(|_| {
+                            anyhow::anyhow!("gather spec: m expects an integer, got {v:?}")
+                        })?);
+                    }
+                    "timeout_ms" => {
+                        timeout_ms = v.trim().parse().map_err(|_| {
+                            anyhow::anyhow!("gather spec: timeout_ms expects an integer, got {v:?}")
+                        })?;
+                    }
+                    other => anyhow::bail!("gather spec: unknown key {other:?} (m, timeout_ms)"),
+                }
+            }
+            let quorum =
+                quorum.ok_or_else(|| anyhow::anyhow!("quorum gather needs m=<count>: {s:?}"))?;
+            return Ok(GatherPolicy::Quorum { quorum, timeout_ms });
+        }
+        anyhow::bail!("unknown gather policy {s:?} (full | quorum:m=<count>[,timeout_ms=<ms>])")
+    }
+
+    /// Round-trippable spec string.
+    pub fn label(&self) -> String {
+        match self {
+            GatherPolicy::FullSync => "full".to_string(),
+            GatherPolicy::Quorum { quorum, timeout_ms } => {
+                format!("quorum:m={quorum},timeout_ms={timeout_ms}")
+            }
+        }
+    }
+
+    pub fn validate(&self, nodes: usize) -> anyhow::Result<()> {
+        if let GatherPolicy::Quorum { quorum, .. } = self {
+            anyhow::ensure!(
+                *quorum >= 1 && *quorum <= nodes,
+                "quorum m must be in [1, nodes={nodes}], got {quorum}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One worker's fresh update for the current round.
+#[derive(Debug)]
+pub struct Update {
+    pub payload: Vec<u8>,
+    pub loss: f32,
+    pub examples: u64,
+    pub mem_norm: f32,
+}
+
+/// What one gather round produced (scalars only; the payloads stay in
+/// [`GatherPhase::updates`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GatherStats {
+    /// Workers whose update arrived in time to be aggregated.
+    pub participants: usize,
+    /// Late updates from earlier rounds dropped during this gather.
+    pub stale: u64,
+    /// Σ loss·examples over participants (folded in worker-id order so a
+    /// rerun reproduces the metric bit for bit regardless of arrival order).
+    pub loss_sum: f64,
+    pub example_sum: f64,
+    pub mem_sum: f64,
+}
+
+/// Reusable gather state: the per-worker inbox plus run-long accounting.
+pub struct GatherPhase {
+    policy: GatherPolicy,
+    nodes: usize,
+    inbox: Vec<Option<Update>>,
+    resynced: Vec<bool>,
+    /// Rounds each worker contributed a fresh update (run total).
+    pub participation: Vec<u64>,
+    /// Stale updates dropped over the whole run.
+    pub stale_total: u64,
+}
+
+impl GatherPhase {
+    pub fn new(policy: GatherPolicy, nodes: usize) -> Self {
+        GatherPhase {
+            policy,
+            nodes,
+            inbox: (0..nodes).map(|_| None).collect(),
+            resynced: vec![false; nodes],
+            participation: vec![0; nodes],
+            stale_total: 0,
+        }
+    }
+
+    /// The fresh updates collected by the last [`Self::collect`], indexed
+    /// by worker id (`None` = missed the round).
+    pub fn updates(&self) -> &[Option<Update>] {
+        &self.inbox
+    }
+
+    /// Collect one round of updates under the configured policy.
+    /// `resync_source` is the canonical broadcast state a resyncing worker
+    /// must receive (the delta-downlink shadow, or the params themselves in
+    /// dense mode).
+    pub fn collect(
+        &mut self,
+        endpoints: &LeaderEndpoints,
+        round: u64,
+        resync_source: &[f32],
+    ) -> anyhow::Result<GatherStats> {
+        for slot in self.inbox.iter_mut() {
+            *slot = None;
+        }
+        for r in self.resynced.iter_mut() {
+            *r = false;
+        }
+        let (quorum, drain) = match self.policy {
+            GatherPolicy::FullSync => (self.nodes, Duration::ZERO),
+            GatherPolicy::Quorum { quorum, timeout_ms } => {
+                (quorum, Duration::from_millis(timeout_ms))
+            }
+        };
+        let mut stats = GatherStats::default();
+        let mut got = 0usize;
+        // Deadline for the post-quorum drain; armed when the quorum is met.
+        let mut deadline: Option<Instant> = None;
+        while got < self.nodes {
+            let msg = if got < quorum {
+                // The round cannot proceed without a quorum: block.
+                Some(endpoints.recv()?)
+            } else {
+                let d = *deadline.get_or_insert_with(|| Instant::now() + drain);
+                let now = Instant::now();
+                if now >= d {
+                    None
+                } else {
+                    endpoints.recv_timeout(d - now)?
+                }
+            };
+            let Some(msg) = msg else { break };
+            match msg {
+                Message::SparseUpdate { round: r, worker, payload, loss, examples, mem_norm } => {
+                    anyhow::ensure!(worker < self.nodes, "bad worker id {worker}");
+                    if r < round {
+                        // A straggler's update for a closed round: dropped
+                        // and counted, deterministically.
+                        stats.stale += 1;
+                        self.stale_total += 1;
+                        continue;
+                    }
+                    anyhow::ensure!(r == round, "round skew: got {r}, expected {round}");
+                    anyhow::ensure!(
+                        self.inbox[worker].is_none(),
+                        "duplicate update from {worker} in round {round}"
+                    );
+                    self.inbox[worker] = Some(Update { payload, loss, examples, mem_norm });
+                    self.participation[worker] += 1;
+                    got += 1;
+                }
+                Message::WorkerFailed { worker } => {
+                    // a dead worker can never complete a FullSync quorum;
+                    // abort instead of blocking on it forever (the cluster
+                    // surfaces the worker's own error as the root cause)
+                    anyhow::bail!("worker {worker} reported a fatal error in round {round}");
+                }
+                Message::ResyncRequest { worker } => {
+                    anyhow::ensure!(worker < self.nodes, "bad worker id {worker} in resync");
+                    // one resync per worker per round: a worker that keeps
+                    // requesting without ever sending its update would
+                    // otherwise spin this loop (and a dense unicast) forever
+                    anyhow::ensure!(
+                        !self.resynced[worker],
+                        "worker {worker} requested a second resync in round {round}"
+                    );
+                    self.resynced[worker] = true;
+                    endpoints.to_workers[worker]
+                        .send(Message::Params { round, data: resync_source.to_vec() })?;
+                }
+                other => anyhow::bail!("leader got unexpected message {other:?}"),
+            }
+        }
+        // Metric sums are folded in worker-id order, not arrival order:
+        // float addition is not associative, and a rerun must reproduce the
+        // recorded loss exactly. loss is weighted by examples — federated
+        // shards are not balanced, and an unweighted mean would let a
+        // 10-example shard count as much as a 10k one.
+        for u in self.inbox.iter().flatten() {
+            stats.loss_sum += u.loss as f64 * u.examples as f64;
+            stats.example_sum += u.examples as f64;
+            stats.mem_sum += u.mem_norm as f64;
+        }
+        stats.participants = got;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::transport::star;
+
+    fn update(round: u64, worker: usize, loss: f32) -> Message {
+        Message::SparseUpdate {
+            round,
+            worker,
+            payload: vec![0u8; 4],
+            loss,
+            examples: 2,
+            mem_norm: 1.0,
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(GatherPolicy::parse("full").unwrap(), GatherPolicy::FullSync);
+        assert_eq!(GatherPolicy::parse("FullSync").unwrap(), GatherPolicy::FullSync);
+        let q = GatherPolicy::parse("quorum:m=3,timeout_ms=50").unwrap();
+        assert_eq!(q, GatherPolicy::Quorum { quorum: 3, timeout_ms: 50 });
+        assert_eq!(GatherPolicy::parse(&q.label()).unwrap(), q);
+        // timeout defaults to 0 (close the round at the quorum)
+        assert_eq!(
+            GatherPolicy::parse("quorum:m=2").unwrap(),
+            GatherPolicy::Quorum { quorum: 2, timeout_ms: 0 }
+        );
+        assert!(GatherPolicy::parse("quorum:timeout_ms=5").is_err());
+        assert!(GatherPolicy::parse("quorum:m=abc").is_err());
+        assert!(GatherPolicy::parse("quorum:k=3").is_err());
+        assert!(GatherPolicy::parse("async").is_err());
+    }
+
+    #[test]
+    fn validate_bounds_quorum() {
+        assert!(GatherPolicy::FullSync.validate(1).is_ok());
+        assert!(GatherPolicy::Quorum { quorum: 3, timeout_ms: 0 }.validate(4).is_ok());
+        assert!(GatherPolicy::Quorum { quorum: 0, timeout_ms: 0 }.validate(4).is_err());
+        assert!(GatherPolicy::Quorum { quorum: 5, timeout_ms: 0 }.validate(4).is_err());
+    }
+
+    #[test]
+    fn fullsync_collects_everyone() {
+        let (leader, workers) = star(3);
+        for (w, eps) in workers.iter().enumerate() {
+            eps.to_leader.send(update(7, w, 1.0)).unwrap();
+        }
+        let mut phase = GatherPhase::new(GatherPolicy::FullSync, 3);
+        let stats = phase.collect(&leader, 7, &[]).unwrap();
+        assert_eq!(stats.participants, 3);
+        assert_eq!(stats.stale, 0);
+        assert_eq!(stats.example_sum, 6.0);
+        assert!(phase.updates().iter().all(|u| u.is_some()));
+        assert_eq!(phase.participation, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn quorum_closes_without_the_straggler() {
+        let (leader, workers) = star(3);
+        // only workers 0 and 2 respond; m=2 with a tiny drain window
+        workers[0].to_leader.send(update(0, 0, 1.0)).unwrap();
+        workers[2].to_leader.send(update(0, 2, 1.0)).unwrap();
+        let mut phase =
+            GatherPhase::new(GatherPolicy::Quorum { quorum: 2, timeout_ms: 5 }, 3);
+        let stats = phase.collect(&leader, 0, &[]).unwrap();
+        assert_eq!(stats.participants, 2);
+        assert!(phase.updates()[0].is_some());
+        assert!(phase.updates()[1].is_none());
+        assert!(phase.updates()[2].is_some());
+        assert_eq!(phase.participation, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn stale_updates_dropped_and_counted() {
+        let (leader, workers) = star(2);
+        // worker 1's round-3 update arrives while the leader gathers round 4
+        workers[1].to_leader.send(update(3, 1, 9.0)).unwrap();
+        workers[0].to_leader.send(update(4, 0, 1.0)).unwrap();
+        workers[1].to_leader.send(update(4, 1, 2.0)).unwrap();
+        let mut phase = GatherPhase::new(GatherPolicy::FullSync, 2);
+        let stats = phase.collect(&leader, 4, &[]).unwrap();
+        assert_eq!(stats.participants, 2);
+        assert_eq!(stats.stale, 1);
+        assert_eq!(phase.stale_total, 1);
+        // the stale loss did not leak into the round's metric
+        assert_eq!(stats.loss_sum, (1.0 + 2.0) * 2.0);
+    }
+
+    #[test]
+    fn future_round_update_is_an_error() {
+        let (leader, workers) = star(1);
+        workers[0].to_leader.send(update(5, 0, 1.0)).unwrap();
+        let mut phase = GatherPhase::new(GatherPolicy::FullSync, 1);
+        assert!(phase.collect(&leader, 4, &[]).is_err());
+    }
+
+    #[test]
+    fn metric_sums_independent_of_arrival_order() {
+        // Same updates, opposite arrival orders: identical folded sums.
+        let run = |first: usize, second: usize| {
+            let (leader, workers) = star(2);
+            workers[first].to_leader.send(update(0, first, 0.1 + first as f32)).unwrap();
+            workers[second].to_leader.send(update(0, second, 0.1 + second as f32)).unwrap();
+            let mut phase = GatherPhase::new(GatherPolicy::FullSync, 2);
+            phase.collect(&leader, 0, &[]).unwrap()
+        };
+        let a = run(0, 1);
+        let b = run(1, 0);
+        assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+        assert_eq!(a.mem_sum.to_bits(), b.mem_sum.to_bits());
+    }
+}

@@ -1,0 +1,244 @@
+//! RoundEngine — the leader's round loop decomposed into explicit phases.
+//!
+//! The pre-engine leader was one 500-line monolith that hard-coded a
+//! synchronous star: block on all n workers, decode into a dense O(d)
+//! accumulator, dense optimizer step, dense `params - shadow` scan for the
+//! delta downlink. The engine splits a round into four phase objects with
+//! explicit state, so partial participation, async variants, and
+//! hierarchical aggregation become policy swaps instead of leader rewrites:
+//!
+//! ```text
+//!   ┌ broadcast ─ BroadcastPhase   dense params | encode-once sparse delta
+//!   │                              (O(support) delta scan after a sparse step)
+//!   ├ gather ──── GatherPhase      GatherPolicy: FullSync | Quorum{m, timeout}
+//!   │                              stale updates dropped + counted,
+//!   │                              per-worker participation tracked
+//!   ├ aggregate ─ SparseAggregator k-way merge of sorted payloads into one
+//!   │                              union SparseVec (O(Σ nnz), not O(d));
+//!   │                              dense accumulate fallback when Σ nnz ≥ d
+//!   └ step ────── Optimizer        step_sparse on the union support (plain
+//!                                  SGD), dense scatter + step otherwise
+//! ```
+//!
+//! Bitwise contract: with the default `GatherPolicy::FullSync` every phase
+//! is bit-identical to the monolithic loop it replaced — the merge folds
+//! each coordinate in worker-id order exactly like the dense scatter-add,
+//! the sparse SGD step performs the same float ops as the dense step on
+//! the scattered vector, and the support-restricted delta scan emits the
+//! same frames as the full scan. `baseline_equals_singlenode_sgd_bitwise`
+//! and the transport-equivalence tests pin this.
+
+pub mod broadcast;
+pub mod gather;
+
+pub use gather::{GatherPolicy, GatherStats};
+
+use std::time::Instant;
+
+use crate::comms::transport::{self, LeaderEndpoints, Message};
+use crate::compress::SparseAggregator;
+use crate::metrics::{RoundRecord, RunMetrics};
+use crate::optim::{MomentumSgd, Optimizer, Sgd, WarmupSparsity};
+use crate::sparsify::SparseVec;
+
+use super::config::{OptimKind, RoundMode, TrainConfig};
+use super::leader::Evaluator;
+use broadcast::BroadcastPhase;
+use gather::GatherPhase;
+
+/// Zero the dense accumulator (resizing on first use). A free function so
+/// it can run while other engine fields are borrowed.
+fn prepare_dense(dense_agg: &mut Vec<f32>, dense_dirty: &mut bool, dim: usize) {
+    if dense_agg.len() != dim {
+        dense_agg.clear();
+        dense_agg.resize(dim, 0.0);
+    } else if *dense_dirty {
+        dense_agg.iter_mut().for_each(|a| *a = 0.0);
+    }
+    *dense_dirty = false;
+}
+
+/// The leader's composable round loop. One engine drives one training run.
+pub struct RoundEngine<'a> {
+    cfg: &'a TrainConfig,
+    dim: usize,
+    batches_per_epoch: usize,
+    opt: Box<dyn Optimizer>,
+    warmup: WarmupSparsity,
+    broadcast: BroadcastPhase,
+    gather: GatherPhase,
+    agg: SparseAggregator,
+    /// Streaming decode scratch for the dense-accumulate fallback.
+    scratch: SparseVec,
+    /// Dense accumulator, materialized only when an optimizer or a
+    /// near-dense round needs it. Invariant: all-zero between rounds
+    /// unless `dense_dirty`.
+    dense_agg: Vec<f32>,
+    dense_dirty: bool,
+}
+
+impl<'a> RoundEngine<'a> {
+    pub fn new(cfg: &'a TrainConfig, dim: usize, batches_per_epoch: usize) -> RoundEngine<'a> {
+        let opt: Box<dyn Optimizer> = match cfg.optim {
+            OptimKind::Momentum(mu) => Box::new(MomentumSgd::new(dim, cfg.lr.base, mu)),
+            OptimKind::Sgd { clip } => match clip {
+                Some(c) => Box::new(Sgd::with_clip(cfg.lr.base, c)),
+                None => Box::new(Sgd::new(cfg.lr.base)),
+            },
+        };
+        RoundEngine {
+            cfg,
+            dim,
+            batches_per_epoch,
+            opt,
+            warmup: cfg.warmup(),
+            broadcast: BroadcastPhase::new(cfg, dim),
+            gather: GatherPhase::new(cfg.gather, cfg.nodes),
+            agg: SparseAggregator::new(),
+            scratch: SparseVec::default(),
+            dense_agg: Vec::new(),
+            dense_dirty: false,
+        }
+    }
+
+    /// Run the full training loop; returns the trained params + metrics.
+    pub fn run(
+        mut self,
+        endpoints: &LeaderEndpoints,
+        init_params: Vec<f32>,
+        mut evaluator: Option<Evaluator>,
+        run_name: &str,
+    ) -> anyhow::Result<(Vec<f32>, RunMetrics)> {
+        let cfg = self.cfg;
+        let mut params = init_params;
+        let mut metrics = RunMetrics::new(run_name, &cfg.method_label());
+        // Whether the previous round's step ran in the sparse domain (its
+        // support — `self.agg.merged.idx` — then bounds the delta scan).
+        let mut prev_sparse = false;
+
+        for round in 0..cfg.rounds {
+            let t0 = Instant::now();
+            let epoch = match cfg.mode {
+                RoundMode::Distributed => round as f64 / self.batches_per_epoch as f64,
+                RoundMode::Federated => round as f64,
+            };
+            self.opt.set_lr(cfg.lr.at_epoch(epoch as usize));
+
+            let up_before = transport::total(&endpoints.up_stats).1;
+            let down_before = endpoints.downlink_total().1;
+
+            // ---- phase 1: broadcast omega^t ----
+            let support: Option<&[u32]> =
+                if prev_sparse { Some(&self.agg.merged.idx) } else { None };
+            self.broadcast.broadcast(endpoints, round, &params, support)?;
+
+            // ---- phase 2: gather (policy-driven) ----
+            let gstats = {
+                let resync_source = self.broadcast.resync_source(&params);
+                self.gather.collect(endpoints, round, resync_source)?
+            };
+
+            // ---- phase 3: aggregate ĝ = (1/|P|) Σ_{i∈P} ĝ_i ----
+            // Sparse domain by default: k-way merge of the sorted decoded
+            // payloads. If the round turns out near-dense (Σ nnz ≥ d, e.g.
+            // baseline or early warm-up), stream the rest straight into the
+            // dense accumulator — bit-identical either way (the merge folds
+            // coordinates in worker order exactly like the scatter-add).
+            self.agg.begin();
+            let scale = 1.0 / gstats.participants.max(1) as f32;
+            let mut coords = 0u64;
+            let mut dense_mode = false;
+            for u in self.gather.updates().iter().flatten() {
+                if !dense_mode {
+                    let nnz = self.agg.decode_payload(&u.payload, self.dim)? as u64;
+                    coords += nnz;
+                    if coords >= self.dim as u64 {
+                        dense_mode = true;
+                        prepare_dense(&mut self.dense_agg, &mut self.dense_dirty, self.dim);
+                        for sv in self.agg.decoded() {
+                            sv.add_scaled_into(scale, &mut self.dense_agg);
+                        }
+                    }
+                } else {
+                    crate::compress::GradientCompressor::decompress_expecting(
+                        &u.payload,
+                        self.dim,
+                        &mut self.scratch,
+                    )?;
+                    coords += self.scratch.nnz() as u64;
+                    self.scratch.add_scaled_into(scale, &mut self.dense_agg);
+                }
+            }
+
+            // ---- phase 4: optimizer step ----
+            prev_sparse = if dense_mode {
+                self.opt.step(&mut params, &self.dense_agg);
+                self.dense_dirty = true;
+                false
+            } else {
+                self.agg.merge_scaled(scale, self.dim);
+                if self.opt.step_sparse(&mut params, &self.agg.merged) {
+                    true
+                } else {
+                    // stateful optimizer: scatter the union into the dense
+                    // buffer, step, and restore the all-zero invariant
+                    prepare_dense(&mut self.dense_agg, &mut self.dense_dirty, self.dim);
+                    for (&i, &v) in self.agg.merged.idx.iter().zip(&self.agg.merged.val) {
+                        self.dense_agg[i as usize] = v;
+                    }
+                    self.opt.step(&mut params, &self.dense_agg);
+                    for &i in &self.agg.merged.idx {
+                        self.dense_agg[i as usize] = 0.0;
+                    }
+                    false
+                }
+            };
+
+            // ---- phase 5: metrics (+ held-out eval on schedule) ----
+            let uplink = transport::total(&endpoints.up_stats).1 - up_before;
+            let downlink = endpoints.downlink_total().1 - down_before;
+            // wall_ms is pure round time; the evaluation below is timed
+            // separately so eval rounds don't pollute round-timing curves.
+            let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let (eval, eval_ms) = if let Some(ev) = evaluator.as_mut() {
+                if round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds {
+                    let te = Instant::now();
+                    let rec = ev.evaluate(&params)?;
+                    (Some(rec), te.elapsed().as_secs_f64() * 1e3)
+                } else {
+                    (None, 0.0)
+                }
+            } else {
+                (None, 0.0)
+            };
+            metrics.push(RoundRecord {
+                round,
+                epoch,
+                train_loss: if gstats.example_sum > 0.0 {
+                    gstats.loss_sum / gstats.example_sum
+                } else {
+                    0.0
+                },
+                eval,
+                uplink_bytes: uplink,
+                uplink_coords: coords,
+                downlink_bytes: downlink,
+                dense_bytes: (cfg.nodes * 4 * self.dim) as u64,
+                memory_norm: gstats.mem_sum / gstats.participants.max(1) as f64,
+                k_used: self.warmup.k_at(self.dim, epoch),
+                lr: self.opt.lr(),
+                participants: gstats.participants,
+                stale_updates: gstats.stale,
+                wall_ms,
+                eval_ms,
+            });
+        }
+
+        // ---- shut down workers ----
+        for tx in &endpoints.to_workers {
+            let _ = tx.send(Message::Shutdown);
+        }
+        metrics.worker_participation = self.gather.participation.clone();
+        Ok((params, metrics))
+    }
+}

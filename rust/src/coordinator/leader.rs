@@ -1,34 +1,19 @@
-//! The leader loop — Algorithm 1's "On Centralized Processor" block.
+//! The leader — Algorithm 1's "On Centralized Processor" block.
 //!
-//! Per round: broadcast omega^t (dense, or as an encode-once compressed
-//! sparse delta against the last broadcast state — see
-//! `TrainConfig::down_pipeline`), gather n sparse updates, decode,
-//! average, optimizer step, record metrics. Optionally evaluate on
-//! held-out data every `eval_every` rounds.
-//!
-//! Delta downlink: the leader tracks `shadow`, the params as every worker
-//! reconstructs them (round-0 dense base plus the *decoded* value of each
-//! delta). Each round it encodes `params - shadow`'s nonzeros once through
-//! the downlink codec, shares the single `Arc` frame with all workers, and
-//! advances `shadow` by the decoded delta — so any value-stage rounding
-//! (bf16) or float non-associativity re-enters the next round's delta
-//! instead of accumulating as silent drift. Dense `Params` frames are
-//! unicast at round 0, every `resync_every` rounds, and to any worker that
-//! asks (`Message::ResyncRequest`).
+//! Since the RoundEngine refactor this module owns only the held-out
+//! [`Evaluator`] and the [`run_leader`] entry point; the round loop itself
+//! lives in [`super::engine`], decomposed into broadcast / gather /
+//! aggregate / step phases with pluggable gather policies
+//! ([`super::engine::GatherPolicy`]) and sparse-domain aggregation
+//! ([`crate::compress::aggregate`]). See the engine module docs for the
+//! phase diagram and the bitwise-compatibility contract.
 
-use std::sync::Arc;
-use std::time::Instant;
-
-use crate::comms::codec::{self, CodecConfig};
-use crate::comms::transport::{LeaderEndpoints, Message};
-use crate::comms::transport;
-use crate::compress::GradientCompressor;
-use crate::metrics::{EvalRecord, RoundRecord, RunMetrics};
-use crate::optim::{MomentumSgd, Optimizer, Sgd};
+use crate::comms::transport::LeaderEndpoints;
+use crate::metrics::{EvalRecord, RunMetrics};
 use crate::runtime::{eval_metric, Batch, EvalKind, ModelRuntime};
-use crate::sparsify::SparseVec;
 
-use super::config::{OptimKind, RoundMode, TrainConfig};
+use super::config::TrainConfig;
+use super::engine::RoundEngine;
 
 /// Held-out evaluation owned by the leader.
 pub struct Evaluator {
@@ -53,200 +38,28 @@ impl Evaluator {
     }
 }
 
+/// Run the leader over pre-built endpoints: construct a [`RoundEngine`]
+/// from the config and drive it to completion.
 pub fn run_leader(
     endpoints: &LeaderEndpoints,
     init_params: Vec<f32>,
-    mut evaluator: Option<Evaluator>,
+    evaluator: Option<Evaluator>,
     cfg: &TrainConfig,
     run_name: &str,
     batches_per_epoch: usize,
 ) -> anyhow::Result<(Vec<f32>, RunMetrics)> {
-    let dim = init_params.len();
-    let mut params = init_params;
-    let mut opt: Box<dyn Optimizer> = match cfg.optim {
-        OptimKind::Momentum(mu) => Box::new(MomentumSgd::new(dim, cfg.lr.base, mu)),
-        OptimKind::Sgd { clip } => match clip {
-            Some(c) => Box::new(Sgd::with_clip(cfg.lr.base, c)),
-            None => Box::new(Sgd::new(cfg.lr.base)),
-        },
-    };
-    let mut metrics = RunMetrics::new(run_name, &cfg.method_label());
-    let warmup = cfg.warmup();
-    let mut agg = vec![0.0f32; dim];
-    let mut sparse = SparseVec::with_capacity(dim, 1024);
-
-    // Delta-downlink state: the broadcast shadow (params as the workers
-    // hold them) and the codec the down_pipeline's wire stages resolve to.
-    let down_cfg: Option<CodecConfig> = cfg
-        .down_pipeline
-        .as_ref()
-        .map(|p| CodecConfig { values: p.values, indices: p.indices });
-    let mut shadow: Option<Vec<f32>> = down_cfg.map(|_| vec![0.0f32; dim]);
-    let mut delta_sv = SparseVec::with_capacity(dim, 1024);
-    // Reused encode buffer; only the Arc the workers share is allocated
-    // per round (it must own the frame beyond this iteration).
-    let mut down_buf: Vec<u8> = Vec::new();
-
-    for round in 0..cfg.rounds {
-        let t0 = Instant::now();
-        let epoch = match cfg.mode {
-            RoundMode::Distributed => round as f64 / batches_per_epoch as f64,
-            RoundMode::Federated => round as f64,
-        };
-        opt.set_lr(cfg.lr.at_epoch(epoch as usize));
-
-        let up_before = transport::total(&endpoints.up_stats).1;
-        let down_before = endpoints.downlink_total().1;
-
-        // ---- broadcast ----
-        match (shadow.as_mut(), down_cfg) {
-            (Some(shadow), Some(dcfg)) => {
-                let resync =
-                    round == 0 || (cfg.resync_every > 0 && round % cfg.resync_every == 0);
-                if resync {
-                    // dense fallback: n unicast frames, counted per link
-                    shadow.copy_from_slice(&params);
-                    for tx in &endpoints.to_workers {
-                        tx.send(Message::Params { round, data: params.clone() })?;
-                    }
-                } else {
-                    // One sparse encode of omega^t - omega_hat^{t-1} (at
-                    // most the union of the workers' kept coordinates is
-                    // nonzero under plain SGD), one shared frame for all n
-                    // workers, counted once on the broadcast link.
-                    delta_sv.clear(dim);
-                    for (i, (&p, &s)) in params.iter().zip(shadow.iter()).enumerate() {
-                        let d = p - s;
-                        if d != 0.0 {
-                            delta_sv.push(i as u32, d);
-                        }
-                    }
-                    codec::encode(&delta_sv, dcfg, &mut down_buf);
-                    // advance the shadow by what the workers will decode,
-                    // so value-stage rounding feeds back into next round's
-                    // delta instead of drifting
-                    for (&i, &v) in delta_sv.idx.iter().zip(&delta_sv.val) {
-                        shadow[i as usize] += codec::value_roundtrip(v, dcfg.values);
-                    }
-                    endpoints.broadcast_shared(round, Arc::from(down_buf.as_slice()))?;
-                }
-            }
-            _ => {
-                for tx in &endpoints.to_workers {
-                    tx.send(Message::Params { round, data: params.clone() })?;
-                }
-            }
-        }
-
-        // ---- gather + aggregate: ĝ = (1/n) sum ĝ_i ----
-        // Collect all n messages first, then fold in worker-id order:
-        // float addition is not associative, so arrival-order aggregation
-        // would make runs non-reproducible at the last ulp. A worker that
-        // lost its base params may interject a resync request; answer it
-        // with a dense unicast of the current broadcast state and keep
-        // waiting for its update.
-        let mut inbox: Vec<Option<Vec<u8>>> = vec![None; cfg.nodes];
-        let mut resynced: Vec<bool> = vec![false; cfg.nodes];
-        let mut loss_sum = 0.0f64;
-        let mut example_sum = 0.0f64;
-        let mut mem_sum = 0.0f64;
-        let mut got = 0;
-        while got < cfg.nodes {
-            match endpoints.from_workers.recv() {
-                Ok(Message::SparseUpdate {
-                    round: r,
-                    worker,
-                    payload,
-                    loss,
-                    examples,
-                    mem_norm,
-                }) => {
-                    anyhow::ensure!(r == round, "round skew: got {r}, expected {round}");
-                    anyhow::ensure!(worker < cfg.nodes, "bad worker id {worker}");
-                    anyhow::ensure!(inbox[worker].is_none(), "duplicate update from {worker}");
-                    inbox[worker] = Some(payload);
-                    // loss is weighted by examples: federated shards are
-                    // not balanced, and an unweighted mean would let a
-                    // 10-example shard count as much as a 10k one
-                    loss_sum += loss as f64 * examples as f64;
-                    example_sum += examples as f64;
-                    mem_sum += mem_norm as f64;
-                    got += 1;
-                }
-                Ok(Message::ResyncRequest { worker }) => {
-                    anyhow::ensure!(worker < cfg.nodes, "bad worker id {worker} in resync");
-                    // one resync per worker per round: a worker that keeps
-                    // requesting without ever sending its update would
-                    // otherwise spin this loop (and a dense unicast) forever
-                    anyhow::ensure!(
-                        !resynced[worker],
-                        "worker {worker} requested a second resync in round {round}"
-                    );
-                    resynced[worker] = true;
-                    // the canonical broadcast state this round: the shadow
-                    // in delta mode (what every other worker holds), the
-                    // params themselves in dense mode
-                    let data = shadow.as_deref().unwrap_or(&params).to_vec();
-                    endpoints.to_workers[worker].send(Message::Params { round, data })?;
-                }
-                Ok(other) => anyhow::bail!("leader got unexpected message {other:?}"),
-                Err(e) => anyhow::bail!("worker channel closed: {e}"),
-            }
-        }
-        agg.iter_mut().for_each(|a| *a = 0.0);
-        let scale = 1.0 / cfg.nodes as f32;
-        let mut coords = 0u64;
-        for payload in inbox.iter().flatten() {
-            GradientCompressor::decompress_expecting(payload, dim, &mut sparse)?;
-            coords += sparse.nnz() as u64;
-            sparse.add_scaled_into(scale, &mut agg);
-        }
-
-        // ---- optimizer step ----
-        opt.step(&mut params, &agg);
-
-        // ---- metrics ----
-        let uplink = transport::total(&endpoints.up_stats).1 - up_before;
-        let downlink = endpoints.downlink_total().1 - down_before;
-        let eval = if let Some(ev) = evaluator.as_mut() {
-            if round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds {
-                Some(ev.evaluate(&params)?)
-            } else {
-                None
-            }
-        } else {
-            None
-        };
-        metrics.push(RoundRecord {
-            round,
-            epoch,
-            train_loss: if example_sum > 0.0 { loss_sum / example_sum } else { 0.0 },
-            eval,
-            uplink_bytes: uplink,
-            uplink_coords: coords,
-            downlink_bytes: downlink,
-            dense_bytes: (cfg.nodes * 4 * dim) as u64,
-            memory_norm: mem_sum / cfg.nodes as f64,
-            k_used: warmup.k_at(dim, epoch),
-            lr: opt.lr(),
-            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-        });
-    }
-
-    // ---- shut down workers ----
-    for tx in &endpoints.to_workers {
-        let _ = tx.send(Message::Shutdown);
-    }
-    Ok((params, metrics))
+    let engine = RoundEngine::new(cfg, init_params.len(), batches_per_epoch);
+    engine.run(endpoints, init_params, evaluator, run_name)
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::config::OptimKind;
     use super::*;
-    use crate::comms::transport::star;
-    use crate::compress::Select;
+    use crate::comms::transport::{star, Message};
+    use crate::compress::{GradientCompressor, Select};
     use crate::runtime::MockModel;
-    use crate::sparsify::SparsifierKind;
+    use crate::sparsify::{SparseVec, SparsifierKind};
     use crate::util::rng::Rng;
 
     /// Leader against hand-rolled worker stubs that send a constant
@@ -296,6 +109,65 @@ mod tests {
         }
         assert_eq!(metrics.records.len(), 5);
         assert!(metrics.records[0].uplink_bytes > 0);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// A quorum gather must close every round with the responsive workers
+    /// and leave the silent one visible in the participation accounting.
+    #[test]
+    fn quorum_leader_proceeds_without_silent_worker() {
+        let dim = 16;
+        let n = 3;
+        let (leader, workers) = star(n);
+        let mut cfg = TrainConfig::image_default(n, SparsifierKind::Baseline, 0.0);
+        cfg.rounds = 4;
+        cfg.optim = OptimKind::Sgd { clip: None };
+        cfg.lr = crate::optim::LrSchedule::constant(0.1);
+        cfg.set_gather("quorum:m=2,timeout_ms=1").unwrap();
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|w| {
+                std::thread::spawn(move || loop {
+                    match w.from_leader.recv() {
+                        Ok(Message::Params { round, data }) => {
+                            if w.id == 2 {
+                                // silent straggler: receives but never replies
+                                continue;
+                            }
+                            let grad = vec![1.0f32; data.len()];
+                            let mut gc = GradientCompressor::builder(Select::all()).build();
+                            let mut payload = Vec::new();
+                            gc.compress(&grad, &mut Rng::new(0), &mut payload);
+                            w.to_leader
+                                .send(Message::SparseUpdate {
+                                    round,
+                                    worker: w.id,
+                                    payload,
+                                    loss: 1.0,
+                                    examples: 1,
+                                    mem_norm: 0.0,
+                                })
+                                .unwrap();
+                        }
+                        _ => return,
+                    }
+                })
+            })
+            .collect();
+        let (params, metrics) =
+            run_leader(&leader, vec![0.0; dim], None, &cfg, "quorum", 10).unwrap();
+        // averaging over the 2 ACTUAL participants: unit gradient, 4 rounds
+        // of lr=0.1 -> params = -0.4
+        for &p in &params {
+            assert!((p + 0.4).abs() < 1e-6, "{p}");
+        }
+        for r in &metrics.records {
+            assert_eq!(r.participants, 2, "round {}", r.round);
+            assert_eq!(r.stale_updates, 0);
+        }
+        assert_eq!(metrics.worker_participation, vec![4, 4, 0]);
         for h in handles {
             h.join().unwrap();
         }

@@ -1,20 +1,26 @@
 //! The distributed-SGD coordinator — Algorithm 1 of the paper.
 //!
 //! * [`config`] — experiment configuration (round semantics, sparsifier,
-//!   warm-up, optimizer, codec)
+//!   warm-up, optimizer, codec, gather policy)
 //! * [`worker`] — the per-node loop: local gradient (or local epoch),
 //!   error feedback, sparsify, encode, send
-//! * [`leader`] — broadcast, gather, decode, average, optimizer step,
-//!   metrics, evaluation
+//! * [`engine`] — the RoundEngine: the leader's round loop as explicit
+//!   broadcast / gather / aggregate / step phases, with pluggable
+//!   [`engine::GatherPolicy`]s and sparse-domain aggregation
+//! * [`leader`] — the held-out evaluator + the engine entry point
 //! * [`cluster`] — thread-per-node orchestration over the in-process star
 //!   transport (TCP variant available in [`crate::comms::tcp`])
 
 pub mod cluster;
 pub mod config;
+pub mod engine;
 pub mod leader;
 pub mod worker;
 
-pub use cluster::{run, run_with, ClusterResult, EvalFactory, Transport, WorkerFactory};
-pub use config::{parse_downlink, OptimKind, RoundMode, TrainConfig};
+pub use cluster::{
+    mock_worker_factory, run, run_with, ClusterResult, EvalFactory, Transport, WorkerFactory,
+};
+pub use config::{parse_downlink, OptimKind, RoundMode, StragglerSim, TrainConfig};
+pub use engine::{GatherPolicy, RoundEngine};
 pub use leader::Evaluator;
 pub use worker::WorkerSetup;

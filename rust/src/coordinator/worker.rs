@@ -8,6 +8,15 @@
 //! in the memory for the next round. A delta that arrives without a base
 //! (mid-stream join) triggers a [`Message::ResyncRequest`]; the leader
 //! answers with a dense unicast for the same round.
+//!
+//! Catch-up: under a quorum gather the leader does not wait for everyone,
+//! so a slow worker's inbox can hold several broadcasts. The worker drains
+//! whatever is queued *in order* — deltas must be applied sequentially,
+//! dense frames overwrite — and trains only on the newest round, so a
+//! straggler spends its compute contributing a (possibly late) update for
+//! the freshest model instead of grinding through a stale backlog. Under
+//! the default FullSync gather the inbox never holds more than one frame,
+//! so this path degenerates to the classic one-frame loop.
 
 use crate::comms::transport::{Message, WorkerEndpoints};
 use crate::compress::GradientCompressor;
@@ -54,11 +63,33 @@ pub fn run_worker(
     let mut params: Vec<f32> = Vec::new();
     let mut have_params = false;
     let mut delta_sv = SparseVec::default();
+    // Injected compute delay when this worker is the configured straggler.
+    let straggler_delay = match cfg.straggler {
+        Some(s) if s.worker == endpoints.id => {
+            Some(std::time::Duration::from_millis(s.delay_ms))
+        }
+        _ => None,
+    };
 
     loop {
-        let round = loop {
-            match endpoints.from_leader.recv() {
-                Ok(Message::Params { round, data }) => {
+        // Block for one frame, then drain the rest of the queue (catch-up;
+        // see module docs). `newest` is the round we will train on.
+        let mut newest: Option<u64> = None;
+        loop {
+            let msg = if newest.is_none() {
+                match endpoints.from_leader.recv() {
+                    Ok(m) => m,
+                    Err(_) => return Ok(()),
+                }
+            } else {
+                match endpoints.from_leader.try_recv() {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => return Ok(()),
+                }
+            };
+            match msg {
+                Message::Params { round, data } => {
                     anyhow::ensure!(
                         data.len() == dim,
                         "worker {}: params dim {} != model dim {dim}",
@@ -67,9 +98,9 @@ pub fn run_worker(
                     );
                     params = data;
                     have_params = true;
-                    break round;
+                    newest = Some(round);
                 }
-                Ok(Message::ParamsDelta { round, payload }) => {
+                Message::ParamsDelta { round, payload } => {
                     if !have_params {
                         // joined without a base: ask for a dense frame and
                         // keep waiting (the leader unicasts one this round)
@@ -86,12 +117,20 @@ pub fn run_worker(
                             )
                         })?;
                     delta_sv.add_scaled_into(1.0, &mut params);
-                    break round;
+                    newest = Some(round);
                 }
-                Ok(Message::Shutdown) | Err(_) => return Ok(()),
-                Ok(other) => anyhow::bail!("worker got unexpected message {other:?}"),
+                Message::Shutdown => return Ok(()),
+                other => anyhow::bail!("worker got unexpected message {other:?}"),
             }
-        };
+        }
+        let round = newest.expect("drain loop only exits with a round or returns");
+
+        // Straggler simulation: the injected delay models slow local
+        // compute, so it sits between receiving omega^t and producing the
+        // update (the leader's quorum clock keeps running meanwhile).
+        if let Some(d) = straggler_delay {
+            std::thread::sleep(d);
+        }
 
         // Epoch clock for schedules.
         let epoch = match cfg.mode {
@@ -328,6 +367,92 @@ mod tests {
         leader.broadcast_shared(1, frame.into()).unwrap();
         let res = handle.join().unwrap();
         assert!(res.is_err(), "wrong-dim delta must error out the worker");
+    }
+
+    #[test]
+    fn worker_drains_backlog_and_trains_on_newest_round() {
+        // Queue two dense frames before the worker starts: it must train
+        // once, on the newest round, not once per frame (quorum catch-up).
+        let (leader, mut workers) = star(1);
+        let dim = 32;
+        let cfg = TrainConfig::image_default(1, SparsifierKind::Baseline, 0.0);
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        leader.to_workers[0]
+            .send(Message::Params { round: 1, data: vec![1.0; dim] })
+            .unwrap();
+        let w = workers.remove(0);
+        let handle = std::thread::spawn(move || {
+            run_worker(w, mock_setup(dim), &cfg, Rng::new(9)).unwrap();
+        });
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { round, .. } => assert_eq!(round, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap();
+        // exactly one update was produced for the two queued frames
+        assert!(leader.from_workers.try_recv().is_err());
+    }
+
+    #[test]
+    fn worker_applies_queued_deltas_in_order_while_catching_up() {
+        // Base + two queued deltas: both must be applied (deltas cannot be
+        // skipped), with a single update for the newest round.
+        let (leader, mut workers) = star(1);
+        let dim = 16;
+        let mut cfg = TrainConfig::image_default(1, SparsifierKind::Baseline, 0.0);
+        cfg.set_downlink("delta").unwrap();
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        for (round, val) in [(1u64, 0.25f32), (2, 0.5)] {
+            let delta = SparseVec { dim, idx: vec![3], val: vec![val] };
+            let mut frame = Vec::new();
+            crate::comms::codec::encode(
+                &delta,
+                crate::comms::codec::CodecConfig::default(),
+                &mut frame,
+            );
+            leader.broadcast_shared(round, frame.into()).unwrap();
+        }
+        let w = workers.remove(0);
+        let setup = || {
+            let mut counter = 0u64;
+            WorkerSetup {
+                // zero noise: the mock gradient is exactly params - target
+                runtime: Box::new(MockModel::new(dim, 0.0, 7)),
+                next_batch: Box::new(move |_rng| {
+                    counter += 1;
+                    Batch::Seed(counter)
+                }),
+                batches_per_epoch: 4,
+            }
+        };
+        let handle = std::thread::spawn(move || {
+            run_worker(w, setup(), &cfg, Rng::new(2)).unwrap();
+        });
+        let g = match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { round, payload, .. } => {
+                assert_eq!(round, 2, "trains on the newest queued round");
+                let mut sv = SparseVec::default();
+                GradientCompressor::decompress_into(&payload, &mut sv).unwrap();
+                sv.to_dense()
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        // params[3] = 0 + 0.25 + 0.5; the noiseless mock gradient is
+        // params - target, so coordinate 3 reveals the summed deltas
+        let target = MockModel::new(dim, 0.0, 7).target;
+        assert!(
+            (g[3] - (0.75 - target[3])).abs() < 1e-6,
+            "both deltas must be applied: {} vs {}",
+            g[3],
+            0.75 - target[3]
+        );
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap();
     }
 
     #[test]

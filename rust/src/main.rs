@@ -63,6 +63,14 @@ SUBCOMMANDS
                 --compression 0.99       target compression ratio
                 --nodes 5 --rounds 100 --federated --seed N
                 --transport inproc|tcp
+                --gather full|quorum:m=M,timeout_ms=T
+                                         gather policy: block for all n
+                                         workers (default), or close each
+                                         round at m fresh updates plus a
+                                         T-ms drain window (late updates
+                                         are dropped and counted)
+                --straggler-sim D | W:D  delay worker W (default 0) by D ms
+                                         per round (straggler injection)
                 --downlink dense|delta|SPEC
                                          leader->worker wire path: dense
                                          params every round (default), or
@@ -73,7 +81,9 @@ SUBCOMMANDS
                                          delta mode (0 = round 0 only)
                 --artifacts DIR --out results/train
   experiment  regenerate a paper table/figure
-                --id table1..table5|fig2..fig6|figT1|figT2|all
+                --id table1..table5|fig2..fig6|figT1|figT2|figS1|all
+                                         figS1 = straggler sweep over
+                                         quorum m x injected delay
                 --quick  --nodes 5  --artifacts DIR  --out results
                 --lm-preset lm_small
                 --wire "bf16|delta"      wire-format override for every row
@@ -142,6 +152,13 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
         cfg.set_downlink(d)?;
     }
     cfg.resync_every = args.u64_or("resync-every", cfg.resync_every)?;
+    // Gather policy (FullSync default) + optional straggler injection.
+    if let Some(g) = args.get("gather") {
+        cfg.set_gather(g)?;
+    }
+    if let Some(s) = args.get("straggler-sim") {
+        cfg.straggler = Some(coordinator::StragglerSim::parse(s)?);
+    }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     Ok((cfg, artifacts))
 }
@@ -216,6 +233,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         println!(
             "measured downlink compression ratio: {:.4}%",
             100.0 * metrics.downlink_compression_ratio(0)
+        );
+    }
+    if cfg.gather != coordinator::GatherPolicy::FullSync {
+        println!(
+            "gather {}: participation rate {:.3}, stale updates dropped {}",
+            cfg.gather.label(),
+            metrics.participation_rate(cfg.nodes),
+            metrics.stale_total()
         );
     }
     println!("curves: {}", out.join("run.csv").display());

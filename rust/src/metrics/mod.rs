@@ -28,11 +28,21 @@ pub struct RoundRecord {
     /// Bytes a dense f32 exchange would have cost (n * 4d) — the paper's
     /// reference budget for either direction.
     pub dense_bytes: u64,
-    /// Mean residual-memory norm across workers (error-feedback health).
+    /// Mean residual-memory norm across participants (error-feedback health).
     pub memory_norm: f64,
     pub k_used: usize,
     pub lr: f32,
+    /// Workers whose update arrived in time to be aggregated this round
+    /// (= nodes under the FullSync gather; can be lower under a quorum).
+    pub participants: usize,
+    /// Late updates from earlier rounds dropped during this round's gather.
+    pub stale_updates: u64,
+    /// Pure round time: broadcast + gather + aggregate + step. Held-out
+    /// evaluation is timed separately in [`Self::eval_ms`] so eval rounds
+    /// don't pollute round-timing curves.
     pub wall_ms: f64,
+    /// Held-out evaluation time this round (0 when no eval ran).
+    pub eval_ms: f64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -65,11 +75,34 @@ pub struct RunMetrics {
     pub name: String,
     pub method: String,
     pub records: Vec<RoundRecord>,
+    /// Rounds each worker contributed a fresh update over the whole run
+    /// (filled by the RoundEngine at shutdown; empty when unknown).
+    pub worker_participation: Vec<u64>,
 }
 
 impl RunMetrics {
     pub fn new(name: &str, method: &str) -> Self {
-        RunMetrics { name: name.to_string(), method: method.to_string(), records: Vec::new() }
+        RunMetrics {
+            name: name.to_string(),
+            method: method.to_string(),
+            records: Vec::new(),
+            worker_participation: Vec::new(),
+        }
+    }
+
+    /// Mean per-round participation fraction (1.0 = every worker, every
+    /// round). Returns 1.0 for an empty run.
+    pub fn participation_rate(&self, nodes: usize) -> f64 {
+        if self.records.is_empty() || nodes == 0 {
+            return 1.0;
+        }
+        let got: u64 = self.records.iter().map(|r| r.participants as u64).sum();
+        got as f64 / (self.records.len() * nodes) as f64
+    }
+
+    /// Total stale updates dropped over the run.
+    pub fn stale_total(&self) -> u64 {
+        self.records.iter().map(|r| r.stale_updates).sum()
     }
 
     pub fn push(&mut self, r: RoundRecord) {
@@ -152,7 +185,7 @@ impl RunMetrics {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(
             f,
-            "round,epoch,train_loss,eval_metric,eval_value,uplink_bytes,uplink_coords,downlink_bytes,dense_bytes,memory_norm,k,lr,wall_ms"
+            "round,epoch,train_loss,eval_metric,eval_value,uplink_bytes,uplink_coords,downlink_bytes,dense_bytes,memory_norm,k,lr,participants,stale_updates,wall_ms,eval_ms"
         )?;
         for r in &self.records {
             let (em, ev) = match &r.eval {
@@ -161,7 +194,7 @@ impl RunMetrics {
             };
             writeln!(
                 f,
-                "{},{:.4},{:.6},{},{},{},{},{},{},{:.6},{},{},{:.3}",
+                "{},{:.4},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{:.3},{:.3}",
                 r.round,
                 r.epoch,
                 r.train_loss,
@@ -174,7 +207,10 @@ impl RunMetrics {
                 r.memory_norm,
                 r.k_used,
                 r.lr,
-                r.wall_ms
+                r.participants,
+                r.stale_updates,
+                r.wall_ms,
+                r.eval_ms
             )?;
         }
         Ok(())
@@ -202,6 +238,22 @@ impl RunMetrics {
         if let Some(l) = self.final_train_loss() {
             pairs.push(("final_train_loss", Json::from(l)));
         }
+        if !self.worker_participation.is_empty() {
+            pairs.push((
+                "participation_rate",
+                Json::from(self.participation_rate(self.worker_participation.len())),
+            ));
+            pairs.push(("stale_updates_total", Json::from(self.stale_total() as usize)));
+            pairs.push((
+                "worker_participation",
+                Json::Arr(
+                    self.worker_participation
+                        .iter()
+                        .map(|&p| Json::from(p as usize))
+                        .collect(),
+                ),
+            ));
+        }
         obj(pairs)
     }
 }
@@ -223,7 +275,10 @@ mod tests {
             memory_norm: 0.1,
             k_used: 10,
             lr: 0.1,
+            participants: 4,
+            stale_updates: 0,
             wall_ms: 5.0,
+            eval_ms: if eval.is_some() { 2.5 } else { 0.0 },
         }
     }
 
@@ -290,5 +345,48 @@ mod tests {
         let j = m.summary_json();
         assert_eq!(j.get("final_value").unwrap().as_f64(), Some(0.9));
         assert_eq!(j.get("method").unwrap().as_str(), Some("rtopk"));
+        // no participation info unless the engine filled it in
+        assert!(j.get("participation_rate").is_none());
+        m.worker_participation = vec![1, 1, 1, 0];
+        let j = m.summary_json();
+        assert_eq!(j.get("participation_rate").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("worker_participation").is_some());
+    }
+
+    #[test]
+    fn participation_and_stale_accounting() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        let mut a = rec(0, 10, 100, None);
+        a.participants = 3;
+        a.stale_updates = 1;
+        let mut b = rec(1, 10, 100, None);
+        b.participants = 4;
+        b.stale_updates = 2;
+        m.push(a);
+        m.push(b);
+        assert!((m.participation_rate(4) - 7.0 / 8.0).abs() < 1e-12);
+        assert_eq!(m.stale_total(), 3);
+        // empty run: defined as full participation
+        assert_eq!(RunMetrics::new("e", "x").participation_rate(4), 1.0);
+    }
+
+    #[test]
+    fn csv_has_participation_and_eval_ms_columns() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        m.push(rec(0, 5, 100, Some(EvalRecord::Accuracy(0.5))));
+        let dir = std::env::temp_dir().join("rtopk_test_metrics_cols");
+        let path = dir.join("run.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        for col in ["participants", "stale_updates", "wall_ms", "eval_ms"] {
+            assert!(header.contains(col), "missing column {col} in {header}");
+        }
+        // header and rows agree on the column count
+        let cols = header.split(',').count();
+        for line in text.lines().skip(1) {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,10 +7,26 @@ pub mod schedule;
 
 pub use schedule::{LrSchedule, WarmupSparsity};
 
+use crate::sparsify::SparseVec;
+
 /// An optimizer consumes the aggregated (dense) update direction and steps
 /// the flat parameter vector in place.
 pub trait Optimizer: Send {
     fn step(&mut self, params: &mut [f32], grad: &[f32]);
+
+    /// Apply an update that is zero outside `upd`'s support, touching only
+    /// the supported coordinates. Returns `false` when the optimizer needs
+    /// the dense direction (stateful optimizers like momentum, whose
+    /// velocity decays *every* coordinate each step) — the caller must then
+    /// scatter `upd` into a dense buffer and call [`Self::step`].
+    ///
+    /// Contract for implementors: the result must be bitwise identical to
+    /// `step` on the scattered dense vector (the RoundEngine's FullSync
+    /// trajectory guarantee rests on this).
+    fn step_sparse(&mut self, _params: &mut [f32], _upd: &SparseVec) -> bool {
+        false
+    }
+
     /// Current learning rate (after schedule application).
     fn lr(&self) -> f32;
     fn set_lr(&mut self, lr: f32);
@@ -95,6 +111,37 @@ impl Optimizer for Sgd {
         }
     }
 
+    /// SGD is stateless, so a sparse update touches only its support.
+    /// Bitwise-equal to the dense step: off-support coordinates there see
+    /// `w -= lr * 0.0` (a no-op for every non-NaN `w`), the global norm
+    /// gains only `+0.0` terms from off-support squares, and on-support
+    /// coordinates run the exact same op sequence (`v * scale`, `lr * _`,
+    /// subtract).
+    fn step_sparse(&mut self, params: &mut [f32], upd: &SparseVec) -> bool {
+        let scale = match self.clip_norm {
+            Some(clip) => {
+                let norm = upd.l2_sq().sqrt() as f32;
+                if norm > clip {
+                    clip / norm
+                } else {
+                    1.0
+                }
+            }
+            None => 1.0,
+        };
+        let lr = self.lr_value;
+        if scale == 1.0 {
+            for (&i, &v) in upd.idx.iter().zip(&upd.val) {
+                params[i as usize] -= lr * v;
+            }
+        } else {
+            for (&i, &v) in upd.idx.iter().zip(&upd.val) {
+                params[i as usize] -= lr * (v * scale);
+            }
+        }
+        true
+    }
+
     fn lr(&self) -> f32 {
         self.lr_value
     }
@@ -162,5 +209,42 @@ mod tests {
         let mut w = vec![1.0];
         opt.step(&mut w, &[1.0]);
         assert!((w[0] - 0.99).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sgd_sparse_step_matches_dense_bitwise() {
+        // step_sparse on a sparse update must equal step on its scattered
+        // dense form bit for bit, with and without clipping engaged.
+        let upd = SparseVec {
+            dim: 8,
+            idx: vec![1, 4, 6],
+            val: vec![0.75, -2.5, 1e-3],
+        };
+        let dense = upd.to_dense();
+        for clip in [None, Some(10.0f32), Some(1.0)] {
+            let mk = || match clip {
+                Some(c) => Sgd::with_clip(0.3, c),
+                None => Sgd::new(0.3),
+            };
+            let init: Vec<f32> = (0..8).map(|i| i as f32 * 0.11 - 0.3).collect();
+            let mut w_dense = init.clone();
+            mk().step(&mut w_dense, &dense);
+            let mut w_sparse = init.clone();
+            assert!(mk().step_sparse(&mut w_sparse, &upd));
+            for (a, b) in w_dense.iter().zip(&w_sparse) {
+                assert_eq!(a.to_bits(), b.to_bits(), "clip={clip:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn momentum_declines_sparse_step() {
+        // Momentum's velocity decays every coordinate per step; it must
+        // request the dense path rather than silently skip the decay.
+        let mut opt = MomentumSgd::new(4, 0.1, 0.9);
+        let mut w = vec![0.0; 4];
+        let upd = SparseVec { dim: 4, idx: vec![2], val: vec![1.0] };
+        assert!(!opt.step_sparse(&mut w, &upd));
+        assert_eq!(w, vec![0.0; 4], "declined step must not touch params");
     }
 }
