@@ -4,7 +4,9 @@
 //! `GradientCompressor::compress` call must be no slower than the seed's
 //! two-step sparsify-then-encode.
 
-use rtopk::compress::{GradientCompressor, Select};
+use rtopk::compress::{
+    BudgetPolicy, GradientCompressor, PartitionedCompressor, PipelineSpec, SegmentLayout, Select,
+};
 use rtopk::comms::codec::{bitmap_wins, decode, encode, CodecConfig, IndexFormat, ValueFormat};
 use rtopk::sparsify::{CompressionOperator, SparseVec, TopK};
 use rtopk::util::bench::{bb, Bench};
@@ -120,10 +122,58 @@ fn bench_fused_vs_two_step(bench: &mut Bench, rng: &mut Rng) {
     );
 }
 
+/// The partitioning gate: a segmented 8-way encode vs the flat pipeline at
+/// matched total k. ASSERTS the byte overhead stays ≤ 5% — the segmented
+/// frame pays 12 + 12·nseg header/table bytes plus one sub-frame header
+/// per segment, but per-segment indices are narrower (⌈log2(d/8)⌉ vs
+/// ⌈log2 d⌉ bits), so at real sparsities the wire cost must stay within a
+/// few percent of flat. Time for both paths is reported alongside.
+fn bench_segmented_vs_flat(bench: &mut Bench, rng: &mut Rng) {
+    let d = 1_000_000;
+    let nseg = 8;
+    let w = rng.normal_vec(d, 0.0, 1.0);
+    for &keep in &[0.001f64, 0.01] {
+        let k = (keep * d as f64) as usize;
+        let spec = PipelineSpec::parse("topk").unwrap();
+        let mut flat = GradientCompressor::builder(Select::top_k(k)).build();
+        let layout = SegmentLayout::even(nseg, d).unwrap();
+        let mut part =
+            PartitionedCompressor::new(&spec, layout, BudgetPolicy::Proportional, k, 0.2);
+        let mut buf_flat = Vec::new();
+        let mut buf_part = Vec::new();
+        bench.run_elems(&format!("flat/top_k/k_d={keep}"), Some(d), || {
+            let stats = flat.compress(&w, rng, &mut buf_flat);
+            bb(stats.payload_bytes);
+        });
+        bench.run_elems(&format!("segmented/top_k/n={nseg}/k_d={keep}"), Some(d), || {
+            let stats = part.compress(&w, rng, &mut buf_part);
+            bb(stats.payload_bytes);
+        });
+        flat.compress(&w, rng, &mut buf_flat);
+        part.compress(&w, rng, &mut buf_part);
+        let overhead = buf_part.len() as f64 / buf_flat.len() as f64 - 1.0;
+        println!(
+            "    (segmented {} B vs flat {} B at k/d={keep}: {:+.2}% bytes)",
+            buf_part.len(),
+            buf_flat.len(),
+            100.0 * overhead
+        );
+        assert!(
+            overhead <= 0.05,
+            "segmented encode overhead {:.2}% exceeds the 5% gate at {nseg} segments \
+             (k/d={keep}: {} vs {} bytes)",
+            100.0 * overhead,
+            buf_part.len(),
+            buf_flat.len()
+        );
+    }
+}
+
 fn main() {
     let mut bench = Bench::new("codec");
     let mut rng = Rng::new(0);
     bench_codec_stages(&mut bench, &mut rng);
     bench_pipeline_sweep(&mut bench, &mut rng);
     bench_fused_vs_two_step(&mut bench, &mut rng);
+    bench_segmented_vs_flat(&mut bench, &mut rng);
 }

@@ -201,6 +201,17 @@ fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, CodecError> {
 
 const MAGIC: u16 = 0x5254;
 
+/// Magic of the segmented (partitioned/layerwise) uplink frame: "SG".
+/// Distinct from [`MAGIC`] so a flat decoder fails cleanly with `BadMagic`
+/// instead of misparsing, and the shared decode entry points can dispatch
+/// on the first two bytes.
+const SEG_MAGIC: u16 = 0x4753;
+
+/// True when `buf` starts with the segmented-frame magic.
+pub fn is_segmented(buf: &[u8]) -> bool {
+    buf.len() >= 2 && u16::from_le_bytes([buf[0], buf[1]]) == SEG_MAGIC
+}
+
 /// Whether the occupancy-bitmap layout beats the configured per-entry
 /// index stage. Fixed-width costs exactly `nnz * index_bits` bits; the
 /// cheapest possible delta-varint message costs 1 byte per entry (every
@@ -321,9 +332,32 @@ pub fn decode(buf: &[u8], sv: &mut SparseVec) -> Result<(), CodecError> {
 /// dimension every allocation this function performs is bounded by
 /// `O(expected_dim)`; without one it is bounded by `O(buf.len())` (the
 /// claimed `nnz` must be backed by actual value bytes).
+///
+/// Accepts both frame kinds: a flat frame decodes directly, a segmented
+/// frame ([`encode_segmented`]) decodes segment by segment into one
+/// global-coordinate `SparseVec` — the receive side (leader aggregation,
+/// k-way merge, `step_sparse`) is agnostic to partitioning.
 pub fn decode_expecting(
     buf: &[u8],
     expected_dim: Option<usize>,
+    sv: &mut SparseVec,
+) -> Result<(), CodecError> {
+    if is_segmented(buf) {
+        decode_segmented_expecting(buf, expected_dim, sv)
+    } else {
+        decode_flat_into(buf, expected_dim, 0, true, sv)
+    }
+}
+
+/// Decode one flat frame. With `reset` the output is cleared to the
+/// frame's dimension; without it, decoded entries are *appended* with
+/// their indices shifted by `base` (the segmented decoder's sub-frame
+/// path — the caller guarantees `base + dim <= sv.dim`).
+fn decode_flat_into(
+    buf: &[u8],
+    expected_dim: Option<usize>,
+    base: u32,
+    reset: bool,
     sv: &mut SparseVec,
 ) -> Result<(), CodecError> {
     if buf.len() < 12 {
@@ -350,7 +384,10 @@ pub fn decode_expecting(
     if nnz * vbytes > body.len() {
         return Err(CodecError::Truncated(buf.len()));
     }
-    sv.clear(dim);
+    if reset {
+        sv.clear(dim);
+    }
+    let start_nnz = sv.idx.len();
     let mut pos = 0usize;
 
     if flags & 4 != 0 {
@@ -361,10 +398,10 @@ pub fn decode_expecting(
         }
         for i in 0..dim {
             if body[i / 8] & (1 << (i % 8)) != 0 {
-                sv.idx.push(i as u32);
+                sv.idx.push(i as u32 + base);
             }
         }
-        if sv.idx.len() != nnz {
+        if sv.idx.len() - start_nnz != nnz {
             return Err(CodecError::Corrupt("bitmap popcount != nnz"));
         }
         pos = nbytes;
@@ -382,7 +419,7 @@ pub fn decode_expecting(
             if i <= prev {
                 return Err(CodecError::Corrupt("indices not strictly increasing"));
             }
-            sv.idx.push(i as u32);
+            sv.idx.push(i as u32 + base);
             prev = i;
         }
         pos = br.bytes_consumed();
@@ -400,7 +437,7 @@ pub fn decode_expecting(
             if i as usize >= dim {
                 return Err(CodecError::Corrupt("index out of range"));
             }
-            sv.idx.push(i as u32);
+            sv.idx.push(i as u32 + base);
             prev = i;
         }
     }
@@ -418,6 +455,183 @@ pub fn decode_expecting(
         sv.val.push(v);
     }
     Ok(())
+}
+
+/// One entry of a segmented frame's table: the segment's `[offset, len)`
+/// range in the flat vector and the byte length of its sub-payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegEntry {
+    pub offset: u32,
+    pub len: u32,
+    pub nbytes: u32,
+}
+
+/// Byte overhead a segmented frame adds on top of its sub-payloads:
+/// the 12-byte frame header plus one 12-byte table entry per segment.
+pub fn segmented_overhead(nseg: usize) -> usize {
+    12 + 12 * nseg
+}
+
+/// Segmented (partitioned/layerwise) uplink frame, little-endian:
+///   magic  u16 = 0x4753 ("SG")
+///   flags  u8  = 0 (reserved)
+///   _pad   u8
+///   dim    u32   total flat dimension
+///   nseg   u32
+///   table  nseg × { offset u32, len u32, nbytes u32 }
+///   bodies concatenated sub-payloads, each a flat frame of dim = len
+///
+/// Segments must be in order, non-overlapping, and cover `[0, dim)`
+/// exactly — the decoder enforces all three, so global indices come out
+/// strictly increasing with no per-frame sort.
+pub fn encode_segmented(dim: usize, table: &[SegEntry], bodies: &[u8], out: &mut Vec<u8>) {
+    out.clear();
+    debug_assert_eq!(table.iter().map(|e| e.nbytes as usize).sum::<usize>(), bodies.len());
+    out.extend_from_slice(&SEG_MAGIC.to_le_bytes());
+    out.push(0);
+    out.push(0);
+    out.extend_from_slice(&(dim as u32).to_le_bytes());
+    out.extend_from_slice(&(table.len() as u32).to_le_bytes());
+    for e in table {
+        out.extend_from_slice(&e.offset.to_le_bytes());
+        out.extend_from_slice(&e.len.to_le_bytes());
+        out.extend_from_slice(&e.nbytes.to_le_bytes());
+    }
+    out.extend_from_slice(bodies);
+}
+
+/// Parse and validate a segmented frame's header + table, without touching
+/// the bodies. Every check runs before any allocation proportional to the
+/// claimed sizes: the table must fit the buffer, segments must be in
+/// order, non-overlapping, non-empty, and cover `[0, dim)` exactly, and
+/// the sub-payload byte lengths must sum to exactly the remaining bytes.
+fn parse_segmented_header(
+    buf: &[u8],
+    expected_dim: Option<usize>,
+) -> Result<(usize, Vec<SegEntry>), CodecError> {
+    if buf.len() < 12 {
+        return Err(CodecError::Truncated(buf.len()));
+    }
+    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    if magic != SEG_MAGIC {
+        return Err(CodecError::BadMagic(magic));
+    }
+    if buf[2] != 0 {
+        return Err(CodecError::Corrupt("unknown segmented-frame flags"));
+    }
+    let dim = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    let nseg = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    if expected_dim.is_some_and(|expected| expected != dim) {
+        return Err(CodecError::Corrupt("dim != expected dim"));
+    }
+    if nseg == 0 {
+        return Err(CodecError::Corrupt("segmented frame with zero segments"));
+    }
+    // every segment is non-empty, so nseg > dim is unsatisfiable; together
+    // with the table-fits-buffer bound this caps the table allocation at
+    // O(min(dim, buf.len()))
+    if nseg > dim {
+        return Err(CodecError::Corrupt("more segments than coordinates"));
+    }
+    let table_bytes = match nseg.checked_mul(12) {
+        Some(t) => t,
+        None => return Err(CodecError::Corrupt("segment table overflow")),
+    };
+    if buf.len() < 12 + table_bytes {
+        return Err(CodecError::Truncated(buf.len()));
+    }
+    let mut table = Vec::with_capacity(nseg);
+    let mut expect_offset = 0usize;
+    let mut body_bytes = 0usize;
+    for s in 0..nseg {
+        let at = 12 + 12 * s;
+        let e = SegEntry {
+            offset: u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()),
+            len: u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap()),
+            nbytes: u32::from_le_bytes(buf[at + 8..at + 12].try_into().unwrap()),
+        };
+        if e.len == 0 {
+            return Err(CodecError::Corrupt("zero-length segment"));
+        }
+        // in-order, non-overlapping, gap-free: every layout the encoder
+        // emits covers [0, dim) contiguously, so anything else is corruption
+        if e.offset as usize != expect_offset {
+            return Err(CodecError::Corrupt("segment table out of order or overlapping"));
+        }
+        expect_offset += e.len as usize;
+        if expect_offset > dim {
+            return Err(CodecError::Corrupt("segment past dim"));
+        }
+        body_bytes = match body_bytes.checked_add(e.nbytes as usize) {
+            Some(b) => b,
+            None => return Err(CodecError::Corrupt("segment byte lengths overflow")),
+        };
+        table.push(e);
+    }
+    if expect_offset != dim {
+        return Err(CodecError::Corrupt("segments do not cover dim"));
+    }
+    if body_bytes != buf.len() - 12 - table_bytes {
+        return Err(CodecError::Truncated(buf.len()));
+    }
+    Ok((dim, table))
+}
+
+/// Decode a segmented frame into one global-coordinate `SparseVec`. Each
+/// sub-payload is decoded as a flat frame whose header dimension must
+/// equal its table entry's `len` (per-segment dim validation), with
+/// indices shifted by the segment offset — the output is sorted and
+/// strictly increasing by construction.
+pub fn decode_segmented_expecting(
+    buf: &[u8],
+    expected_dim: Option<usize>,
+    sv: &mut SparseVec,
+) -> Result<(), CodecError> {
+    let (dim, table) = parse_segmented_header(buf, expected_dim)?;
+    sv.clear(dim);
+    let mut at = 12 + 12 * table.len();
+    for e in &table {
+        let body = &buf[at..at + e.nbytes as usize];
+        if is_segmented(body) {
+            return Err(CodecError::Corrupt("nested segmented frame"));
+        }
+        decode_flat_into(body, Some(e.len as usize), e.offset, false, sv)?;
+        at += e.nbytes as usize;
+    }
+    Ok(())
+}
+
+/// Lightweight per-segment byte accounting over a segmented frame that
+/// ALREADY decoded successfully: calls `f(segment_index, sub_payload_bytes)`
+/// per table entry and returns the frame's overhead bytes (header + table).
+/// `None` for flat frames. Unlike the decode path this re-validates
+/// nothing and allocates nothing — the caller guarantees the frame was
+/// just accepted by [`decode_segmented_expecting`].
+pub fn scan_segment_sizes(buf: &[u8], mut f: impl FnMut(usize, usize)) -> Option<usize> {
+    if !is_segmented(buf) || buf.len() < 12 {
+        return None;
+    }
+    let nseg = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    if nseg == 0 || buf.len() < 12 + nseg.checked_mul(12)? {
+        return None;
+    }
+    for s in 0..nseg {
+        let at = 12 + 12 * s;
+        f(s, u32::from_le_bytes(buf[at + 8..at + 12].try_into().unwrap()) as usize);
+    }
+    Some(segmented_overhead(nseg))
+}
+
+/// Planned size of a segmented frame over `(segment_len, nnz)` pairs —
+/// the segmented counterpart of [`encoded_size`], and exact under the
+/// same conditions (fixed-width and bitmap layouts; an upper bound for
+/// delta-varint).
+pub fn segmented_encoded_size(segs: &[(usize, usize)], cfg: CodecConfig) -> usize {
+    segmented_overhead(segs.len())
+        + segs
+            .iter()
+            .map(|&(len, nnz)| encoded_size(len, nnz, cfg))
+            .sum::<usize>()
 }
 
 /// Size in bytes of the encoded message, without encoding (for planning).
@@ -704,6 +918,133 @@ mod tests {
         buf[12] = 3;
         buf[13] = 3;
         assert!(decode(&buf, &mut back).is_err());
+    }
+
+    /// Build a segmented frame from per-segment SparseVecs (segment-local
+    /// coordinates), mirroring what the partitioned compressor emits.
+    fn build_segmented(parts: &[(usize, &SparseVec)], dim: usize, cfg: CodecConfig) -> Vec<u8> {
+        let mut bodies = Vec::new();
+        let mut table = Vec::new();
+        let mut sub = Vec::new();
+        for &(offset, sv) in parts {
+            encode(sv, cfg, &mut sub);
+            table.push(SegEntry {
+                offset: offset as u32,
+                len: sv.dim as u32,
+                nbytes: sub.len() as u32,
+            });
+            bodies.extend_from_slice(&sub);
+        }
+        let mut out = Vec::new();
+        encode_segmented(dim, &table, &bodies, &mut out);
+        out
+    }
+
+    #[test]
+    fn segmented_roundtrip_all_formats() {
+        let mut rng = Rng::new(31);
+        for (values, indices) in [
+            (ValueFormat::F32, IndexFormat::FixedWidth),
+            (ValueFormat::F32, IndexFormat::DeltaVarint),
+            (ValueFormat::Bf16, IndexFormat::FixedWidth),
+            (ValueFormat::Bf16, IndexFormat::DeltaVarint),
+        ] {
+            let cfg = CodecConfig { values, indices };
+            let a = random_sparse(&mut rng, 100, 10);
+            let b = random_sparse(&mut rng, 37, 0); // empty segment payload
+            let c = random_sparse(&mut rng, 63, 30);
+            let dim = 100 + 37 + 63;
+            let buf = build_segmented(&[(0, &a), (100, &b), (137, &c)], dim, cfg);
+            assert!(is_segmented(&buf));
+            let mut back = SparseVec::default();
+            decode_expecting(&buf, Some(dim), &mut back).unwrap();
+            back.debug_validate();
+            assert_eq!(back.dim, dim);
+            assert_eq!(back.nnz(), a.nnz() + b.nnz() + c.nnz());
+            // global coords = segment-local coords + offsets, values per
+            // the value stage
+            let mut expect_idx: Vec<u32> = a.idx.clone();
+            expect_idx.extend(c.idx.iter().map(|&i| i + 137));
+            assert_eq!(back.idx, expect_idx, "{values:?}/{indices:?}");
+            for (&got, &sent) in back.val.iter().zip(a.val.iter().chain(&c.val)) {
+                assert_eq!(got.to_bits(), value_roundtrip(sent, values).to_bits());
+            }
+            // header scan agrees with the layout and accounts every byte
+            let mut sub_bytes = vec![0usize; 3];
+            let overhead = scan_segment_sizes(&buf, |s, nb| sub_bytes[s] += nb).unwrap();
+            assert_eq!(overhead, segmented_overhead(3));
+            assert_eq!(overhead + sub_bytes.iter().sum::<usize>(), buf.len());
+            // flat frames are not scanned
+            let mut flat_buf = Vec::new();
+            encode(&a, cfg, &mut flat_buf);
+            assert!(scan_segment_sizes(&flat_buf, |_, _| {}).is_none());
+            // the planner is exact for fixed-width (no bitmap at these
+            // densities) and an upper bound otherwise
+            let plan = segmented_encoded_size(&[(100, 10), (37, 0), (63, 30)], cfg);
+            match indices {
+                IndexFormat::FixedWidth => assert_eq!(buf.len(), plan),
+                IndexFormat::DeltaVarint => assert!(buf.len() <= plan),
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_frame_rejects_malformed_tables() {
+        let mut rng = Rng::new(32);
+        let a = random_sparse(&mut rng, 50, 5);
+        let b = random_sparse(&mut rng, 50, 5);
+        let good = build_segmented(&[(0, &a), (50, &b)], 100, CodecConfig::default());
+        let mut back = SparseVec::default();
+        decode_expecting(&good, Some(100), &mut back).unwrap();
+        // wrong expected dim fails before the table is parsed
+        assert!(decode_expecting(&good, Some(101), &mut back).is_err());
+        // out-of-order segments
+        let bad = build_segmented(&[(50, &b), (0, &a)], 100, CodecConfig::default());
+        assert!(decode_expecting(&bad, Some(100), &mut back).is_err());
+        // overlapping segments
+        let bad = build_segmented(&[(0, &a), (25, &b)], 100, CodecConfig::default());
+        assert!(decode_expecting(&bad, Some(100), &mut back).is_err());
+        // coverage hole (segments do not reach dim)
+        let bad = build_segmented(&[(0, &a), (50, &b)], 150, CodecConfig::default());
+        assert!(decode_expecting(&bad, Some(150), &mut back).is_err());
+        // segment dim mismatch: a structurally consistent table whose first
+        // entry claims len 60 while its sub-frame header says 50 must fail
+        // on the per-segment dim validation (not on byte accounting)
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&110u32.to_le_bytes()); // total dim 60 + 50
+        bad[12 + 4..12 + 8].copy_from_slice(&60u32.to_le_bytes()); // seg0 len
+        bad[12 + 12..12 + 16].copy_from_slice(&60u32.to_le_bytes()); // seg1 offset
+        assert!(decode_expecting(&bad, Some(110), &mut back).is_err());
+        // truncated sub-payload (any strict prefix fails)
+        for cut in [good.len() - 1, good.len() - 10, 13, 12, 5, 0] {
+            assert!(
+                decode_expecting(&good[..cut], Some(100), &mut back).is_err(),
+                "prefix {cut} decoded"
+            );
+        }
+        // nseg = 0 and a huge claimed nseg both fail fast
+        let mut hdr = Vec::new();
+        hdr.extend_from_slice(&SEG_MAGIC.to_le_bytes());
+        hdr.extend_from_slice(&[0, 0]);
+        hdr.extend_from_slice(&100u32.to_le_bytes());
+        hdr.extend_from_slice(&0u32.to_le_bytes());
+        assert!(decode_expecting(&hdr, Some(100), &mut back).is_err());
+        hdr[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_expecting(&hdr, Some(100), &mut back).is_err());
+        // nested segmented frames are corruption
+        let inner = build_segmented(&[(0, &a)], 50, CodecConfig::default());
+        let mut nested_table = vec![SegEntry { offset: 0, len: 50, nbytes: inner.len() as u32 }];
+        let sub_b = {
+            let mut s = Vec::new();
+            encode(&b, CodecConfig::default(), &mut s);
+            s
+        };
+        nested_table.push(SegEntry { offset: 50, len: 50, nbytes: sub_b.len() as u32 });
+        let mut bodies = inner.clone();
+        bodies.extend_from_slice(&sub_b);
+        let mut nested = Vec::new();
+        encode_segmented(100, &nested_table, &bodies, &mut nested);
+        assert!(decode_expecting(&nested, Some(100), &mut back).is_err());
     }
 
     #[test]

@@ -7,5 +7,8 @@ pub mod codec;
 pub mod tcp;
 pub mod transport;
 
-pub use codec::{decode, decode_expecting, encode, CodecConfig, IndexFormat, ValueFormat};
+pub use codec::{
+    decode, decode_expecting, encode, encode_segmented, is_segmented, CodecConfig, IndexFormat,
+    SegEntry, ValueFormat,
+};
 pub use transport::{star, LeaderEndpoints, Message, WorkerEndpoints};

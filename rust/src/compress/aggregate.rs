@@ -22,7 +22,27 @@
 use crate::comms::codec::CodecError;
 use crate::sparsify::SparseVec;
 
+use super::layout::SegmentLayout;
 use super::GradientCompressor;
+
+/// Accumulate a sorted sparse vector's squared mass into per-segment bins
+/// (`out[i] += Σ v²` over coordinates inside segment i). One linear walk —
+/// the per-segment kept-mass column of the partitioned uplink metrics.
+pub fn mass_by_segment(sv: &SparseVec, layout: &SegmentLayout, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), layout.len());
+    sv.debug_validate();
+    let mut seg = 0usize;
+    let segs = layout.segments();
+    for (&i, &v) in sv.idx.iter().zip(&sv.val) {
+        while seg < segs.len() && i as usize >= segs[seg].end() {
+            seg += 1;
+        }
+        if seg == segs.len() {
+            break; // index past the layout (foreign dim); nothing to bin
+        }
+        out[seg] += (v as f64) * (v as f64);
+    }
+}
 
 /// Merge sorted sparse inputs into `out`: for each union coordinate,
 /// `out[i] = Σ_w scale * inputs[w][i]`, folded in input order. Inputs must
@@ -242,6 +262,27 @@ mod tests {
             let dense = dense_reference(&inputs, 0.25, dim);
             assert_eq!(merged.to_dense(), dense, "round {round}");
         }
+    }
+
+    #[test]
+    fn mass_by_segment_bins_by_layout() {
+        let layout = SegmentLayout::from_parts(&[
+            ("a".to_string(), 4),
+            ("b".to_string(), 4),
+            ("c".to_string(), 2),
+        ])
+        .unwrap();
+        let sv = SparseVec { dim: 10, idx: vec![0, 3, 5, 9], val: vec![1.0, 2.0, 3.0, 4.0] };
+        let mut out = vec![0.0f64; 3];
+        mass_by_segment(&sv, &layout, &mut out);
+        assert_eq!(out, vec![5.0, 9.0, 16.0]);
+        // accumulates across calls (per-round sums over n workers)
+        mass_by_segment(&sv, &layout, &mut out);
+        assert_eq!(out, vec![10.0, 18.0, 32.0]);
+        // empty vector adds nothing
+        let empty = SparseVec { dim: 10, idx: vec![], val: vec![] };
+        mass_by_segment(&empty, &layout, &mut out);
+        assert_eq!(out, vec![10.0, 18.0, 32.0]);
     }
 
     #[test]

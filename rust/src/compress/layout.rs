@@ -1,0 +1,558 @@
+//! Segment layouts and per-segment uplink budgets — the "which layer gets
+//! how much of k" half of partitioned (layerwise) compression.
+//!
+//! The paper applies rTop-k *per layer* with each layer's k proportional
+//! to its parameter count; Shi et al. (1911.08772) show layer gradient
+//! magnitudes differ by orders of magnitude, and 2210.13532 shows
+//! reallocating the budget per round by observed gradient mass improves
+//! the accuracy/bits trade-off further. This module provides:
+//!
+//! * [`Segment`] / [`SegmentLayout`] — a validated partition of the flat
+//!   parameter vector into named, contiguous `[offset, offset+len)`
+//!   ranges (one per layer).
+//! * [`LayoutSpec`] — the CLI-facing description
+//!   (`flat | even:n=N | manifest`, plus explicit name/len lists resolved
+//!   from the runtime manifest), resolved against the model dimension at
+//!   cluster start.
+//! * [`BudgetPolicy`] — how a round's total k splits across segments:
+//!   `proportional` (to parameter count, the paper's layerwise rule),
+//!   `uniform`, or `adaptive` (to each segment's previous-round kept
+//!   gradient mass, per 2210.13532). Allocation is largest-remainder with
+//!   a deterministic tie-break by segment index, so the per-segment
+//!   budgets always sum *exactly* to the requested k — no rounding drift.
+
+/// One named contiguous slice of the flat parameter vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Segment {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Segment {
+    pub fn end(&self) -> usize {
+        self.offset + self.len
+    }
+}
+
+/// A validated partition of `[0, dim)` into contiguous non-empty segments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentLayout {
+    dim: usize,
+    segments: Vec<Segment>,
+}
+
+impl SegmentLayout {
+    /// Build from (name, len) parts; validates non-empty, every len >= 1,
+    /// and contiguous coverage of `[0, dim)` with `dim = Σ len`.
+    pub fn from_parts(parts: &[(String, usize)]) -> anyhow::Result<SegmentLayout> {
+        anyhow::ensure!(!parts.is_empty(), "segment layout must have at least one segment");
+        let mut segments = Vec::with_capacity(parts.len());
+        let mut offset = 0usize;
+        for (name, len) in parts {
+            anyhow::ensure!(
+                *len >= 1,
+                "segment {name:?} has zero length (every segment must be non-empty)"
+            );
+            segments.push(Segment { name: name.clone(), offset, len: *len });
+            offset = offset
+                .checked_add(*len)
+                .ok_or_else(|| anyhow::anyhow!("segment layout overflows usize"))?;
+        }
+        Ok(SegmentLayout { dim: offset, segments })
+    }
+
+    /// The single-segment layout covering all of `[0, dim)`.
+    pub fn single(dim: usize) -> anyhow::Result<SegmentLayout> {
+        Self::from_parts(&[("all".to_string(), dim)])
+    }
+
+    /// `n` near-equal segments over `[0, dim)` (the first `dim % n` get one
+    /// extra coordinate). Errors when `dim < n` (zero-length segments).
+    pub fn even(n: usize, dim: usize) -> anyhow::Result<SegmentLayout> {
+        anyhow::ensure!(n >= 1, "even layout needs n >= 1 segments");
+        anyhow::ensure!(
+            dim >= n,
+            "even layout: {n} segments over dim {dim} would create empty segments"
+        );
+        let base = dim / n;
+        let extra = dim % n;
+        let parts: Vec<(String, usize)> = (0..n)
+            .map(|i| (format!("seg{i}"), base + usize::from(i < extra)))
+            .collect();
+        Self::from_parts(&parts)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
+    }
+
+    pub fn len(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+
+    /// True for the single-segment layout (its wire frames are the plain
+    /// flat frames — see the bit-identity invariant in DESIGN.md §7).
+    pub fn is_single(&self) -> bool {
+        self.segments.len() == 1
+    }
+
+    /// Check the layout against a concrete model dimension.
+    pub fn validate_dim(&self, dim: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dim == dim,
+            "segment layout covers {} coordinates but the model dim is {dim}",
+            self.dim
+        );
+        Ok(())
+    }
+
+    /// Segment names in order (metrics headers).
+    pub fn names(&self) -> Vec<String> {
+        self.segments.iter().map(|s| s.name.clone()).collect()
+    }
+}
+
+/// The CLI-facing layout description, resolved against the model dimension
+/// at cluster start (`--layout flat|even:n=N|manifest`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum LayoutSpec {
+    /// One flat vector — the pre-partitioning pipeline, bit-identical on
+    /// the wire and in every parameter trajectory (the default).
+    #[default]
+    Flat,
+    /// `n` near-equal segments.
+    Even(usize),
+    /// Derive segments from the runtime manifest's model entry (its
+    /// `meta.layers` list). Must be resolved to [`LayoutSpec::Explicit`]
+    /// by the launcher before the cluster starts (the compress layer does
+    /// not read manifests).
+    Manifest,
+    /// Explicit (name, len) parts, e.g. resolved from a manifest entry.
+    Explicit(Vec<(String, usize)>),
+}
+
+impl LayoutSpec {
+    /// Parse a `--layout` flag value: `flat` | `even:n=<N>` | `manifest`.
+    pub fn parse(s: &str) -> anyhow::Result<LayoutSpec> {
+        let t = s.trim().to_ascii_lowercase();
+        match t.as_str() {
+            "flat" => return Ok(LayoutSpec::Flat),
+            "manifest" => return Ok(LayoutSpec::Manifest),
+            _ => {}
+        }
+        if let Some(rest) = t.strip_prefix("even:") {
+            let n = rest
+                .strip_prefix("n=")
+                .ok_or_else(|| anyhow::anyhow!("even layout expects even:n=<count>, got {s:?}"))?
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("even layout: n expects an integer, got {s:?}"))?;
+            anyhow::ensure!(n >= 1, "even layout needs n >= 1, got {s:?}");
+            return Ok(LayoutSpec::Even(n));
+        }
+        anyhow::bail!("unknown layout {s:?} (flat | even:n=<count> | manifest)")
+    }
+
+    /// Round-trippable spec string (`Explicit` renders a summary label).
+    pub fn label(&self) -> String {
+        match self {
+            LayoutSpec::Flat => "flat".to_string(),
+            LayoutSpec::Even(n) => format!("even:n={n}"),
+            LayoutSpec::Manifest => "manifest".to_string(),
+            LayoutSpec::Explicit(parts) => format!("explicit:{}", parts.len()),
+        }
+    }
+
+    /// True when this spec keeps the flat (non-partitioned) pipeline.
+    pub fn is_flat(&self) -> bool {
+        matches!(self, LayoutSpec::Flat)
+    }
+
+    /// Resolve to a concrete validated layout at the model dimension.
+    pub fn resolve(&self, dim: usize) -> anyhow::Result<SegmentLayout> {
+        let layout = match self {
+            LayoutSpec::Flat => SegmentLayout::single(dim)?,
+            LayoutSpec::Even(n) => SegmentLayout::even(*n, dim)?,
+            LayoutSpec::Manifest => anyhow::bail!(
+                "layout \"manifest\" must be resolved against a runtime manifest before \
+                 the cluster starts (the launcher replaces it with the model's layer list)"
+            ),
+            LayoutSpec::Explicit(parts) => SegmentLayout::from_parts(parts)?,
+        };
+        layout.validate_dim(dim)?;
+        Ok(layout)
+    }
+
+    /// Structural validation that needs no model dimension (config-time).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match self {
+            LayoutSpec::Flat | LayoutSpec::Manifest => Ok(()),
+            LayoutSpec::Even(n) => {
+                anyhow::ensure!(*n >= 1, "even layout needs n >= 1 segments");
+                Ok(())
+            }
+            LayoutSpec::Explicit(parts) => {
+                // from_parts performs the full structural check
+                SegmentLayout::from_parts(parts).map(|_| ())
+            }
+        }
+    }
+}
+
+/// How a round's total uplink budget k splits across segments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BudgetPolicy {
+    /// k_i ∝ segment parameter count (the paper's layerwise rule).
+    #[default]
+    Proportional,
+    /// k_i equal across segments.
+    Uniform,
+    /// k_i ∝ the segment's previous-round kept gradient mass (Σ v² of the
+    /// sent coordinates), per 2210.13532; falls back to proportional on
+    /// the first round and whenever the observed mass is all-zero.
+    /// Whenever `k >= nseg`, one coordinate per segment is reserved before
+    /// the mass-weighted split (the observation floor): a segment that
+    /// transmits nothing observes zero mass and would otherwise be starved
+    /// permanently once its weight hits zero — with error feedback its
+    /// untransmitted residual would grow without bound.
+    Adaptive,
+}
+
+impl BudgetPolicy {
+    /// Parse a `--budget` flag value.
+    pub fn parse(s: &str) -> anyhow::Result<BudgetPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "proportional" | "prop" => Ok(BudgetPolicy::Proportional),
+            "uniform" => Ok(BudgetPolicy::Uniform),
+            "adaptive" => Ok(BudgetPolicy::Adaptive),
+            other => anyhow::bail!(
+                "unknown budget policy {other:?} (proportional | uniform | adaptive)"
+            ),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BudgetPolicy::Proportional => "proportional",
+            BudgetPolicy::Uniform => "uniform",
+            BudgetPolicy::Adaptive => "adaptive",
+        }
+    }
+
+    /// Split `k_total` across the layout's segments. `prev_mass` is the
+    /// per-segment kept mass observed last round (adaptive policy); `None`
+    /// or an all-zero mass falls back to proportional weights.
+    ///
+    /// Guarantees: `Σ alloc == min(k_total, dim)` exactly, `alloc[i] <=
+    /// segments[i].len`, and the result is a pure function of the inputs
+    /// (largest-remainder apportionment, ties broken by segment index).
+    pub fn allocate(
+        &self,
+        k_total: usize,
+        layout: &SegmentLayout,
+        prev_mass: Option<&[f64]>,
+    ) -> Vec<usize> {
+        let segs = layout.segments();
+        let n = segs.len();
+        let proportional: Vec<f64> = segs.iter().map(|s| s.len as f64).collect();
+        let weights: Vec<f64> = match self {
+            BudgetPolicy::Proportional => proportional,
+            BudgetPolicy::Uniform => vec![1.0; n],
+            BudgetPolicy::Adaptive => match prev_mass {
+                Some(m)
+                    if m.len() == n
+                        && m.iter().all(|v| v.is_finite() && *v >= 0.0)
+                        && m.iter().sum::<f64>() > 0.0 =>
+                {
+                    m.to_vec()
+                }
+                _ => proportional,
+            },
+        };
+        let caps: Vec<usize> = segs.iter().map(|s| s.len).collect();
+        let k = k_total.min(layout.dim());
+        if matches!(self, BudgetPolicy::Adaptive) && k >= n {
+            // Observation floor: reserve one coordinate per segment, split
+            // the rest by mass. Every segment keeps transmitting (and
+            // observing its own mass), so a segment whose weight collapsed
+            // to zero can re-earn budget when its gradients return.
+            let reduced: Vec<usize> = caps.iter().map(|&c| c - 1).collect();
+            let mut alloc = largest_remainder(k - n, &weights, &reduced);
+            for a in alloc.iter_mut() {
+                *a += 1;
+            }
+            return alloc;
+        }
+        largest_remainder(k, &weights, &caps)
+    }
+}
+
+/// Largest-remainder apportionment of `k` over `weights`, capped per slot.
+/// Deterministic: fractional-part ties break on the lower slot index.
+/// Capped slots are fixed at their cap and the residual is re-apportioned
+/// over the remaining slots (each pass retires at least one slot).
+fn largest_remainder(k: usize, weights: &[f64], caps: &[usize]) -> Vec<usize> {
+    let n = weights.len();
+    let mut alloc = vec![0usize; n];
+    let mut active: Vec<usize> = (0..n).collect();
+    let mut remaining = k;
+    while remaining > 0 && !active.is_empty() {
+        let w_sum: f64 = active.iter().map(|&i| weights[i]).sum();
+        // All-zero weights over the active set: fall back to uniform so the
+        // budget still lands somewhere deterministic.
+        let quota = |i: usize| -> f64 {
+            if w_sum > 0.0 {
+                remaining as f64 * weights[i] / w_sum
+            } else {
+                remaining as f64 / active.len() as f64
+            }
+        };
+        let mut tentative: Vec<(usize, usize, f64)> = active
+            .iter()
+            .map(|&i| {
+                let q = quota(i);
+                (i, q.floor() as usize, q - q.floor())
+            })
+            .collect();
+        let base_sum: usize = tentative.iter().map(|t| t.1).sum();
+        let mut leftover = remaining.saturating_sub(base_sum);
+        // hand out the leftover by fractional part, ties by segment index
+        let mut order: Vec<usize> = (0..tentative.len()).collect();
+        order.sort_by(|&a, &b| {
+            tentative[b]
+                .2
+                .partial_cmp(&tentative[a].2)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(tentative[a].0.cmp(&tentative[b].0))
+        });
+        for &pos in &order {
+            if leftover == 0 {
+                break;
+            }
+            tentative[pos].1 += 1;
+            leftover -= 1;
+        }
+        // settle capped slots exactly at their cap and retry the rest
+        // (the .min(remaining) guards are unreachable for any realistic k —
+        // Σ tentative == remaining in exact arithmetic — and only protect
+        // against pathological float overshoot underflowing the counter)
+        let mut any_capped = false;
+        let mut next_active = Vec::with_capacity(active.len());
+        for &(i, want, _) in &tentative {
+            let room = caps[i] - alloc[i];
+            if want >= room {
+                let take = room.min(remaining);
+                alloc[i] += take;
+                remaining -= take;
+                any_capped = true;
+            } else {
+                next_active.push(i);
+            }
+        }
+        if !any_capped {
+            // no cap hit: commit the tentative split and finish
+            for (i, want, _) in tentative {
+                let take = want.min(remaining);
+                alloc[i] += take;
+                remaining -= take;
+            }
+            break;
+        }
+        active = next_active;
+    }
+    debug_assert_eq!(alloc.iter().sum::<usize>(), k.min(caps.iter().sum()));
+    alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_layout_covers_dim_contiguously() {
+        let l = SegmentLayout::even(4, 10).unwrap();
+        assert_eq!(l.dim(), 10);
+        let lens: Vec<usize> = l.segments().iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+        let mut end = 0;
+        for s in l.segments() {
+            assert_eq!(s.offset, end);
+            end = s.end();
+        }
+        assert_eq!(end, 10);
+        assert!(!l.is_single());
+        assert!(SegmentLayout::even(1, 5).unwrap().is_single());
+    }
+
+    #[test]
+    fn bad_layouts_rejected() {
+        assert!(SegmentLayout::from_parts(&[]).is_err(), "empty layout");
+        assert!(
+            SegmentLayout::from_parts(&[("a".into(), 3), ("b".into(), 0)]).is_err(),
+            "zero-length segment"
+        );
+        assert!(SegmentLayout::even(0, 10).is_err());
+        assert!(SegmentLayout::even(11, 10).is_err(), "more segments than coords");
+        // total != model dim rejected at resolution
+        let l = SegmentLayout::from_parts(&[("a".into(), 3), ("b".into(), 4)]).unwrap();
+        assert!(l.validate_dim(7).is_ok());
+        assert!(l.validate_dim(8).is_err());
+    }
+
+    #[test]
+    fn layout_spec_parses_and_round_trips() {
+        assert_eq!(LayoutSpec::parse("flat").unwrap(), LayoutSpec::Flat);
+        assert_eq!(LayoutSpec::parse("even:n=4").unwrap(), LayoutSpec::Even(4));
+        assert_eq!(LayoutSpec::parse("manifest").unwrap(), LayoutSpec::Manifest);
+        for s in ["flat", "even:n=4", "manifest"] {
+            let spec = LayoutSpec::parse(s).unwrap();
+            assert_eq!(LayoutSpec::parse(&spec.label()).unwrap(), spec);
+        }
+        for s in ["", "even", "even:n=0", "even:n=x", "layers", "even:m=3"] {
+            assert!(LayoutSpec::parse(s).is_err(), "{s:?} should fail");
+        }
+    }
+
+    #[test]
+    fn layout_spec_resolution() {
+        let l = LayoutSpec::Even(3).resolve(9).unwrap();
+        assert_eq!(l.len(), 3);
+        assert!(LayoutSpec::Flat.resolve(5).unwrap().is_single());
+        assert!(LayoutSpec::Manifest.resolve(5).is_err(), "unresolved manifest layout");
+        let e = LayoutSpec::Explicit(vec![("emb".into(), 6), ("head".into(), 2)]);
+        assert_eq!(e.resolve(8).unwrap().names(), vec!["emb", "head"]);
+        assert!(e.resolve(9).is_err(), "total != dim");
+        assert!(LayoutSpec::Explicit(vec![]).validate().is_err());
+    }
+
+    #[test]
+    fn budget_parse_and_labels() {
+        assert_eq!(BudgetPolicy::parse("proportional").unwrap(), BudgetPolicy::Proportional);
+        assert_eq!(BudgetPolicy::parse("uniform").unwrap(), BudgetPolicy::Uniform);
+        assert_eq!(BudgetPolicy::parse("adaptive").unwrap(), BudgetPolicy::Adaptive);
+        assert!(BudgetPolicy::parse("greedy").is_err());
+        for p in [BudgetPolicy::Proportional, BudgetPolicy::Uniform, BudgetPolicy::Adaptive] {
+            assert_eq!(BudgetPolicy::parse(p.label()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn proportional_allocation_sums_exactly_no_drift() {
+        // Awkward segment sizes and ks that do not divide evenly: the sum
+        // must equal k exactly for every k (the no-rounding-drift bar).
+        let l = SegmentLayout::from_parts(&[
+            ("emb".into(), 7001),
+            ("attn".into(), 311),
+            ("mlp".into(), 997),
+            ("bias".into(), 13),
+        ])
+        .unwrap();
+        for k in [1usize, 2, 3, 17, 100, 1000, 8321, 8322] {
+            let a = BudgetPolicy::Proportional.allocate(k, &l, None);
+            assert_eq!(a.iter().sum::<usize>(), k.min(l.dim()), "k={k}: {a:?}");
+            for (ai, s) in a.iter().zip(l.segments()) {
+                assert!(*ai <= s.len, "k={k}: segment {} over-allocated", s.name);
+            }
+        }
+        // k == dim fills every segment exactly
+        let a = BudgetPolicy::Proportional.allocate(l.dim(), &l, None);
+        let lens: Vec<usize> = l.segments().iter().map(|s| s.len).collect();
+        assert_eq!(a, lens);
+        // k > dim clamps to dim
+        let a = BudgetPolicy::Proportional.allocate(l.dim() + 5, &l, None);
+        assert_eq!(a, lens);
+    }
+
+    #[test]
+    fn allocation_is_deterministic_with_index_tiebreak() {
+        // Equal segments, k not divisible: the extras go to the LOWEST
+        // segment indices, every time.
+        let l = SegmentLayout::even(4, 400).unwrap();
+        let a = BudgetPolicy::Proportional.allocate(10, &l, None);
+        assert_eq!(a, vec![3, 3, 2, 2]);
+        let b = BudgetPolicy::Uniform.allocate(10, &l, None);
+        assert_eq!(a, b, "equal-size segments: uniform == proportional");
+        for _ in 0..5 {
+            assert_eq!(BudgetPolicy::Proportional.allocate(10, &l, None), a);
+        }
+    }
+
+    #[test]
+    fn uniform_ignores_segment_sizes_until_caps_bind() {
+        let l = SegmentLayout::from_parts(&[("big".into(), 1000), ("tiny".into(), 4)]).unwrap();
+        // under the cap: an even split regardless of segment sizes
+        let a = BudgetPolicy::Uniform.allocate(6, &l, None);
+        assert_eq!(a, vec![3, 3]);
+        // tiny caps at 4; the overflow lands on the big segment, sum exact
+        let a = BudgetPolicy::Uniform.allocate(10, &l, None);
+        assert_eq!(a, vec![6, 4]);
+        let a = BudgetPolicy::Uniform.allocate(100, &l, None);
+        assert_eq!(a, vec![96, 4]);
+        assert_eq!(a.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn adaptive_follows_observed_mass_with_proportional_fallback() {
+        let l = SegmentLayout::even(2, 100).unwrap();
+        // no observation yet -> proportional
+        let a = BudgetPolicy::Adaptive.allocate(10, &l, None);
+        assert_eq!(a, vec![5, 5]);
+        // 9:1 mass split: 1 reserved per segment (observation floor), the
+        // remaining 8 split by mass -> [1+7, 1+1]
+        let a = BudgetPolicy::Adaptive.allocate(10, &l, Some(&[9.0, 1.0]));
+        assert_eq!(a, vec![8, 2]);
+        // all-zero mass -> proportional fallback, never a 0/0 split
+        let a = BudgetPolicy::Adaptive.allocate(10, &l, Some(&[0.0, 0.0]));
+        assert_eq!(a, vec![5, 5]);
+        // non-finite mass -> fallback
+        let a = BudgetPolicy::Adaptive.allocate(10, &l, Some(&[f64::NAN, 1.0]));
+        assert_eq!(a, vec![5, 5]);
+        // dominant segment caps at its length; sum stays exact
+        let a = BudgetPolicy::Adaptive.allocate(60, &l, Some(&[100.0, 1e-9]));
+        assert_eq!(a.iter().sum::<usize>(), 60);
+        assert_eq!(a[0], 50, "dominant segment caps at its length");
+        assert_eq!(a[1], 10, "residual flows to the other segment");
+    }
+
+    #[test]
+    fn adaptive_observation_floor_prevents_permanent_starvation() {
+        // A segment whose observed mass is exactly zero must still get at
+        // least one coordinate whenever k >= nseg — otherwise it never
+        // transmits again, never observes its own mass, and (with error
+        // feedback) its residual grows without bound.
+        let l = SegmentLayout::even(4, 800).unwrap();
+        let a = BudgetPolicy::Adaptive.allocate(40, &l, Some(&[90.0, 0.0, 0.0, 0.0]));
+        assert_eq!(a.iter().sum::<usize>(), 40);
+        assert!(a.iter().all(|&x| x >= 1), "observation floor violated: {a:?}");
+        assert!(a[0] > 30, "mass still dominates the split: {a:?}");
+        // the floor cannot be honoured below k = nseg; the split stays
+        // sum-exact and mass-driven
+        let a = BudgetPolicy::Adaptive.allocate(3, &l, Some(&[90.0, 0.0, 0.0, 0.0]));
+        assert_eq!(a.iter().sum::<usize>(), 3);
+        // proportional/uniform are schedule-driven, not observation-driven:
+        // no floor is applied there
+        let tiny = SegmentLayout::from_parts(&[("a".into(), 99), ("b".into(), 1)]).unwrap();
+        let a = BudgetPolicy::Proportional.allocate(10, &tiny, None);
+        assert_eq!(a, vec![10, 0]);
+    }
+
+    #[test]
+    fn allocation_k_zero_and_tiny_segments() {
+        let l = SegmentLayout::from_parts(&[("a".into(), 1), ("b".into(), 1), ("c".into(), 5)])
+            .unwrap();
+        assert_eq!(BudgetPolicy::Proportional.allocate(0, &l, None), vec![0, 0, 0]);
+        let a = BudgetPolicy::Proportional.allocate(1, &l, None);
+        assert_eq!(a.iter().sum::<usize>(), 1);
+        let a = BudgetPolicy::Uniform.allocate(7, &l, None);
+        assert_eq!(a, vec![1, 1, 5]);
+    }
+}

@@ -16,6 +16,10 @@
 //! * [`SparseAggregator`] ([`aggregate`]) — the receive side's dual: k-way
 //!   merge of n decoded sparse updates into one union `SparseVec`, bitwise
 //!   equal to the dense scatter-add reference (the leader's hot path).
+//! * [`SegmentLayout`] / [`BudgetPolicy`] / [`PartitionedCompressor`]
+//!   ([`layout`], [`partition`]) — the layerwise protocol: one pipeline
+//!   per named segment of the flat vector, per-segment k from a budget
+//!   policy, one segmented frame on the wire (DESIGN.md §7).
 //! * [`GradientCompressor`] — the driver: a single
 //!   `compress(&[f32], &mut Rng, &mut Vec<u8>) -> CompressStats` that fuses
 //!   sparsification and bit-packing (the selection's survivor list feeds
@@ -27,10 +31,14 @@
 //! unit tests, the estimation layer's simulators, examples).
 
 pub mod aggregate;
+pub mod layout;
+pub mod partition;
 pub mod select;
 pub mod spec;
 
 pub use aggregate::SparseAggregator;
+pub use layout::{BudgetPolicy, LayoutSpec, Segment, SegmentLayout};
+pub use partition::{PartitionedCompressor, SegmentStats};
 pub use select::{Select, SelectScratch, Stage};
 pub use spec::{PipelineSpec, Quant, StageSpec};
 

@@ -1,0 +1,394 @@
+//! Partitioned (layerwise) gradient compression: one [`GradientCompressor`]
+//! per segment, per-segment k from a [`BudgetPolicy`], one segmented frame
+//! on the wire.
+//!
+//! The paper's layerwise protocol runs rTop-k independently per layer with
+//! each layer's k proportional to its parameter count. The
+//! [`PartitionedCompressor`] is the drop-in uplink driver for that: it
+//! slices the flat compensated gradient by the [`SegmentLayout`], runs the
+//! configured pipeline per segment at its allocated budget, and assembles
+//! the sub-payloads into a segmented frame
+//! ([`crate::comms::codec::encode_segmented`]). The receive side decodes
+//! through the same `decode_expecting` entry point the flat frames use, so
+//! aggregation, `step_sparse`, and the delta downlink are untouched.
+//!
+//! **Flat/single-segment bit-identity**: a single-segment layout delegates
+//! straight to the inner compressor — the bytes on the wire, the RNG draws
+//! consumed, and the kept-coordinate record are exactly the flat
+//! pipeline's (property-tested, and pinned end-to-end by the coordinator's
+//! `even:n=1 ≡ flat` equivalence test).
+//!
+//! Error feedback stays conservation-exact per segment: [`Self::kept`]
+//! carries global coordinates with values *as the receiver decodes them*
+//! (post value-stage rounding), so `ErrorFeedback::update_residual` settles
+//! the same identity per coordinate as in the flat pipeline — and a
+//! per-segment restriction of `g + m == ĝ + m'` is exact because the
+//! identity is coordinate-wise.
+
+use crate::comms::codec::{self, SegEntry};
+use crate::sparsify::SparseVec;
+use crate::util::rng::Rng;
+
+use super::layout::{BudgetPolicy, SegmentLayout};
+use super::{CompressStats, GradientCompressor, PipelineSpec};
+
+/// What one segment contributed to the last `compress` call.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SegmentStats {
+    /// Budget the policy allocated this round.
+    pub k_alloc: usize,
+    /// Coordinates actually kept.
+    pub nnz: usize,
+    /// Sub-payload bytes (the segment's share of the frame, excluding the
+    /// frame header + table overhead).
+    pub payload_bytes: usize,
+    /// Σ v² over the kept (as-decoded) values — the mass signal the
+    /// adaptive budget policy reallocates on.
+    pub kept_mass: f64,
+}
+
+/// A partitioned uplink compressor: layout × budget policy × one
+/// per-segment [`GradientCompressor`] built from a single [`PipelineSpec`].
+#[derive(Debug, Clone)]
+pub struct PartitionedCompressor {
+    layout: SegmentLayout,
+    policy: BudgetPolicy,
+    pipeline: PipelineSpec,
+    subsample_ratio: f64,
+    inner: Vec<GradientCompressor>,
+    alloc: Vec<usize>,
+    prev_mass: Vec<f64>,
+    have_mass: bool,
+    seg_stats: Vec<SegmentStats>,
+    /// Kept coordinates in *global* coordinates (multi-segment path; the
+    /// single-segment path borrows the inner compressor's record).
+    kept: SparseVec,
+    sub_buf: Vec<u8>,
+    bodies: Vec<u8>,
+    table: Vec<SegEntry>,
+}
+
+impl PartitionedCompressor {
+    /// Build one compressor per segment from the pipeline spec, with the
+    /// initial total budget `k0` split by the policy.
+    pub fn new(
+        pipeline: &PipelineSpec,
+        layout: SegmentLayout,
+        policy: BudgetPolicy,
+        k0: usize,
+        subsample_ratio: f64,
+    ) -> PartitionedCompressor {
+        let n = layout.len();
+        let mut pc = PartitionedCompressor {
+            inner: Vec::with_capacity(n),
+            alloc: vec![0; n],
+            prev_mass: vec![0.0; n],
+            have_mass: false,
+            seg_stats: vec![SegmentStats::default(); n],
+            kept: SparseVec::default(),
+            sub_buf: Vec::new(),
+            bodies: Vec::new(),
+            table: Vec::new(),
+            pipeline: pipeline.clone(),
+            subsample_ratio,
+            layout,
+            policy,
+        };
+        for seg in pc.layout.segments() {
+            // placeholder k = 1; retarget(k0) below installs the real
+            // per-segment selections before the compressor is ever used
+            pc.inner.push(pipeline.build(1, subsample_ratio, seg.len));
+        }
+        pc.retarget(k0);
+        pc
+    }
+
+    pub fn layout(&self) -> &SegmentLayout {
+        &self.layout
+    }
+
+    pub fn policy(&self) -> BudgetPolicy {
+        self.policy
+    }
+
+    /// The per-segment budgets of the last [`Self::retarget`] (they sum to
+    /// `min(k_total, dim)` exactly).
+    pub fn alloc(&self) -> &[usize] {
+        &self.alloc
+    }
+
+    /// Per-segment stats of the last [`Self::compress`] call.
+    pub fn seg_stats(&self) -> &[SegmentStats] {
+        &self.seg_stats
+    }
+
+    /// Re-split the round's total budget across segments (the warm-up
+    /// schedule moves k every round; the adaptive policy also folds in the
+    /// previous round's observed kept mass) and retarget every segment's
+    /// selection chain.
+    pub fn retarget(&mut self, k_total: usize) {
+        let dim = self.layout.dim();
+        let k = k_total.clamp(1, dim.max(1));
+        let prev = if self.have_mass { Some(self.prev_mass.as_slice()) } else { None };
+        self.alloc = self.policy.allocate(k, &self.layout, prev);
+        for ((gc, seg), &k_seg) in
+            self.inner.iter_mut().zip(self.layout.segments()).zip(&self.alloc)
+        {
+            gc.set_select(self.pipeline.select_for(k_seg, self.subsample_ratio, seg.len));
+        }
+    }
+
+    /// Compress the flat gradient `w` into one uplink frame: flat bytes for
+    /// a single-segment layout (bit-identical to the unpartitioned
+    /// pipeline), a segmented frame otherwise. Segments consume the RNG in
+    /// layout order, so a run is deterministic per seed.
+    pub fn compress(&mut self, w: &[f32], rng: &mut Rng, out: &mut Vec<u8>) -> CompressStats {
+        assert_eq!(w.len(), self.layout.dim(), "gradient dim != layout dim");
+        if self.layout.is_single() {
+            let stats = self.inner[0].compress(w, rng, out);
+            let mass = self.inner[0].kept().l2_sq();
+            self.seg_stats[0] = SegmentStats {
+                k_alloc: self.alloc[0],
+                nnz: stats.nnz,
+                payload_bytes: stats.payload_bytes,
+                kept_mass: mass,
+            };
+            self.prev_mass[0] = mass;
+            self.have_mass = true;
+            return stats;
+        }
+        let dim = self.layout.dim();
+        self.kept.clear(dim);
+        self.bodies.clear();
+        self.table.clear();
+        let mut nnz = 0usize;
+        for (i, seg) in self.layout.segments().iter().enumerate() {
+            let st = self.inner[i].compress(&w[seg.offset..seg.end()], rng, &mut self.sub_buf);
+            let kept = self.inner[i].kept();
+            for (&j, &v) in kept.idx.iter().zip(&kept.val) {
+                self.kept.push(j + seg.offset as u32, v);
+            }
+            let mass = kept.l2_sq();
+            self.seg_stats[i] = SegmentStats {
+                k_alloc: self.alloc[i],
+                nnz: st.nnz,
+                payload_bytes: self.sub_buf.len(),
+                kept_mass: mass,
+            };
+            self.prev_mass[i] = mass;
+            nnz += st.nnz;
+            self.table.push(SegEntry {
+                offset: seg.offset as u32,
+                len: seg.len as u32,
+                nbytes: self.sub_buf.len() as u32,
+            });
+            self.bodies.extend_from_slice(&self.sub_buf);
+        }
+        self.have_mass = true;
+        codec::encode_segmented(dim, &self.table, &self.bodies, out);
+        CompressStats {
+            dim,
+            nnz,
+            payload_bytes: out.len(),
+            dense_bytes: codec::dense_bytes(dim),
+        }
+    }
+
+    /// The coordinates the last `compress` kept, in global coordinates,
+    /// with values as the receiver decodes them — settle the error-feedback
+    /// residual against this exactly like the flat pipeline's
+    /// [`GradientCompressor::kept`].
+    pub fn kept(&self) -> &SparseVec {
+        if self.layout.is_single() {
+            self.inner[0].kept()
+        } else {
+            &self.kept
+        }
+    }
+
+    /// Compact label for metric rows, e.g. `part[4,proportional]|top..`.
+    pub fn label(&self) -> String {
+        format!(
+            "part[{},{}]|{}",
+            self.layout.len(),
+            self.policy.label(),
+            self.inner[0].label()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::layout::LayoutSpec;
+    use crate::sparsify::ErrorFeedback;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    fn pc_for(
+        spec: &str,
+        layout: &str,
+        policy: BudgetPolicy,
+        k: usize,
+        dim: usize,
+    ) -> PartitionedCompressor {
+        let pipeline = PipelineSpec::parse(spec).unwrap();
+        let layout = LayoutSpec::parse(layout).unwrap().resolve(dim).unwrap();
+        PartitionedCompressor::new(&pipeline, layout, policy, k, 0.2)
+    }
+
+    #[test]
+    fn single_segment_is_byte_identical_to_flat() {
+        let dim = 3000;
+        let w = randvec(dim, 1);
+        for spec in ["topk", "rtopk|bf16|delta", "randomk"] {
+            let mut pc = pc_for(spec, "even:n=1", BudgetPolicy::Proportional, 64, dim);
+            let mut gc = GradientCompressor::from_spec(spec, 64, dim).unwrap();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            // same seeds: identical RNG stream through the delegation
+            let sa = pc.compress(&w, &mut Rng::new(7), &mut a);
+            let sb = gc.compress(&w, &mut Rng::new(7), &mut b);
+            assert_eq!(a, b, "{spec}: wire bytes must be identical");
+            assert_eq!(sa, sb);
+            assert_eq!(pc.kept(), gc.kept());
+        }
+    }
+
+    #[test]
+    fn multi_segment_budgets_sum_to_k_and_roundtrip() {
+        let dim = 10_000;
+        let w = randvec(dim, 2);
+        let k = 250;
+        let mut pc = pc_for("topk", "even:n=4", BudgetPolicy::Proportional, k, dim);
+        assert_eq!(pc.alloc().iter().sum::<usize>(), k);
+        let mut buf = Vec::new();
+        let mut rng = Rng::new(3);
+        let stats = pc.compress(&w, &mut rng, &mut buf);
+        assert_eq!(stats.nnz, k, "top-k per segment keeps exactly its budget");
+        assert_eq!(stats.payload_bytes, buf.len());
+        // decode through the shared entry point: global sorted coords
+        let mut back = SparseVec::default();
+        GradientCompressor::decompress_expecting(&buf, dim, &mut back).unwrap();
+        back.debug_validate();
+        assert_eq!(&back, pc.kept());
+        // per-segment stats account the whole frame
+        let sub_total: usize = pc.seg_stats().iter().map(|s| s.payload_bytes).sum();
+        assert_eq!(sub_total + codec::segmented_overhead(4), buf.len());
+        assert_eq!(pc.seg_stats().iter().map(|s| s.nnz).sum::<usize>(), k);
+    }
+
+    #[test]
+    fn per_segment_topk_differs_from_flat_topk_selection() {
+        // A gradient whose mass concentrates in one segment: flat top-k
+        // spends the whole budget there, proportional layerwise spreads it.
+        let dim = 1000;
+        let mut w = vec![0.01f32; dim];
+        for x in w.iter_mut().take(250) {
+            *x = 5.0;
+        }
+        let k = 100;
+        let mut pc = pc_for("topk", "even:n=4", BudgetPolicy::Proportional, k, dim);
+        let mut buf = Vec::new();
+        pc.compress(&w, &mut Rng::new(0), &mut buf);
+        let per_seg: Vec<usize> = pc.seg_stats().iter().map(|s| s.nnz).collect();
+        assert_eq!(per_seg, vec![25, 25, 25, 25], "each segment keeps its own top-25");
+        let mut gc = GradientCompressor::from_spec("topk", k, dim).unwrap();
+        gc.compress(&w, &mut Rng::new(0), &mut buf);
+        assert!(
+            gc.kept().idx.iter().all(|&i| i < 250),
+            "flat top-k concentrates in the heavy segment"
+        );
+    }
+
+    #[test]
+    fn adaptive_policy_reallocates_toward_heavy_segment() {
+        // Segment 0 carries ~all gradient mass; after one observed round
+        // the adaptive policy shifts budget to it, uniform does not.
+        let dim = 800;
+        let mut w = vec![1e-3f32; dim];
+        for x in w.iter_mut().take(200) {
+            *x = 3.0;
+        }
+        let k = 40;
+        let mut pc = pc_for("topk", "even:n=4", BudgetPolicy::Adaptive, k, dim);
+        assert_eq!(pc.alloc(), &[10, 10, 10, 10], "round 0 falls back to proportional");
+        let mut buf = Vec::new();
+        pc.compress(&w, &mut Rng::new(0), &mut buf);
+        pc.retarget(k);
+        assert!(
+            pc.alloc()[0] > 30,
+            "observed mass must pull budget into segment 0: {:?}",
+            pc.alloc()
+        );
+        assert_eq!(pc.alloc().iter().sum::<usize>(), k, "reallocation stays sum-exact");
+    }
+
+    #[test]
+    fn partitioned_error_feedback_conserves_mass_per_segment() {
+        // g + m == ĝ + m' bitwise on every coordinate (hence exactly within
+        // every segment), including with a lossy bf16 value stage.
+        let dim = 300;
+        let mut rng = Rng::new(9);
+        let mut ef = ErrorFeedback::new(dim);
+        let mut pc = pc_for("rtopk|bf16", "even:n=3", BudgetPolicy::Proportional, 30, dim);
+        let mut buf = Vec::new();
+        for round in 0..5 {
+            let g: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let m_before = ef.memory.clone();
+            let acc = ef.compensate(&g).to_vec();
+            pc.compress(&acc, &mut rng, &mut buf);
+            ef.update_residual(pc.kept());
+            let mut back = SparseVec::default();
+            GradientCompressor::decompress_expecting(&buf, dim, &mut back).unwrap();
+            let applied = back.to_dense();
+            for j in 0..dim {
+                let lhs = g[j] + m_before[j];
+                let rhs = applied[j] + ef.memory[j];
+                assert_eq!(lhs.to_bits(), rhs.to_bits(), "round {round} coord {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn retarget_follows_schedule_like_flat() {
+        let dim = 4000;
+        let w = randvec(dim, 4);
+        let mut pc = pc_for("topk", "even:n=4", BudgetPolicy::Proportional, 400, dim);
+        let mut buf = Vec::new();
+        let mut rng = Rng::new(5);
+        assert_eq!(pc.compress(&w, &mut rng, &mut buf).nnz, 400);
+        pc.retarget(40);
+        assert_eq!(pc.compress(&w, &mut rng, &mut buf).nnz, 40);
+        pc.retarget(0); // clamps to 1 like the flat pipeline's select_for
+        assert_eq!(pc.alloc().iter().sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn zero_budget_segment_sends_empty_subframe() {
+        let dim = 101;
+        // a 1-coordinate segment at k=1: the tiny segment ends up with a
+        // 0 budget and its empty sub-frame must still roundtrip
+        let pipeline = PipelineSpec::parse("topk").unwrap();
+        let layout = SegmentLayout::from_parts(&[("big".into(), 100), ("tiny".into(), 1)])
+            .unwrap();
+        let mut pc =
+            PartitionedCompressor::new(&pipeline, layout, BudgetPolicy::Proportional, 1, 0.2);
+        assert_eq!(pc.alloc().iter().sum::<usize>(), 1);
+        let w = randvec(dim, 6);
+        let mut buf = Vec::new();
+        let stats = pc.compress(&w, &mut Rng::new(0), &mut buf);
+        assert_eq!(stats.nnz, 1);
+        let mut back = SparseVec::default();
+        GradientCompressor::decompress_expecting(&buf, dim, &mut back).unwrap();
+        assert_eq!(&back, pc.kept());
+    }
+
+    #[test]
+    fn label_names_partition_and_pipeline() {
+        let pc = pc_for("topk", "even:n=4", BudgetPolicy::Uniform, 100, 1000);
+        assert!(pc.label().starts_with("part[4,uniform]|"), "{}", pc.label());
+    }
+}

@@ -5,9 +5,13 @@
 //! workers, experiment tables and benches all build their
 //! [`GradientCompressor`]s from it.
 
-use crate::compress::{GradientCompressor, PipelineSpec, Select};
+use crate::compress::{
+    BudgetPolicy, CompressStats, GradientCompressor, LayoutSpec, PartitionedCompressor,
+    PipelineSpec, Select,
+};
 use crate::optim::{LrSchedule, WarmupSparsity};
-use crate::sparsify::SparsifierKind;
+use crate::sparsify::{SparseVec, SparsifierKind};
+use crate::util::rng::Rng;
 
 use super::engine::GatherPolicy;
 
@@ -83,6 +87,15 @@ pub struct TrainConfig {
     /// [`GatherPolicy::FullSync`] is bitwise-identical to the classic
     /// synchronous loop.
     pub gather: GatherPolicy,
+    /// Uplink segment layout (CLI `--layout flat|even:n=N|manifest`). The
+    /// default [`LayoutSpec::Flat`] keeps the unpartitioned pipeline —
+    /// bit-identical wire bytes and parameter trajectories; any other
+    /// layout runs one compressor per segment with per-segment budgets
+    /// from [`Self::budget`] (DESIGN.md §7).
+    pub layout: LayoutSpec,
+    /// How a round's total k splits across segments (CLI `--budget
+    /// proportional|uniform|adaptive`). Ignored under the flat layout.
+    pub budget: BudgetPolicy,
     /// Optional injected worker delay (straggler simulation).
     pub straggler: Option<StragglerSim>,
     /// Target kept fraction k/d (compression ratio = 1 - keep_frac).
@@ -110,6 +123,8 @@ impl TrainConfig {
             down_pipeline: None,
             resync_every: 0,
             gather: GatherPolicy::FullSync,
+            layout: LayoutSpec::Flat,
+            budget: BudgetPolicy::Proportional,
             straggler: None,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
@@ -131,6 +146,8 @@ impl TrainConfig {
             down_pipeline: None,
             resync_every: 0,
             gather: GatherPolicy::FullSync,
+            layout: LayoutSpec::Flat,
+            budget: BudgetPolicy::Proportional,
             straggler: None,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
@@ -185,6 +202,21 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Set the uplink segment layout from a flag string (the `--layout`
+    /// flag): `flat`, `even:n=<count>`, or `manifest` (which the launcher
+    /// resolves against the model's manifest entry before the run).
+    pub fn set_layout(&mut self, s: &str) -> anyhow::Result<()> {
+        self.layout = LayoutSpec::parse(s)?;
+        Ok(())
+    }
+
+    /// Set the per-segment budget policy from a flag string (the
+    /// `--budget` flag): `proportional`, `uniform`, or `adaptive`.
+    pub fn set_budget(&mut self, s: &str) -> anyhow::Result<()> {
+        self.budget = BudgetPolicy::parse(s)?;
+        Ok(())
+    }
+
     /// True when the pipeline keeps everything (the "Baseline" rows).
     pub fn is_baseline(&self) -> bool {
         self.pipeline.is_baseline()
@@ -211,6 +243,25 @@ impl TrainConfig {
     pub fn compressor_for(&self, k: usize, dim: usize) -> GradientCompressor {
         self.pipeline
             .build(k.clamp(1, dim.max(1)), self.subsample_ratio, dim)
+    }
+
+    /// Build the worker's uplink compressor: the flat pipeline under the
+    /// default [`LayoutSpec::Flat`] (the exact pre-partitioning code
+    /// path), a [`PartitionedCompressor`] otherwise. Errors when the
+    /// layout does not resolve at the model dimension (e.g. `even:n=N`
+    /// with N > dim, or an explicit layout whose total ≠ dim).
+    pub fn uplink_compressor(&self, k: usize, dim: usize) -> anyhow::Result<UplinkCompressor> {
+        if self.layout.is_flat() {
+            return Ok(UplinkCompressor::Flat(self.compressor_for(k, dim)));
+        }
+        let layout = self.layout.resolve(dim)?;
+        Ok(UplinkCompressor::Partitioned(Box::new(PartitionedCompressor::new(
+            &self.pipeline,
+            layout,
+            self.budget,
+            k,
+            self.subsample_ratio,
+        ))))
     }
 
     /// Human-readable method label, e.g. "rTop-k @ 99.9%".
@@ -242,6 +293,10 @@ impl TrainConfig {
             "subsample_ratio must be in (0, 1]"
         );
         self.gather.validate(self.nodes)?;
+        // Structural layout checks that need no model dimension (empty /
+        // zero-length-segment explicit layouts); the total-vs-dim check
+        // happens at resolution, when the cluster knows the model.
+        self.layout.validate()?;
         if let Some(st) = self.straggler {
             anyhow::ensure!(
                 st.worker < self.nodes,
@@ -280,6 +335,45 @@ pub fn parse_downlink(s: &str) -> anyhow::Result<Option<PipelineSpec>> {
                  (use e.g. \"baseline|bf16|delta\", \"delta\", or \"dense\")"
             );
             Ok(Some(p))
+        }
+    }
+}
+
+/// The worker's uplink compressor, flat or partitioned — one `retarget +
+/// compress + kept` surface so the worker loop is layout-agnostic.
+/// [`UplinkCompressor::Flat`] is byte-for-byte the pre-partitioning path;
+/// the `even:n=1 ≡ flat` integration test pins that the two variants
+/// produce identical runs for a single-segment layout.
+pub enum UplinkCompressor {
+    Flat(GradientCompressor),
+    /// Boxed: the partitioned state (per-segment compressors, budgets,
+    /// frame buffers) is several times the flat struct's size.
+    Partitioned(Box<PartitionedCompressor>),
+}
+
+impl UplinkCompressor {
+    /// Retarget the selection for this round's scheduled k (the warm-up
+    /// schedule moves k; the partitioned path also re-splits the budget).
+    pub fn retarget(&mut self, cfg: &TrainConfig, k: usize, dim: usize) {
+        match self {
+            UplinkCompressor::Flat(gc) => gc.set_select(cfg.select_for(k, dim)),
+            UplinkCompressor::Partitioned(pc) => pc.retarget(k),
+        }
+    }
+
+    pub fn compress(&mut self, w: &[f32], rng: &mut Rng, out: &mut Vec<u8>) -> CompressStats {
+        match self {
+            UplinkCompressor::Flat(gc) => gc.compress(w, rng, out),
+            UplinkCompressor::Partitioned(pc) => pc.compress(w, rng, out),
+        }
+    }
+
+    /// Kept coordinates of the last compress (global coordinates, values
+    /// as the receiver decodes them) — the error-feedback settlement.
+    pub fn kept(&self) -> &SparseVec {
+        match self {
+            UplinkCompressor::Flat(gc) => gc.kept(),
+            UplinkCompressor::Partitioned(pc) => pc.kept(),
         }
     }
 }
@@ -399,6 +493,48 @@ mod tests {
         assert!(cfg.set_gather("bogus").is_err());
         cfg.set_gather("full").unwrap();
         assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn layout_and_budget_flags_drive_config() {
+        let mut cfg = TrainConfig::image_default(4, SparsifierKind::RTopK, 0.99);
+        assert!(cfg.layout.is_flat());
+        assert_eq!(cfg.budget, BudgetPolicy::Proportional);
+        cfg.set_layout("even:n=4").unwrap();
+        cfg.set_budget("adaptive").unwrap();
+        assert_eq!(cfg.layout, LayoutSpec::Even(4));
+        assert_eq!(cfg.budget, BudgetPolicy::Adaptive);
+        assert!(cfg.validate().is_ok());
+        assert!(cfg.set_layout("even:n=0").is_err());
+        assert!(cfg.set_budget("greedy").is_err());
+        // an explicit layout with a zero-length segment fails validate
+        cfg.layout = LayoutSpec::Explicit(vec![("a".into(), 4), ("b".into(), 0)]);
+        assert!(cfg.validate().is_err());
+        // an unresolved manifest layout passes validate (the launcher
+        // resolves it) but cannot build an uplink compressor
+        cfg.layout = LayoutSpec::Manifest;
+        assert!(cfg.validate().is_ok());
+        assert!(cfg.uplink_compressor(10, 100).is_err());
+    }
+
+    #[test]
+    fn uplink_compressor_matches_layout() {
+        let cfg = TrainConfig::image_default(4, SparsifierKind::TopK, 0.99);
+        assert!(matches!(
+            cfg.uplink_compressor(10, 100).unwrap(),
+            UplinkCompressor::Flat(_)
+        ));
+        let mut cfg = cfg;
+        cfg.set_layout("even:n=4").unwrap();
+        match cfg.uplink_compressor(10, 100).unwrap() {
+            UplinkCompressor::Partitioned(pc) => {
+                assert_eq!(pc.layout().len(), 4);
+                assert_eq!(pc.alloc().iter().sum::<usize>(), 10);
+            }
+            UplinkCompressor::Flat(_) => panic!("expected partitioned"),
+        }
+        // layout that cannot cover the model dim fails at build time
+        assert!(cfg.uplink_compressor(1, 3).is_err(), "4 segments over dim 3");
     }
 
     #[test]

@@ -35,8 +35,9 @@ pub use gather::{GatherPolicy, GatherStats};
 
 use std::time::Instant;
 
+use crate::comms::codec;
 use crate::comms::transport::{self, LeaderEndpoints, Message};
-use crate::compress::SparseAggregator;
+use crate::compress::{aggregate, SparseAggregator};
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::optim::{MomentumSgd, Optimizer, Sgd, WarmupSparsity};
 use crate::sparsify::SparseVec;
@@ -115,6 +116,14 @@ impl<'a> RoundEngine<'a> {
         // Whether the previous round's step ran in the sparse domain (its
         // support — `self.agg.merged.idx` — then bounds the delta scan).
         let mut prev_sparse = false;
+        // Partitioned layouts: resolve once for per-segment byte/mass
+        // accounting (the workers resolve the same spec at the same dim,
+        // so a layout that cannot fit fails here before round 0 too).
+        let seg_layout = if cfg.layout.is_flat() {
+            None
+        } else {
+            Some(cfg.layout.resolve(self.dim)?)
+        };
 
         for round in 0..cfg.rounds {
             let t0 = Instant::now();
@@ -148,10 +157,18 @@ impl<'a> RoundEngine<'a> {
             let scale = 1.0 / gstats.participants.max(1) as f32;
             let mut coords = 0u64;
             let mut dense_mode = false;
+            let nseg = seg_layout.as_ref().map_or(0, |l| l.len());
+            let mut seg_bytes = vec![0u64; nseg];
+            let mut seg_mass = vec![0f64; nseg];
+            let mut seg_overhead = 0u64;
             for u in self.gather.updates().iter().flatten() {
                 if !dense_mode {
                     let nnz = self.agg.decode_payload(&u.payload, self.dim)? as u64;
                     coords += nnz;
+                    if let Some(layout) = &seg_layout {
+                        let sv = self.agg.decoded().last().expect("just decoded");
+                        aggregate::mass_by_segment(sv, layout, &mut seg_mass);
+                    }
                     if coords >= self.dim as u64 {
                         dense_mode = true;
                         prepare_dense(&mut self.dense_agg, &mut self.dense_dirty, self.dim);
@@ -166,7 +183,24 @@ impl<'a> RoundEngine<'a> {
                         &mut self.scratch,
                     )?;
                     coords += self.scratch.nnz() as u64;
+                    if let Some(layout) = &seg_layout {
+                        aggregate::mass_by_segment(&self.scratch, layout, &mut seg_mass);
+                    }
                     self.scratch.add_scaled_into(scale, &mut self.dense_agg);
+                }
+                if seg_layout.is_some() {
+                    // a cheap table scan — the decode above already
+                    // validated this frame in full
+                    let scanned = codec::scan_segment_sizes(&u.payload, |s, nbytes| {
+                        if s < seg_bytes.len() {
+                            seg_bytes[s] += nbytes as u64;
+                        }
+                    });
+                    match scanned {
+                        Some(overhead) => seg_overhead += overhead as u64,
+                        // single-segment layouts ride the flat frame
+                        None => seg_bytes[0] += u.payload.len() as u64,
+                    }
                 }
             }
 
@@ -231,6 +265,9 @@ impl<'a> RoundEngine<'a> {
                 stale_updates: gstats.stale,
                 wall_ms,
                 eval_ms,
+                seg_bytes,
+                seg_mass,
+                seg_overhead_bytes: seg_overhead,
             });
         }
 
@@ -239,6 +276,9 @@ impl<'a> RoundEngine<'a> {
             let _ = tx.send(Message::Shutdown);
         }
         metrics.worker_participation = self.gather.participation.clone();
+        if let Some(layout) = &seg_layout {
+            metrics.segment_names = layout.names();
+        }
         Ok((params, metrics))
     }
 }

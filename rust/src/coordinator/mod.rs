@@ -20,7 +20,9 @@ pub mod worker;
 pub use cluster::{
     mock_worker_factory, run, run_with, ClusterResult, EvalFactory, Transport, WorkerFactory,
 };
-pub use config::{parse_downlink, OptimKind, RoundMode, StragglerSim, TrainConfig};
+pub use config::{
+    parse_downlink, OptimKind, RoundMode, StragglerSim, TrainConfig, UplinkCompressor,
+};
 pub use engine::{GatherPolicy, RoundEngine};
 pub use leader::Evaluator;
 pub use worker::WorkerSetup;

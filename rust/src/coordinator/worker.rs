@@ -55,8 +55,11 @@ pub fn run_worker(
     let mut local_params: Vec<f32> = Vec::with_capacity(dim);
     // One compressor for the whole run; the selection chain is retargeted
     // per round as the warm-up schedule moves k, the scratch buffers and
-    // the kept-coordinate record persist.
-    let mut compressor = cfg.compressor_for(warmup.k_at(dim, 0.0), dim);
+    // the kept-coordinate record persist. Under a non-flat `--layout` this
+    // is a PartitionedCompressor (one pipeline per segment, per-segment k
+    // from the budget policy); a layout that does not fit the model dim
+    // fails the worker here, before the first round.
+    let mut compressor = cfg.uplink_compressor(warmup.k_at(dim, 0.0), dim)?;
     let mut payload: Vec<u8> = Vec::new();
     // Locally tracked model state (the delta downlink reconstructs params
     // in place instead of receiving a fresh dense vector every round).
@@ -172,7 +175,7 @@ pub fn run_worker(
 
         // ---- compensate, then fused sparsify + encode ----
         let k = warmup.k_at(dim, epoch);
-        compressor.set_select(cfg.select_for(k, dim));
+        compressor.retarget(cfg, k, dim);
         let acc = ef.compensate(g);
         compressor.compress(acc, &mut rng, &mut payload);
         ef.update_residual(compressor.kept());
@@ -230,6 +233,38 @@ mod tests {
                 GradientCompressor::decompress_into(&payload, &mut sv).unwrap();
                 assert_eq!(sv.dim, dim);
                 assert_eq!(sv.nnz(), 13); // round(0.1 * 128)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn worker_partitioned_layout_sends_segmented_update_with_exact_k() {
+        let (leader, mut workers) = star(1);
+        let dim = 128;
+        let mut cfg = TrainConfig::image_default(1, SparsifierKind::TopK, 0.9);
+        cfg.warmup_epochs = 0.0;
+        cfg.set_layout("even:n=4").unwrap();
+        let w = workers.remove(0);
+        let handle = std::thread::spawn(move || {
+            run_worker(w, mock_setup(dim), &cfg, Rng::new(0)).unwrap();
+        });
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { payload, .. } => {
+                assert!(
+                    crate::comms::codec::is_segmented(&payload),
+                    "non-flat layout must put a segmented frame on the wire"
+                );
+                let mut sv = SparseVec::default();
+                GradientCompressor::decompress_expecting(&payload, dim, &mut sv).unwrap();
+                sv.debug_validate();
+                // per-segment budgets sum exactly to the flat k = round(0.1*128)
+                assert_eq!(sv.nnz(), 13);
             }
             other => panic!("unexpected {other:?}"),
         }

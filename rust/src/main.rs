@@ -79,11 +79,24 @@ SUBCOMMANDS
                                          "baseline|bf16|delta")
                 --resync-every N         dense re-broadcast period in
                                          delta mode (0 = round 0 only)
+                --layout flat|even:n=N|manifest
+                                         uplink segment layout: flat
+                                         (default, bit-identical to the
+                                         unpartitioned pipeline), N even
+                                         segments, or the model's layer
+                                         list from the manifest (lm task)
+                --budget proportional|uniform|adaptive
+                                         per-segment k split under a
+                                         non-flat layout: by parameter
+                                         count (paper), evenly, or by the
+                                         previous round's kept mass
                 --artifacts DIR --out results/train
   experiment  regenerate a paper table/figure
-                --id table1..table5|fig2..fig6|figT1|figT2|figS1|all
+                --id table1..table5|fig2..fig6|figT1|figT2|figS1|figS2|all
                                          figS1 = straggler sweep over
                                          quorum m x injected delay
+                                         figS2 = layerwise-vs-flat sweep
+                                         over layout x budget policy
                 --quick  --nodes 5  --artifacts DIR  --out results
                 --lm-preset lm_small
                 --wire "bf16|delta"      wire-format override for every row
@@ -152,6 +165,14 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
         cfg.set_downlink(d)?;
     }
     cfg.resync_every = args.u64_or("resync-every", cfg.resync_every)?;
+    // Uplink segment layout + per-segment budget policy (layerwise
+    // compression; the default flat layout is the unpartitioned pipeline).
+    if let Some(l) = args.get("layout") {
+        cfg.set_layout(l)?;
+    }
+    if let Some(b) = args.get("budget") {
+        cfg.set_budget(b)?;
+    }
     // Gather policy (FullSync default) + optional straggler injection.
     if let Some(g) = args.get("gather") {
         cfg.set_gather(g)?;
@@ -164,10 +185,23 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let (cfg, artifacts) = parse_common(args)?;
+    let (mut cfg, artifacts) = parse_common(args)?;
     let task = args.str_or("task", "image");
     let out = PathBuf::from(args.str_or("out", "results/train"));
     let preset = args.str_or("preset", "lm_tiny");
+    // `--layout manifest` resolves here, against the preset's manifest
+    // entry, into an explicit (name, len) layer list the cluster can
+    // validate against the model dim.
+    if matches!(cfg.layout, rtopk::compress::LayoutSpec::Manifest) {
+        anyhow::ensure!(
+            task == "lm",
+            "--layout manifest needs a manifest-backed task (--task lm); \
+             use --layout flat|even:n=N for the {task} task"
+        );
+        let manifest = rtopk::runtime::Manifest::load(&artifacts)?;
+        cfg.layout =
+            rtopk::compress::LayoutSpec::Explicit(manifest.model(&preset)?.layer_segments()?);
+    }
     // read --transport before reject_unknown, or the documented flag
     // itself trips the unknown-flag check
     let transport = match args.str_or("transport", "inproc").as_str() {

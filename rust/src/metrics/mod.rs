@@ -43,6 +43,17 @@ pub struct RoundRecord {
     pub wall_ms: f64,
     /// Held-out evaluation time this round (0 when no eval ran).
     pub eval_ms: f64,
+    /// Per-segment uplink sub-payload bytes this round (partitioned
+    /// layouts only; empty under the flat layout). Together with
+    /// [`Self::seg_overhead_bytes`] these sum to [`Self::uplink_bytes`]
+    /// exactly.
+    pub seg_bytes: Vec<u64>,
+    /// Per-segment kept gradient mass (Σ v² of decoded coordinates)
+    /// summed over participants this round (partitioned layouts only).
+    pub seg_mass: Vec<f64>,
+    /// Segmented-frame header + table bytes this round (the partitioning
+    /// overhead on the wire; 0 under the flat layout).
+    pub seg_overhead_bytes: u64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -78,6 +89,9 @@ pub struct RunMetrics {
     /// Rounds each worker contributed a fresh update over the whole run
     /// (filled by the RoundEngine at shutdown; empty when unknown).
     pub worker_participation: Vec<u64>,
+    /// Segment names of the run's uplink layout, in order (filled by the
+    /// RoundEngine under a partitioned layout; empty for flat runs).
+    pub segment_names: Vec<String>,
 }
 
 impl RunMetrics {
@@ -87,7 +101,32 @@ impl RunMetrics {
             method: method.to_string(),
             records: Vec::new(),
             worker_participation: Vec::new(),
+            segment_names: Vec::new(),
         }
+    }
+
+    /// Per-segment uplink byte totals over the run (empty for flat runs).
+    pub fn seg_uplink_totals(&self) -> Vec<u64> {
+        let n = self.segment_names.len();
+        let mut out = vec![0u64; n];
+        for r in &self.records {
+            for (t, &b) in out.iter_mut().zip(&r.seg_bytes) {
+                *t += b;
+            }
+        }
+        out
+    }
+
+    /// Per-segment kept-mass totals over the run (empty for flat runs).
+    pub fn seg_mass_totals(&self) -> Vec<f64> {
+        let n = self.segment_names.len();
+        let mut out = vec![0f64; n];
+        for r in &self.records {
+            for (t, &m) in out.iter_mut().zip(&r.seg_mass) {
+                *t += m;
+            }
+        }
+        out
     }
 
     /// Mean per-round participation fraction (1.0 = every worker, every
@@ -185,16 +224,30 @@ impl RunMetrics {
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(
             f,
-            "round,epoch,train_loss,eval_metric,eval_value,uplink_bytes,uplink_coords,downlink_bytes,dense_bytes,memory_norm,k,lr,participants,stale_updates,wall_ms,eval_ms"
+            "round,epoch,train_loss,eval_metric,eval_value,uplink_bytes,uplink_coords,downlink_bytes,dense_bytes,memory_norm,k,lr,participants,stale_updates,wall_ms,eval_ms,seg_overhead_bytes,seg_bytes,seg_kept_mass"
         )?;
         for r in &self.records {
             let (em, ev) = match &r.eval {
                 Some(e) => (e.label(), format!("{}", e.value())),
                 None => ("", String::new()),
             };
+            // per-segment vectors are ';'-joined inside one CSV field so
+            // the column count stays fixed across layouts
+            let seg_bytes = r
+                .seg_bytes
+                .iter()
+                .map(|b| b.to_string())
+                .collect::<Vec<_>>()
+                .join(";");
+            let seg_mass = r
+                .seg_mass
+                .iter()
+                .map(|m| format!("{m:.6}"))
+                .collect::<Vec<_>>()
+                .join(";");
             writeln!(
                 f,
-                "{},{:.4},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{:.3},{:.3}",
+                "{},{:.4},{:.6},{},{},{},{},{},{},{:.6},{},{},{},{},{:.3},{:.3},{},{},{}",
                 r.round,
                 r.epoch,
                 r.train_loss,
@@ -210,7 +263,10 @@ impl RunMetrics {
                 r.participants,
                 r.stale_updates,
                 r.wall_ms,
-                r.eval_ms
+                r.eval_ms,
+                r.seg_overhead_bytes,
+                seg_bytes,
+                seg_mass
             )?;
         }
         Ok(())
@@ -237,6 +293,30 @@ impl RunMetrics {
         }
         if let Some(l) = self.final_train_loss() {
             pairs.push(("final_train_loss", Json::from(l)));
+        }
+        if !self.segment_names.is_empty() {
+            pairs.push((
+                "segments",
+                Json::Arr(
+                    self.segment_names
+                        .iter()
+                        .map(|n| Json::from(n.clone()))
+                        .collect(),
+                ),
+            ));
+            pairs.push((
+                "seg_uplink_bytes",
+                Json::Arr(
+                    self.seg_uplink_totals()
+                        .iter()
+                        .map(|&b| Json::from(b as usize))
+                        .collect(),
+                ),
+            ));
+            pairs.push((
+                "seg_kept_mass",
+                Json::Arr(self.seg_mass_totals().iter().map(|&m| Json::from(m)).collect()),
+            ));
         }
         if !self.worker_participation.is_empty() {
             pairs.push((
@@ -279,6 +359,9 @@ mod tests {
             stale_updates: 0,
             wall_ms: 5.0,
             eval_ms: if eval.is_some() { 2.5 } else { 0.0 },
+            seg_bytes: Vec::new(),
+            seg_mass: Vec::new(),
+            seg_overhead_bytes: 0,
         }
     }
 
@@ -368,6 +451,53 @@ mod tests {
         assert_eq!(m.stale_total(), 3);
         // empty run: defined as full participation
         assert_eq!(RunMetrics::new("e", "x").participation_rate(4), 1.0);
+    }
+
+    #[test]
+    fn per_segment_columns_round_trip_csv_and_json() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        m.segment_names = vec!["emb".to_string(), "head".to_string()];
+        let mut a = rec(0, 100, 1000, None);
+        a.seg_bytes = vec![60, 20];
+        a.seg_mass = vec![0.5, 0.25];
+        a.seg_overhead_bytes = 20; // 60 + 20 + 20 == uplink_bytes
+        let mut b = rec(1, 50, 1000, None);
+        b.seg_bytes = vec![30, 10];
+        b.seg_mass = vec![0.25, 0.125];
+        b.seg_overhead_bytes = 10;
+        m.push(a);
+        m.push(b);
+        // per-record exactness: seg bytes + overhead == uplink bytes
+        for r in &m.records {
+            assert_eq!(
+                r.seg_bytes.iter().sum::<u64>() + r.seg_overhead_bytes,
+                r.uplink_bytes
+            );
+        }
+        assert_eq!(m.seg_uplink_totals(), vec![90, 30]);
+        assert_eq!(m.seg_mass_totals(), vec![0.75, 0.375]);
+        let j = m.summary_json();
+        assert!(j.get("segments").is_some());
+        assert!(j.get("seg_uplink_bytes").is_some());
+        assert!(j.get("seg_kept_mass").is_some());
+        // CSV keeps a fixed column count with ';'-joined segment fields
+        let dir = std::env::temp_dir().join("rtopk_test_metrics_seg");
+        let path = dir.join("run.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let header = text.lines().next().unwrap();
+        for col in ["seg_overhead_bytes", "seg_bytes", "seg_kept_mass"] {
+            assert!(header.contains(col), "missing column {col}");
+        }
+        let cols = header.split(',').count();
+        for line in text.lines().skip(1) {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+        assert!(text.lines().nth(1).unwrap().contains("60;20"));
+        std::fs::remove_dir_all(&dir).ok();
+        // flat runs: no segment keys in the summary
+        let flat = RunMetrics::new("f", "rtopk");
+        assert!(flat.summary_json().get("segments").is_none());
     }
 
     #[test]

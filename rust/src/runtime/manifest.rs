@@ -74,6 +74,52 @@ pub struct ModelEntry {
     pub eval: ProgramEntry,
 }
 
+impl ModelEntry {
+    /// The model's layer partition as (name, len) parts, read from the
+    /// manifest entry's `meta.layers` list (`[{"name": .., "len": ..}]`,
+    /// recorded at lowering time in flattening order). Validated here:
+    /// non-empty, every layer non-empty, and lens summing exactly to the
+    /// model dim — the contract `--layout manifest` resolves against.
+    pub fn layer_segments(&self) -> anyhow::Result<Vec<(String, usize)>> {
+        let layers = self
+            .meta
+            .get("layers")
+            .and_then(|l| l.as_arr())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "model {:?} has no meta.layers list in the manifest; re-run `make \
+                     artifacts` with a lowering that records per-layer shapes, or use \
+                     --layout flat|even:n=N",
+                    self.name
+                )
+            })?;
+        anyhow::ensure!(!layers.is_empty(), "model {:?}: meta.layers is empty", self.name);
+        let mut parts = Vec::with_capacity(layers.len());
+        let mut total = 0usize;
+        for l in layers {
+            let name = l
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("layer name not a string"))?
+                .to_string();
+            let len = l
+                .req("len")?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("layer {name:?}: bad len"))?;
+            anyhow::ensure!(len >= 1, "layer {name:?} has zero length");
+            total += len;
+            parts.push((name, len));
+        }
+        anyhow::ensure!(
+            total == self.dim,
+            "model {:?}: meta.layers total {total} != model dim {}",
+            self.name,
+            self.dim
+        );
+        Ok(parts)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct SparsePipelineEntry {
     pub name: String,
@@ -205,6 +251,34 @@ mod tests {
         assert_eq!(e.train.inputs[1].shape, vec![4, 33]);
         assert_eq!(e.train.outputs[1].elements(), 8);
         assert_eq!(m.sparse_pipelines[0].nbins, 128);
+    }
+
+    #[test]
+    fn layer_segments_parse_and_validate() {
+        // no meta.layers: helpful error pointing at --layout alternatives
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let err = m.model("lm_tiny").unwrap().layer_segments().unwrap_err().to_string();
+        assert!(err.contains("meta.layers"), "{err}");
+
+        let with_layers = SAMPLE.replace(
+            r#""meta": {"family": "lm", "vocab": 256, "batch": 4, "seq": 32}"#,
+            r#""meta": {"family": "lm", "vocab": 256, "batch": 4, "seq": 32,
+              "layers": [{"name": "embed", "len": 6}, {"name": "head", "len": 2}]}"#,
+        );
+        let m = Manifest::parse(Path::new("/tmp"), &with_layers).unwrap();
+        let parts = m.model("lm_tiny").unwrap().layer_segments().unwrap();
+        assert_eq!(parts, vec![("embed".to_string(), 6), ("head".to_string(), 2)]);
+
+        // lens that do not sum to dim are rejected
+        let bad = with_layers.replace(r#""len": 2"#, r#""len": 3"#);
+        let m = Manifest::parse(Path::new("/tmp"), &bad).unwrap();
+        let err = m.model("lm_tiny").unwrap().layer_segments().unwrap_err().to_string();
+        assert!(err.contains("!= model dim"), "{err}");
+
+        // zero-length layers are rejected
+        let bad = with_layers.replace(r#""len": 2"#, r#""len": 0"#);
+        let m = Manifest::parse(Path::new("/tmp"), &bad).unwrap();
+        assert!(m.model("lm_tiny").unwrap().layer_segments().is_err());
     }
 
     #[test]

@@ -15,18 +15,33 @@ pub fn default_cases() -> usize {
         .unwrap_or(64)
 }
 
+/// Base seed every property derives its case seeds from. Defaults to a
+/// fixed constant; CI also runs the suite under a run-derived base
+/// (`RTOPK_PROPTEST_SEED=$GITHUB_RUN_ID`) so each pipeline run explores a
+/// fresh region of the input space while staying replayable — the failure
+/// message echoes both the base and the case seed.
+pub fn base_seed() -> u64 {
+    std::env::var("RTOPK_PROPTEST_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xC0FFEE_u64)
+}
+
 /// Run `prop` over `cases` generated cases. `prop` gets a fresh seeded RNG
 /// per case and returns `Err(reason)` on violation.
 pub fn check<F>(name: &str, cases: usize, prop: F)
 where
     F: Fn(&mut Rng) -> Result<(), String>,
 {
-    let base = 0xC0FFEE_u64;
+    let base = base_seed();
     for case in 0..cases {
         let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut rng = Rng::new(seed);
         if let Err(msg) = prop(&mut rng) {
-            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+            panic!(
+                "property {name:?} failed on case {case} \
+                 (base seed {base}, replay with check_seed({seed:#x})): {msg}"
+            );
         }
     }
 }

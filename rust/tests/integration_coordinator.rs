@@ -374,6 +374,163 @@ fn quorum_with_delta_downlink_keeps_straggler_in_sync() {
 }
 
 #[test]
+fn layout_flat_bit_identical_to_single_segment_partition() {
+    // The flat-layout bit-identity invariant, end to end and across the
+    // two code paths: the default `--layout flat` (the pre-partitioning
+    // GradientCompressor path) and `--layout even:n=1` (the partitioned
+    // machinery with one segment) must produce identical parameter
+    // trajectories AND identical measured wire traffic, per round.
+    let dim = 256;
+    let cfg_flat = quick_cfg(SparsifierKind::RTopK, 0.95, 20);
+    let mut cfg_part = quick_cfg(SparsifierKind::RTopK, 0.95, 20);
+    cfg_part.set_layout("even:n=1").unwrap();
+    let run = |cfg: &TrainConfig| {
+        coordinator::run(
+            cfg,
+            "layout-eq",
+            vec![0.0; dim],
+            mock_factory(dim, 0.1),
+            Box::new(|| Ok(None)),
+        )
+        .unwrap()
+    };
+    let a = run(&cfg_flat);
+    let b = run(&cfg_part);
+    for (x, y) in a.params.iter().zip(&b.params) {
+        assert_eq!(x.to_bits(), y.to_bits(), "flat vs even:n=1 params must be bitwise equal");
+    }
+    for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "round {}", ra.round);
+        assert_eq!(ra.uplink_coords, rb.uplink_coords, "round {}", ra.round);
+        assert_eq!(ra.downlink_bytes, rb.downlink_bytes, "round {}", ra.round);
+        // single-segment frames are flat frames: zero partition overhead
+        assert_eq!(rb.seg_overhead_bytes, 0, "round {}", ra.round);
+        assert_eq!(rb.seg_bytes.iter().sum::<u64>(), rb.uplink_bytes);
+    }
+    assert!(a.metrics.segment_names.is_empty(), "flat run reports no segments");
+    assert_eq!(b.metrics.segment_names.len(), 1);
+}
+
+#[test]
+fn partitioned_tcp_matches_inprocess_bitwise_and_accounts_exactly() {
+    // `--layout even:n=4` with a bf16/delta wire: identical params and
+    // byte counters across transports, per-segment bytes + frame overhead
+    // summing exactly to the measured uplink total every round, and
+    // proportional budgets summing exactly to the flat k (counted on the
+    // wire as decoded coordinates).
+    let dim = 512;
+    let mut cfg = quick_cfg(SparsifierKind::RTopK, 0.9, 15);
+    cfg.set_pipeline("rtopk|bf16|delta").unwrap();
+    cfg.set_layout("even:n=4").unwrap();
+    let mut cfg_flat = cfg.clone();
+    cfg_flat.set_layout("flat").unwrap();
+    let model = MockModel::new(dim, 0.05, 42);
+    let run_on = |cfg: &TrainConfig, t: coordinator::Transport| {
+        coordinator::run_with(
+            cfg,
+            "part-transport-eq",
+            model.init_params(),
+            mock_factory(dim, 0.05),
+            Box::new(|| Ok(None)),
+            t,
+        )
+        .unwrap()
+    };
+    let a = run_on(&cfg, coordinator::Transport::InProcess);
+    let b = run_on(&cfg, coordinator::Transport::Tcp);
+    assert_eq!(a.params, b.params, "transports must agree under a partitioned layout");
+    for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+        assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "round {}", ra.round);
+        assert_eq!(ra.uplink_coords, rb.uplink_coords, "round {}", ra.round);
+        assert_eq!(ra.seg_bytes, rb.seg_bytes, "round {}", ra.round);
+        assert_eq!(ra.seg_overhead_bytes, rb.seg_overhead_bytes, "round {}", ra.round);
+    }
+    // the run converges (acceptance: full in-process + TCP run on the mock)
+    let d0 = model.distance_sq(&model.init_params());
+    let d1 = model.distance_sq(&a.params);
+    assert!(d1 < 0.3 * d0, "partitioned run must converge: {d0} -> {d1}");
+    // exact per-segment accounting under the FullSync gather
+    assert_eq!(a.metrics.segment_names.len(), 4);
+    for r in &a.metrics.records {
+        assert_eq!(r.seg_bytes.len(), 4);
+        assert_eq!(
+            r.seg_bytes.iter().sum::<u64>() + r.seg_overhead_bytes,
+            r.uplink_bytes,
+            "round {}: per-segment bytes must sum to the measured total",
+            r.round
+        );
+        assert!(r.seg_overhead_bytes > 0, "4-segment frames carry table overhead");
+    }
+    // proportional budgets sum exactly to the flat k: the coordinate count
+    // on the wire matches the flat run's, round for round
+    let flat = run_on(&cfg_flat, coordinator::Transport::InProcess);
+    for (rp, rf) in a.metrics.records.iter().zip(&flat.metrics.records) {
+        assert_eq!(
+            rp.uplink_coords, rf.uplink_coords,
+            "round {}: partitioned coords must equal flat k (no rounding drift)",
+            rp.round
+        );
+        assert_eq!(rp.uplink_coords, (rp.participants * rp.k_used) as u64);
+    }
+}
+
+#[test]
+fn adaptive_budget_full_run_converges_and_stays_sum_exact() {
+    // The 2210.13532-style adaptive reallocation end to end: per-round
+    // budgets keep summing to k while following observed mass.
+    let dim = 512;
+    let mut cfg = quick_cfg(SparsifierKind::RTopK, 0.9, 40);
+    cfg.set_layout("even:n=4").unwrap();
+    cfg.set_budget("adaptive").unwrap();
+    let model = MockModel::new(dim, 0.05, 42);
+    let res = coordinator::run(
+        &cfg,
+        "adaptive-budget",
+        model.init_params(),
+        mock_factory(dim, 0.05),
+        Box::new(|| Ok(None)),
+    )
+    .unwrap();
+    let d0 = model.distance_sq(&model.init_params());
+    let d1 = model.distance_sq(&res.params);
+    assert!(d1 < 0.3 * d0, "{d0} -> {d1}");
+    for r in &res.metrics.records {
+        assert_eq!(r.uplink_coords, (r.participants * r.k_used) as u64, "round {}", r.round);
+        assert_eq!(
+            r.seg_bytes.iter().sum::<u64>() + r.seg_overhead_bytes,
+            r.uplink_bytes
+        );
+    }
+    // reproducible: adaptive state is per-worker-deterministic
+    let res2 = coordinator::run(
+        &cfg,
+        "adaptive-budget",
+        model.init_params(),
+        mock_factory(dim, 0.05),
+        Box::new(|| Ok(None)),
+    )
+    .unwrap();
+    assert_eq!(res.params, res2.params);
+}
+
+#[test]
+fn layout_that_cannot_fit_model_fails_fast() {
+    // more segments than coordinates: the run must error out cleanly
+    // (worker factory + engine both resolve the layout before round 0)
+    let dim = 8;
+    let mut cfg = quick_cfg(SparsifierKind::TopK, 0.5, 5);
+    cfg.set_layout("even:n=16").unwrap();
+    let err = coordinator::run(
+        &cfg,
+        "bad-layout",
+        vec![0.0; dim],
+        mock_factory(dim, 0.05),
+        Box::new(|| Ok(None)),
+    );
+    assert!(err.is_err(), "16 segments over dim 8 must fail, not hang");
+}
+
+#[test]
 fn dense_downlink_identical_to_delta_off() {
     // `--downlink dense` IS the legacy path: the config flag must not
     // perturb the trajectory in any way.

@@ -6,7 +6,9 @@
 //! zeros, huge/tiny magnitudes — see `gen_vector`).
 
 use rtopk::comms::codec::{self, value_roundtrip, CodecConfig, IndexFormat, ValueFormat};
-use rtopk::compress::{GradientCompressor, Select};
+use rtopk::compress::{
+    BudgetPolicy, GradientCompressor, PartitionedCompressor, PipelineSpec, SegmentLayout, Select,
+};
 use rtopk::prop_assert;
 use rtopk::sparsify::{
     l2_sq, select_top_r, CompressionOperator, ErrorFeedback, NoCompression, RTopK, RandomK,
@@ -399,6 +401,235 @@ fn prop_select_top_r_magnitudes_dominate_rest() {
 }
 
 // ---------------------------------------------------------------------------
+// Partitioned (layerwise) pipeline invariants: random layouts × every
+// value/index stage combo, roundtrip + flat bit-identity + per-segment
+// error-feedback conservation (DESIGN.md §7).
+// ---------------------------------------------------------------------------
+
+/// A random contiguous partition of [0, dim) into 1..=6 non-empty segments.
+fn random_layout(rng: &mut Rng, dim: usize) -> SegmentLayout {
+    let nseg = 1 + rng.index(dim.min(6));
+    let mut cuts = rng.sample_indices(dim - 1, nseg - 1);
+    cuts.sort_unstable();
+    let mut parts = Vec::new();
+    let mut prev = 0usize;
+    for (i, &c) in cuts.iter().enumerate() {
+        parts.push((format!("s{i}"), c + 1 - prev));
+        prev = c + 1;
+    }
+    parts.push((format!("s{}", nseg - 1), dim - prev));
+    SegmentLayout::from_parts(&parts).unwrap()
+}
+
+fn spec_with_wire(select: &str, values: ValueFormat, indices: IndexFormat) -> PipelineSpec {
+    let mut spec = PipelineSpec::parse(select).unwrap();
+    spec.values = values;
+    spec.indices = indices;
+    spec
+}
+
+#[test]
+fn prop_partitioned_roundtrip_random_layouts_all_stage_combos() {
+    // (a) what the wire decodes == what the compressor kept, per segment
+    // and globally, for every value × index combo over random layouts and
+    // adversarial dims (1, the 16-bit-boundary 65537, random).
+    check("partitioned-roundtrip", default_cases() / 2, |rng| {
+        let dim = match rng.index(4) {
+            0 => 1,
+            1 => 65_537,
+            _ => 2 + rng.index(5_000),
+        };
+        let layout = random_layout(rng, dim);
+        let w: Vec<f32> = match rng.index(3) {
+            0 => vec![0.0; dim],
+            1 => (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            _ => (0..dim)
+                .map(|_| if rng.bernoulli(0.9) { 0.0 } else { rng.normal_f32(0.0, 5.0) })
+                .collect(),
+        };
+        let k = rng.index(dim.min(1024) + 1);
+        let select = ["topk", "randomk", "rtopk"][rng.index(3)];
+        let policy = [BudgetPolicy::Proportional, BudgetPolicy::Uniform, BudgetPolicy::Adaptive]
+            [rng.index(3)];
+        for values in [ValueFormat::F32, ValueFormat::Bf16] {
+            for indices in [IndexFormat::FixedWidth, IndexFormat::DeltaVarint] {
+                let spec = spec_with_wire(select, values, indices);
+                let mut pc =
+                    PartitionedCompressor::new(&spec, layout.clone(), policy, k, 0.2);
+                let mut buf = Vec::new();
+                let stats = pc.compress(&w, rng, &mut buf);
+                prop_assert!(
+                    stats.payload_bytes == buf.len(),
+                    "stats bytes {} != {}",
+                    stats.payload_bytes,
+                    buf.len()
+                );
+                let mut back = SparseVec::default();
+                codec::decode_expecting(&buf, Some(dim), &mut back)
+                    .map_err(|e| e.to_string())?;
+                prop_assert!(
+                    &back == pc.kept(),
+                    "{select}/{values:?}/{indices:?}: decode != kept \
+                     (dim {dim}, k {k}, {} segments)",
+                    layout.len()
+                );
+                prop_assert!(
+                    back.nnz() == stats.nnz,
+                    "nnz mismatch: {} vs {}",
+                    back.nnz(),
+                    stats.nnz
+                );
+                // per-segment budgets sum exactly to the allocated total
+                let alloc_sum: usize = pc.alloc().iter().sum();
+                prop_assert!(
+                    alloc_sum == k.clamp(1, dim),
+                    "budget drift: Σ alloc {alloc_sum} != {}",
+                    k.clamp(1, dim)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitioned_single_segment_byte_identical_to_flat() {
+    // (b) a single-segment layout IS the flat pipeline: same bytes on the
+    // wire, same kept record, same RNG consumption.
+    check("partitioned-flat-identity", default_cases() / 2, |rng| {
+        let dim = 1 + rng.index(10_000);
+        let k = rng.index(dim.min(512) + 1).max(1);
+        let select = ["topk", "randomk", "rtopk"][rng.index(3)];
+        for values in [ValueFormat::F32, ValueFormat::Bf16] {
+            for indices in [IndexFormat::FixedWidth, IndexFormat::DeltaVarint] {
+                let spec = spec_with_wire(select, values, indices);
+                let w: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let layout = SegmentLayout::single(dim).map_err(|e| e.to_string())?;
+                let mut pc = PartitionedCompressor::new(
+                    &spec,
+                    layout,
+                    BudgetPolicy::Proportional,
+                    k,
+                    0.2,
+                );
+                let mut gc = spec.build(k.clamp(1, dim), 0.2, dim);
+                // identical RNG streams via clone
+                let mut ra = rng.clone();
+                let mut rb = rng.clone();
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                pc.compress(&w, &mut ra, &mut a);
+                gc.compress(&w, &mut rb, &mut b);
+                prop_assert!(
+                    a == b,
+                    "{select}/{values:?}/{indices:?}: single-segment bytes differ \
+                     (dim {dim}, k {k})"
+                );
+                prop_assert!(pc.kept() == gc.kept(), "kept record differs");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitioned_error_feedback_conserves_mass_per_segment() {
+    // (c) g + m == ĝ + m' holds bitwise on every coordinate — hence
+    // exactly within every segment — across rounds, layouts, and value
+    // stages (bf16 rounding re-enters via the kept record).
+    check("partitioned-ef-conservation", default_cases() / 2, |rng| {
+        let dim = 2 + rng.index(400);
+        let layout = random_layout(rng, dim);
+        let k = 1 + rng.index(dim.min(64));
+        let values = if rng.bernoulli(0.5) { ValueFormat::F32 } else { ValueFormat::Bf16 };
+        let spec = spec_with_wire("rtopk", values, IndexFormat::FixedWidth);
+        let mut pc = PartitionedCompressor::new(
+            &spec,
+            layout,
+            BudgetPolicy::Proportional,
+            k,
+            0.2,
+        );
+        let mut ef = ErrorFeedback::new(dim);
+        let mut buf = Vec::new();
+        for round in 0..4 {
+            let g: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let m_before = ef.memory.clone();
+            let acc = ef.compensate(&g).to_vec();
+            pc.compress(&acc, rng, &mut buf);
+            ef.update_residual(pc.kept());
+            let mut back = SparseVec::default();
+            codec::decode_expecting(&buf, Some(dim), &mut back).map_err(|e| e.to_string())?;
+            let applied = back.to_dense();
+            for j in 0..dim {
+                let lhs = g[j] + m_before[j];
+                let rhs = applied[j] + ef.memory[j];
+                prop_assert!(
+                    lhs.to_bits() == rhs.to_bits(),
+                    "round {round} coord {j}: {lhs} != {rhs} ({values:?})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn partitioned_roundtrip_boundary_dims() {
+    // The deterministic corners around segment boundaries: a coordinate on
+    // each side of every cut (boundary ± 1), dim 1, and the 16-bit
+    // boundary 65537 split as [65536, 1]. (dim 0 has no non-empty
+    // partition — the flat pipeline owns it, covered by
+    // `pipeline_roundtrip_empty_and_degenerate_dims`.)
+    let mut rng = Rng::new(0x5E6);
+    for (dim, parts) in [
+        (1usize, vec![1usize]),
+        (7, vec![3, 4]),
+        (65_537, vec![65_536, 1]),
+        (64, vec![1, 31, 32]),
+    ] {
+        let named: Vec<(String, usize)> =
+            parts.iter().enumerate().map(|(i, &l)| (format!("s{i}"), l)).collect();
+        let layout = SegmentLayout::from_parts(&named).unwrap();
+        // values spike exactly at each boundary and its neighbours
+        let mut w = vec![0.0f32; dim];
+        let mut mark = |i: usize| {
+            if i < dim {
+                w[i] = 1.0 + i as f32;
+            }
+        };
+        let mut off = 0usize;
+        for &l in &parts {
+            off += l;
+            mark(off.wrapping_sub(1));
+            mark(off);
+            mark(off + 1);
+        }
+        mark(0);
+        for (values, indices) in [
+            (ValueFormat::F32, IndexFormat::FixedWidth),
+            (ValueFormat::F32, IndexFormat::DeltaVarint),
+            (ValueFormat::Bf16, IndexFormat::FixedWidth),
+            (ValueFormat::Bf16, IndexFormat::DeltaVarint),
+        ] {
+            let spec = spec_with_wire("topk", values, indices);
+            let mut pc = PartitionedCompressor::new(
+                &spec,
+                layout.clone(),
+                BudgetPolicy::Proportional,
+                dim.min(16),
+                0.2,
+            );
+            let mut buf = Vec::new();
+            pc.compress(&w, &mut rng, &mut buf);
+            let mut back = SparseVec::default();
+            codec::decode_expecting(&buf, Some(dim), &mut back).unwrap();
+            back.debug_validate();
+            assert_eq!(&back, pc.kept(), "dim {dim} {values:?}/{indices:?}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Decode robustness: arbitrary and corrupted payloads must produce errors,
 // never panics — and with an expected dimension, never allocations past it.
 // Covers the bounded decode path the transport uses (leader uplink and the
@@ -434,11 +665,20 @@ fn prop_decode_random_garbage_errors_never_panics() {
         let expected_dim = 1 + rng.index(10_000);
         let len = rng.index(512);
         let mut buf: Vec<u8> = (0..len).map(|_| rng.index(256) as u8).collect();
-        // half the cases get a valid magic so the parser goes deeper than
-        // the first two bytes
-        if rng.bernoulli(0.5) && buf.len() >= 2 {
-            buf[0] = 0x54;
-            buf[1] = 0x52;
+        // most cases get a valid magic so the parser goes deeper than the
+        // first two bytes — flat ("RT") or segmented ("SG")
+        if buf.len() >= 2 {
+            match rng.index(3) {
+                0 => {
+                    buf[0] = 0x54;
+                    buf[1] = 0x52;
+                }
+                1 => {
+                    buf[0] = 0x53;
+                    buf[1] = 0x47;
+                }
+                _ => {}
+            }
         }
         let mut sv = SparseVec::default();
         match codec::decode_expecting(&buf, Some(expected_dim), &mut sv) {
@@ -491,6 +731,54 @@ fn prop_decode_bitflipped_frames_error_or_stay_sane() {
             // a flip in the values region (or one that cancels out) can
             // still decode; it must just never violate the structural
             // invariants or panic
+            Ok(()) => assert_decoded_invariants(&back, Some(dim))?,
+            Err(_) => {}
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_segmented_frames_bitflip_truncate_never_panic() {
+    // Real segmented frames with injected corruption: bit-flips anywhere
+    // (header, table, bodies) and strict prefixes must error or decode to
+    // a structurally sane vector — never panic, never allocate past the
+    // expected dimension.
+    check("segmented-bitflip", default_cases() * 2, |rng| {
+        let dim = 8 + rng.index(20_000);
+        let layout = random_layout(rng, dim);
+        let w: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let values = if rng.bernoulli(0.5) { ValueFormat::F32 } else { ValueFormat::Bf16 };
+        let indices = if rng.bernoulli(0.5) {
+            IndexFormat::FixedWidth
+        } else {
+            IndexFormat::DeltaVarint
+        };
+        let spec = spec_with_wire("topk", values, indices);
+        let mut pc = PartitionedCompressor::new(
+            &spec,
+            layout,
+            BudgetPolicy::Proportional,
+            1 + rng.index(dim.min(300)),
+            0.2,
+        );
+        let mut buf = Vec::new();
+        pc.compress(&w, rng, &mut buf);
+        let mut back = SparseVec::default();
+        // any strict prefix fails (table or a sub-payload gets starved)
+        let cut = rng.index(buf.len());
+        prop_assert!(
+            codec::decode_expecting(&buf[..cut], Some(dim), &mut back).is_err(),
+            "prefix of {cut}/{} bytes decoded",
+            buf.len()
+        );
+        // flip 1..=4 random bits; decode must error or stay sane
+        let mut evil = buf.clone();
+        for _ in 0..1 + rng.index(4) {
+            let bit = rng.index(evil.len() * 8);
+            evil[bit / 8] ^= 1 << (bit % 8);
+        }
+        match codec::decode_expecting(&evil, Some(dim), &mut back) {
             Ok(()) => assert_decoded_invariants(&back, Some(dim))?,
             Err(_) => {}
         }
