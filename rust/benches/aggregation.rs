@@ -116,6 +116,75 @@ fn main() {
         }
     }
 
+    // --- hierarchical (tree) aggregation: root decode+merge work ---
+    // n=32 workers, fanout=4 (four top-level subtrees of 8): the star
+    // root decodes 32 frames and min-scans 32 merge cursors; the tree
+    // root decodes 4 pre-merged union frames and min-scans 4. Worker
+    // picks come from a shared hot pool so subtree unions collapse (the
+    // gTop-k overlap regime hierarchical aggregation rests on).
+    let tree_speedup = {
+        let n = 32usize;
+        let fanout = 4usize;
+        let d = 1_000_000usize;
+        let k = d / 100;
+        let pool: Vec<u32> = {
+            let mut p = rng.sample_indices(d, 2 * k);
+            p.sort_unstable();
+            p.iter().map(|&i| i as u32).collect()
+        };
+        let worker_svs: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                let mut chosen = rng.sample_indices(pool.len(), k);
+                chosen.sort_unstable();
+                SparseVec {
+                    dim: d,
+                    idx: chosen.iter().map(|&j| pool[j]).collect(),
+                    val: (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                }
+            })
+            .collect();
+        let encode_sv = |sv: &SparseVec| {
+            let mut buf = Vec::new();
+            encode(sv, CodecConfig::default(), &mut buf);
+            buf
+        };
+        let star_msgs: Vec<Vec<u8>> = worker_svs.iter().map(encode_sv).collect();
+        let tree_msgs: Vec<Vec<u8>> = (0..fanout)
+            .map(|g| {
+                let lo = g * (n / fanout);
+                let mut union = SparseVec::default();
+                merge_scaled_into(&worker_svs[lo..lo + n / fanout], 1.0, d, &mut union);
+                encode_sv(&union)
+            })
+            .collect();
+        let scale = 1.0 / n as f32;
+        let mut decoded: Vec<SparseVec> = (0..n).map(|_| SparseVec::default()).collect();
+        let mut merged = SparseVec::default();
+        let star_stats = bench
+            .run_elems(&format!("tree-gate/star-root/n={n}/d={d}/k={k}"), Some(n * k), || {
+                for (sv, msg) in decoded.iter_mut().zip(&star_msgs) {
+                    decode(msg, sv).unwrap();
+                }
+                merge_scaled_into(&decoded[..n], scale, d, &mut merged);
+                bb(merged.nnz());
+            })
+            .clone();
+        let tree_stats = bench
+            .run_elems(
+                &format!("tree-gate/tree-root/n={n}/fanout={fanout}/d={d}/k={k}"),
+                Some(n * k),
+                || {
+                    for (sv, msg) in decoded.iter_mut().zip(&tree_msgs) {
+                        decode(msg, sv).unwrap();
+                    }
+                    merge_scaled_into(&decoded[..fanout], scale, d, &mut merged);
+                    bb(merged.nnz());
+                },
+            )
+            .clone();
+        star_stats.median_ns / tree_stats.median_ns
+    };
+
     println!("\n-- merge-vs-dense aggregation gate (speedup = dense/merge median) --");
     let mut failed = false;
     for (label, speedup) in &gates {
@@ -126,5 +195,14 @@ fn main() {
     assert!(
         !failed,
         "sparse k-way merge must beat the dense decode+add reference at k/d <= 0.01, n >= 4, d >= 1e5"
+    );
+    println!(
+        "gate tree-root/n=32/fanout=4: {tree_speedup:.2}x {}",
+        if tree_speedup > 1.0 { "PASS" } else { "FAIL" }
+    );
+    assert!(
+        tree_speedup > 1.0,
+        "the tree root's decode+merge (fanout pre-merged frames) must beat the star \
+         root's (n worker frames) at n=32, fanout=4"
     );
 }

@@ -5,10 +5,12 @@
 
 pub mod codec;
 pub mod tcp;
+pub mod topology;
 pub mod transport;
 
 pub use codec::{
     decode, decode_expecting, encode, encode_segmented, is_segmented, CodecConfig, IndexFormat,
     SegEntry, ValueFormat,
 };
-pub use transport::{star, LeaderEndpoints, Message, WorkerEndpoints};
+pub use topology::{node_label, NodeRef, Topology, TreePlan};
+pub use transport::{star, tree, LeaderEndpoints, Message, RelayEndpoints, WorkerEndpoints};

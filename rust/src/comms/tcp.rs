@@ -1,4 +1,4 @@
-//! TCP transport: the same star topology over real sockets.
+//! TCP transport: the same star/tree topologies over real sockets.
 //!
 //! Used for multi-process deployments (`rtopk train --transport tcp ...`)
 //! and to validate that the simulated transport's accounting matches what
@@ -8,6 +8,7 @@
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 
+use super::topology::{node_label, NodeRef, TreePlan};
 use super::transport::Message;
 
 const TAG_PARAMS: u8 = 1;
@@ -50,13 +51,22 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
             }
             w.write_all(&buf)?;
         }
-        Message::SparseUpdate { round, worker, payload, loss, examples, mem_norm } => {
+        Message::SparseUpdate {
+            round,
+            worker,
+            payload,
+            loss,
+            examples,
+            mem_norm,
+            participants,
+        } => {
             w.write_all(&[TAG_UPDATE])?;
             w.write_all(&round.to_le_bytes())?;
             w.write_all(&(*worker as u32).to_le_bytes())?;
             w.write_all(&loss.to_le_bytes())?;
             w.write_all(&examples.to_le_bytes())?;
             w.write_all(&mem_norm.to_le_bytes())?;
+            w.write_all(&participants.to_le_bytes())?;
             w.write_all(&(payload.len() as u32).to_le_bytes())?;
             w.write_all(payload)?;
         }
@@ -118,12 +128,23 @@ pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
             let mut mn_b = [0u8; 4];
             r.read_exact(&mut mn_b)?;
             let mem_norm = f32::from_le_bytes(mn_b);
+            let mut p_b = [0u8; 4];
+            r.read_exact(&mut p_b)?;
+            let participants = u32::from_le_bytes(p_b);
             let mut len_b = [0u8; 4];
             r.read_exact(&mut len_b)?;
             let len = checked_frame_len(u32::from_le_bytes(len_b), 1, "update")?;
             let mut payload = vec![0u8; len];
             r.read_exact(&mut payload)?;
-            Ok(Message::SparseUpdate { round, worker, payload, loss, examples, mem_norm })
+            Ok(Message::SparseUpdate {
+                round,
+                worker,
+                payload,
+                loss,
+                examples,
+                mem_norm,
+                participants,
+            })
         }
         TAG_DELTA => {
             let mut len_b = [0u8; 4];
@@ -148,8 +169,9 @@ pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
     }
 }
 
-/// Leader side: bind, accept `n` workers, return their streams in worker-id
-/// order (workers send their id as a 4-byte hello).
+/// Parent side: bind, accept `n` child connections, return their streams
+/// in child-node-id order (children send their global node id as a 4-byte
+/// hello).
 pub fn accept_workers(listener: &TcpListener, n: usize) -> anyhow::Result<Vec<TcpStream>> {
     let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
     for _ in 0..n {
@@ -158,14 +180,14 @@ pub fn accept_workers(listener: &TcpListener, n: usize) -> anyhow::Result<Vec<Tc
         let mut id_b = [0u8; 4];
         stream.read_exact(&mut id_b)?;
         let id = u32::from_le_bytes(id_b) as usize;
-        anyhow::ensure!(id < n, "worker id {id} out of range");
-        anyhow::ensure!(slots[id].is_none(), "duplicate worker id {id}");
+        anyhow::ensure!(id < n, "node id {id} out of range");
+        anyhow::ensure!(slots[id].is_none(), "duplicate node id {id}");
         slots[id] = Some(stream);
     }
     Ok(slots.into_iter().map(|s| s.unwrap()).collect())
 }
 
-/// Worker side: connect and say hello with our id.
+/// Child side: connect and say hello with our node id.
 pub fn connect_worker(addr: &str, id: usize) -> anyhow::Result<TcpStream> {
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
@@ -188,6 +210,7 @@ mod tests {
                 loss: 0.25,
                 examples: 128,
                 mem_norm: 1.5,
+                participants: 4,
             },
             Message::ParamsDelta { round: 9, payload: vec![9u8, 8, 7].into() },
             Message::ResyncRequest { worker: 2 },
@@ -217,11 +240,13 @@ mod tests {
             buf.push(tag);
             buf.extend_from_slice(&0u64.to_le_bytes());
             if tag == TAG_UPDATE {
-                // worker + loss + examples + mem_norm come before the len
+                // worker + loss + examples + mem_norm + participants come
+                // before the len
                 buf.extend_from_slice(&0u32.to_le_bytes());
                 buf.extend_from_slice(&0f32.to_le_bytes());
                 buf.extend_from_slice(&0u64.to_le_bytes());
                 buf.extend_from_slice(&0f32.to_le_bytes());
+                buf.extend_from_slice(&1u32.to_le_bytes());
             }
             buf.extend_from_slice(&len.to_le_bytes());
             let err = read_message(&mut &buf[..]);
@@ -258,6 +283,7 @@ mod tests {
                             loss: 0.0,
                             examples: 1,
                             mem_norm: 0.5,
+                            participants: 1,
                         },
                     )
                     .unwrap();
@@ -286,123 +312,224 @@ mod tests {
 }
 
 // ---------------------------------------------------------------------------
-// TCP-bridged star: the coordinator's channel topology carried over real
-// loopback sockets (one forwarding thread pair per direction per worker).
-// Used by `rtopk train --transport tcp` and the transport-equivalence
-// integration test — unicast byte counters then reflect what the kernel's
-// TCP stack actually carried. The one deliberate exception is the shared
-// broadcast frame (`Message::ParamsDelta`): the point-to-point bridge
-// replicates it per socket, but it is still recorded ONCE on
-// `LeaderEndpoints::bcast_stats` — the loopback replication is an artifact
-// of bridging a broadcast onto unicast sockets, and the accounting models
-// the single encode-once frame a broadcast/multicast domain would carry
-// (keeping the two transports' measured bytes identical, which the
-// equivalence test asserts).
+// TCP-bridged topologies: the coordinator's channel wiring carried over
+// real loopback sockets (one forwarding thread pair per direction per
+// link). Used by `rtopk train --transport tcp` and the
+// transport-equivalence integration tests — unicast byte counters then
+// reflect what the kernel's TCP stack actually carried. The one deliberate
+// exception is the shared broadcast frame (`Message::ParamsDelta`): the
+// point-to-point bridge replicates it per socket, but it is still recorded
+// ONCE on the broadcasting node's `bcast_stats` — the loopback replication
+// is an artifact of bridging a broadcast onto unicast sockets, and the
+// accounting models the single encode-once frame a broadcast/multicast
+// domain would carry per hop (keeping the two transports' measured bytes
+// identical, which the equivalence tests assert).
 // ---------------------------------------------------------------------------
 
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
-use super::transport::{CountedSender, LeaderEndpoints, LinkStats, WorkerEndpoints};
+use super::transport::{
+    CountedSender, LeaderEndpoints, LinkStats, RelayEndpoints, WorkerEndpoints,
+};
 
-/// Build a star topology over loopback TCP. Drop-in replacement for
-/// [`super::transport::star`]; forwarding threads are detached and exit
-/// when their socket or channel closes (after `Shutdown`).
-pub fn tcp_star(n: usize) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoints>)> {
+/// Bridge one parent↔child edge over an accepted/connected socket pair.
+/// Returns the parent's counted sender toward the child, the link stat
+/// pair, and the child-side endpoints. `parent_up_tx` is the parent's
+/// shared inbox; forwarding threads are detached and exit when their
+/// socket or channel closes (after `Shutdown`).
+fn bridge_edge(
+    parent_sock: TcpStream,
+    child_sock: TcpStream,
+    parent_up_tx: Sender<Message>,
+    child_id: usize,
+    parent_label: &str,
+    n_workers: usize,
+) -> anyhow::Result<(CountedSender, Arc<LinkStats>, Arc<LinkStats>, WorkerEndpoints)> {
+    let down = Arc::new(LinkStats::default());
+    let up = Arc::new(LinkStats::default());
+
+    // parent -> socket
+    let (dl_tx, dl_rx) = channel::<Message>();
+    let mut sock_w = parent_sock.try_clone()?;
+    std::thread::spawn(move || {
+        while let Ok(msg) = dl_rx.recv() {
+            let quit = matches!(msg, Message::Shutdown);
+            if write_message(&mut sock_w, &msg).is_err() || quit {
+                return;
+            }
+        }
+    });
+    // socket -> parent inbox
+    let mut sock_r = parent_sock;
+    std::thread::spawn(move || {
+        while let Ok(msg) = read_message(&mut sock_r) {
+            if parent_up_tx.send(msg).is_err() {
+                return;
+            }
+        }
+    });
+    // child side: socket -> child inbox
+    let (wk_tx, wk_rx) = channel::<Message>();
+    let mut wsock_r = child_sock.try_clone()?;
+    std::thread::spawn(move || {
+        while let Ok(msg) = read_message(&mut wsock_r) {
+            let quit = matches!(msg, Message::Shutdown);
+            if wk_tx.send(msg).is_err() || quit {
+                return;
+            }
+        }
+    });
+    // child outbox -> socket
+    let (wo_tx, wo_rx) = channel::<Message>();
+    let mut wsock_w = child_sock;
+    std::thread::spawn(move || {
+        while let Ok(msg) = wo_rx.recv() {
+            if write_message(&mut wsock_w, &msg).is_err() {
+                return;
+            }
+        }
+    });
+
+    let to_child = CountedSender::new(dl_tx, down.clone(), &node_label(child_id, n_workers));
+    let child = WorkerEndpoints {
+        id: child_id,
+        from_leader: wk_rx,
+        to_leader: CountedSender::new(wo_tx, up.clone(), parent_label),
+    };
+    Ok((to_child, down, up, child))
+}
+
+/// Accept + connect one socket pair per non-root node and return them in
+/// node-id order: `(parent_side[i], child_side[i])` for node `i`.
+fn socket_pairs(total_nodes: usize) -> anyhow::Result<Vec<(TcpStream, TcpStream)>> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
-
-    // Workers connect from background threads while the leader accepts.
-    let connectors: Vec<_> = (0..n)
+    // Children connect from background threads while the parent accepts.
+    let connectors: Vec<_> = (0..total_nodes)
         .map(|id| {
             let addr = addr.clone();
             std::thread::spawn(move || connect_worker(&addr, id))
         })
         .collect();
-    let leader_streams = accept_workers(&listener, n)?;
-    let worker_streams: Vec<TcpStream> = connectors
+    let parent_streams = accept_workers(&listener, total_nodes)?;
+    let child_streams: Vec<TcpStream> = connectors
         .into_iter()
         .map(|h| h.join().expect("connector thread panicked"))
         .collect::<anyhow::Result<_>>()?;
+    Ok(parent_streams.into_iter().zip(child_streams).collect())
+}
 
+/// Wire one parent over already-paired sockets for its children.
+fn tcp_node(
+    parent_label: &str,
+    children: Vec<(usize, (TcpStream, TcpStream))>,
+    n_workers: usize,
+) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoints>)> {
     let (up_tx, up_rx) = channel::<Message>();
-    let mut to_workers = Vec::with_capacity(n);
-    let mut workers = Vec::with_capacity(n);
-    let mut down_stats = Vec::with_capacity(n);
-    let mut up_stats = Vec::with_capacity(n);
-
-    for (id, (leader_sock, worker_sock)) in
-        leader_streams.into_iter().zip(worker_streams).enumerate()
-    {
-        let down = Arc::new(LinkStats::default());
-        let up = Arc::new(LinkStats::default());
-
-        // leader -> socket
-        let (dl_tx, dl_rx) = channel::<Message>();
-        let mut sock_w = leader_sock.try_clone()?;
-        std::thread::spawn(move || {
-            while let Ok(msg) = dl_rx.recv() {
-                let quit = matches!(msg, Message::Shutdown);
-                if write_message(&mut sock_w, &msg).is_err() || quit {
-                    return;
-                }
-            }
-        });
-        // socket -> leader inbox
-        let mut sock_r = leader_sock;
-        let up_tx_clone = up_tx.clone();
-        std::thread::spawn(move || {
-            while let Ok(msg) = read_message(&mut sock_r) {
-                if up_tx_clone.send(msg).is_err() {
-                    return;
-                }
-            }
-        });
-        // worker side: socket -> worker inbox
-        let (wk_tx, wk_rx) = channel::<Message>();
-        let mut wsock_r = worker_sock.try_clone()?;
-        std::thread::spawn(move || {
-            while let Ok(msg) = read_message(&mut wsock_r) {
-                let quit = matches!(msg, Message::Shutdown);
-                if wk_tx.send(msg).is_err() || quit {
-                    return;
-                }
-            }
-        });
-        // worker outbox -> socket
-        let (wo_tx, wo_rx) = channel::<Message>();
-        let mut wsock_w = worker_sock;
-        std::thread::spawn(move || {
-            while let Ok(msg) = wo_rx.recv() {
-                if write_message(&mut wsock_w, &msg).is_err() {
-                    return;
-                }
-            }
-        });
-
-        to_workers.push(CountedSender::new(dl_tx, down.clone()));
-        workers.push(WorkerEndpoints {
-            id,
-            from_leader: wk_rx,
-            to_leader: CountedSender::new(wo_tx, up.clone()),
-        });
+    let mut to_workers = Vec::with_capacity(children.len());
+    let mut child_eps = Vec::with_capacity(children.len());
+    let mut down_stats = Vec::with_capacity(children.len());
+    let mut up_stats = Vec::with_capacity(children.len());
+    let mut child_ids = Vec::with_capacity(children.len());
+    for (id, (parent_sock, child_sock)) in children {
+        let (tx, down, up, eps) =
+            bridge_edge(parent_sock, child_sock, up_tx.clone(), id, parent_label, n_workers)?;
+        to_workers.push(tx);
         down_stats.push(down);
         up_stats.push(up);
+        child_eps.push(eps);
+        child_ids.push(id);
     }
     Ok((
         LeaderEndpoints {
             to_workers,
             from_workers: up_rx,
+            child_ids,
             down_stats,
             up_stats,
             bcast_stats: Arc::new(LinkStats::default()),
         },
-        workers,
+        child_eps,
     ))
+}
+
+/// Build a star topology over loopback TCP. Drop-in replacement for
+/// [`super::transport::star`].
+pub fn tcp_star(n: usize) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoints>)> {
+    let pairs = socket_pairs(n)?;
+    tcp_node("root", (0..n).zip(pairs).collect(), n)
+}
+
+/// Build a tree topology over loopback TCP. Drop-in replacement for
+/// [`super::transport::tree`]: every parent↔child edge is one socket pair,
+/// so per-level byte counters reflect what each hop actually carried. The
+/// slot-placement mirrors `transport::tree` line for line on purpose —
+/// the two wirings must stay structurally identical (the transport
+/// equivalence tests pin them against each other), and the duplication is
+/// cheaper than a builder generic over fallible socket wiring.
+pub fn tcp_tree(
+    plan: &TreePlan,
+) -> anyhow::Result<(LeaderEndpoints, Vec<RelayEndpoints>, Vec<WorkerEndpoints>)> {
+    let n = plan.n_workers;
+    let total = n + plan.relays.len();
+    let mut pairs: Vec<Option<(TcpStream, TcpStream)>> =
+        socket_pairs(total)?.into_iter().map(Some).collect();
+    let mut take = |ids: &[usize]| -> Vec<(usize, (TcpStream, TcpStream))> {
+        ids.iter()
+            .map(|&id| (id, pairs[id].take().expect("each node has exactly one parent")))
+            .collect()
+    };
+
+    let mut worker_slots: Vec<Option<WorkerEndpoints>> = (0..n).map(|_| None).collect();
+    let mut up_slots: Vec<Option<WorkerEndpoints>> =
+        (0..plan.relays.len()).map(|_| None).collect();
+    let mut down_slots: Vec<Option<LeaderEndpoints>> =
+        (0..plan.relays.len()).map(|_| None).collect();
+
+    let root_ids: Vec<usize> = plan.root_children.iter().map(|&c| plan.node_id(c)).collect();
+    let (leader, sides) = tcp_node("root", take(&root_ids), n)?;
+    for (&child, side) in plan.root_children.iter().zip(sides) {
+        match child {
+            NodeRef::Worker(w) => worker_slots[w] = Some(side),
+            NodeRef::Relay(r) => up_slots[r] = Some(side),
+        }
+    }
+    for (r, spec) in plan.relays.iter().enumerate() {
+        let ids: Vec<usize> = spec.children.iter().map(|&c| plan.node_id(c)).collect();
+        let (down, sides) = tcp_node(&node_label(n + r, n), take(&ids), n)?;
+        down_slots[r] = Some(down);
+        for (&child, side) in spec.children.iter().zip(sides) {
+            match child {
+                NodeRef::Worker(w) => worker_slots[w] = Some(side),
+                NodeRef::Relay(c) => up_slots[c] = Some(side),
+            }
+        }
+    }
+
+    let relays: Vec<RelayEndpoints> = plan
+        .relays
+        .iter()
+        .enumerate()
+        .map(|(r, spec)| RelayEndpoints {
+            id: n + r,
+            level: spec.level,
+            n_leaves: spec.leaves.len(),
+            child_leaves: spec.children.iter().map(|&c| plan.leaves_of(c)).collect(),
+            up: up_slots[r].take().expect("every relay has a parent link"),
+            down: down_slots[r].take().expect("every relay has child links"),
+        })
+        .collect();
+    let workers = worker_slots
+        .into_iter()
+        .map(|w| w.expect("every worker has a parent link"))
+        .collect();
+    Ok((leader, relays, workers))
 }
 
 #[cfg(test)]
 mod bridge_tests {
+    use super::super::topology::Topology;
     use super::*;
 
     #[test]
@@ -448,6 +575,7 @@ mod bridge_tests {
                                     loss: data[0],
                                     examples: 1,
                                     mem_norm: 0.0,
+                                    participants: 1,
                                 })
                                 .unwrap();
                         }
@@ -479,5 +607,77 @@ mod bridge_tests {
         // counters recorded traffic
         assert!(leader.down_stats[0].snapshot().1 > 0);
         assert!(leader.up_stats[0].snapshot().1 > 0);
+    }
+
+    #[test]
+    fn tcp_tree_carries_every_hop() {
+        // n=4, fanout=2, depth=2 over sockets: forward a frame down both
+        // hops and an update up both hops, checking per-hop counters.
+        let plan = Topology::Tree { fanout: 2, depth: Some(2) }.plan(4).unwrap();
+        let (leader, relays, workers) = tcp_tree(&plan).unwrap();
+        assert_eq!(leader.child_ids, vec![4, 5]);
+        assert_eq!(relays.len(), 2);
+
+        leader.to_workers[0]
+            .send(Message::Params { round: 1, data: vec![2.0; 4] })
+            .unwrap();
+        let got = relays[0].up.from_leader.recv().unwrap();
+        assert!(matches!(&got, Message::Params { round: 1, .. }));
+        relays[0].down.to_workers[0].send(got).unwrap();
+        match workers[0].from_leader.recv().unwrap() {
+            Message::Params { round: 1, data } => assert_eq!(data, vec![2.0; 4]),
+            other => panic!("unexpected {other:?}"),
+        }
+        workers[0]
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 1,
+                worker: 0,
+                payload: vec![7u8; 5],
+                loss: 0.0,
+                examples: 1,
+                mem_norm: 0.0,
+                participants: 1,
+            })
+            .unwrap();
+        match relays[0].down.from_workers.recv().unwrap() {
+            Message::SparseUpdate { worker: 0, participants: 1, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        relays[0]
+            .up
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 1,
+                worker: 4,
+                payload: vec![7u8; 8],
+                loss: 0.0,
+                examples: 2,
+                mem_norm: 0.0,
+                participants: 2,
+            })
+            .unwrap();
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { worker: 4, participants: 2, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(leader.down_stats[0].snapshot(), (1, 16));
+        assert_eq!(relays[0].down.down_stats[0].snapshot(), (1, 16));
+        assert_eq!(relays[0].down.up_stats[0].snapshot(), (1, 5));
+        assert_eq!(leader.up_stats[0].snapshot(), (1, 8));
+
+        // clean shutdown down both levels
+        for tx in &leader.to_workers {
+            tx.send(Message::Shutdown).unwrap();
+        }
+        for r in &relays {
+            assert!(matches!(r.up.from_leader.recv().unwrap(), Message::Shutdown));
+            for tx in &r.down.to_workers {
+                tx.send(Message::Shutdown).unwrap();
+            }
+        }
+        for w in &workers {
+            assert!(matches!(w.from_leader.recv().unwrap(), Message::Shutdown));
+        }
     }
 }

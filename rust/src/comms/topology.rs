@@ -1,0 +1,397 @@
+//! Aggregation topology: how the coordinator's nodes are wired.
+//!
+//! The paper's Algorithm 1 assumes a star — every worker talks straight to
+//! the centralized processor, so the root's ingress grows as O(n) encoded
+//! frames per round. Shi et al. (gTop-k) observe that top-k unions stay
+//! small enough that hierarchical reduction preserves accuracy while
+//! cutting root traffic; and because our decoded payloads are *mergeable*
+//! sparse vectors, aggregation can happen at intermediate relays.
+//! [`Topology`] makes the wiring a config value:
+//!
+//! * [`Topology::Star`] — the classic shape: `n` leaves, no relays.
+//! * [`Topology::Tree`] — a `fanout`-ary tree of `depth` edge levels.
+//!   Leaves (workers) sit at the bottom; every internal node is a *relay*
+//!   that gathers its children's updates, k-way merges them in the sparse
+//!   domain, re-encodes the union, and forwards ONE frame upward. Root
+//!   ingress drops from n frames to at most `fanout` frames per round.
+//!
+//! **Star pin**: `tree:fanout=n,depth=1` produces zero relays — the plan's
+//! root children are exactly the n workers — so it is bit-identical to
+//! `star` by construction (same links, same ids, same engine path). The
+//! integration suite asserts this over both transports, params and byte
+//! counters included.
+//!
+//! Construction is deterministic: worker ids are assigned to contiguous
+//! in-order leaf ranges, split as evenly as possible into at most `fanout`
+//! chunks per level (larger chunks first). Every chunk gets a relay while
+//! more than one edge level remains, so the tree shape depends only on
+//! `(n, fanout, depth)` — never on timing or arrival order.
+
+use std::ops::Range;
+
+/// A node reference inside a [`TreePlan`]: either a leaf worker (global
+/// worker id) or a relay (index into [`TreePlan::relays`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRef {
+    Worker(usize),
+    Relay(usize),
+}
+
+/// One relay in the plan.
+#[derive(Debug, Clone)]
+pub struct RelaySpec {
+    /// Tree level: 1 = direct child of the root.
+    pub level: usize,
+    /// The contiguous range of worker ids this relay's subtree covers.
+    pub leaves: Range<usize>,
+    /// Direct children, in leaf order.
+    pub children: Vec<NodeRef>,
+}
+
+/// A fully resolved tree: which relays exist, who parents whom.
+#[derive(Debug, Clone)]
+pub struct TreePlan {
+    pub n_workers: usize,
+    /// Relays in creation order (parents before children). Relay `r`'s
+    /// global node id is `n_workers + r`.
+    pub relays: Vec<RelaySpec>,
+    /// The root's direct children, in leaf order.
+    pub root_children: Vec<NodeRef>,
+}
+
+impl TreePlan {
+    /// Global node id of a [`NodeRef`] (workers `0..n`, relays `n..n+R`).
+    pub fn node_id(&self, r: NodeRef) -> usize {
+        match r {
+            NodeRef::Worker(w) => w,
+            NodeRef::Relay(i) => self.n_workers + i,
+        }
+    }
+
+    /// Number of leaf workers under a direct child of some node.
+    pub fn leaves_of(&self, r: NodeRef) -> usize {
+        match r {
+            NodeRef::Worker(_) => 1,
+            NodeRef::Relay(i) => self.relays[i].leaves.len(),
+        }
+    }
+}
+
+/// Human-readable node label for transport/error attribution: the peer a
+/// multi-hop failure message names.
+pub fn node_label(id: usize, n_workers: usize) -> String {
+    if id < n_workers {
+        format!("worker-{id}")
+    } else {
+        format!("relay-{}", id - n_workers)
+    }
+}
+
+/// How the cluster's nodes are wired (CLI `--topology`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// Every worker talks straight to the root (the default).
+    #[default]
+    Star,
+    /// `fanout`-ary tree with `depth` edge levels (`None` = the smallest
+    /// depth whose capacity `fanout^depth` covers the worker count).
+    Tree { fanout: usize, depth: Option<usize> },
+}
+
+/// Upper bound on explicit tree depth — deeper trees than this are
+/// invariably a spec typo, and the bound keeps `fanout^depth` comfortably
+/// inside u64 for every fanout ≥ 2.
+pub const MAX_TREE_DEPTH: usize = 8;
+
+impl Topology {
+    /// Parse a `--topology` spec: `star` | `tree:fanout=<F>[,depth=<D>]`.
+    pub fn parse(s: &str) -> anyhow::Result<Topology> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "star" {
+            return Ok(Topology::Star);
+        }
+        if let Some(rest) = t.strip_prefix("tree:") {
+            let mut fanout: Option<usize> = None;
+            let mut depth: Option<usize> = None;
+            for kv in rest.split(',') {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("topology spec: expected key=value, got {kv:?}")
+                })?;
+                match k.trim() {
+                    "fanout" => {
+                        fanout = Some(v.trim().parse().map_err(|_| {
+                            anyhow::anyhow!("topology spec: fanout expects an integer, got {v:?}")
+                        })?);
+                    }
+                    "depth" => {
+                        depth = Some(v.trim().parse().map_err(|_| {
+                            anyhow::anyhow!("topology spec: depth expects an integer, got {v:?}")
+                        })?);
+                    }
+                    other => {
+                        anyhow::bail!("topology spec: unknown key {other:?} (fanout, depth)")
+                    }
+                }
+            }
+            let fanout = fanout
+                .ok_or_else(|| anyhow::anyhow!("tree topology needs fanout=<count>: {s:?}"))?;
+            return Ok(Topology::Tree { fanout, depth });
+        }
+        anyhow::bail!("unknown topology {s:?} (star | tree:fanout=<F>[,depth=<D>])")
+    }
+
+    /// Round-trippable spec string.
+    pub fn label(&self) -> String {
+        match self {
+            Topology::Star => "star".to_string(),
+            Topology::Tree { fanout, depth: None } => format!("tree:fanout={fanout}"),
+            Topology::Tree { fanout, depth: Some(d) } => {
+                format!("tree:fanout={fanout},depth={d}")
+            }
+        }
+    }
+
+    pub fn is_star(&self) -> bool {
+        matches!(self, Topology::Star)
+    }
+
+    /// The depth this topology resolves to for `n` workers (explicit, or
+    /// the smallest `d ≥ 1` with `fanout^d ≥ n`).
+    pub fn resolved_depth(&self, n: usize) -> anyhow::Result<usize> {
+        match *self {
+            Topology::Star => Ok(1),
+            Topology::Tree { fanout, depth } => {
+                anyhow::ensure!(fanout >= 1, "tree fanout must be >= 1, got {fanout}");
+                let d = match depth {
+                    Some(d) => {
+                        anyhow::ensure!(
+                            (1..=MAX_TREE_DEPTH).contains(&d),
+                            "tree depth must be in [1, {MAX_TREE_DEPTH}], got {d}"
+                        );
+                        d
+                    }
+                    None => {
+                        let mut d = 1usize;
+                        while capacity(fanout, d) < n as u128 {
+                            d += 1;
+                            anyhow::ensure!(
+                                d <= MAX_TREE_DEPTH,
+                                "fanout {fanout} cannot cover {n} workers within depth \
+                                 {MAX_TREE_DEPTH}"
+                            );
+                        }
+                        d
+                    }
+                };
+                anyhow::ensure!(
+                    capacity(fanout, d) >= n as u128,
+                    "tree fanout={fanout},depth={d} holds at most {} leaves, need {n}",
+                    capacity(fanout, d)
+                );
+                Ok(d)
+            }
+        }
+    }
+
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(n >= 1, "topology needs >= 1 worker");
+        self.resolved_depth(n).map(|_| ())
+    }
+
+    /// Build the deterministic tree plan for `n` workers. A star (and a
+    /// depth-1 tree, which is the same shape) yields zero relays with the
+    /// workers as the root's direct children.
+    pub fn plan(&self, n: usize) -> anyhow::Result<TreePlan> {
+        let depth = self.resolved_depth(n)?;
+        let fanout = match *self {
+            Topology::Star => n.max(1),
+            Topology::Tree { fanout, .. } => fanout,
+        };
+        let mut plan = TreePlan { n_workers: n, relays: Vec::new(), root_children: Vec::new() };
+        plan.root_children = build_children(0..n, fanout, depth, 1, &mut plan.relays);
+        Ok(plan)
+    }
+
+    /// Global node ids of the root's direct children, in leaf order — what
+    /// the engine's gather phase indexes its inbox by.
+    pub fn root_child_ids(&self, n: usize) -> anyhow::Result<Vec<usize>> {
+        let plan = self.plan(n)?;
+        Ok(plan.root_children.iter().map(|&c| plan.node_id(c)).collect())
+    }
+}
+
+fn capacity(fanout: usize, depth: usize) -> u128 {
+    (fanout as u128).saturating_pow(depth as u32)
+}
+
+/// Split a contiguous worker range into one child list, recursing while
+/// more than one edge level remains. Chunk sizes are as even as possible
+/// with the larger chunks first, so the shape is a pure function of the
+/// inputs.
+fn build_children(
+    range: Range<usize>,
+    fanout: usize,
+    levels_left: usize,
+    level: usize,
+    relays: &mut Vec<RelaySpec>,
+) -> Vec<NodeRef> {
+    let n = range.len();
+    if levels_left <= 1 {
+        return range.map(NodeRef::Worker).collect();
+    }
+    let chunks = fanout.min(n).max(1);
+    let base = n / chunks;
+    let rem = n % chunks;
+    let mut children = Vec::with_capacity(chunks);
+    let mut start = range.start;
+    for c in 0..chunks {
+        let len = base + usize::from(c < rem);
+        let chunk = start..start + len;
+        start += len;
+        let idx = relays.len();
+        // reserve the slot first so parents precede children in the list
+        relays.push(RelaySpec { level, leaves: chunk.clone(), children: Vec::new() });
+        let sub = build_children(chunk, fanout, levels_left - 1, level + 1, relays);
+        relays[idx].children = sub;
+        children.push(NodeRef::Relay(idx));
+    }
+    children
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Topology::parse("star").unwrap(), Topology::Star);
+        let t = Topology::parse("tree:fanout=4,depth=2").unwrap();
+        assert_eq!(t, Topology::Tree { fanout: 4, depth: Some(2) });
+        assert_eq!(Topology::parse(&t.label()).unwrap(), t);
+        let auto = Topology::parse("tree:fanout=8").unwrap();
+        assert_eq!(auto, Topology::Tree { fanout: 8, depth: None });
+        assert_eq!(Topology::parse(&auto.label()).unwrap(), auto);
+        assert!(Topology::parse("tree").is_err());
+        assert!(Topology::parse("tree:depth=2").is_err());
+        assert!(Topology::parse("tree:fanout=x").is_err());
+        assert!(Topology::parse("tree:fanout=2,k=1").is_err());
+        assert!(Topology::parse("ring").is_err());
+    }
+
+    #[test]
+    fn depth_resolution_and_validation() {
+        let t = Topology::Tree { fanout: 4, depth: None };
+        assert_eq!(t.resolved_depth(1).unwrap(), 1);
+        assert_eq!(t.resolved_depth(4).unwrap(), 1);
+        assert_eq!(t.resolved_depth(5).unwrap(), 2);
+        assert_eq!(t.resolved_depth(16).unwrap(), 2);
+        assert_eq!(t.resolved_depth(17).unwrap(), 3);
+        // explicit depth too small for n is a config error, not a hang
+        let small = Topology::Tree { fanout: 2, depth: Some(2) };
+        assert!(small.validate(5).is_err());
+        assert!(small.validate(4).is_ok());
+        // fanout 1 only ever covers one worker
+        let unary = Topology::Tree { fanout: 1, depth: None };
+        assert!(unary.validate(1).is_ok());
+        assert!(unary.validate(2).is_err());
+        assert!(Topology::Tree { fanout: 0, depth: None }.validate(1).is_err());
+        assert!(Topology::Tree { fanout: 2, depth: Some(0) }.validate(1).is_err());
+        assert!(Topology::Tree { fanout: 2, depth: Some(99) }.validate(1).is_err());
+    }
+
+    #[test]
+    fn star_and_depth1_tree_have_identical_plans() {
+        // The bit-identity pin starts here: zero relays, workers as the
+        // root's direct children, in id order.
+        let star = Topology::Star.plan(5).unwrap();
+        let tree = Topology::Tree { fanout: 5, depth: Some(1) }.plan(5).unwrap();
+        for plan in [&star, &tree] {
+            assert!(plan.relays.is_empty());
+            assert_eq!(
+                plan.root_children,
+                (0..5).map(NodeRef::Worker).collect::<Vec<_>>()
+            );
+        }
+        assert_eq!(
+            Topology::Star.root_child_ids(3).unwrap(),
+            vec![0, 1, 2]
+        );
+    }
+
+    #[test]
+    fn balanced_two_level_tree() {
+        // n=16, fanout=4, depth=2: 4 relays of 4 contiguous workers each.
+        let t = Topology::Tree { fanout: 4, depth: Some(2) };
+        let plan = t.plan(16).unwrap();
+        assert_eq!(plan.relays.len(), 4);
+        assert_eq!(plan.root_children.len(), 4);
+        for (r, spec) in plan.relays.iter().enumerate() {
+            assert_eq!(spec.level, 1);
+            assert_eq!(spec.leaves, r * 4..r * 4 + 4);
+            assert_eq!(
+                spec.children,
+                (r * 4..r * 4 + 4).map(NodeRef::Worker).collect::<Vec<_>>()
+            );
+            assert_eq!(plan.node_id(NodeRef::Relay(r)), 16 + r);
+            assert_eq!(plan.leaves_of(NodeRef::Relay(r)), 4);
+        }
+        assert_eq!(t.root_child_ids(16).unwrap(), vec![16, 17, 18, 19]);
+    }
+
+    #[test]
+    fn uneven_split_keeps_contiguous_in_order_ranges() {
+        // n=5, fanout=4, depth=2: chunks [2,1,1,1], larger first, all
+        // contiguous and in worker-id order.
+        let plan = Topology::Tree { fanout: 4, depth: Some(2) }.plan(5).unwrap();
+        assert_eq!(plan.relays.len(), 4);
+        let ranges: Vec<_> = plan.relays.iter().map(|r| r.leaves.clone()).collect();
+        assert_eq!(ranges, vec![0..2, 2..3, 3..4, 4..5]);
+        // coverage is gap-free and ordered
+        let mut next = 0;
+        for r in &ranges {
+            assert_eq!(r.start, next);
+            next = r.end;
+        }
+        assert_eq!(next, 5);
+    }
+
+    #[test]
+    fn three_level_tree_nests_relays() {
+        // n=8, fanout=2, depth=3: root -> 2 relays -> 4 relays -> 8 workers.
+        let plan = Topology::Tree { fanout: 2, depth: Some(3) }.plan(8).unwrap();
+        assert_eq!(plan.root_children.len(), 2);
+        assert_eq!(plan.relays.len(), 6);
+        let top: Vec<usize> = plan
+            .root_children
+            .iter()
+            .map(|&c| match c {
+                NodeRef::Relay(i) => i,
+                NodeRef::Worker(w) => panic!("unexpected leaf {w} at the root"),
+            })
+            .collect();
+        for &i in &top {
+            assert_eq!(plan.relays[i].level, 1);
+            assert_eq!(plan.relays[i].leaves.len(), 4);
+            for &c in &plan.relays[i].children {
+                match c {
+                    NodeRef::Relay(j) => {
+                        assert_eq!(plan.relays[j].level, 2);
+                        assert_eq!(plan.relays[j].leaves.len(), 2);
+                        assert!(plan.relays[j]
+                            .children
+                            .iter()
+                            .all(|&c| matches!(c, NodeRef::Worker(_))));
+                    }
+                    NodeRef::Worker(w) => panic!("unexpected leaf {w} at level 1"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn node_labels_name_role_and_index() {
+        assert_eq!(node_label(3, 8), "worker-3");
+        assert_eq!(node_label(8, 8), "relay-0");
+        assert_eq!(node_label(10, 8), "relay-2");
+    }
+}

@@ -2,36 +2,52 @@
 //!
 //! The paper's experiments measure accuracy at a fixed *communication
 //! budget*, not wall-clock network time, so the default transport is
-//! in-process: one channel pair per worker plus a broadcast path, with
+//! in-process: one channel pair per link plus a broadcast path, with
 //! every payload's byte length recorded on per-link counters. The TCP
 //! transport in [`super::tcp`] implements the same trait for multi-process
 //! runs; integration tests assert the two produce identical traffic.
 //!
-//! Accounting convention: per-worker unicasts (dense params, resyncs,
-//! worker updates) count once per link; the encode-once broadcast frame
+//! Links form either a star (every worker to the root) or a
+//! [`super::topology::Topology`] tree, where intermediate *relays* gather
+//! their children, merge in the sparse domain, and forward one frame
+//! upward ([`crate::coordinator::relay`]). Either way each parent holds a
+//! [`LeaderEndpoints`] over its direct children and each child holds a
+//! [`WorkerEndpoints`] toward its parent, so the gather/broadcast machinery
+//! is identical at every level of the tree.
+//!
+//! Accounting convention: per-child unicasts (dense params, resyncs,
+//! updates) count once per link; the encode-once broadcast frame
 //! ([`Message::ParamsDelta`], shared via `Arc`) counts ONCE on
-//! [`LeaderEndpoints::bcast_stats`] regardless of n — it models a
-//! broadcast/multicast domain carrying one frame, and both transports
-//! apply the same convention so their measured bytes agree.
+//! [`LeaderEndpoints::bcast_stats`] *per broadcasting node* regardless of
+//! its child count — it models a broadcast/multicast domain carrying one
+//! frame per hop, and both transports apply the same convention so their
+//! measured bytes agree.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-/// Messages exchanged between leader and workers each round.
+use super::topology::{node_label, NodeRef, TreePlan};
+
+/// Messages exchanged between parents and children each round.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    /// Leader -> workers: full model broadcast (round t's omega). The
+    /// Parent -> children: full model broadcast (round t's omega). The
     /// dense fallback of the delta downlink: round 0, periodic resyncs,
     /// and on-demand [`Message::ResyncRequest`] replies.
     Params { round: u64, data: Vec<f32> },
-    /// Leader -> workers: encoded sparse param delta omega^t - omega^{t-1}
-    /// (codec bytes). Encoded once and shared across all workers — the
-    /// `Arc` payload IS the encode-once broadcast frame.
+    /// Parent -> children: encoded sparse param delta omega^t - omega^{t-1}
+    /// (codec bytes). Encoded once at the root and shared down the tree —
+    /// the `Arc` payload IS the encode-once broadcast frame, re-shared (not
+    /// re-encoded) at every relay hop.
     ParamsDelta { round: u64, payload: Arc<[u8]> },
-    /// Worker -> leader: encoded sparse update (codec bytes) plus the
-    /// worker's round loss and residual-memory norm (metrics side-band).
+    /// Child -> parent: encoded sparse update (codec bytes) plus the
+    /// subtree's round loss and residual-memory norm (metrics side-band).
+    /// A leaf worker sends `participants = 1`; a relay sends the merged
+    /// union of its subtree with `participants` = the number of leaf
+    /// workers folded into the payload, so the root's averaging scale and
+    /// quorum accounting stay in units of workers at any tree depth.
     SparseUpdate {
         round: u64,
         worker: usize,
@@ -39,17 +55,20 @@ pub enum Message {
         loss: f32,
         examples: u64,
         mem_norm: f32,
+        participants: u32,
     },
-    /// Worker -> leader: "I cannot apply a delta (no base params); unicast
+    /// Child -> parent: "I cannot apply a delta (no base params); unicast
     /// me a dense `Params` frame for this round." Control-plane only.
+    /// Answered locally by the child's parent (the root, or a relay from
+    /// its tracked shadow), never forwarded further up.
     ResyncRequest { worker: usize },
-    /// Worker -> leader: this worker hit a fatal error and is exiting.
-    /// Without it a FullSync gather would block forever on a quorum that
-    /// can never complete (the other workers keep the channel open); the
-    /// leader aborts the round instead and the cluster surfaces the
-    /// worker's own error. Control-plane only.
+    /// Child -> parent: this node (a worker, or a whole relay subtree) hit
+    /// a fatal error and is exiting. Without it a FullSync gather would
+    /// block forever on a quorum that can never complete; the parent
+    /// aborts the round instead, the abort propagates to the root, and the
+    /// cluster surfaces the failing node's own error. Control-plane only.
     WorkerFailed { worker: usize },
-    /// Leader -> workers: shut down cleanly.
+    /// Parent -> children: shut down cleanly (relays forward it down).
     Shutdown,
 }
 
@@ -88,25 +107,41 @@ impl LinkStats {
     }
 }
 
+/// Marker every dead-link send error carries. The cluster's join loop
+/// classifies node errors containing it as CASCADES (a neighbour reporting
+/// the link a dying node took down) and prefers any other error as the
+/// root cause — keep the error construction below and that check in sync
+/// through this constant.
+pub const LINK_HUNG_UP: &str = "hung up";
+
 /// A counted sender: records bytes on the shared link stats, then sends.
 /// Clones share the same channel and counters (the cluster keeps one
-/// aside per worker thread to report fatal worker errors).
+/// aside per node thread to report fatal errors). Each sender knows the
+/// *peer node* on the far end of its link, so a multi-hop failure names
+/// the hop that actually died instead of a generic "peer hung up".
 #[derive(Clone)]
 pub struct CountedSender {
     tx: Sender<Message>,
     stats: Arc<LinkStats>,
+    peer: Arc<str>,
 }
 
 impl CountedSender {
-    pub fn new(tx: Sender<Message>, stats: Arc<LinkStats>) -> Self {
-        CountedSender { tx, stats }
+    pub fn new(tx: Sender<Message>, stats: Arc<LinkStats>, peer: &str) -> Self {
+        CountedSender { tx, stats, peer: Arc::from(peer) }
+    }
+
+    /// The node label on the receiving end of this link (e.g. `worker-3`,
+    /// `relay-1`, `root`).
+    pub fn peer(&self) -> &str {
+        &self.peer
     }
 
     pub fn send(&self, msg: Message) -> anyhow::Result<()> {
         self.stats.record(msg.wire_bytes());
         self.tx
             .send(msg)
-            .map_err(|_| anyhow::anyhow!("peer hung up"))
+            .map_err(|_| anyhow::anyhow!("peer {} {LINK_HUNG_UP}", self.peer))
     }
 
     /// Deliver without touching this link's counters. Used by the
@@ -115,38 +150,43 @@ impl CountedSender {
     pub fn send_uncounted(&self, msg: Message) -> anyhow::Result<()> {
         self.tx
             .send(msg)
-            .map_err(|_| anyhow::anyhow!("peer hung up"))
+            .map_err(|_| anyhow::anyhow!("peer {} {LINK_HUNG_UP}", self.peer))
     }
 }
 
-/// Endpoints the leader holds.
+/// Endpoints a parent (the root, or a relay's downward face) holds over
+/// its direct children.
 pub struct LeaderEndpoints {
-    /// Broadcast senders, one per worker (uplink stats shared).
+    /// Broadcast senders, one per direct child (uplink stats shared).
     pub to_workers: Vec<CountedSender>,
-    /// Single merged receiver for worker updates.
+    /// Single merged receiver for child updates.
     pub from_workers: Receiver<Message>,
-    /// Downlink (leader->worker) unicast traffic, per worker.
+    /// Global node id of each direct child, in slot order (workers `0..n`,
+    /// relays `n..n+R`; the identity map for a star).
+    pub child_ids: Vec<usize>,
+    /// Downlink (parent->child) unicast traffic, per child.
     pub down_stats: Vec<Arc<LinkStats>>,
-    /// Uplink (worker->leader) traffic, per worker.
+    /// Uplink (child->parent) traffic, per child. At the root these ARE
+    /// the measured root-ingress counters.
     pub up_stats: Vec<Arc<LinkStats>>,
     /// Shared-frame broadcast traffic: an encode-once frame delivered to
-    /// every worker is recorded here exactly once (a broadcast medium /
-    /// multicast egress carries it once), while per-worker unicasts (dense
-    /// fallbacks, resyncs) stay on [`Self::down_stats`].
+    /// every child is recorded here exactly once (a broadcast medium /
+    /// multicast egress carries it once per hop), while per-child unicasts
+    /// (dense fallbacks, resyncs) stay on [`Self::down_stats`].
     pub bcast_stats: Arc<LinkStats>,
 }
 
 impl LeaderEndpoints {
-    /// Block for the next worker→leader message. Errors when every worker
+    /// Block for the next child→parent message. Errors when every child
     /// sender has hung up.
     pub fn recv(&self) -> anyhow::Result<Message> {
         self.from_workers
             .recv()
-            .map_err(|_| anyhow::anyhow!("worker channel closed"))
+            .map_err(|_| anyhow::anyhow!("child channels closed (all peers hung up)"))
     }
 
-    /// Wait up to `timeout` for the next worker→leader message; `Ok(None)`
-    /// on timeout. Both transports support this: the in-process star is a
+    /// Wait up to `timeout` for the next child→parent message; `Ok(None)`
+    /// on timeout. Both transports support this: the in-process link is a
     /// channel, and the TCP bridge forwards socket reads into the same
     /// channel — so a quorum gather's drain deadline behaves identically
     /// on either wire.
@@ -154,11 +194,13 @@ impl LeaderEndpoints {
         match self.from_workers.recv_timeout(timeout) {
             Ok(m) => Ok(Some(m)),
             Err(RecvTimeoutError::Timeout) => Ok(None),
-            Err(RecvTimeoutError::Disconnected) => Err(anyhow::anyhow!("worker channel closed")),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow::anyhow!("child channels closed (all peers hung up)"))
+            }
         }
     }
 
-    /// Send one shared encoded frame to every worker, recording its bytes
+    /// Send one shared encoded frame to every child, recording its bytes
     /// once on the broadcast counter — the encode-once broadcast path.
     pub fn broadcast_shared(&self, round: u64, payload: Arc<[u8]>) -> anyhow::Result<()> {
         self.bcast_stats.record(payload.len() as u64);
@@ -168,7 +210,7 @@ impl LeaderEndpoints {
         Ok(())
     }
 
-    /// Total (messages, bytes) the downlink carried: per-worker unicasts
+    /// Total (messages, bytes) the downlink carried: per-child unicasts
     /// plus shared broadcast frames.
     pub fn downlink_total(&self) -> (u64, u64) {
         let (m, b) = total(&self.down_stats);
@@ -177,29 +219,74 @@ impl LeaderEndpoints {
     }
 }
 
-/// Endpoints one worker holds.
+/// Endpoints one child holds toward its parent. `id` is the node's GLOBAL
+/// id: the worker id for a leaf, `n_workers + relay_index` for a relay's
+/// upward face.
 pub struct WorkerEndpoints {
     pub id: usize,
     pub from_leader: Receiver<Message>,
     pub to_leader: CountedSender,
 }
 
-/// Build an in-process star topology with `n` workers.
-pub fn star(n: usize) -> (LeaderEndpoints, Vec<WorkerEndpoints>) {
+impl WorkerEndpoints {
+    /// After a FAILED upward send: was the parent legitimately shutting
+    /// down? Parents always forward `Shutdown` down BEFORE dropping their
+    /// links, but over the TCP bridge that frame may still be in the
+    /// socket/reader pipeline — so wait a bounded moment for it instead of
+    /// peeking the inbox. `true` means a `Shutdown` arrived (clean exit);
+    /// `false` (disconnect or timeout) means the link really died. Shared
+    /// by the worker and relay loops so the race protocol has one home.
+    pub fn shutdown_pending(&self, timeout: Duration) -> bool {
+        loop {
+            match self.from_leader.recv_timeout(timeout) {
+                Ok(Message::Shutdown) => return true,
+                Ok(_) => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+}
+
+/// One relay node's endpoints: a child face toward its parent and a
+/// parent face over its children. Consumed by
+/// [`crate::coordinator::relay::run_relay`].
+pub struct RelayEndpoints {
+    /// Global node id (`n_workers + relay_index`).
+    pub id: usize,
+    /// Tree level (1 = direct child of the root).
+    pub level: usize,
+    /// Leaf workers covered by this relay's subtree.
+    pub n_leaves: usize,
+    /// Leaf workers covered by each direct child, in slot order.
+    pub child_leaves: Vec<usize>,
+    /// Toward the parent.
+    pub up: WorkerEndpoints,
+    /// Over the children.
+    pub down: LeaderEndpoints,
+}
+
+/// Wire one parent to a set of children over in-process channels. Returns
+/// the parent's endpoints plus the child-side endpoint for each child, in
+/// slot order.
+fn channel_node(
+    parent_label: &str,
+    child_ids: &[usize],
+    n_workers: usize,
+) -> (LeaderEndpoints, Vec<WorkerEndpoints>) {
     let (up_tx, up_rx) = channel::<Message>();
-    let mut to_workers = Vec::with_capacity(n);
-    let mut workers = Vec::with_capacity(n);
-    let mut down_stats = Vec::with_capacity(n);
-    let mut up_stats = Vec::with_capacity(n);
-    for id in 0..n {
+    let mut to_workers = Vec::with_capacity(child_ids.len());
+    let mut children = Vec::with_capacity(child_ids.len());
+    let mut down_stats = Vec::with_capacity(child_ids.len());
+    let mut up_stats = Vec::with_capacity(child_ids.len());
+    for &id in child_ids {
         let (down_tx, down_rx) = channel::<Message>();
         let down = Arc::new(LinkStats::default());
         let up = Arc::new(LinkStats::default());
-        to_workers.push(CountedSender::new(down_tx, down.clone()));
-        workers.push(WorkerEndpoints {
+        to_workers.push(CountedSender::new(down_tx, down.clone(), &node_label(id, n_workers)));
+        children.push(WorkerEndpoints {
             id,
             from_leader: down_rx,
-            to_leader: CountedSender::new(up_tx.clone(), up.clone()),
+            to_leader: CountedSender::new(up_tx.clone(), up.clone(), parent_label),
         });
         down_stats.push(down);
         up_stats.push(up);
@@ -208,12 +295,73 @@ pub fn star(n: usize) -> (LeaderEndpoints, Vec<WorkerEndpoints>) {
         LeaderEndpoints {
             to_workers,
             from_workers: up_rx,
+            child_ids: child_ids.to_vec(),
             down_stats,
             up_stats,
             bcast_stats: Arc::new(LinkStats::default()),
         },
-        workers,
+        children,
     )
+}
+
+/// Build an in-process star topology with `n` workers.
+pub fn star(n: usize) -> (LeaderEndpoints, Vec<WorkerEndpoints>) {
+    let ids: Vec<usize> = (0..n).collect();
+    channel_node("root", &ids, n)
+}
+
+/// Build an in-process tree from a resolved [`TreePlan`]. A plan with zero
+/// relays (star, or `tree:fanout=n,depth=1`) produces exactly the wiring
+/// of [`star`] — same links, same ids, same counters.
+pub fn tree(plan: &TreePlan) -> (LeaderEndpoints, Vec<RelayEndpoints>, Vec<WorkerEndpoints>) {
+    let n = plan.n_workers;
+    let mut worker_slots: Vec<Option<WorkerEndpoints>> = (0..n).map(|_| None).collect();
+    let mut up_slots: Vec<Option<WorkerEndpoints>> =
+        (0..plan.relays.len()).map(|_| None).collect();
+    let mut down_slots: Vec<Option<LeaderEndpoints>> =
+        (0..plan.relays.len()).map(|_| None).collect();
+
+    let place = |children: &[NodeRef],
+                 sides: Vec<WorkerEndpoints>,
+                 worker_slots: &mut Vec<Option<WorkerEndpoints>>,
+                 up_slots: &mut Vec<Option<WorkerEndpoints>>| {
+        for (&child, side) in children.iter().zip(sides) {
+            match child {
+                NodeRef::Worker(w) => worker_slots[w] = Some(side),
+                NodeRef::Relay(r) => up_slots[r] = Some(side),
+            }
+        }
+    };
+
+    let root_ids: Vec<usize> = plan.root_children.iter().map(|&c| plan.node_id(c)).collect();
+    let (leader, sides) = channel_node("root", &root_ids, n);
+    place(&plan.root_children, sides, &mut worker_slots, &mut up_slots);
+
+    for (r, spec) in plan.relays.iter().enumerate() {
+        let ids: Vec<usize> = spec.children.iter().map(|&c| plan.node_id(c)).collect();
+        let (down, sides) = channel_node(&node_label(n + r, n), &ids, n);
+        down_slots[r] = Some(down);
+        place(&spec.children, sides, &mut worker_slots, &mut up_slots);
+    }
+
+    let relays: Vec<RelayEndpoints> = plan
+        .relays
+        .iter()
+        .enumerate()
+        .map(|(r, spec)| RelayEndpoints {
+            id: n + r,
+            level: spec.level,
+            n_leaves: spec.leaves.len(),
+            child_leaves: spec.children.iter().map(|&c| plan.leaves_of(c)).collect(),
+            up: up_slots[r].take().expect("every relay has a parent link"),
+            down: down_slots[r].take().expect("every relay has child links"),
+        })
+        .collect();
+    let workers = worker_slots
+        .into_iter()
+        .map(|w| w.expect("every worker has a parent link"))
+        .collect();
+    (leader, relays, workers)
 }
 
 /// Total (messages, bytes) across a set of link stats.
@@ -226,11 +374,13 @@ pub fn total(stats: &[Arc<LinkStats>]) -> (u64, u64) {
 
 #[cfg(test)]
 mod tests {
+    use super::super::topology::Topology;
     use super::*;
 
     #[test]
     fn star_delivers_both_directions() {
         let (leader, workers) = star(3);
+        assert_eq!(leader.child_ids, vec![0, 1, 2]);
         for (i, tx) in leader.to_workers.iter().enumerate() {
             tx.send(Message::Params { round: 1, data: vec![i as f32; 4] }).unwrap();
         }
@@ -254,6 +404,7 @@ mod tests {
                             loss: 0.5,
                             examples: 8,
                             mem_norm: 0.0,
+                            participants: 1,
                         })
                         .unwrap();
                 })
@@ -289,6 +440,7 @@ mod tests {
                 loss: 0.0,
                 examples: 1,
                 mem_norm: 0.0,
+                participants: 1,
             })
             .unwrap();
         assert_eq!(leader.down_stats[0].snapshot(), (1, 400));
@@ -365,5 +517,107 @@ mod tests {
             workers[0].from_leader.recv().unwrap(),
             Message::Params { .. }
         ));
+    }
+
+    #[test]
+    fn send_error_names_the_dead_peer() {
+        // Attributable link errors: a hung-up link must say WHICH node
+        // died, so multi-hop failures can be traced to the failing hop.
+        let (leader, workers) = star(4);
+        drop(workers); // every worker gone
+        let err = leader.to_workers[2]
+            .send(Message::Shutdown)
+            .expect_err("send into a dropped receiver must fail");
+        assert!(format!("{err}").contains("worker-2"), "{err}");
+        assert_eq!(leader.to_workers[2].peer(), "worker-2");
+
+        let (leader2, workers2) = star(1);
+        drop(leader2);
+        let err = workers2[0]
+            .to_leader
+            .send(Message::ResyncRequest { worker: 0 })
+            .expect_err("send to a dropped parent must fail");
+        assert!(format!("{err}").contains("root"), "{err}");
+    }
+
+    #[test]
+    fn tree_wires_every_level_and_names_relay_peers() {
+        // n=4, fanout=2, depth=2: root -> 2 relays -> 4 workers.
+        let plan = Topology::Tree { fanout: 2, depth: Some(2) }.plan(4).unwrap();
+        let (leader, relays, workers) = tree(&plan);
+        assert_eq!(leader.child_ids, vec![4, 5]);
+        assert_eq!(relays.len(), 2);
+        assert_eq!(workers.len(), 4);
+        assert_eq!(leader.to_workers[0].peer(), "relay-0");
+        assert_eq!(relays[0].down.to_workers[1].peer(), "worker-1");
+        assert_eq!(relays[1].up.to_leader.peer(), "root");
+        assert_eq!(workers[3].to_leader.peer(), "relay-1");
+        assert_eq!(relays[0].child_leaves, vec![1, 1]);
+        assert_eq!(relays[0].n_leaves, 2);
+
+        // root -> relay-1 -> worker 3 -> relay-1 -> root, end to end
+        leader.to_workers[1]
+            .send(Message::Params { round: 7, data: vec![1.0; 2] })
+            .unwrap();
+        let got = relays[1].up.from_leader.recv().unwrap();
+        assert!(matches!(got, Message::Params { round: 7, .. }));
+        relays[1].down.to_workers[1].send(got).unwrap();
+        match workers[3].from_leader.recv().unwrap() {
+            Message::Params { round: 7, data } => assert_eq!(data.len(), 2),
+            other => panic!("unexpected {other:?}"),
+        }
+        workers[3]
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 7,
+                worker: 3,
+                payload: vec![0u8; 9],
+                loss: 0.5,
+                examples: 1,
+                mem_norm: 0.0,
+                participants: 1,
+            })
+            .unwrap();
+        match relays[1].down.from_workers.recv().unwrap() {
+            Message::SparseUpdate { worker: 3, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        relays[1]
+            .up
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 7,
+                worker: 5,
+                payload: vec![0u8; 11],
+                loss: 0.5,
+                examples: 2,
+                mem_norm: 0.0,
+                participants: 2,
+            })
+            .unwrap();
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { worker: 5, participants: 2, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        // per-level accounting: each hop only counted on its own links
+        assert_eq!(leader.down_stats[1].snapshot(), (1, 8));
+        assert_eq!(relays[1].down.down_stats[1].snapshot(), (1, 8));
+        assert_eq!(relays[1].down.up_stats[1].snapshot(), (1, 9));
+        assert_eq!(leader.up_stats[1].snapshot(), (1, 11));
+        assert_eq!(leader.up_stats[0].snapshot(), (0, 0));
+    }
+
+    #[test]
+    fn depth1_tree_wiring_is_star_wiring() {
+        let plan = Topology::Tree { fanout: 3, depth: Some(1) }.plan(3).unwrap();
+        let (leader, relays, workers) = tree(&plan);
+        assert!(relays.is_empty());
+        assert_eq!(workers.len(), 3);
+        assert_eq!(leader.child_ids, vec![0, 1, 2]);
+        for (i, w) in workers.iter().enumerate() {
+            assert_eq!(w.id, i);
+            assert_eq!(w.to_leader.peer(), "root");
+            assert_eq!(leader.to_workers[i].peer(), format!("worker-{i}"));
+        }
     }
 }

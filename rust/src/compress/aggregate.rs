@@ -112,6 +112,86 @@ pub fn merge_scaled_into(inputs: &[SparseVec], scale: f32, dim: usize, out: &mut
     }
 }
 
+/// The pinned tree-fold reduction: what a hierarchical (relay) aggregation
+/// over `groups` computes, as a local reference function.
+///
+/// Each group is a contiguous in-order range of inputs (a relay's
+/// children). The group's inputs are folded per coordinate in input order
+/// at scale 1.0 (exactly what [`crate::coordinator::relay`] does before
+/// re-encoding), and the group partials are then folded in group order at
+/// `scale` (exactly what the root does over relay frames). The contract
+/// this function pins, which the property suite and the distributed
+/// integration tests hold the real cluster to:
+///
+/// * **Determinism** — the result is a pure function of (inputs, groups,
+///   scale); rerunning a tree run reproduces it bit for bit.
+/// * **Flat bit-identity where the folds coincide** — all-singleton groups
+///   perform literally the flat fold (any scale), so
+///   `tree:fanout=n,depth=1` (no relays at all) is bit-identical by
+///   construction. A coordinate whose contributors all sit inside ONE
+///   group is reduced as `scale · (fold of that group)`; when `scale` is a
+///   power of two (the FullSync `1/n` for power-of-two n) scaling is exact
+///   and commutes with rounding, so that too equals the flat
+///   `Σ scale·v_w` bit for bit — contiguous in-order ranges with no
+///   cross-range coordinate overlap are therefore bit-exact.
+/// * **Documented fp tolerance elsewhere** — a coordinate whose
+///   contributors span groups (or a non-power-of-two scale over an
+///   in-group overlap) is reduced as `Σ_g scale·(Σ_{w∈g} v_w)` instead of
+///   `Σ_w scale·v_w`; float addition is not associative, so those differ
+///   in the last ulps. The relative error is bounded by the usual
+///   recursive-summation bound (≤ ~n·ε_f32 per coordinate relative to
+///   Σ|scale·v|); the property suite asserts a 1e-4 relative tolerance,
+///   orders of magnitude above it.
+pub fn merge_tree_scaled_into(
+    inputs: &[SparseVec],
+    groups: &[std::ops::Range<usize>],
+    scale: f32,
+    dim: usize,
+    out: &mut SparseVec,
+) {
+    debug_assert!(groups.iter().zip(groups.iter().skip(1)).all(|(a, b)| a.end == b.start));
+    let mut partials: Vec<SparseVec> = Vec::with_capacity(groups.len());
+    for g in groups {
+        let mut p = SparseVec::default();
+        merge_scaled_into(&inputs[g.clone()], 1.0, dim, &mut p);
+        partials.push(p);
+    }
+    merge_scaled_into(&partials, scale, dim, out);
+}
+
+/// Keep only the `budget` largest-magnitude coordinates of `sv` (the
+/// gTop-k-style lossy relay reduction behind `--relay-budget`). Ties break
+/// deterministically toward the LOWER index, so a rerun reproduces the
+/// same frame bit for bit regardless of value distribution. The survivors
+/// stay sorted by index; a vector already within budget is untouched.
+pub fn truncate_topk(sv: &mut SparseVec, budget: usize) {
+    if sv.nnz() <= budget {
+        return;
+    }
+    if budget == 0 {
+        let dim = sv.dim;
+        sv.clear(dim);
+        return;
+    }
+    // order positions by (|v| desc, idx asc); |v| comparison via total_cmp
+    // on the absolute value so NaN/-0.0 order deterministically too
+    let mut order: Vec<usize> = (0..sv.nnz()).collect();
+    order.sort_unstable_by(|&a, &b| {
+        sv.val[b]
+            .abs()
+            .total_cmp(&sv.val[a].abs())
+            .then(sv.idx[a].cmp(&sv.idx[b]))
+    });
+    order.truncate(budget);
+    order.sort_unstable(); // positions back to index order
+    for (slot, &pos) in order.iter().enumerate() {
+        sv.idx[slot] = sv.idx[pos];
+        sv.val[slot] = sv.val[pos];
+    }
+    sv.idx.truncate(budget);
+    sv.val.truncate(budget);
+}
+
 /// Reusable leader-side aggregation state: per-worker decode buffers plus
 /// the merged union. In steady state (stable nnz per worker) a round
 /// allocates nothing beyond buffer growth.
@@ -283,6 +363,110 @@ mod tests {
         let empty = SparseVec { dim: 10, idx: vec![], val: vec![] };
         mass_by_segment(&empty, &layout, &mut out);
         assert_eq!(out, vec![10.0, 18.0, 32.0]);
+    }
+
+    #[test]
+    fn tree_fold_singleton_groups_match_flat_bitwise() {
+        // All-singleton groups ARE the flat fold: bit-identical output.
+        let mut rng = Rng::new(3);
+        for &(n, dim, k) in &[(4usize, 256usize, 32usize), (5, 100, 60)] {
+            let inputs: Vec<SparseVec> =
+                (0..n).map(|_| random_sparse(dim, k, &mut rng)).collect();
+            let groups: Vec<_> = (0..n).map(|i| i..i + 1).collect();
+            let scale = 1.0 / n as f32;
+            let mut flat = SparseVec::default();
+            let mut tree = SparseVec::default();
+            merge_scaled_into(&inputs, scale, dim, &mut flat);
+            merge_tree_scaled_into(&inputs, &groups, scale, dim, &mut tree);
+            assert_eq!(flat.idx, tree.idx);
+            for (a, b) in flat.val.iter().zip(&tree.val) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tree_fold_disjoint_supports_match_flat_bitwise() {
+        // When no coordinate spans a group boundary, every coordinate's
+        // contributors sit inside one group; with a power-of-two scale
+        // (0.25 here — the FullSync 1/n for n=4) scaling commutes with
+        // rounding, so the tree fold equals the flat fold bit for bit.
+        let dim = 40;
+        let mk = |lo: u32, vals: &[f32]| SparseVec {
+            dim,
+            idx: (lo..lo + vals.len() as u32).collect(),
+            val: vals.to_vec(),
+        };
+        // group 0 owns coords 0..10 (with in-group overlap), group 1 owns
+        // 20..30
+        let inputs = vec![
+            mk(0, &[0.3, -1.25, 2.5]),
+            mk(1, &[0.7, 0.111, -0.9]),
+            mk(20, &[5.5, 1e-3]),
+            mk(21, &[2.25, -7.0, 0.0625]),
+        ];
+        let groups = vec![0..2, 2..4];
+        let mut flat = SparseVec::default();
+        let mut tree = SparseVec::default();
+        merge_scaled_into(&inputs, 0.25, dim, &mut flat);
+        merge_tree_scaled_into(&inputs, &groups, 0.25, dim, &mut tree);
+        assert_eq!(flat.idx, tree.idx);
+        for (j, (a, b)) in flat.val.iter().zip(&tree.val).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "entry {j}");
+        }
+    }
+
+    #[test]
+    fn tree_fold_arbitrary_groups_within_tolerance() {
+        // Cross-group coordinates re-associate the sum; the result must
+        // stay within the documented relative fp tolerance of the flat
+        // fold (and be deterministic across calls).
+        let mut rng = Rng::new(17);
+        let (n, dim, k) = (8usize, 128usize, 64usize); // heavy overlap
+        let inputs: Vec<SparseVec> = (0..n).map(|_| random_sparse(dim, k, &mut rng)).collect();
+        let groups = vec![0..3, 3..5, 5..8];
+        let scale = 1.0 / n as f32;
+        let mut flat = SparseVec::default();
+        let mut tree = SparseVec::default();
+        let mut tree2 = SparseVec::default();
+        merge_scaled_into(&inputs, scale, dim, &mut flat);
+        merge_tree_scaled_into(&inputs, &groups, scale, dim, &mut tree);
+        merge_tree_scaled_into(&inputs, &groups, scale, dim, &mut tree2);
+        assert_eq!(tree.idx, tree2.idx);
+        assert_eq!(
+            tree.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            tree2.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "tree fold must be deterministic"
+        );
+        assert_eq!(flat.idx, tree.idx, "union support is grouping-invariant");
+        for (j, (a, b)) in flat.val.iter().zip(&tree.val).enumerate() {
+            let tol = 1e-4 * a.abs().max(1e-6);
+            assert!((a - b).abs() <= tol, "entry {j}: flat {a} vs tree {b}");
+        }
+    }
+
+    #[test]
+    fn truncate_topk_keeps_largest_with_deterministic_ties() {
+        let mut sv = SparseVec {
+            dim: 32,
+            idx: vec![1, 4, 9, 12, 20, 31],
+            val: vec![0.5, -2.0, 1.0, -1.0, 2.0, 1.0],
+        };
+        truncate_topk(&mut sv, 3);
+        // |2.0| twice (idx 4 wins over 20? no: both keep — budget 3 takes
+        // |−2.0|@4, |2.0|@20, then the |1.0| tie breaks to the LOWER idx 9
+        assert_eq!(sv.idx, vec![4, 9, 20]);
+        assert_eq!(sv.val, vec![-2.0, 1.0, 2.0]);
+        sv.debug_validate();
+        // within budget: untouched
+        let before = sv.clone();
+        truncate_topk(&mut sv, 10);
+        assert_eq!(sv.idx, before.idx);
+        assert_eq!(sv.val, before.val);
+        // zero budget: empty, dim preserved
+        truncate_topk(&mut sv, 0);
+        assert!(sv.is_empty());
+        assert_eq!(sv.dim, 32);
     }
 
     #[test]

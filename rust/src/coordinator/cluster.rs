@@ -1,21 +1,34 @@
-//! Cluster orchestration: spawn one thread per worker node, run the leader
-//! in the calling thread, join everything, return the trained parameters
-//! and the round-by-round metrics.
+//! Cluster orchestration: spawn one thread per node — workers AND, under a
+//! tree topology, relays — run the leader in the calling thread, join
+//! everything, return the trained parameters and the round-by-round
+//! metrics.
 //!
 //! Model runtimes are not `Send` (PJRT handles), so the cluster takes a
 //! *factory* that each worker thread invokes locally to build its own
 //! runtime + data pipeline. Factories are `Send + Sync` and cheap to share.
+//!
+//! Topology: the wiring comes from `cfg.topology`
+//! ([`crate::comms::topology::Topology`]). A star (and the bit-identical
+//! `tree:fanout=n,depth=1`) has zero relays; deeper trees spawn one
+//! [`super::relay::run_relay`] thread per relay on EITHER transport, each
+//! wrapped in a guard that, on error or panic, reports
+//! [`Message::WorkerFailed`] upward (so the parent's gather aborts instead
+//! of deadlocking) and forwards `Shutdown` downward (so the subtree's
+//! workers exit instead of hanging the joins).
 
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use crate::comms::tcp::tcp_star;
-use crate::comms::transport::{star, CountedSender, Message};
-use crate::metrics::RunMetrics;
+use crate::comms::tcp::tcp_tree;
+use crate::comms::transport::{self, CountedSender, Message};
+use crate::metrics::{RelayLevelStats, RunMetrics};
 use crate::runtime::{Batch, MockModel};
 use crate::util::rng::Rng;
 
 use super::config::TrainConfig;
 use super::leader::{run_leader, Evaluator};
+use super::relay::{run_relay, RelayStats};
 use super::worker::{run_worker, WorkerSetup};
 
 /// Builds a worker's runtime + batcher inside the worker thread.
@@ -41,7 +54,7 @@ pub fn mock_worker_factory(dim: usize, noise: f32, batches_per_epoch: usize) -> 
 
 /// Reports [`Message::WorkerFailed`] on drop unless disarmed: covers both
 /// the `Err` return path AND a panicking worker body (the unwind drops the
-/// guard), so the leader's gather aborts instead of waiting forever on a
+/// guard), so the parent's gather aborts instead of waiting forever on a
 /// worker that will never send its update.
 struct FailureGuard {
     tx: CountedSender,
@@ -57,6 +70,28 @@ impl Drop for FailureGuard {
     }
 }
 
+/// The relay-thread analogue of [`FailureGuard`]: a relay that errors or
+/// panics mid-run reports [`Message::WorkerFailed`] for its whole subtree
+/// upward AND forwards `Shutdown` downward, so neither direction of the
+/// tree can deadlock on a dead interior node.
+struct RelayGuard {
+    up: CountedSender,
+    down: Vec<CountedSender>,
+    id: usize,
+    armed: bool,
+}
+
+impl Drop for RelayGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.up.send(Message::WorkerFailed { worker: self.id });
+            for tx in &self.down {
+                let _ = tx.send(Message::Shutdown);
+            }
+        }
+    }
+}
+
 /// Builds the leader's evaluator (runs in the leader thread).
 pub type EvalFactory = Box<dyn FnOnce() -> anyhow::Result<Option<Evaluator>>>;
 
@@ -65,7 +100,7 @@ pub struct ClusterResult {
     pub metrics: RunMetrics,
 }
 
-/// Which wire carries the star topology.
+/// Which wire carries the configured topology.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Transport {
     /// In-process channels (default; byte counts are codec-exact).
@@ -75,7 +110,8 @@ pub enum Transport {
     Tcp,
 }
 
-/// Run Algorithm 1 end to end on an in-process star topology.
+/// Run Algorithm 1 end to end over in-process channels (star by default;
+/// `cfg.topology` may wire a relay tree).
 pub fn run(
     cfg: &TrainConfig,
     run_name: &str,
@@ -96,11 +132,37 @@ pub fn run_with(
     transport: Transport,
 ) -> anyhow::Result<ClusterResult> {
     cfg.validate()?;
-    let (leader_eps, worker_eps) = match transport {
-        Transport::InProcess => star(cfg.nodes),
-        Transport::Tcp => tcp_star(cfg.nodes)?,
+    // One plan drives both transports. A star (or tree:fanout=n,depth=1)
+    // resolves to zero relays, and the tree builders then produce exactly
+    // the star wiring — the bit-identity pin holds at the link level.
+    let plan = cfg.topology.plan(cfg.nodes)?;
+    let (leader_eps, relay_eps, worker_eps) = match transport {
+        Transport::InProcess => transport::tree(&plan),
+        Transport::Tcp => tcp_tree(&plan)?,
     };
     let mut root_rng = Rng::new(cfg.seed);
+
+    // ---- relay threads (tree topologies only) ----
+    let mut relay_stats: Vec<Arc<RelayStats>> = Vec::with_capacity(relay_eps.len());
+    let mut relay_handles = Vec::with_capacity(relay_eps.len());
+    for eps in relay_eps {
+        let stats = Arc::new(RelayStats::new(eps.level));
+        relay_stats.push(stats.clone());
+        let cfg = cfg.clone();
+        relay_handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut guard = RelayGuard {
+                up: eps.up.to_leader.clone(),
+                down: eps.down.to_workers.clone(),
+                id: eps.id,
+                armed: true,
+            };
+            let result = run_relay(eps, &cfg, stats);
+            if result.is_ok() {
+                guard.armed = false;
+            }
+            result
+        }));
+    }
 
     // Worker 0's shard defines the epoch clock (shards are balanced so
     // they all agree up to rounding). Its thread reports
@@ -155,31 +217,65 @@ pub fn run_with(
     };
 
     if result.is_err() {
-        // A leader that errored out mid-run never sent Shutdown; workers
-        // blocked on the next broadcast would make the joins below hang.
+        // A leader that errored out mid-run never sent Shutdown; children
+        // blocked on the next broadcast would make the joins below hang
+        // (relays forward the Shutdown down their subtrees).
         for tx in &leader_eps.to_workers {
             let _ = tx.send(Message::Shutdown);
         }
     }
+    // Join every node thread. The ROOT CAUSE is the error that is not a
+    // hung-up-link cascade: a dying node's own Err names the real failure,
+    // while its neighbours' errors merely report the link it took down.
     let mut first_err: Option<anyhow::Error> = None;
-    for h in handles {
+    let mut cascade_err: Option<anyhow::Error> = None;
+    let mut record = |e: anyhow::Error| {
+        if format!("{e:#}").contains(transport::LINK_HUNG_UP) {
+            cascade_err.get_or_insert(e);
+        } else {
+            first_err.get_or_insert(e);
+        }
+    };
+    for h in handles.into_iter().chain(relay_handles) {
         match h.join() {
             Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                first_err.get_or_insert(e);
-            }
-            Err(_) => {
-                first_err.get_or_insert_with(|| anyhow::anyhow!("worker thread panicked"));
-            }
+            Ok(Err(e)) => record(e),
+            Err(_) => record(anyhow::anyhow!("node thread panicked")),
         }
     }
-    // a worker failure is the root cause; it outranks the leader error it
+    // a node failure is the root cause; it outranks the leader error it
     // usually induces (hung-up channel)
-    if let Some(e) = first_err {
+    if let Some(e) = first_err.or(cascade_err) {
         return Err(e.context("worker failed"));
     }
-    let (params, metrics) = result?;
+    let (params, mut metrics) = result?;
+    metrics.relay_levels = fold_relay_levels(&relay_stats);
     Ok(ClusterResult { params, metrics })
+}
+
+/// Aggregate per-relay counters into per-level totals for the metrics
+/// summary (root ingress already lives on the round records; these add the
+/// interior of the tree: relay ingress/egress bytes, merge time, drops).
+fn fold_relay_levels(stats: &[Arc<RelayStats>]) -> Vec<RelayLevelStats> {
+    let mut by_level: BTreeMap<usize, RelayLevelStats> = BTreeMap::new();
+    for s in stats {
+        let e = by_level.entry(s.level).or_insert_with(|| RelayLevelStats {
+            level: s.level,
+            relays: 0,
+            merges: 0,
+            merge_ms: 0.0,
+            ingress_bytes: 0,
+            egress_bytes: 0,
+            stale_updates: 0,
+        });
+        e.relays += 1;
+        e.merges += s.merges.load(Ordering::Relaxed);
+        e.merge_ms += s.merge_ns.load(Ordering::Relaxed) as f64 / 1e6;
+        e.ingress_bytes += s.ingress_bytes.load(Ordering::Relaxed);
+        e.egress_bytes += s.egress_bytes.load(Ordering::Relaxed);
+        e.stale_updates += s.stale.load(Ordering::Relaxed);
+    }
+    by_level.into_values().collect()
 }
 
 #[cfg(test)]
@@ -450,6 +546,63 @@ mod tests {
         assert_eq!(res.metrics.records.len(), 5);
         for (node, c) in calls.iter().enumerate() {
             assert_eq!(c.load(Ordering::SeqCst), 1, "node {node} setups built");
+        }
+    }
+
+    #[test]
+    fn tree_cluster_converges_and_reports_relay_levels() {
+        let dim = 256;
+        let mut cfg = base_cfg(SparsifierKind::RTopK, 0.9);
+        cfg.nodes = 8;
+        cfg.set_topology("tree:fanout=4,depth=2").unwrap();
+        let model = MockModel::new(dim, 0.05, 42);
+        let res = run(
+            &cfg,
+            "mock-tree",
+            model.init_params(),
+            mock_factory(dim, 0.05),
+            Box::new(|| Ok(None)),
+        )
+        .unwrap();
+        let d0 = model.distance_sq(&model.init_params());
+        let d1 = model.distance_sq(&res.params);
+        assert!(d1 < 0.1 * d0, "tree cluster must converge: {d0} -> {d1}");
+        assert_eq!(res.metrics.records.len(), 60);
+        for r in &res.metrics.records {
+            assert_eq!(r.participants, 8, "round {}: FullSync spans the tree", r.round);
+        }
+        assert_eq!(res.metrics.relay_levels.len(), 1);
+        let l = res.metrics.relay_levels[0];
+        assert_eq!((l.level, l.relays), (1, 4));
+        assert_eq!(l.merges, 4 * 60);
+        assert!(l.ingress_bytes > 0 && l.egress_bytes > 0);
+    }
+
+    #[test]
+    fn relay_guard_reports_failure_up_and_shutdown_down() {
+        // A PANICKING relay body: the guard's unwind drop must report
+        // WorkerFailed to the parent and Shutdown to every child, so
+        // neither direction of the tree can deadlock on the dead node.
+        let plan = crate::comms::topology::Topology::Tree { fanout: 2, depth: Some(2) }
+            .plan(4)
+            .unwrap();
+        let (leader, mut relays, workers) = transport::tree(&plan);
+        let r0 = relays.remove(0);
+        let up = r0.up.to_leader.clone();
+        let down = r0.down.to_workers.clone();
+        let id = r0.id;
+        let h = std::thread::spawn(move || {
+            let _guard = RelayGuard { up, down, id, armed: true };
+            let _keep = r0; // the endpoints live (and die) inside the thread
+            panic!("relay body panicked");
+        });
+        assert!(h.join().is_err(), "the panic must propagate to join");
+        match leader.from_workers.recv().unwrap() {
+            Message::WorkerFailed { worker } => assert_eq!(worker, 4, "relay-0's global id"),
+            other => panic!("unexpected {other:?}"),
+        }
+        for w in &workers[0..2] {
+            assert!(matches!(w.from_leader.recv().unwrap(), Message::Shutdown));
         }
     }
 

@@ -5,6 +5,7 @@
 //! workers, experiment tables and benches all build their
 //! [`GradientCompressor`]s from it.
 
+use crate::comms::topology::Topology;
 use crate::compress::{
     BudgetPolicy, CompressStats, GradientCompressor, LayoutSpec, PartitionedCompressor,
     PipelineSpec, Select,
@@ -96,6 +97,20 @@ pub struct TrainConfig {
     /// How a round's total k splits across segments (CLI `--budget
     /// proportional|uniform|adaptive`). Ignored under the flat layout.
     pub budget: BudgetPolicy,
+    /// How the cluster's nodes are wired (CLI `--topology
+    /// star|tree:fanout=F[,depth=D]`). The default [`Topology::Star`] is
+    /// the paper's shape; a tree inserts relay nodes that merge their
+    /// subtree's updates in the sparse domain and forward one frame
+    /// upward, cutting root ingress from n frames to at most fanout
+    /// frames per round. `tree:fanout=n,depth=1` is bit-identical to the
+    /// star (DESIGN.md §8).
+    pub topology: Topology,
+    /// Optional gTop-k-style lossy reduction at relays (CLI
+    /// `--relay-budget K`): each relay keeps only the K largest-magnitude
+    /// coordinates of its merged union before re-encoding. `None` (the
+    /// default) forwards the full union — lossless for f32 value stages.
+    /// Requires a tree topology.
+    pub relay_budget: Option<usize>,
     /// Optional injected worker delay (straggler simulation).
     pub straggler: Option<StragglerSim>,
     /// Target kept fraction k/d (compression ratio = 1 - keep_frac).
@@ -125,6 +140,8 @@ impl TrainConfig {
             gather: GatherPolicy::FullSync,
             layout: LayoutSpec::Flat,
             budget: BudgetPolicy::Proportional,
+            topology: Topology::Star,
+            relay_budget: None,
             straggler: None,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
@@ -148,6 +165,8 @@ impl TrainConfig {
             gather: GatherPolicy::FullSync,
             layout: LayoutSpec::Flat,
             budget: BudgetPolicy::Proportional,
+            topology: Topology::Star,
+            relay_budget: None,
             straggler: None,
             keep_frac: 1.0 - compression,
             subsample_ratio: 1.0 / nodes as f64,
@@ -214,6 +233,13 @@ impl TrainConfig {
     /// `--budget` flag): `proportional`, `uniform`, or `adaptive`.
     pub fn set_budget(&mut self, s: &str) -> anyhow::Result<()> {
         self.budget = BudgetPolicy::parse(s)?;
+        Ok(())
+    }
+
+    /// Set the aggregation topology from a flag string (the `--topology`
+    /// flag): `star` or `tree:fanout=<F>[,depth=<D>]`.
+    pub fn set_topology(&mut self, s: &str) -> anyhow::Result<()> {
+        self.topology = Topology::parse(s)?;
         Ok(())
     }
 
@@ -293,6 +319,17 @@ impl TrainConfig {
             "subsample_ratio must be in (0, 1]"
         );
         self.gather.validate(self.nodes)?;
+        self.topology.validate(self.nodes)?;
+        if let Some(b) = self.relay_budget {
+            anyhow::ensure!(b >= 1, "relay-budget must be >= 1, got {b}");
+            // a depth-1 tree resolves to zero relays exactly like a star,
+            // so a budget there would be silently ignored — reject both
+            anyhow::ensure!(
+                self.topology.resolved_depth(self.nodes)? >= 2,
+                "relay-budget needs relays: use --topology tree:... with depth >= 2 \
+                 (star and depth-1 trees have none)"
+            );
+        }
         // Structural layout checks that need no model dimension (empty /
         // zero-length-segment explicit layouts); the total-vs-dim check
         // happens at resolution, when the cluster knows the model.
@@ -535,6 +572,33 @@ mod tests {
         }
         // layout that cannot cover the model dim fails at build time
         assert!(cfg.uplink_compressor(1, 3).is_err(), "4 segments over dim 3");
+    }
+
+    #[test]
+    fn topology_and_relay_budget_flags_drive_config() {
+        let mut cfg = TrainConfig::image_default(16, SparsifierKind::RTopK, 0.99);
+        assert!(cfg.topology.is_star());
+        assert!(cfg.relay_budget.is_none());
+        cfg.set_topology("tree:fanout=4,depth=2").unwrap();
+        assert_eq!(cfg.topology, Topology::Tree { fanout: 4, depth: Some(2) });
+        assert!(cfg.validate().is_ok());
+        // a depth too shallow for n is a config error, not a hang
+        cfg.set_topology("tree:fanout=2,depth=2").unwrap();
+        assert!(cfg.validate().is_err());
+        assert!(cfg.set_topology("ring").is_err());
+        // relay budget: needs a tree, and at least 1
+        cfg.set_topology("tree:fanout=4").unwrap();
+        cfg.relay_budget = Some(64);
+        assert!(cfg.validate().is_ok());
+        cfg.relay_budget = Some(0);
+        assert!(cfg.validate().is_err());
+        cfg.relay_budget = Some(64);
+        cfg.set_topology("star").unwrap();
+        assert!(cfg.validate().is_err(), "a star has no relays to budget");
+        // a depth-1 tree is relay-less too: the budget must be rejected,
+        // not silently ignored
+        cfg.set_topology("tree:fanout=16,depth=1").unwrap();
+        assert!(cfg.validate().is_err(), "a depth-1 tree has no relays to budget");
     }
 
     #[test]

@@ -1,34 +1,46 @@
-//! Gather phase: pluggable policies for collecting worker updates.
+//! Gather phase: pluggable policies for collecting child updates.
 //!
 //! The pre-engine leader was hard-wired to `while got < n { recv() }` — a
 //! synchronous star that cannot express stragglers or partial
 //! participation. [`GatherPolicy`] makes the collection rule a value:
 //!
-//! * [`GatherPolicy::FullSync`] — block until all n workers respond.
+//! * [`GatherPolicy::FullSync`] — block until all direct children respond.
 //!   Bitwise-identical to the classic loop (no timeouts touched at all).
-//! * [`GatherPolicy::Quorum`] — block until `m` fresh updates arrived,
-//!   then drain late arrivals for at most `timeout_ms` before closing the
-//!   round. Updates from *earlier* rounds are deterministic no-ops: dropped
-//!   and counted (`stale`), never aggregated — a straggler can therefore
-//!   delay metrics by at most one counter bump, never corrupt the model.
+//! * [`GatherPolicy::Quorum`] — block until `m` *leaf workers'* worth of
+//!   fresh updates arrived, then drain late arrivals for at most
+//!   `timeout_ms` before closing the round. Updates from *earlier* rounds
+//!   are deterministic no-ops: dropped and counted (`stale`), never
+//!   aggregated — a straggler can therefore delay metrics by at most one
+//!   counter bump, never corrupt the model.
 //!
-//! Per-worker participation is tracked across the run
+//! The same phase runs at every level of a tree topology: the root
+//! gathers from its direct children (workers or relays), and each relay
+//! gathers from its own children with a proportionally scaled quorum
+//! ([`GatherPolicy::scaled_for_subtree`]). A child is identified by its
+//! global node id ([`GatherPhase`] maps ids to inbox slots), and each
+//! [`crate::comms::transport::Message::SparseUpdate`] carries how many
+//! leaf workers it folds in, so quorums stay in units of workers at any
+//! depth.
+//!
+//! Per-child participation is tracked across the run
 //! ([`GatherPhase::participation`]) and per-round counts are surfaced in
 //! [`crate::metrics::RoundRecord`].
 
 use std::time::{Duration, Instant};
 
+use crate::comms::topology::node_label;
 use crate::comms::transport::{LeaderEndpoints, Message};
 
-/// How the leader collects worker updates each round.
+/// How a parent collects child updates each round.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum GatherPolicy {
-    /// Wait for every worker (the default; classic synchronous SGD).
+    /// Wait for every child (the default; classic synchronous SGD).
     #[default]
     FullSync,
-    /// Proceed once `quorum` fresh updates arrived; after the quorum is
-    /// met, keep draining late arrivals for at most `timeout_ms`.
-    /// `timeout_ms = 0` closes the round the moment the quorum is met.
+    /// Proceed once `quorum` leaf workers' worth of fresh updates arrived;
+    /// after the quorum is met, keep draining late arrivals for at most
+    /// `timeout_ms`. `timeout_ms = 0` closes the round the moment the
+    /// quorum is met.
     Quorum { quorum: usize, timeout_ms: u64 },
 }
 
@@ -86,64 +98,109 @@ impl GatherPolicy {
         }
         Ok(())
     }
+
+    /// The policy a relay applies over a subtree of `sub_leaves` workers
+    /// out of `total_leaves`: FullSync stays FullSync, a quorum scales
+    /// proportionally (rounded up, clamped into `[1, sub_leaves]`) so a
+    /// cluster-level `m`-of-`n` composes from per-subtree quorums while no
+    /// subtree waits for more workers than it owns.
+    ///
+    /// Composition rule: a subtree forwards one merged frame only after
+    /// its own scaled quorum is met, so the root can close a round iff
+    /// `m ≤ Σ participants` over the subtrees that can still meet theirs.
+    /// A *slow* subtree therefore delays only itself (its frame arrives
+    /// stale and is dropped at the root), but a worker that is silent
+    /// FOREVER pins its whole subtree's scaled quorum — choose `m` so it
+    /// remains satisfiable with that subtree contributing nothing (e.g.
+    /// `m ≤ n - leaves(largest subtree)`), exactly as a star quorum must
+    /// choose `m ≤` the number of live workers. This is the hierarchical
+    /// quorum trade-off, not an implementation accident: the relay cannot
+    /// know the global deficit, only its own.
+    pub fn scaled_for_subtree(&self, sub_leaves: usize, total_leaves: usize) -> GatherPolicy {
+        match *self {
+            GatherPolicy::FullSync => GatherPolicy::FullSync,
+            GatherPolicy::Quorum { quorum, timeout_ms } => {
+                let m = (quorum * sub_leaves).div_ceil(total_leaves.max(1));
+                GatherPolicy::Quorum { quorum: m.clamp(1, sub_leaves.max(1)), timeout_ms }
+            }
+        }
+    }
 }
 
-/// One worker's fresh update for the current round.
+/// One child's fresh update for the current round.
 #[derive(Debug)]
 pub struct Update {
     pub payload: Vec<u8>,
     pub loss: f32,
     pub examples: u64,
     pub mem_norm: f32,
+    /// Leaf workers folded into the payload (1 for a leaf child).
+    pub participants: u32,
 }
 
 /// What one gather round produced (scalars only; the payloads stay in
 /// [`GatherPhase::updates`]).
 #[derive(Debug, Default, Clone, Copy)]
 pub struct GatherStats {
-    /// Workers whose update arrived in time to be aggregated.
+    /// Leaf workers whose update arrived (possibly pre-merged by relays)
+    /// in time to be aggregated.
     pub participants: usize,
     /// Late updates from earlier rounds dropped during this gather.
     pub stale: u64,
-    /// Σ loss·examples over participants (folded in worker-id order so a
+    /// Σ loss·examples over participants (folded in child-slot order so a
     /// rerun reproduces the metric bit for bit regardless of arrival order).
     pub loss_sum: f64,
     pub example_sum: f64,
     pub mem_sum: f64,
 }
 
-/// Reusable gather state: the per-worker inbox plus run-long accounting.
+/// Reusable gather state: the per-child inbox plus run-long accounting.
 pub struct GatherPhase {
     policy: GatherPolicy,
-    nodes: usize,
+    /// Global node id of each direct child, in slot order.
+    child_ids: Vec<usize>,
+    /// Total leaf workers in the cluster (for error attribution labels).
+    n_workers: usize,
     inbox: Vec<Option<Update>>,
     resynced: Vec<bool>,
-    /// Rounds each worker contributed a fresh update (run total).
+    /// Rounds each direct child contributed a fresh update (run total).
     pub participation: Vec<u64>,
     /// Stale updates dropped over the whole run.
     pub stale_total: u64,
 }
 
 impl GatherPhase {
-    pub fn new(policy: GatherPolicy, nodes: usize) -> Self {
+    pub fn new(policy: GatherPolicy, child_ids: Vec<usize>, n_workers: usize) -> Self {
+        let n = child_ids.len();
         GatherPhase {
             policy,
-            nodes,
-            inbox: (0..nodes).map(|_| None).collect(),
-            resynced: vec![false; nodes],
-            participation: vec![0; nodes],
+            child_ids,
+            n_workers,
+            inbox: (0..n).map(|_| None).collect(),
+            resynced: vec![false; n],
+            participation: vec![0; n],
             stale_total: 0,
         }
     }
 
+    /// Inbox slot of a global child id (children per node are few — at
+    /// most the fanout, or n at a star root — so a linear scan with the
+    /// identity fast path beats map bookkeeping).
+    fn slot_of(&self, id: usize) -> Option<usize> {
+        if self.child_ids.get(id) == Some(&id) {
+            return Some(id); // star: child_ids is the identity
+        }
+        self.child_ids.iter().position(|&c| c == id)
+    }
+
     /// The fresh updates collected by the last [`Self::collect`], indexed
-    /// by worker id (`None` = missed the round).
+    /// by child slot (`None` = missed the round).
     pub fn updates(&self) -> &[Option<Update>] {
         &self.inbox
     }
 
     /// Collect one round of updates under the configured policy.
-    /// `resync_source` is the canonical broadcast state a resyncing worker
+    /// `resync_source` is the canonical broadcast state a resyncing child
     /// must receive (the delta-downlink shadow, or the params themselves in
     /// dense mode).
     pub fn collect(
@@ -152,25 +209,29 @@ impl GatherPhase {
         round: u64,
         resync_source: &[f32],
     ) -> anyhow::Result<GatherStats> {
+        let nchildren = self.inbox.len();
         for slot in self.inbox.iter_mut() {
             *slot = None;
         }
         for r in self.resynced.iter_mut() {
             *r = false;
         }
-        let (quorum, drain) = match self.policy {
-            GatherPolicy::FullSync => (self.nodes, Duration::ZERO),
-            GatherPolicy::Quorum { quorum, timeout_ms } => {
-                (quorum, Duration::from_millis(timeout_ms))
-            }
+        let drain = match self.policy {
+            GatherPolicy::FullSync => Duration::ZERO,
+            GatherPolicy::Quorum { timeout_ms, .. } => Duration::from_millis(timeout_ms),
         };
         let mut stats = GatherStats::default();
-        let mut got = 0usize;
+        let mut msgs = 0usize; // fresh updates received (one per child max)
+        let mut parts = 0usize; // leaf workers those updates fold in
         // Deadline for the post-quorum drain; armed when the quorum is met.
         let mut deadline: Option<Instant> = None;
-        while got < self.nodes {
-            let msg = if got < quorum {
-                // The round cannot proceed without a quorum: block.
+        while msgs < nchildren {
+            let must_block = match self.policy {
+                // The round cannot proceed without everyone / the quorum.
+                GatherPolicy::FullSync => true,
+                GatherPolicy::Quorum { quorum, .. } => parts < quorum,
+            };
+            let msg = if must_block {
                 Some(endpoints.recv()?)
             } else {
                 let d = *deadline.get_or_insert_with(|| Instant::now() + drain);
@@ -183,8 +244,21 @@ impl GatherPhase {
             };
             let Some(msg) = msg else { break };
             match msg {
-                Message::SparseUpdate { round: r, worker, payload, loss, examples, mem_norm } => {
-                    anyhow::ensure!(worker < self.nodes, "bad worker id {worker}");
+                Message::SparseUpdate {
+                    round: r,
+                    worker,
+                    payload,
+                    loss,
+                    examples,
+                    mem_norm,
+                    participants,
+                } => {
+                    let slot = self.slot_of(worker).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "update from {} which is not a direct child",
+                            node_label(worker, self.n_workers)
+                        )
+                    })?;
                     if r < round {
                         // A straggler's update for a closed round: dropped
                         // and counted, deterministically.
@@ -194,36 +268,53 @@ impl GatherPhase {
                     }
                     anyhow::ensure!(r == round, "round skew: got {r}, expected {round}");
                     anyhow::ensure!(
-                        self.inbox[worker].is_none(),
-                        "duplicate update from {worker} in round {round}"
+                        self.inbox[slot].is_none(),
+                        "duplicate update from {} in round {round}",
+                        node_label(worker, self.n_workers)
                     );
-                    self.inbox[worker] = Some(Update { payload, loss, examples, mem_norm });
-                    self.participation[worker] += 1;
-                    got += 1;
+                    anyhow::ensure!(
+                        participants >= 1,
+                        "update from {} claims zero participants",
+                        node_label(worker, self.n_workers)
+                    );
+                    self.inbox[slot] =
+                        Some(Update { payload, loss, examples, mem_norm, participants });
+                    self.participation[slot] += 1;
+                    msgs += 1;
+                    parts += participants as usize;
                 }
                 Message::WorkerFailed { worker } => {
-                    // a dead worker can never complete a FullSync quorum;
+                    // a dead subtree can never complete a FullSync quorum;
                     // abort instead of blocking on it forever (the cluster
-                    // surfaces the worker's own error as the root cause)
-                    anyhow::bail!("worker {worker} reported a fatal error in round {round}");
+                    // surfaces the failing node's own error as root cause)
+                    anyhow::bail!(
+                        "{} reported a fatal error in round {round}",
+                        node_label(worker, self.n_workers)
+                    );
                 }
                 Message::ResyncRequest { worker } => {
-                    anyhow::ensure!(worker < self.nodes, "bad worker id {worker} in resync");
-                    // one resync per worker per round: a worker that keeps
+                    let slot = self.slot_of(worker).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "resync request from {} which is not a direct child",
+                            node_label(worker, self.n_workers)
+                        )
+                    })?;
+                    // one resync per child per round: a child that keeps
                     // requesting without ever sending its update would
                     // otherwise spin this loop (and a dense unicast) forever
                     anyhow::ensure!(
-                        !self.resynced[worker],
-                        "worker {worker} requested a second resync in round {round}"
+                        !self.resynced[slot],
+                        "{} requested a second resync in round {round}",
+                        node_label(worker, self.n_workers)
                     );
-                    self.resynced[worker] = true;
-                    endpoints.to_workers[worker]
+                    self.resynced[slot] = true;
+                    endpoints.to_workers[slot]
                         .send(Message::Params { round, data: resync_source.to_vec() })?;
                 }
-                other => anyhow::bail!("leader got unexpected message {other:?}"),
+                other => anyhow::bail!("gather got unexpected message {other:?}"),
             }
         }
-        // Metric sums are folded in worker-id order, not arrival order:
+        // Metric sums are folded in child-slot order, not arrival order:
         // float addition is not associative, and a rerun must reproduce the
         // recorded loss exactly. loss is weighted by examples — federated
         // shards are not balanced, and an unweighted mean would let a
@@ -233,7 +324,7 @@ impl GatherPhase {
             stats.example_sum += u.examples as f64;
             stats.mem_sum += u.mem_norm as f64;
         }
-        stats.participants = got;
+        stats.participants = parts;
         Ok(stats)
     }
 }
@@ -243,6 +334,10 @@ mod tests {
     use super::*;
     use crate::comms::transport::star;
 
+    fn phase(policy: GatherPolicy, n: usize) -> GatherPhase {
+        GatherPhase::new(policy, (0..n).collect(), n)
+    }
+
     fn update(round: u64, worker: usize, loss: f32) -> Message {
         Message::SparseUpdate {
             round,
@@ -251,6 +346,7 @@ mod tests {
             loss,
             examples: 2,
             mem_norm: 1.0,
+            participants: 1,
         }
     }
 
@@ -281,12 +377,37 @@ mod tests {
     }
 
     #[test]
+    fn quorum_scales_proportionally_per_subtree() {
+        let q = GatherPolicy::Quorum { quorum: 12, timeout_ms: 7 };
+        // 12-of-16 over a 4-leaf subtree -> 3-of-4, timeout preserved
+        assert_eq!(
+            q.scaled_for_subtree(4, 16),
+            GatherPolicy::Quorum { quorum: 3, timeout_ms: 7 }
+        );
+        // rounds up: 9-of-16 over 4 leaves -> ceil(36/16)=3
+        assert_eq!(
+            GatherPolicy::Quorum { quorum: 9, timeout_ms: 0 }.scaled_for_subtree(4, 16),
+            GatherPolicy::Quorum { quorum: 3, timeout_ms: 0 }
+        );
+        // never below 1, never above the subtree size
+        assert_eq!(
+            GatherPolicy::Quorum { quorum: 1, timeout_ms: 0 }.scaled_for_subtree(4, 16),
+            GatherPolicy::Quorum { quorum: 1, timeout_ms: 0 }
+        );
+        assert_eq!(
+            GatherPolicy::Quorum { quorum: 16, timeout_ms: 0 }.scaled_for_subtree(4, 16),
+            GatherPolicy::Quorum { quorum: 4, timeout_ms: 0 }
+        );
+        assert_eq!(GatherPolicy::FullSync.scaled_for_subtree(4, 16), GatherPolicy::FullSync);
+    }
+
+    #[test]
     fn fullsync_collects_everyone() {
         let (leader, workers) = star(3);
         for (w, eps) in workers.iter().enumerate() {
             eps.to_leader.send(update(7, w, 1.0)).unwrap();
         }
-        let mut phase = GatherPhase::new(GatherPolicy::FullSync, 3);
+        let mut phase = phase(GatherPolicy::FullSync, 3);
         let stats = phase.collect(&leader, 7, &[]).unwrap();
         assert_eq!(stats.participants, 3);
         assert_eq!(stats.stale, 0);
@@ -301,8 +422,7 @@ mod tests {
         // only workers 0 and 2 respond; m=2 with a tiny drain window
         workers[0].to_leader.send(update(0, 0, 1.0)).unwrap();
         workers[2].to_leader.send(update(0, 2, 1.0)).unwrap();
-        let mut phase =
-            GatherPhase::new(GatherPolicy::Quorum { quorum: 2, timeout_ms: 5 }, 3);
+        let mut phase = phase(GatherPolicy::Quorum { quorum: 2, timeout_ms: 5 }, 3);
         let stats = phase.collect(&leader, 0, &[]).unwrap();
         assert_eq!(stats.participants, 2);
         assert!(phase.updates()[0].is_some());
@@ -312,13 +432,76 @@ mod tests {
     }
 
     #[test]
+    fn merged_updates_count_leaf_participants_toward_the_quorum() {
+        // Two relay children (ids 4 and 5) each folding 2 leaves: a
+        // worker-unit quorum of m=3 is met by the two merged frames.
+        let (leader, workers) = star(2); // 2 links; ids remapped below
+        let mut phase = GatherPhase::new(
+            GatherPolicy::Quorum { quorum: 3, timeout_ms: 0 },
+            vec![4, 5],
+            4,
+        );
+        for (slot, eps) in workers.iter().enumerate() {
+            eps.to_leader
+                .send(Message::SparseUpdate {
+                    round: 0,
+                    worker: 4 + slot,
+                    payload: vec![0u8; 4],
+                    loss: 1.0,
+                    examples: 2,
+                    mem_norm: 0.5,
+                    participants: 2,
+                })
+                .unwrap();
+        }
+        let stats = phase.collect(&leader, 0, &[]).unwrap();
+        assert_eq!(stats.participants, 4);
+        assert_eq!(stats.example_sum, 4.0);
+        assert_eq!(phase.participation, vec![1, 1]);
+        // an id outside the child set is a hard error with a node label
+        workers[0]
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 1,
+                worker: 9,
+                payload: vec![],
+                loss: 0.0,
+                examples: 1,
+                mem_norm: 0.0,
+                participants: 1,
+            })
+            .unwrap();
+        let err = phase.collect(&leader, 1, &[]).unwrap_err();
+        assert!(format!("{err}").contains("relay-5"), "{err}");
+    }
+
+    #[test]
+    fn zero_participant_update_is_rejected() {
+        let (leader, workers) = star(1);
+        workers[0]
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 0,
+                worker: 0,
+                payload: vec![],
+                loss: 0.0,
+                examples: 1,
+                mem_norm: 0.0,
+                participants: 0,
+            })
+            .unwrap();
+        let mut phase = phase(GatherPolicy::FullSync, 1);
+        assert!(phase.collect(&leader, 0, &[]).is_err());
+    }
+
+    #[test]
     fn stale_updates_dropped_and_counted() {
         let (leader, workers) = star(2);
         // worker 1's round-3 update arrives while the leader gathers round 4
         workers[1].to_leader.send(update(3, 1, 9.0)).unwrap();
         workers[0].to_leader.send(update(4, 0, 1.0)).unwrap();
         workers[1].to_leader.send(update(4, 1, 2.0)).unwrap();
-        let mut phase = GatherPhase::new(GatherPolicy::FullSync, 2);
+        let mut phase = phase(GatherPolicy::FullSync, 2);
         let stats = phase.collect(&leader, 4, &[]).unwrap();
         assert_eq!(stats.participants, 2);
         assert_eq!(stats.stale, 1);
@@ -331,7 +514,7 @@ mod tests {
     fn future_round_update_is_an_error() {
         let (leader, workers) = star(1);
         workers[0].to_leader.send(update(5, 0, 1.0)).unwrap();
-        let mut phase = GatherPhase::new(GatherPolicy::FullSync, 1);
+        let mut phase = phase(GatherPolicy::FullSync, 1);
         assert!(phase.collect(&leader, 4, &[]).is_err());
     }
 
@@ -342,7 +525,7 @@ mod tests {
             let (leader, workers) = star(2);
             workers[first].to_leader.send(update(0, first, 0.1 + first as f32)).unwrap();
             workers[second].to_leader.send(update(0, second, 0.1 + second as f32)).unwrap();
-            let mut phase = GatherPhase::new(GatherPolicy::FullSync, 2);
+            let mut phase = phase(GatherPolicy::FullSync, 2);
             phase.collect(&leader, 0, &[]).unwrap()
         };
         let a = run(0, 1);

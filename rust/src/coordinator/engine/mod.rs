@@ -79,7 +79,11 @@ pub struct RoundEngine<'a> {
 }
 
 impl<'a> RoundEngine<'a> {
-    pub fn new(cfg: &'a TrainConfig, dim: usize, batches_per_epoch: usize) -> RoundEngine<'a> {
+    pub fn new(
+        cfg: &'a TrainConfig,
+        dim: usize,
+        batches_per_epoch: usize,
+    ) -> anyhow::Result<RoundEngine<'a>> {
         let opt: Box<dyn Optimizer> = match cfg.optim {
             OptimKind::Momentum(mu) => Box::new(MomentumSgd::new(dim, cfg.lr.base, mu)),
             OptimKind::Sgd { clip } => match clip {
@@ -87,19 +91,25 @@ impl<'a> RoundEngine<'a> {
                 None => Box::new(Sgd::new(cfg.lr.base)),
             },
         };
-        RoundEngine {
+        // The root gathers from its direct children: the n workers under a
+        // star (or tree:fanout=n,depth=1 — same plan, the bit-identity
+        // pin), or the top-level relays of a deeper tree, whose merged
+        // frames carry how many leaf workers they fold in. Everything past
+        // the gather (merge, scale, step) is agnostic to which.
+        let root_ids = cfg.topology.root_child_ids(cfg.nodes)?;
+        Ok(RoundEngine {
             cfg,
             dim,
             batches_per_epoch,
             opt,
             warmup: cfg.warmup(),
             broadcast: BroadcastPhase::new(cfg, dim),
-            gather: GatherPhase::new(cfg.gather, cfg.nodes),
+            gather: GatherPhase::new(cfg.gather, root_ids, cfg.nodes),
             agg: SparseAggregator::new(),
             scratch: SparseVec::default(),
             dense_agg: Vec::new(),
             dense_dirty: false,
-        }
+        })
     }
 
     /// Run the full training loop; returns the trained params + metrics.
@@ -152,7 +162,12 @@ impl<'a> RoundEngine<'a> {
             // payloads. If the round turns out near-dense (Σ nnz ≥ d, e.g.
             // baseline or early warm-up), stream the rest straight into the
             // dense accumulator — bit-identical either way (the merge folds
-            // coordinates in worker order exactly like the scatter-add).
+            // coordinates in child order exactly like the scatter-add).
+            // Under a tree topology each child frame is a relay's
+            // scale-1.0 subtree sum and |P| counts the LEAF workers those
+            // frames fold in (`GatherStats::participants`), so the same
+            // scale-then-fold computes the pinned tree-fold reduction of
+            // `compress::aggregate::merge_tree_scaled_into`.
             self.agg.begin();
             let scale = 1.0 / gstats.participants.max(1) as f32;
             let mut coords = 0u64;

@@ -48,7 +48,7 @@ pub fn run_leader(
     run_name: &str,
     batches_per_epoch: usize,
 ) -> anyhow::Result<(Vec<f32>, RunMetrics)> {
-    let engine = RoundEngine::new(cfg, init_params.len(), batches_per_epoch);
+    let engine = RoundEngine::new(cfg, init_params.len(), batches_per_epoch)?;
     engine.run(endpoints, init_params, evaluator, run_name)
 }
 
@@ -93,6 +93,7 @@ mod tests {
                                     loss: 1.0,
                                     examples: 1,
                                     mem_norm: 0.0,
+                                    participants: 1,
                                 })
                                 .unwrap();
                         }
@@ -148,6 +149,7 @@ mod tests {
                                     loss: 1.0,
                                     examples: 1,
                                     mem_norm: 0.0,
+                                    participants: 1,
                                 })
                                 .unwrap();
                         }
@@ -223,6 +225,7 @@ mod tests {
                         loss: 1.0,
                         examples: 1,
                         mem_norm: 0.0,
+                        participants: 1,
                     })
                     .unwrap();
             }
@@ -359,6 +362,7 @@ mod tests {
                                     loss,
                                     examples,
                                     mem_norm: 0.0,
+                                    participants: 1,
                                 })
                                 .unwrap();
                         }

@@ -7,14 +7,18 @@
 //! * [`engine`] — the RoundEngine: the leader's round loop as explicit
 //!   broadcast / gather / aggregate / step phases, with pluggable
 //!   [`engine::GatherPolicy`]s and sparse-domain aggregation
+//! * [`relay`] — the tree topology's interior node: gather a subtree,
+//!   merge in the sparse domain, re-encode, forward one frame upward
 //! * [`leader`] — the held-out evaluator + the engine entry point
-//! * [`cluster`] — thread-per-node orchestration over the in-process star
-//!   transport (TCP variant available in [`crate::comms::tcp`])
+//! * [`cluster`] — thread-per-node orchestration over the in-process
+//!   transport (TCP variant available in [`crate::comms::tcp`]), star or
+//!   tree per [`crate::comms::topology::Topology`]
 
 pub mod cluster;
 pub mod config;
 pub mod engine;
 pub mod leader;
+pub mod relay;
 pub mod worker;
 
 pub use cluster::{
@@ -25,4 +29,5 @@ pub use config::{
 };
 pub use engine::{GatherPolicy, RoundEngine};
 pub use leader::Evaluator;
+pub use relay::{run_relay, RelayStats};
 pub use worker::WorkerSetup;

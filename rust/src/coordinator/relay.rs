@@ -1,0 +1,619 @@
+//! The relay node — hierarchical aggregation's interior level.
+//!
+//! A relay is pure plumbing with a merge in the middle: it owns no model,
+//! draws no batches, and takes no optimizer steps. Per round it
+//!
+//! 1. **fans the broadcast down** — a dense `Params` frame is forwarded
+//!    per child link (counted per link, like the root's unicasts); an
+//!    encode-once `ParamsDelta` frame is re-shared as the SAME `Arc` down
+//!    every child link and counted once on the relay's broadcast counter
+//!    (one frame per multicast hop, never re-encoded);
+//! 2. **gathers its children** under the cluster's
+//!    [`super::engine::GatherPolicy`] with
+//!    the quorum scaled to its subtree
+//!    ([`super::engine::GatherPolicy::scaled_for_subtree`]), so quorum/timeout semantics
+//!    work per subtree: a subtree that meets its scaled quorum forwards
+//!    without waiting for its stragglers, and the root closes the round
+//!    whenever the cluster quorum `m` is satisfiable from the subtrees
+//!    that can still meet theirs (a *slow* subtree delays only itself —
+//!    its late frame is stale-dropped at the root; see the
+//!    [`super::engine::GatherPolicy::scaled_for_subtree`] docs for the composition rule
+//!    a permanently silent worker implies for choosing `m`);
+//! 3. **merges in the sparse domain** — the children's decoded payloads
+//!    are k-way merged at scale 1.0 in child order
+//!    ([`crate::compress::aggregate::merge_scaled_into`]); the root alone
+//!    applies the 1/|P| averaging scale, so the tree computes exactly the
+//!    pinned tree-fold of
+//!    [`crate::compress::aggregate::merge_tree_scaled_into`];
+//! 4. **optionally re-sparsifies** — `--relay-budget K` keeps only the K
+//!    largest-magnitude union coordinates (gTop-k-style lossy reduction,
+//!    deterministic tie-break toward the lower index);
+//! 5. **re-encodes and forwards ONE frame upward** through the same codec
+//!    stages the workers use — segmented when the run uses a partitioned
+//!    `--layout`, flat otherwise — with `participants` = how many leaf
+//!    workers the frame folds in, and the subtree's loss/examples/memory
+//!    side-band aggregated alongside.
+//!
+//! The relay also tracks the broadcast state (`Params` base plus every
+//! decoded delta — the same arithmetic every worker performs), so a child's
+//! [`Message::ResyncRequest`] is answered locally from the relay's shadow
+//! instead of being escalated to the root.
+//!
+//! Failure containment: a child's `WorkerFailed` aborts the relay's gather
+//! (the error names the hop); the cluster's guard then reports
+//! `WorkerFailed` for the WHOLE subtree upward and forwards `Shutdown`
+//! downward, so neither the parent's gather nor the children's broadcast
+//! waits block forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comms::codec::{self, CodecConfig, SegEntry};
+use crate::comms::transport::{self, Message, RelayEndpoints};
+use crate::compress::aggregate::{merge_scaled_into, truncate_topk};
+use crate::compress::{SegmentLayout, SparseAggregator};
+use crate::sparsify::SparseVec;
+
+use super::config::TrainConfig;
+use super::engine::gather::GatherPhase;
+
+/// Per-relay counters, shared with the cluster (which folds them into
+/// [`crate::metrics::RunMetrics::relay_levels`] after the run). All relaxed
+/// atomics: totals only, read after the threads joined.
+#[derive(Debug)]
+pub struct RelayStats {
+    /// Tree level (1 = direct child of the root).
+    pub level: usize,
+    /// Rounds this relay merged and forwarded.
+    pub merges: AtomicU64,
+    /// Time spent in decode + merge + re-encode, summed.
+    pub merge_ns: AtomicU64,
+    /// Bytes the child links carried upward (this relay's ingress, from
+    /// the links' own counters — stale frames included, matching the
+    /// root's uplink convention).
+    pub ingress_bytes: AtomicU64,
+    /// Merged update bytes sent upward (this relay's egress).
+    pub egress_bytes: AtomicU64,
+    /// Stale child updates dropped at this relay.
+    pub stale: AtomicU64,
+}
+
+impl RelayStats {
+    pub fn new(level: usize) -> Self {
+        RelayStats {
+            level,
+            merges: AtomicU64::new(0),
+            merge_ns: AtomicU64::new(0),
+            ingress_bytes: AtomicU64::new(0),
+            egress_bytes: AtomicU64::new(0),
+            stale: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Drive one relay until `Shutdown` (or a fatal error). Runs in its own
+/// cluster thread, one per relay, on either transport.
+pub fn run_relay(
+    eps: RelayEndpoints,
+    cfg: &TrainConfig,
+    stats: Arc<RelayStats>,
+) -> anyhow::Result<()> {
+    let policy = cfg.gather.scaled_for_subtree(eps.n_leaves, cfg.nodes);
+    let mut gather = GatherPhase::new(policy, eps.down.child_ids.clone(), cfg.nodes);
+    let up_codec = CodecConfig { values: cfg.pipeline.values, indices: cfg.pipeline.indices };
+    let delta_mode = cfg.down_pipeline.is_some();
+
+    // Broadcast state: the params every worker below currently holds
+    // (base + decoded deltas). Lets the relay answer resyncs locally.
+    let mut state: Vec<f32> = Vec::new();
+    let mut have_state = false;
+    let mut dim: Option<usize> = None;
+    let mut layout: Option<SegmentLayout> = None;
+
+    let mut agg = SparseAggregator::new();
+    let mut merged = SparseVec::default();
+    let mut delta_sv = SparseVec::default();
+    let mut payload: Vec<u8> = Vec::new();
+    let mut sub_buf: Vec<u8> = Vec::new();
+    let mut seg_sv = SparseVec::default();
+    let mut bodies: Vec<u8> = Vec::new();
+    let mut table: Vec<SegEntry> = Vec::new();
+
+    loop {
+        // Block for one frame, then drain the rest of the queue. Under a
+        // quorum root a straggling subtree's relay can fall behind and its
+        // parent inbox hold several broadcasts: EVERY frame is forwarded
+        // down in order (deltas must be applied sequentially, dense frames
+        // overwrite), but the relay gathers only for the NEWEST round —
+        // the children drain the same backlog and answer only that round,
+        // and the root already closed the older ones. Under FullSync the
+        // inbox never holds more than one frame and this degenerates to
+        // the classic one-frame loop.
+        let mut newest: Option<u64> = None;
+        loop {
+            let msg = if newest.is_none() {
+                match eps.up.from_leader.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        for tx in &eps.down.to_workers {
+                            let _ = tx.send(Message::Shutdown);
+                        }
+                        return Ok(());
+                    }
+                }
+            } else {
+                match eps.up.from_leader.try_recv() {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        for tx in &eps.down.to_workers {
+                            let _ = tx.send(Message::Shutdown);
+                        }
+                        return Ok(());
+                    }
+                }
+            };
+            match msg {
+                Message::Params { round, data } => {
+                    let d = data.len();
+                    match dim {
+                        None => {
+                            dim = Some(d);
+                            if !cfg.layout.is_flat() {
+                                layout = Some(cfg.layout.resolve(d)?);
+                            }
+                        }
+                        Some(prev) => anyhow::ensure!(
+                            prev == d,
+                            "relay {}: params dim changed {prev} -> {d}",
+                            eps.id
+                        ),
+                    }
+                    if delta_mode {
+                        state.clear();
+                        state.extend_from_slice(&data);
+                        have_state = true;
+                    }
+                    for tx in &eps.down.to_workers {
+                        tx.send(Message::Params { round, data: data.clone() })?;
+                    }
+                    newest = Some(round);
+                }
+                Message::ParamsDelta { round, payload: frame } => {
+                    let d = dim.ok_or_else(|| {
+                        anyhow::anyhow!("relay {}: delta before any dense base", eps.id)
+                    })?;
+                    if have_state {
+                        // the same arithmetic every worker performs, so the
+                        // relay's resync answers match the root's shadow
+                        // bitwise
+                        crate::compress::GradientCompressor::decompress_expecting(
+                            &frame, d, &mut delta_sv,
+                        )
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "relay {}: corrupt downlink delta at round {round}: {e}",
+                                eps.id
+                            )
+                        })?;
+                        delta_sv.add_scaled_into(1.0, &mut state);
+                    }
+                    // one shared frame per hop: re-shared, never re-encoded
+                    eps.down.broadcast_shared(round, frame)?;
+                    newest = Some(round);
+                }
+                Message::Shutdown => {
+                    for tx in &eps.down.to_workers {
+                        let _ = tx.send(Message::Shutdown);
+                    }
+                    return Ok(());
+                }
+                other => anyhow::bail!("relay {} got unexpected message {other:?}", eps.id),
+            }
+        }
+        let round = newest.expect("drain loop only exits with a round or returns");
+        let d = dim.expect("set on the first dense frame");
+
+        // ---- gather the subtree (scaled policy) ----
+        let resync_source: &[f32] = if have_state { &state } else { &[] };
+        let gstats = gather.collect(&eps.down, round, resync_source)?;
+        stats.stale.store(gather.stale_total, Ordering::Relaxed);
+
+        // ---- merge in the sparse domain, child order, scale 1.0 ----
+        let t0 = Instant::now();
+        agg.begin();
+        for u in gather.updates().iter().flatten() {
+            agg.decode_payload(&u.payload, d)?;
+        }
+        merge_scaled_into(agg.decoded(), 1.0, d, &mut merged);
+        if let Some(budget) = cfg.relay_budget {
+            truncate_topk(&mut merged, budget);
+        }
+
+        // ---- re-encode through the uplink codec stages ----
+        match &layout {
+            Some(layout) if !layout.is_single() => {
+                // segmented frame: slice the union by the layout so the
+                // root's per-segment byte/mass accounting keeps working
+                bodies.clear();
+                table.clear();
+                let mut cursor = 0usize;
+                for seg in layout.segments() {
+                    seg_sv.clear(seg.len);
+                    while cursor < merged.nnz() && (merged.idx[cursor] as usize) < seg.end() {
+                        seg_sv.push(merged.idx[cursor] - seg.offset as u32, merged.val[cursor]);
+                        cursor += 1;
+                    }
+                    codec::encode(&seg_sv, up_codec, &mut sub_buf);
+                    table.push(SegEntry {
+                        offset: seg.offset as u32,
+                        len: seg.len as u32,
+                        nbytes: sub_buf.len() as u32,
+                    });
+                    bodies.extend_from_slice(&sub_buf);
+                }
+                codec::encode_segmented(d, &table, &bodies, &mut payload);
+            }
+            _ => codec::encode(&merged, up_codec, &mut payload),
+        }
+        stats.merges.fetch_add(1, Ordering::Relaxed);
+        stats.merge_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // ingress comes from the child links' own counters — the same
+        // convention the root's uplink uses — so stale-dropped frames
+        // count as received traffic here exactly as they do at the root
+        stats
+            .ingress_bytes
+            .store(transport::total(&eps.down.up_stats).1, Ordering::Relaxed);
+        stats.egress_bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+
+        // ---- forward ONE frame upward ----
+        let loss = if gstats.example_sum > 0.0 {
+            (gstats.loss_sum / gstats.example_sum) as f32
+        } else {
+            0.0
+        };
+        let sent = eps.up.to_leader.send(Message::SparseUpdate {
+            round,
+            worker: eps.id,
+            payload: std::mem::take(&mut payload),
+            loss,
+            examples: gstats.example_sum as u64,
+            mem_norm: gstats.mem_sum as f32,
+            participants: gstats.participants as u32,
+        });
+        if let Err(e) = sent {
+            // Same clean-shutdown race the workers handle: under a quorum
+            // root, a parent (the root, or at depth ≥ 3 another relay) can
+            // close its last round without this subtree's frame, forward
+            // `Shutdown`, and drop its links while this merged update was
+            // in flight. On a clean shutdown, pass it down and stop.
+            if eps.up.shutdown_pending(std::time::Duration::from_secs(2)) {
+                for tx in &eps.down.to_workers {
+                    let _ = tx.send(Message::Shutdown);
+                }
+                return Ok(());
+            }
+            return Err(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::topology::Topology;
+    use crate::comms::transport::tree;
+    use crate::compress::GradientCompressor;
+    use crate::sparsify::SparsifierKind;
+
+    fn tree_cfg(nodes: usize) -> TrainConfig {
+        let mut cfg = TrainConfig::image_default(nodes, SparsifierKind::TopK, 0.9);
+        cfg.set_topology("tree:fanout=2,depth=2").unwrap();
+        cfg
+    }
+
+    fn encode_update(sv: &SparseVec) -> Vec<u8> {
+        let mut buf = Vec::new();
+        codec::encode(sv, CodecConfig::default(), &mut buf);
+        buf
+    }
+
+    /// Drive one relay directly: two leaf children, one round.
+    #[test]
+    fn relay_merges_children_and_forwards_one_frame() {
+        let dim = 16;
+        let cfg = tree_cfg(4);
+        let plan = Topology::Tree { fanout: 2, depth: Some(2) }.plan(4).unwrap();
+        let (leader, mut relays, workers) = tree(&plan);
+        let r0 = relays.remove(0); // children: workers 0, 1
+        let stats = Arc::new(RelayStats::new(1));
+        let rstats = stats.clone();
+        let cfg_r = cfg.clone();
+        let handle = std::thread::spawn(move || run_relay(r0, &cfg_r, rstats));
+
+        // root broadcasts a dense frame to relay-0
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.5; dim] })
+            .unwrap();
+        // both workers see it
+        for w in &workers[0..2] {
+            match w.from_leader.recv().unwrap() {
+                Message::Params { round: 0, data } => assert_eq!(data, vec![0.5; dim]),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // children answer with overlapping sparse updates
+        let a = SparseVec { dim, idx: vec![1, 4], val: vec![1.0, 2.0] };
+        let b = SparseVec { dim, idx: vec![4, 9], val: vec![3.0, -1.0] };
+        workers[0]
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 0,
+                worker: 0,
+                payload: encode_update(&a),
+                loss: 1.0,
+                examples: 2,
+                mem_norm: 0.25,
+                participants: 1,
+            })
+            .unwrap();
+        workers[1]
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 0,
+                worker: 1,
+                payload: encode_update(&b),
+                loss: 3.0,
+                examples: 2,
+                mem_norm: 0.75,
+                participants: 1,
+            })
+            .unwrap();
+        // the root receives ONE merged frame for the subtree
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate {
+                round: 0,
+                worker,
+                payload,
+                loss,
+                examples,
+                mem_norm,
+                participants,
+            } => {
+                assert_eq!(worker, 4, "relay-0's global id");
+                assert_eq!(participants, 2);
+                assert_eq!(examples, 4);
+                assert!((loss - 2.0).abs() < 1e-6, "weighted mean of 1.0 and 3.0");
+                assert!((mem_norm - 1.0).abs() < 1e-6, "summed mem norms");
+                let mut sv = SparseVec::default();
+                GradientCompressor::decompress_expecting(&payload, dim, &mut sv).unwrap();
+                assert_eq!(sv.idx, vec![1, 4, 9]);
+                assert_eq!(sv.val, vec![1.0, 5.0, -1.0], "scale-1.0 sum in child order");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(stats.merges.load(Ordering::Relaxed), 1);
+        assert!(stats.ingress_bytes.load(Ordering::Relaxed) > 0);
+        assert!(stats.egress_bytes.load(Ordering::Relaxed) > 0);
+
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        // the relay forwards the shutdown to its children
+        for w in &workers[0..2] {
+            assert!(matches!(w.from_leader.recv().unwrap(), Message::Shutdown));
+        }
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn relay_budget_truncates_the_union() {
+        let dim = 32;
+        let mut cfg = tree_cfg(4);
+        cfg.relay_budget = Some(1);
+        let plan = Topology::Tree { fanout: 2, depth: Some(2) }.plan(4).unwrap();
+        let (leader, mut relays, workers) = tree(&plan);
+        let r0 = relays.remove(0);
+        let stats = Arc::new(RelayStats::new(1));
+        let handle = {
+            let stats = stats.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_relay(r0, &cfg, stats))
+        };
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        for w in &workers[0..2] {
+            let _ = w.from_leader.recv().unwrap();
+        }
+        let a = SparseVec { dim, idx: vec![2, 7], val: vec![0.5, -4.0] };
+        let b = SparseVec { dim, idx: vec![2, 9], val: vec![0.25, 1.0] };
+        for (i, sv) in [a, b].iter().enumerate() {
+            workers[i]
+                .to_leader
+                .send(Message::SparseUpdate {
+                    round: 0,
+                    worker: i,
+                    payload: encode_update(sv),
+                    loss: 0.0,
+                    examples: 1,
+                    mem_norm: 0.0,
+                    participants: 1,
+                })
+                .unwrap();
+        }
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { payload, participants, .. } => {
+                assert_eq!(participants, 2, "lossy reduction still counts its leaves");
+                let mut sv = SparseVec::default();
+                GradientCompressor::decompress_expecting(&payload, dim, &mut sv).unwrap();
+                assert_eq!(sv.idx, vec![7], "budget 1 keeps the largest |v|");
+                assert_eq!(sv.val, vec![-4.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn relay_answers_resync_from_its_shadow() {
+        // Dense base + one delta, then a child asks for a resync: the
+        // relay must answer with base ⊕ decoded delta, bit for bit, and
+        // must NOT escalate to the root.
+        let dim = 8;
+        let mut cfg = tree_cfg(4);
+        cfg.set_downlink("delta").unwrap();
+        let plan = Topology::Tree { fanout: 2, depth: Some(2) }.plan(4).unwrap();
+        let (leader, mut relays, workers) = tree(&plan);
+        let r0 = relays.remove(0);
+        let stats = Arc::new(RelayStats::new(1));
+        let handle = {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_relay(r0, &cfg, stats))
+        };
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![1.0; dim] })
+            .unwrap();
+        for w in &workers[0..2] {
+            let _ = w.from_leader.recv().unwrap();
+        }
+        // both children reply so round 0 completes
+        let empty = SparseVec { dim, idx: vec![], val: vec![] };
+        for i in 0..2 {
+            workers[i]
+                .to_leader
+                .send(Message::SparseUpdate {
+                    round: 0,
+                    worker: i,
+                    payload: encode_update(&empty),
+                    loss: 0.0,
+                    examples: 1,
+                    mem_norm: 0.0,
+                    participants: 1,
+                })
+                .unwrap();
+        }
+        let _ = leader.from_workers.recv().unwrap();
+        // round 1: shared delta (+0.25 on coord 3)
+        let delta = SparseVec { dim, idx: vec![3], val: vec![0.25] };
+        let mut frame = Vec::new();
+        codec::encode(&delta, CodecConfig::default(), &mut frame);
+        leader.broadcast_shared(1, frame.into()).unwrap();
+        for w in &workers[0..2] {
+            assert!(matches!(
+                w.from_leader.recv().unwrap(),
+                Message::ParamsDelta { round: 1, .. }
+            ));
+        }
+        // worker 1 lost its base: asks the relay
+        workers[1]
+            .to_leader
+            .send(Message::ResyncRequest { worker: 1 })
+            .unwrap();
+        match workers[1].from_leader.recv().unwrap() {
+            Message::Params { round: 1, data } => {
+                let mut want = vec![1.0f32; dim];
+                want[3] += 0.25;
+                assert_eq!(data, want, "resync must carry base ⊕ decoded delta");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // close the round
+        for i in 0..2 {
+            workers[i]
+                .to_leader
+                .send(Message::SparseUpdate {
+                    round: 1,
+                    worker: i,
+                    payload: encode_update(&empty),
+                    loss: 0.0,
+                    examples: 1,
+                    mem_norm: 0.0,
+                    participants: 1,
+                })
+                .unwrap();
+        }
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { round: 1, .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn child_failure_aborts_the_relay_with_the_hop_named() {
+        let dim = 8;
+        let cfg = tree_cfg(4);
+        let plan = Topology::Tree { fanout: 2, depth: Some(2) }.plan(4).unwrap();
+        let (leader, mut relays, workers) = tree(&plan);
+        let r0 = relays.remove(0);
+        let stats = Arc::new(RelayStats::new(1));
+        let handle = {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_relay(r0, &cfg, stats))
+        };
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        let _ = workers[0].from_leader.recv().unwrap();
+        workers[1]
+            .to_leader
+            .send(Message::WorkerFailed { worker: 1 })
+            .unwrap();
+        let err = handle.join().unwrap().expect_err("child failure must abort the relay");
+        assert!(format!("{err}").contains("worker-1"), "{err}");
+    }
+
+    #[test]
+    fn relay_segmented_reencode_round_trips() {
+        // Partitioned layout: the relay's merged frame must be a valid
+        // segmented frame carrying the union at the right coordinates.
+        let dim = 16;
+        let mut cfg = tree_cfg(4);
+        cfg.set_layout("even:n=4").unwrap();
+        let plan = Topology::Tree { fanout: 2, depth: Some(2) }.plan(4).unwrap();
+        let (leader, mut relays, workers) = tree(&plan);
+        let r0 = relays.remove(0);
+        let stats = Arc::new(RelayStats::new(1));
+        let handle = {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || run_relay(r0, &cfg, stats))
+        };
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        for w in &workers[0..2] {
+            let _ = w.from_leader.recv().unwrap();
+        }
+        let a = SparseVec { dim, idx: vec![0, 5, 15], val: vec![1.0, 2.0, 3.0] };
+        let b = SparseVec { dim, idx: vec![5, 8], val: vec![1.5, -2.0] };
+        for (i, sv) in [a, b].iter().enumerate() {
+            workers[i]
+                .to_leader
+                .send(Message::SparseUpdate {
+                    round: 0,
+                    worker: i,
+                    payload: encode_update(sv),
+                    loss: 0.0,
+                    examples: 1,
+                    mem_norm: 0.0,
+                    participants: 1,
+                })
+                .unwrap();
+        }
+        match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { payload, .. } => {
+                assert!(codec::is_segmented(&payload), "partitioned runs re-encode segmented");
+                let mut sv = SparseVec::default();
+                GradientCompressor::decompress_expecting(&payload, dim, &mut sv).unwrap();
+                assert_eq!(sv.idx, vec![0, 5, 8, 15]);
+                assert_eq!(sv.val, vec![1.0, 3.5, -2.0, 3.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+}

@@ -181,14 +181,26 @@ pub fn run_worker(
         ef.update_residual(compressor.kept());
 
         // ---- send ----
-        endpoints.to_leader.send(Message::SparseUpdate {
+        let sent = endpoints.to_leader.send(Message::SparseUpdate {
             round,
             worker: endpoints.id,
             payload: std::mem::take(&mut payload),
             loss,
             examples,
             mem_norm: ef.memory_l2_sq().sqrt() as f32,
-        })?;
+            participants: 1,
+        });
+        if let Err(e) = sent {
+            // The parent may have legitimately shut down while this update
+            // was in flight (a quorum root closes rounds without the whole
+            // tree, so a subtree's last update can race the run's
+            // shutdown); anything else is a real dead-link fault.
+            return if endpoints.shutdown_pending(std::time::Duration::from_secs(2)) {
+                Ok(())
+            } else {
+                Err(e)
+            };
+        }
     }
 }
 

@@ -6,5 +6,6 @@ pub mod straggler;
 pub mod tables;
 pub mod tasks;
 pub mod theory;
+pub mod topo_sweep;
 
 pub use tables::{run_experiment, ExperimentOptions};

@@ -90,13 +90,25 @@ SUBCOMMANDS
                                          non-flat layout: by parameter
                                          count (paper), evenly, or by the
                                          previous round's kept mass
+                --topology star|tree:fanout=F[,depth=D]
+                                         aggregation topology: every
+                                         worker to the root (default), or
+                                         a fanout-ary relay tree that
+                                         merges updates per subtree and
+                                         cuts root ingress to <= F frames
+                                         (tree:fanout=n,depth=1 == star)
+                --relay-budget K         gTop-k-style lossy reduction at
+                                         relays: keep only the K largest
+                                         union coordinates per merge
                 --artifacts DIR --out results/train
   experiment  regenerate a paper table/figure
-                --id table1..table5|fig2..fig6|figT1|figT2|figS1|figS2|all
+                --id table1..table5|fig2..fig6|figT1|figT2|figS1|figS2|figS3|all
                                          figS1 = straggler sweep over
                                          quorum m x injected delay
                                          figS2 = layerwise-vs-flat sweep
                                          over layout x budget policy
+                                         figS3 = topology sweep: star vs
+                                         tree, root ingress + merge time
                 --quick  --nodes 5  --artifacts DIR  --out results
                 --lm-preset lm_small
                 --wire "bf16|delta"      wire-format override for every row
@@ -179,6 +191,16 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
     }
     if let Some(s) = args.get("straggler-sim") {
         cfg.straggler = Some(coordinator::StragglerSim::parse(s)?);
+    }
+    // Aggregation topology (star default) + optional lossy relay budget.
+    if let Some(t) = args.get("topology") {
+        cfg.set_topology(t)?;
+    }
+    if let Some(b) = args.get("relay-budget") {
+        let b: usize = b.parse().map_err(|_| {
+            anyhow::anyhow!("relay-budget expects an integer coordinate count, got {b:?}")
+        })?;
+        cfg.relay_budget = Some(b);
     }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     Ok((cfg, artifacts))
@@ -275,6 +297,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             cfg.gather.label(),
             metrics.participation_rate(cfg.nodes),
             metrics.stale_total()
+        );
+    }
+    if !metrics.relay_levels.is_empty() {
+        println!(
+            "topology {}: mean root ingress {:.0} B/round, relay merge {:.1} ms total",
+            cfg.topology.label(),
+            metrics.mean_root_ingress_bytes(),
+            metrics.relay_merge_ms()
         );
     }
     println!("curves: {}", out.join("run.csv").display());

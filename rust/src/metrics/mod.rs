@@ -17,7 +17,9 @@ pub struct RoundRecord {
     pub train_loss: f64,
     /// Evaluation metric, when an eval ran this round.
     pub eval: Option<EvalRecord>,
-    /// Uplink bytes actually sent by all workers this round.
+    /// Uplink bytes the ROOT's ingress links carried this round: n worker
+    /// frames under a star, ≤ fanout relay-merged frames under a tree
+    /// (leaf/interior traffic lives in [`RunMetrics::relay_levels`]).
     pub uplink_bytes: u64,
     /// Gradient coordinates (entries) actually sent by all workers.
     pub uplink_coords: u64,
@@ -56,6 +58,34 @@ pub struct RoundRecord {
     pub seg_overhead_bytes: u64,
 }
 
+/// Run-total counters for one level of a tree topology's relays (level 1 =
+/// the root's direct children). Filled by the cluster after the run from
+/// the per-relay atomics; empty for star runs.
+///
+/// Byte-accounting semantics (DESIGN.md §8): a round record's
+/// `uplink_bytes` is what the ROOT's ingress links carried (n worker
+/// frames under a star, ≤ fanout merged frames under a tree);
+/// `ingress_bytes` here is what each relay level received from below, and
+/// `egress_bytes` what it forwarded up — so leaf egress is the deepest
+/// level's ingress, and lossless relays satisfy `egress ≤ ingress` per
+/// level with equality only when nothing merges.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RelayLevelStats {
+    pub level: usize,
+    /// Relays at this level.
+    pub relays: u64,
+    /// Merge+re-encode operations (≈ relays × rounds under FullSync).
+    pub merges: u64,
+    /// Total time spent in decode + k-way merge + re-encode at this level.
+    pub merge_ms: f64,
+    /// Update bytes received from children, summed over the level's relays.
+    pub ingress_bytes: u64,
+    /// Merged update bytes forwarded upward, summed.
+    pub egress_bytes: u64,
+    /// Stale child updates dropped at this level.
+    pub stale_updates: u64,
+}
+
 #[derive(Debug, Clone, Copy)]
 pub enum EvalRecord {
     /// Classification accuracy in [0,1].
@@ -86,12 +116,17 @@ pub struct RunMetrics {
     pub name: String,
     pub method: String,
     pub records: Vec<RoundRecord>,
-    /// Rounds each worker contributed a fresh update over the whole run
-    /// (filled by the RoundEngine at shutdown; empty when unknown).
+    /// Rounds each of the root's direct children contributed a fresh
+    /// update over the whole run (filled by the RoundEngine at shutdown;
+    /// empty when unknown). One entry per worker under a star; one entry
+    /// per top-level subtree under a tree topology.
     pub worker_participation: Vec<u64>,
     /// Segment names of the run's uplink layout, in order (filled by the
     /// RoundEngine under a partitioned layout; empty for flat runs).
     pub segment_names: Vec<String>,
+    /// Per-level relay accounting under a tree topology (filled by the
+    /// cluster at shutdown; empty for star runs).
+    pub relay_levels: Vec<RelayLevelStats>,
 }
 
 impl RunMetrics {
@@ -102,7 +137,28 @@ impl RunMetrics {
             records: Vec::new(),
             worker_participation: Vec::new(),
             segment_names: Vec::new(),
+            relay_levels: Vec::new(),
         }
+    }
+
+    /// Total relay merge time over the run, all levels (0.0 for star runs).
+    pub fn relay_merge_ms(&self) -> f64 {
+        self.relay_levels.iter().map(|l| l.merge_ms).sum()
+    }
+
+    /// Total relay egress bytes over the run, all levels.
+    pub fn relay_egress_bytes(&self) -> u64 {
+        self.relay_levels.iter().map(|l| l.egress_bytes).sum()
+    }
+
+    /// Mean root-ingress (uplink) bytes per round — the tree topology's
+    /// headline number: ≤ fanout merged frames instead of n worker frames.
+    pub fn mean_root_ingress_bytes(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.uplink_bytes).sum::<u64>() as f64
+            / self.records.len() as f64
     }
 
     /// Per-segment uplink byte totals over the run (empty for flat runs).
@@ -318,6 +374,27 @@ impl RunMetrics {
                 Json::Arr(self.seg_mass_totals().iter().map(|&m| Json::from(m)).collect()),
             ));
         }
+        if !self.relay_levels.is_empty() {
+            pairs.push((
+                "relay_levels",
+                Json::Arr(
+                    self.relay_levels
+                        .iter()
+                        .map(|l| {
+                            obj(vec![
+                                ("level", Json::from(l.level)),
+                                ("relays", Json::from(l.relays as usize)),
+                                ("merges", Json::from(l.merges as usize)),
+                                ("merge_ms", Json::from(l.merge_ms)),
+                                ("ingress_bytes", Json::from(l.ingress_bytes as usize)),
+                                ("egress_bytes", Json::from(l.egress_bytes as usize)),
+                                ("stale_updates", Json::from(l.stale_updates as usize)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
         if !self.worker_participation.is_empty() {
             pairs.push((
                 "participation_rate",
@@ -498,6 +575,48 @@ mod tests {
         // flat runs: no segment keys in the summary
         let flat = RunMetrics::new("f", "rtopk");
         assert!(flat.summary_json().get("segments").is_none());
+    }
+
+    #[test]
+    fn relay_levels_surface_in_summary_and_accessors() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        m.push(rec(0, 100, 1000, None));
+        m.push(rec(1, 60, 1000, None));
+        assert!(m.summary_json().get("relay_levels").is_none(), "star runs: no key");
+        assert_eq!(m.relay_merge_ms(), 0.0);
+        m.relay_levels = vec![
+            RelayLevelStats {
+                level: 1,
+                relays: 4,
+                merges: 8,
+                merge_ms: 1.5,
+                ingress_bytes: 400,
+                egress_bytes: 160,
+                stale_updates: 1,
+            },
+            RelayLevelStats {
+                level: 2,
+                relays: 8,
+                merges: 16,
+                merge_ms: 2.5,
+                ingress_bytes: 800,
+                egress_bytes: 400,
+                stale_updates: 0,
+            },
+        ];
+        assert_eq!(m.relay_merge_ms(), 4.0);
+        assert_eq!(m.relay_egress_bytes(), 560);
+        assert_eq!(m.mean_root_ingress_bytes(), 80.0);
+        let j = m.summary_json();
+        let levels = j.get("relay_levels").expect("tree runs export relay levels");
+        match levels {
+            Json::Arr(xs) => {
+                assert_eq!(xs.len(), 2);
+                assert_eq!(xs[0].get("level").unwrap().as_f64(), Some(1.0));
+                assert_eq!(xs[1].get("ingress_bytes").unwrap().as_f64(), Some(800.0));
+            }
+            other => panic!("relay_levels must be an array, got {other:?}"),
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! zeros, huge/tiny magnitudes — see `gen_vector`).
 
 use rtopk::comms::codec::{self, value_roundtrip, CodecConfig, IndexFormat, ValueFormat};
+use rtopk::compress::aggregate::{merge_scaled_into, merge_tree_scaled_into};
 use rtopk::compress::{
     BudgetPolicy, GradientCompressor, PartitionedCompressor, PipelineSpec, SegmentLayout, Select,
 };
@@ -809,6 +810,214 @@ fn prop_truncated_frames_error() {
             "prefix of {cut}/{} bytes decoded",
             buf.len()
         );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Tree-fold (hierarchical aggregation) reduction contract — DESIGN.md §8.
+// ---------------------------------------------------------------------------
+
+/// A sparse vector whose values are wire-exact for the given value stage
+/// (what a relay actually receives after decoding a child's frame).
+fn random_sparse_wire(rng: &mut Rng, dim: usize, values: ValueFormat) -> SparseVec {
+    let k = 1 + rng.index(dim.min(64));
+    let mut idx = rng.sample_indices(dim, k);
+    idx.sort_unstable();
+    SparseVec {
+        dim,
+        idx: idx.iter().map(|&i| i as u32).collect(),
+        val: (0..k)
+            .map(|_| value_roundtrip(rng.normal_f32(0.0, 1.0), values))
+            .collect(),
+    }
+}
+
+/// A random contiguous in-order partition of `0..n` (what any tree
+/// topology induces over its leaf ranges).
+fn random_contiguous_groups(rng: &mut Rng, n: usize) -> Vec<std::ops::Range<usize>> {
+    let mut cuts = vec![0, n];
+    for _ in 0..rng.index(n) {
+        cuts.push(rng.index(n + 1));
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+/// Per-coordinate magnitude scale for fp tolerances: the flat fold of the
+/// ABSOLUTE values (cancellation can make the result tiny while the
+/// operands are large, so tolerances must be relative to the operands).
+fn abs_magnitude(inputs: &[SparseVec], scale: f32, dim: usize) -> SparseVec {
+    let abs_inputs: Vec<SparseVec> = inputs
+        .iter()
+        .map(|sv| SparseVec {
+            dim,
+            idx: sv.idx.clone(),
+            val: sv.val.iter().map(|v| v.abs()).collect(),
+        })
+        .collect();
+    let mut mag = SparseVec::default();
+    merge_scaled_into(&abs_inputs, scale.abs(), dim, &mut mag);
+    mag
+}
+
+#[test]
+fn prop_tree_fold_singletons_bit_exact_arbitrary_groups_within_tolerance() {
+    check("tree-fold", default_cases(), |rng| {
+        let dim = 1 + rng.index(500);
+        let n = 1 + rng.index(8);
+        let values = if rng.bernoulli(0.5) { ValueFormat::F32 } else { ValueFormat::Bf16 };
+        let inputs: Vec<SparseVec> =
+            (0..n).map(|_| random_sparse_wire(rng, dim, values)).collect();
+        let scale = 1.0 / n as f32;
+        let mut flat = SparseVec::default();
+        merge_scaled_into(&inputs, scale, dim, &mut flat);
+
+        // all-singleton grouping IS the flat fold: bit-exact, any scale
+        let singles: Vec<_> = (0..n).map(|i| i..i + 1).collect();
+        let mut tree = SparseVec::default();
+        merge_tree_scaled_into(&inputs, &singles, scale, dim, &mut tree);
+        prop_assert!(flat.idx == tree.idx, "singleton grouping changed the support");
+        for (j, (a, b)) in flat.val.iter().zip(&tree.val).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "singleton groups must be bit-exact at entry {j}: {a} vs {b}"
+            );
+        }
+
+        // arbitrary contiguous grouping: identical support, deterministic,
+        // values within the documented fp tolerance of the flat fold
+        let groups = random_contiguous_groups(rng, n);
+        let mut t1 = SparseVec::default();
+        let mut t2 = SparseVec::default();
+        merge_tree_scaled_into(&inputs, &groups, scale, dim, &mut t1);
+        merge_tree_scaled_into(&inputs, &groups, scale, dim, &mut t2);
+        prop_assert!(
+            t1.idx == t2.idx
+                && t1.val.iter().zip(&t2.val).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "tree fold must be deterministic for groups {groups:?}"
+        );
+        prop_assert!(t1.idx == flat.idx, "grouping must not change the union support");
+        let mag = abs_magnitude(&inputs, scale, dim);
+        for (j, (a, b)) in flat.val.iter().zip(&t1.val).enumerate() {
+            let tol = 1e-4f32 * mag.val[j].max(1e-6);
+            prop_assert!(
+                (a - b).abs() <= tol,
+                "groups {groups:?} coord {}: flat {a} vs tree {b} (tol {tol})",
+                flat.idx[j]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_fold_bit_exact_for_group_local_supports_with_pow2_scale() {
+    // Contiguous in-order child ranges whose supports never span a group
+    // boundary (each group owns its own index subrange — the layerwise
+    // regime), reduced at a power-of-two scale (the FullSync 1/n for
+    // power-of-two n): the tree fold must equal the flat fold bit for bit.
+    check("tree-fold-group-local", default_cases(), |rng| {
+        let n_groups = 1 + rng.index(4);
+        let per_group = 1 + rng.index(3);
+        let seg = 32usize;
+        let dim = n_groups * seg;
+        let values = if rng.bernoulli(0.5) { ValueFormat::F32 } else { ValueFormat::Bf16 };
+        let mut inputs: Vec<SparseVec> = Vec::new();
+        let mut groups: Vec<std::ops::Range<usize>> = Vec::new();
+        for g in 0..n_groups {
+            let start = inputs.len();
+            for _ in 0..per_group {
+                let local = random_sparse_wire(rng, seg, values);
+                inputs.push(SparseVec {
+                    dim,
+                    idx: local.idx.iter().map(|&i| i + (g * seg) as u32).collect(),
+                    val: local.val,
+                });
+            }
+            groups.push(start..inputs.len());
+        }
+        let scale = [1.0f32, 0.5, 0.25, 0.125][rng.index(4)];
+        let mut flat = SparseVec::default();
+        let mut tree = SparseVec::default();
+        merge_scaled_into(&inputs, scale, dim, &mut flat);
+        merge_tree_scaled_into(&inputs, &groups, scale, dim, &mut tree);
+        prop_assert!(flat.idx == tree.idx, "support mismatch");
+        for (j, (a, b)) in flat.val.iter().zip(&tree.val).enumerate() {
+            prop_assert!(
+                a.to_bits() == b.to_bits(),
+                "group-local supports at pow2 scale {scale} must be bit-exact at entry \
+                 {j}: {a} vs {b}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulated_relay_path_matches_tree_fold_reference() {
+    // The distributed contract, simulated locally: per-group scale-1.0
+    // merge → encode → decode (the wire) → flat merge of the decoded
+    // frames at the root's scale. With an f32 value stage the wire is
+    // lossless and the result must equal `merge_tree_scaled_into` bit for
+    // bit (any index stage); with bf16 the relay's re-encode re-rounds the
+    // partial sums, bounded by bf16's relative eps per hop.
+    check("relay-path", default_cases(), |rng| {
+        let dim = 1 + rng.index(400);
+        let n = 2 + rng.index(6);
+        for (values, indices) in [
+            (ValueFormat::F32, IndexFormat::FixedWidth),
+            (ValueFormat::F32, IndexFormat::DeltaVarint),
+            (ValueFormat::Bf16, IndexFormat::FixedWidth),
+            (ValueFormat::Bf16, IndexFormat::DeltaVarint),
+        ] {
+            let wire = CodecConfig { values, indices };
+            let inputs: Vec<SparseVec> =
+                (0..n).map(|_| random_sparse_wire(rng, dim, values)).collect();
+            let groups = random_contiguous_groups(rng, n);
+            let mut relay_frames: Vec<SparseVec> = Vec::new();
+            for g in &groups {
+                let mut union = SparseVec::default();
+                merge_scaled_into(&inputs[g.clone()], 1.0, dim, &mut union);
+                let mut buf = Vec::new();
+                codec::encode(&union, wire, &mut buf);
+                let mut back = SparseVec::default();
+                codec::decode_expecting(&buf, Some(dim), &mut back)
+                    .map_err(|e| format!("relay frame decode failed: {e:?}"))?;
+                relay_frames.push(back);
+            }
+            let scale = 1.0 / n as f32;
+            let mut root = SparseVec::default();
+            merge_scaled_into(&relay_frames, scale, dim, &mut root);
+            let mut reference = SparseVec::default();
+            merge_tree_scaled_into(&inputs, &groups, scale, dim, &mut reference);
+            prop_assert!(
+                root.idx == reference.idx,
+                "wire round-trip changed the union support ({values:?}/{indices:?})"
+            );
+            match values {
+                ValueFormat::F32 => {
+                    for (j, (a, b)) in reference.val.iter().zip(&root.val).enumerate() {
+                        prop_assert!(
+                            a.to_bits() == b.to_bits(),
+                            "f32 relay path must be bit-exact at entry {j}: {a} vs {b} \
+                             ({indices:?}, groups {groups:?})"
+                        );
+                    }
+                }
+                ValueFormat::Bf16 => {
+                    let mag = abs_magnitude(&inputs, scale, dim);
+                    for (j, (a, b)) in reference.val.iter().zip(&root.val).enumerate() {
+                        let tol = 0.01f32 * mag.val[j].max(1e-6);
+                        prop_assert!(
+                            (a - b).abs() <= tol,
+                            "bf16 relay path entry {j}: ref {a} vs wire {b} (tol {tol})"
+                        );
+                    }
+                }
+            }
+        }
         Ok(())
     });
 }
