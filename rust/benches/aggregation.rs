@@ -205,4 +205,6 @@ fn main() {
         "the tree root's decode+merge (fanout pre-merged frames) must beat the star \
          root's (n worker frames) at n=32, fanout=4"
     );
+    let path = bench.write_json().expect("bench json");
+    println!("bench json: {}", path.display());
 }

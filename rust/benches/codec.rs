@@ -176,4 +176,6 @@ fn main() {
     bench_pipeline_sweep(&mut bench, &mut rng);
     bench_fused_vs_two_step(&mut bench, &mut rng);
     bench_segmented_vs_flat(&mut bench, &mut rng);
+    let path = bench.write_json().expect("bench json");
+    println!("bench json: {}", path.display());
 }

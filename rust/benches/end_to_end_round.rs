@@ -4,11 +4,15 @@
 //!
 //! This is the bench behind the paper's implicit systems claim: the
 //! sparsification machinery must cost far less than the gradient compute
-//! it saves communication for.
+//! it saves communication for. Every row joins `BENCH_end_to_end_round.json`
+//! (time + measured uplink bytes per round) so CI tracks the trajectory.
 
 use std::time::Instant;
 
-use rtopk::coordinator::{self, mock_worker_factory, OptimKind, TrainConfig, WorkerFactory};
+use rtopk::coordinator::{
+    self, mock_client_factory, mock_worker_factory, FederationConfig, OptimKind, TrainConfig,
+    WorkerFactory,
+};
 use rtopk::optim::LrSchedule;
 use rtopk::util::bench::Bench;
 
@@ -16,30 +20,43 @@ fn mock_factory(dim: usize) -> WorkerFactory {
     mock_worker_factory(dim, 0.05, 1_000_000) // batches_per_epoch irrelevant here
 }
 
-fn run_rounds(dim: usize, pipeline: &str, compression: f64, rounds: u64, gather: &str) -> f64 {
-    let mut cfg = TrainConfig::image_spec(5, pipeline, compression).unwrap();
+fn bench_cfg(nodes: usize, pipeline: &str, compression: f64, rounds: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::image_spec(nodes, pipeline, compression).unwrap();
     cfg.rounds = rounds;
     cfg.warmup_epochs = 0.0;
     cfg.optim = OptimKind::Sgd { clip: None };
     cfg.lr = LrSchedule::constant(0.1);
     cfg.eval_every = rounds + 1;
-    cfg.set_gather(gather).unwrap();
+    cfg
+}
+
+/// (ms per round, measured uplink bytes per round)
+fn run_cfg(cfg: &TrainConfig, dim: usize, factory: WorkerFactory) -> (f64, u64) {
     let t0 = Instant::now();
-    let res = coordinator::run(
-        &cfg,
-        "bench",
-        vec![0.0; dim],
-        mock_factory(dim),
-        Box::new(|| Ok(None)),
-    )
-    .unwrap();
-    assert_eq!(res.metrics.records.len() as u64, rounds);
-    t0.elapsed().as_secs_f64() * 1e3 / rounds as f64
+    let res = coordinator::run(cfg, "bench", vec![0.0; dim], factory, Box::new(|| Ok(None)))
+        .unwrap();
+    assert_eq!(res.metrics.records.len() as u64, cfg.rounds);
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / cfg.rounds as f64;
+    let bytes: u64 =
+        res.metrics.records.iter().map(|r| r.uplink_bytes).sum::<u64>() / cfg.rounds.max(1);
+    (ms, bytes)
+}
+
+fn run_rounds(
+    dim: usize,
+    pipeline: &str,
+    compression: f64,
+    rounds: u64,
+    gather: &str,
+) -> (f64, u64) {
+    let mut cfg = bench_cfg(5, pipeline, compression, rounds);
+    cfg.set_gather(gather).unwrap();
+    run_cfg(&cfg, dim, mock_factory(dim))
 }
 
 fn main() {
     let quick = std::env::var("RTOPK_BENCH_QUICK").is_ok_and(|v| v == "1");
-    let _ = Bench::new("end_to_end_round"); // header formatting
+    let mut bench = Bench::new("end_to_end_round");
     let rounds = if quick { 5 } else { 20 };
     println!("(ms per round, 5 nodes, MockModel gradients)");
     for &dim in &[100_000usize, 1_000_000] {
@@ -52,15 +69,38 @@ fn main() {
             ("rtopk", 0.999),
             ("rtopk|bf16|delta", 0.999),
         ] {
-            let ms = run_rounds(dim, pipeline, compression, rounds, "full");
-            println!(
-                "round/{pipeline}@{:.1}%/d={dim}: {ms:9.3} ms/round",
-                100.0 * compression
+            let (ms, bytes) = run_rounds(dim, pipeline, compression, rounds, "full");
+            bench.record(
+                &format!("round/{pipeline}@{:.1}%/d={dim}", 100.0 * compression),
+                ms * 1e6,
+                Some(dim),
+                Some(bytes),
             );
         }
         // a gather-policy swap is one config string — the round cost must
         // stay in the same regime when every worker is healthy
-        let ms = run_rounds(dim, "rtopk", 0.999, rounds, "quorum:m=4,timeout_ms=2");
-        println!("round/rtopk@99.9%+quorum:m=4/d={dim}: {ms:9.3} ms/round");
+        let (ms, bytes) = run_rounds(dim, "rtopk", 0.999, rounds, "quorum:m=4,timeout_ms=2");
+        bench.record(
+            &format!("round/rtopk@99.9%+quorum:m=4/d={dim}"),
+            ms * 1e6,
+            Some(dim),
+            Some(bytes),
+        );
+        // federation: a 10k-client population multiplexed as a 32-client
+        // cohort over 8 pool slots — the cohort costs O(cohort) local
+        // steps per round, so expect roughly cohort/nodes of a fixed-
+        // membership round, never O(population)
+        let mut cfg = bench_cfg(8, "rtopk", 0.999, rounds);
+        cfg.subsample_ratio = 1.0 / 32.0;
+        cfg.federation = Some(FederationConfig::new(10_000, 32, 8));
+        let (ms, bytes) = run_cfg(&cfg, dim, mock_client_factory(dim, 0.05, 8));
+        bench.record(
+            &format!("round/rtopk@99.9%+cohort32of10k/d={dim}"),
+            ms * 1e6,
+            Some(dim),
+            Some(bytes),
+        );
     }
+    let path = bench.write_json().expect("bench json");
+    println!("bench json: {}", path.display());
 }

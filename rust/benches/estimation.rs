@@ -27,4 +27,6 @@ fn main() {
     bench.run_elems("risk-point/subsample/100-trials", Some(100 * n * d), || {
         bb(estimate_risk(&model, &sub, n, k, ThetaPrior::HardSparse, 100, &mut rng).risk);
     });
+    let path = bench.write_json().expect("bench json");
+    println!("bench json: {}", path.display());
 }

@@ -91,4 +91,6 @@ fn main() {
             bb(stats.payload_bytes);
         });
     }
+    let path = bench.write_json().expect("bench json");
+    println!("bench json: {}", path.display());
 }

@@ -27,6 +27,7 @@ use crate::runtime::{Batch, MockModel};
 use crate::util::rng::Rng;
 
 use super::config::TrainConfig;
+use super::federation::{self, run_virtual_worker, FederationStats};
 use super::leader::{run_leader, Evaluator};
 use super::relay::{run_relay, RelayStats};
 use super::worker::{run_worker, WorkerSetup};
@@ -172,11 +173,19 @@ pub fn run_with(
     // away (double-building matters once factories load real shards; the
     // setup itself cannot cross threads, model runtimes are not `Send`).
     let (bpe_tx, bpe_rx) = std::sync::mpsc::channel::<usize>();
+    // Federation mode: one shared stats block per pool slot, folded into
+    // `metrics.federation` after the joins (mirrors the relay_stats fold).
+    let fed_stats: Vec<Arc<FederationStats>> = if cfg.federation.is_some() {
+        (0..cfg.nodes).map(|_| Arc::new(FederationStats::new())).collect()
+    } else {
+        Vec::new()
+    };
     let mut handles = Vec::with_capacity(cfg.nodes);
     for eps in worker_eps {
         let factory = worker_factory.clone();
         let cfg = cfg.clone();
         let rng = root_rng.fork(1_000 + eps.id as u64);
+        let slot_stats = fed_stats.get(eps.id).cloned();
         let probe_tx = if eps.id == 0 { Some(bpe_tx.clone()) } else { None };
         handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
             // the guard's sender is kept aside so a fatal worker error is
@@ -189,7 +198,12 @@ pub fn run_with(
                 if let Some(tx) = probe_tx {
                     let _ = tx.send(setup.batches_per_epoch);
                 }
-                run_worker(eps, setup, &cfg, rng)
+                match slot_stats {
+                    // federation: this thread is a pool slot multiplexing
+                    // its share of each round's cohort
+                    Some(stats) => run_virtual_worker(eps, setup, &cfg, stats),
+                    None => run_worker(eps, setup, &cfg, rng),
+                }
             })();
             if result.is_ok() {
                 guard.armed = false;
@@ -250,6 +264,9 @@ pub fn run_with(
     }
     let (params, mut metrics) = result?;
     metrics.relay_levels = fold_relay_levels(&relay_stats);
+    if let Some(f) = &cfg.federation {
+        metrics.federation = Some(federation::fold_stats(f, &fed_stats));
+    }
     Ok(ClusterResult { params, metrics })
 }
 

@@ -15,6 +15,7 @@ use crate::sparsify::{SparseVec, SparsifierKind};
 use crate::util::rng::Rng;
 
 use super::engine::GatherPolicy;
+use super::federation::FederationConfig;
 
 /// Artificial per-round compute delay injected into one worker — the
 /// straggler simulation behind the `figS1` sweep and the quorum tests
@@ -126,6 +127,13 @@ pub struct TrainConfig {
     pub optim: OptimKind,
     pub eval_every: u64,
     pub seed: u64,
+    /// Federation mode (CLI `--clients <population>` plus
+    /// `--cohort/--sampler/--pool/--client-ef`): decouples *registered
+    /// clients* (up to 10⁶, realized lazily) from *live workers* (the
+    /// `nodes` pool slots that multiplex them). `None` — the default, and
+    /// the only mode the presets construct — is the fixed-membership path,
+    /// bit-identical to the pre-federation trajectory (DESIGN.md §9).
+    pub federation: Option<FederationConfig>,
 }
 
 impl TrainConfig {
@@ -151,6 +159,7 @@ impl TrainConfig {
             optim: OptimKind::Momentum(0.9),
             eval_every: 10,
             seed: 0xD15C0,
+            federation: None,
         }
     }
 
@@ -176,6 +185,7 @@ impl TrainConfig {
             optim: OptimKind::Sgd { clip: Some(0.25) },
             eval_every: 20,
             seed: 0x17B,
+            federation: None,
         }
     }
 
@@ -341,6 +351,11 @@ impl TrainConfig {
                 st.worker,
                 self.nodes
             );
+        }
+        if let Some(f) = &self.federation {
+            // `nodes` is the live pool in federation mode; the population /
+            // cohort / pool shape checks live with the federation config.
+            f.validate(self.nodes)?;
         }
         if let Some(p) = &self.down_pipeline {
             anyhow::ensure!(
@@ -599,6 +614,30 @@ mod tests {
         // not silently ignored
         cfg.set_topology("tree:fanout=16,depth=1").unwrap();
         assert!(cfg.validate().is_err(), "a depth-1 tree has no relays to budget");
+    }
+
+    #[test]
+    fn federation_config_validates_through_train_config() {
+        use crate::coordinator::federation::SamplerKind;
+        let mut cfg = TrainConfig::image_default(8, SparsifierKind::RTopK, 0.99);
+        assert!(cfg.federation.is_none(), "presets are fixed-membership");
+        assert!(cfg.validate().is_ok());
+        cfg.federation = Some(FederationConfig::new(100_000, 32, 8));
+        assert!(cfg.validate().is_ok());
+        // cohort cannot exceed the registered population
+        let mut bad = FederationConfig::new(16, 32, 8);
+        bad.cohort = 32;
+        cfg.federation = Some(bad);
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("cohort"), "{err}");
+        // the pool IS the node count; a mismatch is a wiring bug
+        cfg.federation = Some(FederationConfig::new(1000, 32, 4));
+        assert!(cfg.validate().is_err(), "pool 4 != nodes 8");
+        // availability p must be a probability in (0, 1]
+        let mut avail = FederationConfig::new(1000, 32, 8);
+        avail.sampler = SamplerKind::Availability { p: 0.0 };
+        cfg.federation = Some(avail);
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

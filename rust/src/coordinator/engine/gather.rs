@@ -167,6 +167,13 @@ pub struct GatherPhase {
     pub participation: Vec<u64>,
     /// Stale updates dropped over the whole run.
     pub stale_total: u64,
+    /// Accept frames folding zero leaf participants. Off by default: for a
+    /// fixed-membership cluster a zero-participant frame is a protocol
+    /// violation (every worker and relay folds at least itself). The
+    /// cluster enables it in federation mode, where a pool slot whose
+    /// scheduled clients all failed the availability coin still sends its
+    /// (empty) frame so the round can close.
+    pub allow_zero_participants: bool,
 }
 
 impl GatherPhase {
@@ -180,6 +187,7 @@ impl GatherPhase {
             resynced: vec![false; n],
             participation: vec![0; n],
             stale_total: 0,
+            allow_zero_participants: false,
         }
     }
 
@@ -273,7 +281,7 @@ impl GatherPhase {
                         node_label(worker, self.n_workers)
                     );
                     anyhow::ensure!(
-                        participants >= 1,
+                        participants >= 1 || self.allow_zero_participants,
                         "update from {} claims zero participants",
                         node_label(worker, self.n_workers)
                     );
@@ -492,6 +500,32 @@ mod tests {
             .unwrap();
         let mut phase = phase(GatherPolicy::FullSync, 1);
         assert!(phase.collect(&leader, 0, &[]).is_err());
+    }
+
+    #[test]
+    fn zero_participant_update_accepted_when_flagged() {
+        // Federation mode: an all-unavailable pool slot sends an empty
+        // frame with participants=0 so the round can still close.
+        let (leader, workers) = star(2);
+        workers[0]
+            .to_leader
+            .send(Message::SparseUpdate {
+                round: 0,
+                worker: 0,
+                payload: vec![],
+                loss: 0.0,
+                examples: 0,
+                mem_norm: 0.0,
+                participants: 0,
+            })
+            .unwrap();
+        workers[1].to_leader.send(update(0, 1, 1.0)).unwrap();
+        let mut phase = phase(GatherPolicy::FullSync, 2);
+        phase.allow_zero_participants = true;
+        let stats = phase.collect(&leader, 0, &[]).unwrap();
+        assert_eq!(stats.participants, 1, "only real clients count");
+        assert!(phase.updates()[0].is_some(), "the empty frame still closed the slot");
+        assert_eq!(stats.example_sum, 2.0);
     }
 
     #[test]

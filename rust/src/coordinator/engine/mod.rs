@@ -97,6 +97,10 @@ impl<'a> RoundEngine<'a> {
         // frames carry how many leaf workers they fold in. Everything past
         // the gather (merge, scale, step) is agnostic to which.
         let root_ids = cfg.topology.root_child_ids(cfg.nodes)?;
+        let mut gather = GatherPhase::new(cfg.gather, root_ids, cfg.nodes);
+        // Federation: a pool slot whose whole cohort share was unavailable
+        // still closes the round with an empty participants=0 frame.
+        gather.allow_zero_participants = cfg.federation.is_some();
         Ok(RoundEngine {
             cfg,
             dim,
@@ -104,7 +108,7 @@ impl<'a> RoundEngine<'a> {
             opt,
             warmup: cfg.warmup(),
             broadcast: BroadcastPhase::new(cfg, dim),
-            gather: GatherPhase::new(cfg.gather, root_ids, cfg.nodes),
+            gather,
             agg: SparseAggregator::new(),
             scratch: SparseVec::default(),
             dense_agg: Vec::new(),

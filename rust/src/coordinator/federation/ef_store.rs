@@ -1,0 +1,196 @@
+//! Per-client persistent error-feedback residuals behind a capped store.
+//!
+//! Error feedback assumes each worker keeps its residual between rounds;
+//! with 10⁵–10⁶ registered clients a resident `d`-vector per client is not
+//! an option. The store keeps residuals only for recently-participating
+//! clients: under [`ClientEfPolicy::Evict`] it holds at most `cap` entries
+//! and evicts the least-recently-participating client (ties toward the
+//! HIGHER client id) whenever it overflows. Eviction is a full-scan argmin
+//! over `(last_round, Reverse(client))` — deterministic regardless of hash
+//! iteration order, and `cap` is small (O(cohort)) so the scan is cheap.
+//!
+//! Accuracy trade-off: an evicted client restarts from a zero residual, so
+//! the unsent mass its memory held is dropped — conservation (`g + m =
+//! ĝ + m'`) holds per participation stretch, not across an eviction. The
+//! clients this hurts are exactly the rarely-participating ones; the
+//! `ef_evictions` counter in [`crate::metrics::FederationSummary`] makes
+//! the rate visible so runs can size `cap` against their cohort churn.
+
+use std::collections::HashMap;
+
+use crate::sparsify::ErrorFeedback;
+
+use super::ClientEfPolicy;
+
+struct EfEntry {
+    memory: Vec<f32>,
+    last_round: u64,
+}
+
+/// Capped per-client residual store for one pool slot (slots own disjoint
+/// clients — `client % pool == slot` — so no sharing is needed).
+pub struct ClientEfStore {
+    dim: usize,
+    /// `usize::MAX` for resident, the resolved cap for evict, 0 for off.
+    cap: usize,
+    entries: HashMap<u64, EfEntry>,
+    /// Cumulative evictions (mirrored into the slot's shared stats).
+    pub evictions: u64,
+}
+
+impl ClientEfStore {
+    /// `cohort` resolves the default evict cap (2 × cohort: the working
+    /// set of two full rounds, so back-to-back participants never thrash).
+    pub fn new(policy: ClientEfPolicy, cohort: usize, dim: usize) -> Self {
+        let cap = match policy {
+            ClientEfPolicy::Resident => usize::MAX,
+            ClientEfPolicy::Evict { cap } => cap.unwrap_or(2 * cohort).max(1),
+            ClientEfPolicy::Off => 0,
+        };
+        ClientEfStore { dim, cap, entries: HashMap::new(), evictions: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Load `client`'s residual into `ef` (zeros for a fresh or evicted
+    /// client). No-op when the policy keeps no state.
+    pub fn load_into(&self, client: u64, ef: &mut ErrorFeedback) {
+        ef.reset();
+        if self.cap == 0 {
+            return;
+        }
+        if let Some(e) = self.entries.get(&client) {
+            ef.memory.copy_from_slice(&e.memory);
+        }
+    }
+
+    /// Persist `client`'s residual after its round-`round` step, evicting
+    /// deterministically if the store overflows.
+    pub fn store(&mut self, client: u64, round: u64, ef: &ErrorFeedback) {
+        if self.cap == 0 {
+            return;
+        }
+        debug_assert_eq!(ef.memory.len(), self.dim);
+        match self.entries.get_mut(&client) {
+            Some(e) => {
+                e.memory.copy_from_slice(&ef.memory);
+                e.last_round = round;
+            }
+            None => {
+                self.entries
+                    .insert(client, EfEntry { memory: ef.memory.clone(), last_round: round });
+            }
+        }
+        while self.entries.len() > self.cap {
+            // Deterministic victim: oldest participation, ties toward the
+            // higher client id (so the newly-stored entry, which shares
+            // `round` with this round's peers, survives over none of them
+            // arbitrarily).
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(id, e)| (e.last_round, std::cmp::Reverse(**id)))
+                .map(|(id, _)| *id)
+                .expect("non-empty store");
+            self.entries.remove(&victim);
+            self.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ef_with(dim: usize, fill: f32) -> ErrorFeedback {
+        let mut ef = ErrorFeedback::new(dim);
+        ef.memory.iter_mut().for_each(|m| *m = fill);
+        ef
+    }
+
+    #[test]
+    fn resident_store_round_trips_residuals() {
+        let dim = 4;
+        let mut store = ClientEfStore::new(ClientEfPolicy::Resident, 8, dim);
+        store.store(7, 0, &ef_with(dim, 1.5));
+        store.store(9, 0, &ef_with(dim, -2.0));
+        let mut ef = ErrorFeedback::new(dim);
+        store.load_into(7, &mut ef);
+        assert_eq!(ef.memory, vec![1.5; dim]);
+        store.load_into(9, &mut ef);
+        assert_eq!(ef.memory, vec![-2.0; dim]);
+        // unknown client: zeros
+        store.load_into(1, &mut ef);
+        assert_eq!(ef.memory, vec![0.0; dim]);
+        assert_eq!(store.evictions, 0);
+    }
+
+    #[test]
+    fn evict_policy_caps_the_store_deterministically() {
+        let dim = 2;
+        let mut store = ClientEfStore::new(ClientEfPolicy::Evict { cap: Some(2) }, 8, dim);
+        store.store(1, 0, &ef_with(dim, 1.0));
+        store.store(2, 1, &ef_with(dim, 2.0));
+        store.store(3, 2, &ef_with(dim, 3.0)); // evicts client 1 (oldest)
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.evictions, 1);
+        let mut ef = ErrorFeedback::new(dim);
+        store.load_into(1, &mut ef);
+        assert_eq!(ef.memory, vec![0.0; dim], "evicted client restarts from zero");
+        store.load_into(3, &mut ef);
+        assert_eq!(ef.memory, vec![3.0; dim]);
+        // tie on last_round: the HIGHER id goes first
+        let mut tied = ClientEfStore::new(ClientEfPolicy::Evict { cap: Some(2) }, 8, dim);
+        tied.store(5, 0, &ef_with(dim, 1.0));
+        tied.store(9, 0, &ef_with(dim, 1.0));
+        tied.store(4, 1, &ef_with(dim, 1.0));
+        let mut ef = ErrorFeedback::new(dim);
+        tied.load_into(5, &mut ef);
+        assert_eq!(ef.memory, vec![1.0; dim], "lower id survives the tie");
+        tied.load_into(9, &mut ef);
+        assert_eq!(ef.memory, vec![0.0; dim]);
+    }
+
+    #[test]
+    fn default_cap_is_twice_the_cohort() {
+        let dim = 1;
+        let mut store = ClientEfStore::new(ClientEfPolicy::Evict { cap: None }, 3, dim);
+        for c in 0..10u64 {
+            store.store(c, c, &ef_with(dim, 1.0));
+        }
+        assert_eq!(store.len(), 6);
+        assert_eq!(store.evictions, 4);
+    }
+
+    #[test]
+    fn off_policy_keeps_nothing() {
+        let dim = 3;
+        let mut store = ClientEfStore::new(ClientEfPolicy::Off, 8, dim);
+        store.store(1, 0, &ef_with(dim, 1.0));
+        assert!(store.is_empty());
+        let mut ef = ef_with(dim, 9.0);
+        store.load_into(1, &mut ef);
+        assert_eq!(ef.memory, vec![0.0; dim], "load still clears the scratch EF");
+    }
+
+    #[test]
+    fn restore_refreshes_recency() {
+        let dim = 1;
+        let mut store = ClientEfStore::new(ClientEfPolicy::Evict { cap: Some(2) }, 8, dim);
+        store.store(1, 0, &ef_with(dim, 1.0));
+        store.store(2, 1, &ef_with(dim, 2.0));
+        store.store(1, 2, &ef_with(dim, 1.5)); // refresh 1
+        store.store(3, 3, &ef_with(dim, 3.0)); // now 2 is the oldest
+        let mut ef = ErrorFeedback::new(dim);
+        store.load_into(1, &mut ef);
+        assert_eq!(ef.memory, vec![1.5]);
+        store.load_into(2, &mut ef);
+        assert_eq!(ef.memory, vec![0.0]);
+    }
+}

@@ -1,0 +1,410 @@
+//! Federation subsystem: a *registered-client population* decoupled from
+//! the live worker pool.
+//!
+//! After PRs 1–5 every "client" was a live thread with a resident shard, so
+//! the cluster topped out around n≈32 and membership was fixed at launch.
+//! The paper's motivating deployment is federated: 10⁵–10⁶ *registered*
+//! clients of which an m-client *cohort* participates per round. This
+//! module supplies the three missing layers, all deterministic from the run
+//! seed and all O(pool) in live resources:
+//!
+//! ```text
+//!   ClientPopulation ──► CohortSampler ──► virtual-worker pool ──► engine
+//!   (10⁵–10⁶ ids,        (m ids/round,      (w slots, w ≪ m;      (unchanged
+//!    lazy non-IID         uniform/weighted/   each slot folds its   gather +
+//!    shards, O(1)/client) availability)       cohort share into     aggregate)
+//!                                             ONE uplink frame)
+//! ```
+//!
+//! * [`ClientPopulation`] — registered clients with non-IID shards derived
+//!   lazily from `(population_seed, client_id)` via
+//!   [`crate::data::shard::PopulationSharder`]; nothing is materialized per
+//!   client until it is scheduled.
+//! * [`CohortSampler`] — per-round cohort selection, a pure function of
+//!   `(run_seed, round)`; every pool slot recomputes the same cohort
+//!   locally, so sampling costs zero messages. The availability model
+//!   ([`SamplerKind::Availability`]) makes some sampled clients silently
+//!   fail to report, composing with Quorum gather's bounded drain.
+//! * [`run_virtual_worker`] — the slot loop: for each scheduled client it
+//!   loads that client's error-feedback state, runs the local step on the
+//!   client's lazily-realized shard, sparsifies, and folds the kept update
+//!   into the slot's accumulator; the slot then re-encodes the union and
+//!   uplinks ONE frame with `participants` = clients folded (exactly the
+//!   relay-side merge contract from PR 5, which is why the engine and the
+//!   tree topology need no changes). Round cost is O(cohort) time and
+//!   O(pool) threads/sockets regardless of population size.
+//! * [`ClientEfStore`] — per-client persistent error-feedback residuals
+//!   behind a capped store with deterministic eviction (`--client-ef`);
+//!   10⁶ × d residuals cannot live in memory, so the store keeps only
+//!   recently-participating clients and surfaces evictions in metrics.
+//!   An evicted client restarts from a zero residual: the mass its memory
+//!   held is lost, which weakens the error-feedback conservation guarantee
+//!   exactly for the clients that participate most rarely (DESIGN.md §9
+//!   documents the trade-off).
+//!
+//! Fixed-membership invariant: when `TrainConfig::federation` is `None`
+//! every branch in this module is dead code — the cluster spawns the plain
+//! [`super::worker::run_worker`] loop and the pre-federation byte streams
+//! are reproduced bit for bit (pinned by `rust/tests/integration_federation.rs`).
+
+pub mod ef_store;
+pub mod pool;
+pub mod sampler;
+
+pub use ef_store::ClientEfStore;
+pub use pool::{mock_client_factory, run_virtual_worker};
+pub use sampler::CohortSampler;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::data::shard::PopulationSharder;
+use crate::metrics::FederationSummary;
+
+/// Domain-separation salts for the federation's stateless seed streams
+/// (see [`crate::util::rng::mix_seed`]). Distinct salts keep the cohort
+/// draw, the availability coin and the client's data stream independent.
+pub(crate) const SALT_COHORT: u64 = 0xC0_07;
+pub(crate) const SALT_AVAIL: u64 = 0xA7A_11;
+pub(crate) const SALT_CLIENT: u64 = 0xC11E_17;
+
+/// How the per-round cohort is drawn from the registered population.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SamplerKind {
+    /// Every registered client equally likely each round.
+    Uniform,
+    /// Deterministic availability tiers: the first ~10% of client ids are
+    /// "well-connected" and weighted 4×, the rest 1× (a fixed stand-in for
+    /// real fleets' skewed availability; same-seed reruns pick the same
+    /// cohorts).
+    Weighted,
+    /// Uniform cohort, but each scheduled client reports only with
+    /// probability `p` (an independent per-`(round, client)` coin): the
+    /// others are scheduled, consume no compute, and never show up —
+    /// the federated analogue of stragglers, composing with Quorum.
+    Availability { p: f64 },
+}
+
+impl SamplerKind {
+    /// Parse `uniform | weighted | availability:p=0.8`.
+    pub fn parse(s: &str) -> anyhow::Result<SamplerKind> {
+        match s {
+            "uniform" => Ok(SamplerKind::Uniform),
+            "weighted" => Ok(SamplerKind::Weighted),
+            other => {
+                if let Some(rest) = other.strip_prefix("availability:") {
+                    let p = rest
+                        .strip_prefix("p=")
+                        .and_then(|v| v.parse::<f64>().ok())
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "availability sampler wants `availability:p=<prob>`, got {other:?}"
+                            )
+                        })?;
+                    Ok(SamplerKind::Availability { p })
+                } else {
+                    anyhow::bail!(
+                        "unknown sampler {s:?}; have uniform, weighted, availability:p=<prob>"
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            SamplerKind::Uniform => "uniform".to_string(),
+            SamplerKind::Weighted => "weighted".to_string(),
+            SamplerKind::Availability { p } => format!("availability:p={p}"),
+        }
+    }
+}
+
+/// What happens to a client's error-feedback residual between the rounds
+/// it participates in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientEfPolicy {
+    /// Keep every participating client's residual resident (unbounded
+    /// store — fine for test-sized populations, not for 10⁶ clients).
+    Resident,
+    /// Capped store with deterministic eviction of the
+    /// least-recently-participating client (ties broken toward the higher
+    /// client id). `cap: None` resolves to `2 × cohort` at store build.
+    Evict { cap: Option<usize> },
+    /// No per-client memory at all: every local step sparsifies the raw
+    /// update and discards the residual.
+    Off,
+}
+
+impl ClientEfPolicy {
+    /// Parse `resident | evict | evict:cap=N | off`.
+    pub fn parse(s: &str) -> anyhow::Result<ClientEfPolicy> {
+        match s {
+            "resident" => Ok(ClientEfPolicy::Resident),
+            "evict" => Ok(ClientEfPolicy::Evict { cap: None }),
+            "off" => Ok(ClientEfPolicy::Off),
+            other => {
+                if let Some(rest) = other.strip_prefix("evict:") {
+                    let cap = rest
+                        .strip_prefix("cap=")
+                        .and_then(|v| v.parse::<usize>().ok())
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "evict policy wants `evict:cap=<n>`, got {other:?}"
+                            )
+                        })?;
+                    Ok(ClientEfPolicy::Evict { cap: Some(cap) })
+                } else {
+                    anyhow::bail!(
+                        "unknown client-ef policy {s:?}; have resident, evict[:cap=<n>], off"
+                    )
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ClientEfPolicy::Resident => "resident".to_string(),
+            ClientEfPolicy::Evict { cap: None } => "evict".to_string(),
+            ClientEfPolicy::Evict { cap: Some(c) } => format!("evict:cap={c}"),
+            ClientEfPolicy::Off => "off".to_string(),
+        }
+    }
+}
+
+/// The federation block of [`super::config::TrainConfig`] (`Some` ⇔
+/// `--clients` was given). `pool` always equals `TrainConfig::nodes` — the
+/// live threads/sockets ARE the pool; validation enforces it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationConfig {
+    /// Registered clients (10⁵–10⁶ in the paper's regime).
+    pub population: usize,
+    /// Clients scheduled per round (`--cohort m`).
+    pub cohort: usize,
+    pub sampler: SamplerKind,
+    /// Live virtual-worker slots (`--pool w`, w ≪ m is the point).
+    pub pool: usize,
+    pub client_ef: ClientEfPolicy,
+    /// Seed the lazy population shards derive from (defaults to the run
+    /// seed at the CLI).
+    pub population_seed: u64,
+}
+
+impl FederationConfig {
+    pub fn new(population: usize, cohort: usize, pool: usize) -> Self {
+        FederationConfig {
+            population,
+            cohort,
+            sampler: SamplerKind::Uniform,
+            pool,
+            client_ef: ClientEfPolicy::Evict { cap: None },
+            population_seed: 0,
+        }
+    }
+
+    /// Reject impossible shapes with actionable messages. `nodes` is the
+    /// cluster's live-node count, which must BE the pool.
+    pub fn validate(&self, nodes: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.population >= 1,
+            "federation population must be >= 1, got {} (set --clients)",
+            self.population
+        );
+        anyhow::ensure!(self.cohort >= 1, "cohort must be >= 1, got 0 (set --cohort m)");
+        anyhow::ensure!(
+            self.cohort <= self.population,
+            "cohort m={} cannot exceed the registered population {} \
+             (lower --cohort or raise --clients)",
+            self.cohort,
+            self.population
+        );
+        anyhow::ensure!(self.pool >= 1, "pool must be >= 1, got 0 (set --pool w)");
+        anyhow::ensure!(
+            self.pool == nodes,
+            "pool w={} must equal the live node count {nodes} \
+             (the CLI sets nodes from --pool; don't override one without the other)",
+            self.pool
+        );
+        if let SamplerKind::Availability { p } = self.sampler {
+            anyhow::ensure!(
+                p > 0.0 && p <= 1.0,
+                "availability p must be in (0, 1], got {p}"
+            );
+        }
+        if let ClientEfPolicy::Evict { cap: Some(c) } = self.client_ef {
+            anyhow::ensure!(c >= 1, "evict cap must be >= 1, got 0 (use --client-ef off instead)");
+        }
+        Ok(())
+    }
+}
+
+/// A registered-client population with lazily-realized non-IID shards.
+/// O(1) memory total: a client's shard exists only as the pure function
+/// [`PopulationSharder::draw`]`(client, step)`.
+#[derive(Debug, Clone, Copy)]
+pub struct ClientPopulation {
+    pub size: usize,
+    pub sharder: PopulationSharder,
+}
+
+impl ClientPopulation {
+    pub fn new(size: usize, sharder: PopulationSharder) -> Self {
+        ClientPopulation { size, sharder }
+    }
+
+    /// Seed for `client`'s data stream in `round` — feeds the slot's
+    /// per-client batch RNG, so a client draws the same local batches no
+    /// matter which slot (or transport, or rerun) hosts it.
+    pub fn client_stream_seed(seed: u64, client: u64, round: u64) -> u64 {
+        crate::util::rng::mix_seed(seed ^ SALT_CLIENT, client, round)
+    }
+
+    /// Realize one example id of `client`'s shard (see
+    /// [`PopulationSharder::draw`]).
+    pub fn example(&self, client: u64, step: u64) -> usize {
+        self.sharder.draw(client, step)
+    }
+}
+
+/// Per-slot counters, shared with the cluster (which folds all slots into
+/// [`FederationSummary`] after the run). Atomics are relaxed: totals only,
+/// read after the threads joined. The participation map holds only this
+/// slot's clients (slot assignment is `client % pool`), so maps from
+/// different slots never overlap.
+#[derive(Debug, Default)]
+pub struct FederationStats {
+    /// Client-round schedulings handled by this slot.
+    pub scheduled: AtomicU64,
+    /// Clients that actually computed and were folded into an uplink frame.
+    pub reported: AtomicU64,
+    /// Cumulative EF-store evictions on this slot.
+    pub ef_evictions: AtomicU64,
+    /// client id -> rounds reported (this slot's clients only).
+    pub participation: Mutex<std::collections::HashMap<u64, u64>>,
+}
+
+impl FederationStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Fold the per-slot counters into the run-level summary.
+pub fn fold_stats(
+    fed: &FederationConfig,
+    slots: &[std::sync::Arc<FederationStats>],
+) -> FederationSummary {
+    let mut scheduled = 0u64;
+    let mut reported = 0u64;
+    let mut ef_evictions = 0u64;
+    let mut counts: Vec<u64> = Vec::new();
+    for s in slots {
+        scheduled += s.scheduled.load(Ordering::Relaxed);
+        reported += s.reported.load(Ordering::Relaxed);
+        ef_evictions += s.ef_evictions.load(Ordering::Relaxed);
+        let map = s.participation.lock().expect("slot thread joined");
+        counts.extend(map.values().copied());
+    }
+    let distinct_clients = counts.len();
+    // participation_hist[i] = distinct clients that reported in exactly
+    // i+1 rounds.
+    let mut participation_hist = Vec::new();
+    for &c in &counts {
+        let bucket = (c as usize).saturating_sub(1);
+        if participation_hist.len() <= bucket {
+            participation_hist.resize(bucket + 1, 0u64);
+        }
+        participation_hist[bucket] += 1;
+    }
+    FederationSummary {
+        population: fed.population,
+        cohort: fed.cohort,
+        pool: fed.pool,
+        sampler: fed.sampler.label(),
+        client_ef: fed.client_ef.label(),
+        scheduled,
+        reported,
+        distinct_clients,
+        ef_evictions,
+        participation_hist,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_kind_parses_and_round_trips() {
+        for s in ["uniform", "weighted", "availability:p=0.8"] {
+            let k = SamplerKind::parse(s).unwrap();
+            assert_eq!(k.label(), s);
+        }
+        assert!(SamplerKind::parse("availability").is_err());
+        assert!(SamplerKind::parse("availability:p=x").is_err());
+        assert!(SamplerKind::parse("random").is_err());
+    }
+
+    #[test]
+    fn client_ef_policy_parses_and_round_trips() {
+        for s in ["resident", "evict", "evict:cap=64", "off"] {
+            let p = ClientEfPolicy::parse(s).unwrap();
+            assert_eq!(p.label(), s);
+        }
+        assert!(ClientEfPolicy::parse("evict:cap=").is_err());
+        assert!(ClientEfPolicy::parse("lru").is_err());
+    }
+
+    #[test]
+    fn federation_config_validates_shapes() {
+        let ok = FederationConfig::new(1000, 32, 8);
+        ok.validate(8).unwrap();
+
+        let mut bad = ok.clone();
+        bad.cohort = 0;
+        assert!(bad.validate(8).unwrap_err().to_string().contains("cohort"));
+
+        let mut bad = ok.clone();
+        bad.cohort = 1001;
+        assert!(bad.validate(8).unwrap_err().to_string().contains("exceed"));
+
+        let mut bad = ok.clone();
+        bad.pool = 0;
+        assert!(bad.validate(8).is_err());
+
+        let mut bad = ok.clone();
+        bad.sampler = SamplerKind::Availability { p: 0.0 };
+        assert!(bad.validate(8).unwrap_err().to_string().contains("(0, 1]"));
+        bad.sampler = SamplerKind::Availability { p: 1.5 };
+        assert!(bad.validate(8).is_err());
+
+        let mut bad = ok.clone();
+        bad.client_ef = ClientEfPolicy::Evict { cap: Some(0) };
+        assert!(bad.validate(8).is_err());
+
+        // pool must equal the live node count
+        assert!(ok.validate(5).unwrap_err().to_string().contains("pool"));
+    }
+
+    #[test]
+    fn fold_stats_builds_histogram_over_slots() {
+        let fed = FederationConfig::new(100, 8, 2);
+        let a = std::sync::Arc::new(FederationStats::new());
+        let b = std::sync::Arc::new(FederationStats::new());
+        a.scheduled.store(10, Ordering::Relaxed);
+        b.scheduled.store(6, Ordering::Relaxed);
+        a.reported.store(9, Ordering::Relaxed);
+        b.reported.store(6, Ordering::Relaxed);
+        b.ef_evictions.store(2, Ordering::Relaxed);
+        a.participation.lock().unwrap().extend([(0u64, 3u64), (2, 1)]);
+        b.participation.lock().unwrap().extend([(1u64, 1u64), (3, 3), (5, 2)]);
+        let sum = fold_stats(&fed, &[a, b]);
+        assert_eq!(sum.scheduled, 16);
+        assert_eq!(sum.reported, 15);
+        assert_eq!(sum.ef_evictions, 2);
+        assert_eq!(sum.distinct_clients, 5);
+        // counts: two 1s, one 2, two 3s
+        assert_eq!(sum.participation_hist, vec![2, 1, 2]);
+    }
+}

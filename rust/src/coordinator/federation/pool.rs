@@ -1,0 +1,379 @@
+//! The virtual-worker slot loop: one live thread multiplexing many
+//! registered clients per round.
+//!
+//! A slot is the federation-mode replacement for
+//! [`crate::coordinator::worker::run_worker`]. It speaks the identical
+//! protocol on the identical endpoints — drain-newest broadcast handling,
+//! delta downlink with resync, one `SparseUpdate` per round — so the
+//! engine, both transports and the tree topology need no federation
+//! branches at all. What changes is what happens *between* receive and
+//! send: the slot recomputes the round's cohort locally (sampling is a
+//! pure function of `(run_seed, round)` — zero messages), takes the
+//! members assigned to it (`client % pool == slot`), and for each one
+//!
+//! 1. loads the client's error-feedback residual from the capped store,
+//! 2. runs the client's local step from the CURRENT global params on the
+//!    client's deterministic data stream (`(population_seed, client,
+//!    round)` seeds the batch RNG, so the same client computes the same
+//!    update on any slot, transport or rerun),
+//! 3. sparsifies through the run's unchanged compressor pipeline and
+//!    stores the residual back,
+//! 4. folds the kept coordinates into the slot's accumulator.
+//!
+//! The slot then re-encodes the union through the uplink codec — exactly
+//! the relay's merge-and-re-encode contract from PR 5 — and sends ONE
+//! frame with `participants` = clients folded. The root's `1/|P|` scale
+//! then averages over *reporting clients*, not slots. A slot whose clients
+//! all failed the availability coin sends an empty frame with
+//! `participants: 0` (the gather accepts it only in federation mode).
+//!
+//! Resource shape: time per round is O(cohort · local-step); memory is
+//! O(pool · d + cap · d); threads/sockets are O(pool). Nothing scales
+//! with the registered population.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::comms::codec::{self, CodecConfig, SegEntry};
+use crate::comms::transport::{Message, WorkerEndpoints};
+use crate::compress::aggregate::merge_scaled_into;
+use crate::compress::GradientCompressor;
+use crate::runtime::{Batch, MockModel};
+use crate::sparsify::{ErrorFeedback, SparseVec};
+use crate::util::rng::Rng;
+
+use super::super::cluster::WorkerFactory;
+use super::super::config::{RoundMode, TrainConfig};
+use super::super::worker::WorkerSetup;
+use super::{ClientEfPolicy, ClientEfStore, ClientPopulation, CohortSampler, FederationStats};
+
+/// Drive one pool slot until `Shutdown` (or a fatal error). Spawned by the
+/// cluster instead of `run_worker` when `cfg.federation` is set.
+pub fn run_virtual_worker(
+    endpoints: WorkerEndpoints,
+    mut setup: WorkerSetup,
+    cfg: &TrainConfig,
+    stats: Arc<FederationStats>,
+) -> anyhow::Result<()> {
+    let fed = cfg
+        .federation
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("virtual worker spawned without a federation config"))?;
+    let slot = endpoints.id as u64;
+    let pool = fed.pool as u64;
+    let dim = setup.runtime.dim();
+
+    // Per-client EF: the scratch ErrorFeedback is loaded/stored from the
+    // capped store around every client's step. `--client-ef off` (or a run
+    // with error feedback globally off) degrades to raw sparsification.
+    let ef_policy = if cfg.error_feedback { fed.client_ef } else { ClientEfPolicy::Off };
+    let mut ef = if ef_policy == ClientEfPolicy::Off {
+        ErrorFeedback::disabled(dim)
+    } else {
+        ErrorFeedback::new(dim)
+    };
+    let mut store = ClientEfStore::new(ef_policy, fed.cohort, dim);
+
+    let warmup = cfg.warmup();
+    let mut compressor = cfg.uplink_compressor(warmup.k_at(dim, 0.0), dim)?;
+    let up_codec = CodecConfig { values: cfg.pipeline.values, indices: cfg.pipeline.indices };
+    let layout = if cfg.layout.is_flat() { None } else { Some(cfg.layout.resolve(dim)?) };
+
+    let mut grads: Vec<f32> = Vec::with_capacity(dim);
+    let mut grad_accum: Vec<f32> = vec![0.0; dim];
+    let mut local_params: Vec<f32> = Vec::with_capacity(dim);
+    let mut params: Vec<f32> = Vec::new();
+    let mut have_params = false;
+    let mut delta_sv = SparseVec::default();
+    let mut kepts: Vec<SparseVec> = Vec::new();
+    let mut merged = SparseVec::default();
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut payload: Vec<u8> = Vec::new();
+    let mut sub_buf: Vec<u8> = Vec::new();
+    let mut seg_sv = SparseVec::default();
+    let mut bodies: Vec<u8> = Vec::new();
+    let mut table: Vec<SegEntry> = Vec::new();
+    let mut reported_ids: Vec<u64> = Vec::new();
+
+    let straggler_delay = match cfg.straggler {
+        Some(s) if s.worker == endpoints.id => {
+            Some(std::time::Duration::from_millis(s.delay_ms))
+        }
+        _ => None,
+    };
+
+    loop {
+        // Identical drain-newest protocol to `run_worker` (see its docs).
+        let mut newest: Option<u64> = None;
+        loop {
+            let msg = if newest.is_none() {
+                match endpoints.from_leader.recv() {
+                    Ok(m) => m,
+                    Err(_) => return Ok(()),
+                }
+            } else {
+                match endpoints.from_leader.try_recv() {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => return Ok(()),
+                }
+            };
+            match msg {
+                Message::Params { round, data } => {
+                    anyhow::ensure!(
+                        data.len() == dim,
+                        "slot {slot}: params dim {} != model dim {dim}",
+                        data.len()
+                    );
+                    params = data;
+                    have_params = true;
+                    newest = Some(round);
+                }
+                Message::ParamsDelta { round, payload } => {
+                    if !have_params {
+                        endpoints
+                            .to_leader
+                            .send(Message::ResyncRequest { worker: endpoints.id })?;
+                        continue;
+                    }
+                    GradientCompressor::decompress_expecting(&payload, dim, &mut delta_sv)
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "slot {slot}: corrupt downlink delta at round {round}: {e}"
+                            )
+                        })?;
+                    delta_sv.add_scaled_into(1.0, &mut params);
+                    newest = Some(round);
+                }
+                Message::Shutdown => return Ok(()),
+                other => anyhow::bail!("slot {slot} got unexpected message {other:?}"),
+            }
+        }
+        let round = newest.expect("drain loop only exits with a round or returns");
+
+        if let Some(d) = straggler_delay {
+            std::thread::sleep(d);
+        }
+
+        let epoch = match cfg.mode {
+            RoundMode::Distributed => round as f64 / setup.batches_per_epoch as f64,
+            RoundMode::Federated => round as f64,
+        };
+        let k = warmup.k_at(dim, epoch);
+        compressor.retarget(cfg, k, dim);
+
+        // ---- the round's cohort share: client % pool == slot ----
+        let cohort = CohortSampler::round_cohort(fed, cfg.seed, round);
+        kepts.clear();
+        reported_ids.clear();
+        let mut scheduled_here = 0u64;
+        let mut loss_sum = 0.0f64;
+        let mut example_sum = 0u64;
+        let mut mem_sum = 0.0f64;
+        for &client in cohort.iter().filter(|&&c| c % pool == slot) {
+            scheduled_here += 1;
+            if !CohortSampler::reports(fed, cfg.seed, round, client) {
+                continue; // sampled but unavailable: never reports
+            }
+            // The client's stream seed makes its batches a pure function
+            // of (population_seed, client, round) — slot-independent.
+            let mut crng = Rng::new(ClientPopulation::client_stream_seed(
+                fed.population_seed,
+                client,
+                round,
+            ));
+            let (g, loss, examples): (&[f32], f32, u64) = match cfg.mode {
+                RoundMode::Distributed => {
+                    let batch = (setup.next_batch)(&mut crng);
+                    let loss = setup.runtime.train_step(&params, &batch, &mut grads)?;
+                    (&grads, loss, 1)
+                }
+                RoundMode::Federated => {
+                    // One local client epoch; the communicated "gradient"
+                    // is (omega^t - omega_local) / lr, as in `run_worker`.
+                    let lr = cfg.lr.at_epoch(epoch as usize);
+                    local_params.clear();
+                    local_params.extend_from_slice(&params);
+                    let nb = setup.batches_per_epoch;
+                    let mut client_loss = 0.0f64;
+                    for _ in 0..nb {
+                        let batch = (setup.next_batch)(&mut crng);
+                        let loss =
+                            setup.runtime.train_step(&local_params, &batch, &mut grads)?;
+                        client_loss += loss as f64;
+                        for (w, &gi) in local_params.iter_mut().zip(&grads) {
+                            *w -= lr * gi;
+                        }
+                    }
+                    let inv_lr = 1.0 / lr.max(1e-12);
+                    for ((a, &w0), &w1) in
+                        grad_accum.iter_mut().zip(&params).zip(&local_params)
+                    {
+                        *a = (w0 - w1) * inv_lr;
+                    }
+                    (&grad_accum, (client_loss / nb as f64) as f32, nb as u64)
+                }
+            };
+            // compensate -> sparsify -> settle residual, against THIS
+            // client's persistent memory
+            store.load_into(client, &mut ef);
+            let acc = ef.compensate(g);
+            compressor.compress(acc, &mut crng, &mut scratch);
+            ef.update_residual(compressor.kept());
+            store.store(client, round, &ef);
+            mem_sum += ef.memory_l2_sq().sqrt();
+            loss_sum += loss as f64 * examples as f64;
+            example_sum += examples;
+            kepts.push(compressor.kept().clone());
+            reported_ids.push(client);
+        }
+
+        // ---- fold the slot's clients into ONE frame (relay contract) ----
+        merge_scaled_into(&kepts, 1.0, dim, &mut merged);
+        match &layout {
+            Some(layout) if !layout.is_single() => {
+                bodies.clear();
+                table.clear();
+                let mut cursor = 0usize;
+                for seg in layout.segments() {
+                    seg_sv.clear(seg.len);
+                    while cursor < merged.nnz() && (merged.idx[cursor] as usize) < seg.end() {
+                        seg_sv.push(merged.idx[cursor] - seg.offset as u32, merged.val[cursor]);
+                        cursor += 1;
+                    }
+                    codec::encode(&seg_sv, up_codec, &mut sub_buf);
+                    table.push(SegEntry {
+                        offset: seg.offset as u32,
+                        len: seg.len as u32,
+                        nbytes: sub_buf.len() as u32,
+                    });
+                    bodies.extend_from_slice(&sub_buf);
+                }
+                codec::encode_segmented(dim, &table, &bodies, &mut payload);
+            }
+            _ => codec::encode(&merged, up_codec, &mut payload),
+        }
+
+        stats.scheduled.fetch_add(scheduled_here, Ordering::Relaxed);
+        stats.reported.fetch_add(reported_ids.len() as u64, Ordering::Relaxed);
+        stats.ef_evictions.store(store.evictions, Ordering::Relaxed);
+        {
+            let mut map = stats.participation.lock().expect("stats mutex");
+            for &c in &reported_ids {
+                *map.entry(c).or_insert(0) += 1;
+            }
+        }
+
+        let loss = if example_sum > 0 { (loss_sum / example_sum as f64) as f32 } else { 0.0 };
+        let sent = endpoints.to_leader.send(Message::SparseUpdate {
+            round,
+            worker: endpoints.id,
+            payload: std::mem::take(&mut payload),
+            loss,
+            examples: example_sum,
+            mem_norm: mem_sum as f32,
+            participants: reported_ids.len() as u32,
+        });
+        if let Err(e) = sent {
+            // Same clean-shutdown race as the flat worker loop.
+            return if endpoints.shutdown_pending(std::time::Duration::from_secs(2)) {
+                Ok(())
+            } else {
+                Err(e)
+            };
+        }
+    }
+}
+
+/// A federation-aware mock factory: like
+/// [`crate::coordinator::cluster::mock_worker_factory`] but batches come
+/// from the RNG the slot seeds per `(population_seed, client, round)`, so
+/// every registered client has its own deterministic data stream instead
+/// of a per-thread counter.
+pub fn mock_client_factory(dim: usize, noise: f32, batches_per_epoch: usize) -> WorkerFactory {
+    Arc::new(move |_slot| {
+        Ok(WorkerSetup {
+            runtime: Box::new(MockModel::new(dim, noise, 42)),
+            next_batch: Box::new(move |rng| Batch::Seed(rng.next_u64())),
+            batches_per_epoch,
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comms::transport::star;
+    use crate::coordinator::federation::{FederationConfig, SamplerKind};
+    use crate::sparsify::SparsifierKind;
+
+    fn fed_cfg(population: usize, cohort: usize, sampler: SamplerKind) -> TrainConfig {
+        let mut cfg = TrainConfig::image_default(1, SparsifierKind::TopK, 0.9);
+        cfg.warmup_epochs = 0.0;
+        let mut fed = FederationConfig::new(population, cohort, 1);
+        fed.sampler = sampler;
+        cfg.federation = Some(fed);
+        cfg
+    }
+
+    fn run_slot_round(cfg: TrainConfig, dim: usize) -> (u32, u64, SparseVec) {
+        let (leader, mut workers) = star(1);
+        let w = workers.remove(0);
+        let stats = Arc::new(FederationStats::new());
+        let handle = {
+            let stats = stats.clone();
+            std::thread::spawn(move || {
+                let setup = mock_client_factory(dim, 0.1, 4)(0).unwrap();
+                run_virtual_worker(w, setup, &cfg, stats).unwrap();
+            })
+        };
+        leader.to_workers[0]
+            .send(Message::Params { round: 0, data: vec![0.0; dim] })
+            .unwrap();
+        let (participants, examples, sv) = match leader.from_workers.recv().unwrap() {
+            Message::SparseUpdate { round: 0, payload, participants, examples, .. } => {
+                let mut sv = SparseVec::default();
+                GradientCompressor::decompress_expecting(&payload, dim, &mut sv).unwrap();
+                (participants, examples, sv)
+            }
+            other => panic!("unexpected {other:?}"),
+        };
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        handle.join().unwrap();
+        (participants, examples, sv)
+    }
+
+    #[test]
+    fn slot_folds_its_whole_cohort_share_into_one_frame() {
+        let dim = 128;
+        let (participants, examples, sv) = run_slot_round(fed_cfg(50, 8, SamplerKind::Uniform), dim);
+        assert_eq!(participants, 8, "pool of 1: the slot folds the whole cohort");
+        assert_eq!(examples, 8, "one batch per client in distributed mode");
+        assert_eq!(sv.dim, dim);
+        // 8 clients × top-13 of 128: the union is at least one client's k
+        // (exactly 13 only if every client kept the identical support)
+        assert!(sv.nnz() >= 13, "union of 8 client top-k sets, got {}", sv.nnz());
+    }
+
+    #[test]
+    fn unavailable_clients_never_report_but_round_completes() {
+        let dim = 64;
+        let cfg = fed_cfg(50, 10, SamplerKind::Availability { p: 0.5 });
+        let (participants, _examples, sv) = run_slot_round(cfg, dim);
+        assert!(participants < 10, "p=0.5 should drop someone ({participants}/10)");
+        sv.debug_validate();
+    }
+
+    #[test]
+    fn zero_reporting_slot_sends_an_empty_frame() {
+        let dim = 32;
+        // p tiny: with 4 scheduled clients the chance of any reporting is
+        // ~4e-6 per seed, and the seed stream is fixed — deterministic.
+        let cfg = fed_cfg(20, 4, SamplerKind::Availability { p: 1e-6 });
+        let (participants, examples, sv) = run_slot_round(cfg, dim);
+        assert_eq!(participants, 0);
+        assert_eq!(examples, 0);
+        assert_eq!(sv.nnz(), 0, "empty union still decodes at the right dim");
+        assert_eq!(sv.dim, dim);
+    }
+}

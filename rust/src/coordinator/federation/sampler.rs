@@ -1,0 +1,158 @@
+//! Per-round cohort selection — deterministic, message-free, O(cohort).
+//!
+//! Every pool slot calls [`CohortSampler::round_cohort`] with the same
+//! `(run_seed, round)` and gets the same sorted client list, so cohort
+//! agreement costs zero coordination: a slot just filters the list down to
+//! `client % pool == slot`. All draws are pure functions of the seeds —
+//! reruns, transports and topologies all see identical cohorts.
+
+use crate::util::rng::{mix_seed, Rng};
+
+use super::{FederationConfig, SamplerKind, SALT_AVAIL, SALT_COHORT};
+
+/// Stateless sampling routines over a [`FederationConfig`].
+pub struct CohortSampler;
+
+impl CohortSampler {
+    /// The round's cohort: `cohort` distinct client ids in `[0, population)`,
+    /// sorted ascending. Cost is O(cohort) expected time and memory — never
+    /// O(population) — so sampling stays population-independent.
+    pub fn round_cohort(fed: &FederationConfig, run_seed: u64, round: u64) -> Vec<u64> {
+        let mut rng = Rng::new(mix_seed(run_seed ^ SALT_COHORT, round, fed.population as u64));
+        let mut cohort = match fed.sampler {
+            SamplerKind::Uniform | SamplerKind::Availability { .. } => rng
+                .sample_indices(fed.population, fed.cohort)
+                .into_iter()
+                .map(|i| i as u64)
+                .collect::<Vec<u64>>(),
+            SamplerKind::Weighted => Self::weighted(fed, &mut rng),
+        };
+        cohort.sort_unstable();
+        cohort
+    }
+
+    /// Weighted sampling without replacement by rejection: the "hot" tier
+    /// (first ~10% of ids) carries weight 4, the rest weight 1. Expected
+    /// O(cohort) draws while cohort ≪ population; a deterministic in-order
+    /// fill guards the cohort ≈ population corner, where rejection would
+    /// degenerate into coupon collecting.
+    fn weighted(fed: &FederationConfig, rng: &mut Rng) -> Vec<u64> {
+        let pop = fed.population as u64;
+        let hot = pop / 10;
+        let total_weight = 4 * hot + (pop - hot);
+        let mut seen = std::collections::HashSet::with_capacity(fed.cohort * 2);
+        let mut out = Vec::with_capacity(fed.cohort);
+        let max_attempts = 20 * fed.cohort + 200;
+        let mut attempts = 0;
+        while out.len() < fed.cohort && attempts < max_attempts {
+            attempts += 1;
+            let r = rng.below(total_weight);
+            let client = if r < 4 * hot { r / 4 } else { hot + (r - 4 * hot) };
+            if seen.insert(client) {
+                out.push(client);
+            }
+        }
+        for client in 0..pop {
+            if out.len() >= fed.cohort {
+                break;
+            }
+            if !seen.contains(&client) {
+                out.push(client);
+            }
+        }
+        out
+    }
+
+    /// Does this scheduled client actually report this round? Always true
+    /// except under [`SamplerKind::Availability`], where it is an
+    /// independent per-`(round, client)` coin with P(report) = p.
+    pub fn reports(fed: &FederationConfig, run_seed: u64, round: u64, client: u64) -> bool {
+        match fed.sampler {
+            SamplerKind::Availability { p } => {
+                Rng::new(mix_seed(run_seed ^ SALT_AVAIL, round, client)).bernoulli(p)
+            }
+            _ => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::federation::ClientEfPolicy;
+
+    fn fed(population: usize, cohort: usize, sampler: SamplerKind) -> FederationConfig {
+        FederationConfig {
+            population,
+            cohort,
+            sampler,
+            pool: 4,
+            client_ef: ClientEfPolicy::Resident,
+            population_seed: 0,
+        }
+    }
+
+    #[test]
+    fn cohorts_are_deterministic_sorted_distinct_and_in_range() {
+        for sampler in [
+            SamplerKind::Uniform,
+            SamplerKind::Weighted,
+            SamplerKind::Availability { p: 0.5 },
+        ] {
+            let f = fed(10_000, 32, sampler);
+            for round in 0..5u64 {
+                let a = CohortSampler::round_cohort(&f, 42, round);
+                let b = CohortSampler::round_cohort(&f, 42, round);
+                assert_eq!(a, b, "same (seed, round) must give the same cohort");
+                assert_eq!(a.len(), 32);
+                assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted + distinct: {a:?}");
+                assert!(a.iter().all(|&c| c < 10_000));
+            }
+            let r0 = CohortSampler::round_cohort(&f, 42, 0);
+            let r1 = CohortSampler::round_cohort(&f, 42, 1);
+            assert_ne!(r0, r1, "different rounds should draw different cohorts");
+        }
+    }
+
+    #[test]
+    fn full_population_cohort_is_everyone() {
+        for sampler in [SamplerKind::Uniform, SamplerKind::Weighted] {
+            let f = fed(64, 64, sampler);
+            let cohort = CohortSampler::round_cohort(&f, 7, 3);
+            assert_eq!(cohort, (0..64u64).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn weighted_sampler_prefers_the_hot_tier() {
+        let f = fed(1000, 50, SamplerKind::Weighted);
+        let mut hot_hits = 0usize;
+        let rounds = 200u64;
+        for round in 0..rounds {
+            let cohort = CohortSampler::round_cohort(&f, 9, round);
+            hot_hits += cohort.iter().filter(|&&c| c < 100).count();
+        }
+        // Hot tier: 100 clients at weight 4 out of total weight 1300 →
+        // expect ~30.8% of slots vs 10% under uniform.
+        let frac = hot_hits as f64 / (rounds as f64 * 50.0);
+        assert!(frac > 0.2, "hot-tier fraction {frac} not above uniform");
+    }
+
+    #[test]
+    fn availability_coin_is_deterministic_with_rate_p() {
+        let f = fed(1000, 32, SamplerKind::Availability { p: 0.7 });
+        let mut up = 0usize;
+        let trials = 4000u64;
+        for i in 0..trials {
+            let (round, client) = (i / 100, i % 1000);
+            let a = CohortSampler::reports(&f, 5, round, client);
+            assert_eq!(a, CohortSampler::reports(&f, 5, round, client));
+            up += usize::from(a);
+        }
+        let frac = up as f64 / trials as f64;
+        assert!((frac - 0.7).abs() < 0.05, "availability rate {frac} far from p=0.7");
+        // non-availability samplers always report
+        let u = fed(1000, 32, SamplerKind::Uniform);
+        assert!(CohortSampler::reports(&u, 5, 0, 1));
+    }
+}

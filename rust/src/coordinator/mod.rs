@@ -9,6 +9,9 @@
 //!   [`engine::GatherPolicy`]s and sparse-domain aggregation
 //! * [`relay`] — the tree topology's interior node: gather a subtree,
 //!   merge in the sparse domain, re-encode, forward one frame upward
+//! * [`federation`] — the population model: registered clients ≫ live
+//!   workers, per-round cohort sampling, virtual-worker multiplexing over
+//!   a bounded pool, capped per-client error-feedback residuals
 //! * [`leader`] — the held-out evaluator + the engine entry point
 //! * [`cluster`] — thread-per-node orchestration over the in-process
 //!   transport (TCP variant available in [`crate::comms::tcp`]), star or
@@ -17,6 +20,7 @@
 pub mod cluster;
 pub mod config;
 pub mod engine;
+pub mod federation;
 pub mod leader;
 pub mod relay;
 pub mod worker;
@@ -28,6 +32,10 @@ pub use config::{
     parse_downlink, OptimKind, RoundMode, StragglerSim, TrainConfig, UplinkCompressor,
 };
 pub use engine::{GatherPolicy, RoundEngine};
+pub use federation::{
+    mock_client_factory, ClientEfPolicy, ClientPopulation, CohortSampler, FederationConfig,
+    SamplerKind,
+};
 pub use leader::Evaluator;
 pub use relay::{run_relay, RelayStats};
 pub use worker::WorkerSetup;

@@ -101,6 +101,8 @@ pub fn run_relay(
 ) -> anyhow::Result<()> {
     let policy = cfg.gather.scaled_for_subtree(eps.n_leaves, cfg.nodes);
     let mut gather = GatherPhase::new(policy, eps.down.child_ids.clone(), cfg.nodes);
+    // Federation: pool slots may legitimately fold zero reporting clients.
+    gather.allow_zero_participants = cfg.federation.is_some();
     let up_codec = CodecConfig { values: cfg.pipeline.values, indices: cfg.pipeline.indices };
     let delta_mode = cfg.down_pipeline.is_some();
 

@@ -8,4 +8,4 @@ pub mod shard;
 
 pub use corpus::{Corpus, CorpusConfig, WindowSampler};
 pub use images::{ImageDataset, ImageDatasetConfig};
-pub use shard::{by_group, iid, BatchIter, Shards};
+pub use shard::{by_group, iid, BatchIter, PopulationSharder, Shards};

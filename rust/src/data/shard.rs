@@ -51,6 +51,69 @@ pub fn by_group(groups: &[u32], n_nodes: usize) -> Shards {
     Shards { per_node }
 }
 
+/// Lazy, stateless sharder for a *registered population* of clients that is
+/// far larger than the live worker pool (the federation layer's 10⁵–10⁶
+/// clients). Unlike [`iid`]/[`by_group`], it never materializes per-client
+/// index vectors: a client's shard is a *distribution* over example ids,
+/// realized one draw at a time only when that client is actually scheduled
+/// into a cohort. Memory is O(1) per registered client (zero — the struct
+/// itself is a handful of words) and every draw is a pure function of
+/// `(seed, client_id, step)`, so reruns reproduce shards bit for bit.
+///
+/// The non-IID model is label-skew / group concentration: examples are laid
+/// out in `n_groups` contiguous equal blocks (the [`by_group`] layout), each
+/// client hashes to a *home group*, and each draw comes from the home block
+/// with probability `skew` (else uniformly from the whole dataset). `skew=0`
+/// degenerates to IID; `skew=1` is maximal one-group concentration.
+#[derive(Debug, Clone, Copy)]
+pub struct PopulationSharder {
+    pub n_examples: usize,
+    pub n_groups: usize,
+    /// P(draw from the client's home-group block), in [0, 1].
+    pub skew: f64,
+    pub seed: u64,
+}
+
+impl PopulationSharder {
+    pub fn new(n_examples: usize, n_groups: usize, skew: f64, seed: u64) -> Self {
+        assert!(n_groups >= 1, "need at least one group");
+        assert!(n_examples >= n_groups, "need at least one example per group");
+        assert!((0.0..=1.0).contains(&skew), "skew must be in [0, 1], got {skew}");
+        PopulationSharder { n_examples, n_groups, skew, seed }
+    }
+
+    /// The group this client's shard concentrates on. Pure in
+    /// `(seed, client)`.
+    pub fn home_group(&self, client: u64) -> usize {
+        (crate::util::rng::mix_seed(self.seed, client, 0x5AD0) % self.n_groups as u64) as usize
+    }
+
+    /// Contiguous `[start, start+len)` block of group `g` (remainder
+    /// examples go to the earliest groups, mirroring a balanced
+    /// [`by_group`] layout).
+    pub fn group_block(&self, g: usize) -> (usize, usize) {
+        debug_assert!(g < self.n_groups);
+        let per = self.n_examples / self.n_groups;
+        let rem = self.n_examples % self.n_groups;
+        let start = g * per + g.min(rem);
+        let len = per + usize::from(g < rem);
+        (start, len)
+    }
+
+    /// Realize draw number `step` of `client`'s shard: an example id in
+    /// `[0, n_examples)`. Pure in `(seed, client, step)` — calling it twice,
+    /// in any order, from any process, yields the same id.
+    pub fn draw(&self, client: u64, step: u64) -> usize {
+        let mut rng = Rng::new(crate::util::rng::mix_seed(self.seed, client, step));
+        if rng.bernoulli(self.skew) {
+            let (start, len) = self.group_block(self.home_group(client));
+            start + rng.index(len)
+        } else {
+            rng.index(self.n_examples)
+        }
+    }
+}
+
 /// A cycling batch iterator over one shard (reshuffles each epoch).
 #[derive(Debug, Clone)]
 pub struct BatchIter {
@@ -136,6 +199,65 @@ mod tests {
                 shard.iter().map(|&i| groups[i]).collect();
             assert_eq!(distinct.len(), 1, "node {node} spans groups {distinct:?}");
         }
+    }
+
+    #[test]
+    fn population_sharder_is_deterministic_and_in_range() {
+        let sh = PopulationSharder::new(1000, 10, 0.8, 0xF00D);
+        for client in [0u64, 1, 999_999] {
+            for step in 0..50u64 {
+                let a = sh.draw(client, step);
+                let b = sh.draw(client, step);
+                assert_eq!(a, b, "draw must be pure in (seed, client, step)");
+                assert!(a < 1000);
+            }
+            assert_eq!(sh.home_group(client), sh.home_group(client));
+            assert!(sh.home_group(client) < 10);
+        }
+    }
+
+    #[test]
+    fn population_sharder_blocks_partition_dataset() {
+        let sh = PopulationSharder::new(103, 10, 0.5, 1);
+        let mut covered = 0;
+        let mut next = 0;
+        for g in 0..10 {
+            let (start, len) = sh.group_block(g);
+            assert_eq!(start, next, "blocks must be contiguous");
+            assert!(len >= 1);
+            next = start + len;
+            covered += len;
+        }
+        assert_eq!(covered, 103);
+    }
+
+    #[test]
+    fn population_sharder_concentrates_on_home_group() {
+        let sh = PopulationSharder::new(1000, 10, 0.9, 7);
+        let client = 42u64;
+        let (start, len) = sh.group_block(sh.home_group(client));
+        let draws = 2000u64;
+        let home_hits = (0..draws)
+            .filter(|&s| {
+                let id = sh.draw(client, s);
+                id >= start && id < start + len
+            })
+            .count();
+        // Expect skew + (1-skew)/n_groups = 0.91 of draws in the home block.
+        let frac = home_hits as f64 / draws as f64;
+        assert!(frac > 0.85, "home-block fraction {frac} too low for skew 0.9");
+    }
+
+    #[test]
+    fn population_sharder_zero_skew_covers_dataset() {
+        let sh = PopulationSharder::new(200, 4, 0.0, 3);
+        let mut seen = std::collections::HashSet::new();
+        for client in 0..20u64 {
+            for step in 0..200u64 {
+                seen.insert(sh.draw(client, step));
+            }
+        }
+        assert!(seen.len() > 190, "IID draws should cover the dataset, saw {}", seen.len());
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! figS4 — federation cohort-scaling sweep: population × cohort × sampler.
+//!
+//! The scenario the federation subsystem unlocks: a registered population
+//! far larger than the live pool, with an m-client cohort scheduled per
+//! round over w ≪ m virtual-worker slots. The sweep's headline is the
+//! population-independence claim — the two `uniform` rows that differ ONLY
+//! in population (10⁴ vs 10⁵ registered clients at the same cohort and
+//! pool) must show the same per-round wall time and the same root ingress,
+//! because nothing in the round loop ever touches more than O(cohort)
+//! client state. The remaining rows scale the cohort at a fixed pool,
+//! swap in the weighted and availability samplers, and route the same
+//! federated round through a relay tree. All numbers come from real
+//! transport counters and the folded [`crate::metrics::FederationSummary`].
+//! CSV lands in `results/figS4/cohort_sweep.csv`.
+
+use std::io::Write;
+
+use crate::coordinator::federation::{mock_client_factory, ClientEfPolicy, SamplerKind};
+use crate::coordinator::{self, FederationConfig, OptimKind, TrainConfig};
+use crate::optim::LrSchedule;
+use crate::runtime::{MockModel, ModelRuntime};
+use crate::sparsify::SparsifierKind;
+use crate::util::json::{obj, Json};
+
+use super::tables::ExperimentOptions;
+
+/// One sweep cell: (population, cohort, pool, sampler, topology).
+type Cell = (usize, usize, usize, &'static str, &'static str);
+
+pub fn run_fig_s4(opts: &ExperimentOptions) -> anyhow::Result<()> {
+    let dim = 2048;
+    let rounds: u64 = if opts.quick { 10 } else { 40 };
+    let cells: &[Cell] = if opts.quick {
+        &[
+            (1_000, 16, 4, "uniform", "star"),
+            (10_000, 16, 4, "uniform", "star"),
+            (10_000, 16, 4, "availability:p=0.8", "star"),
+        ]
+    } else {
+        &[
+            // population-independence pair: only the population differs
+            (10_000, 32, 8, "uniform", "star"),
+            (100_000, 32, 8, "uniform", "star"),
+            // cohort scaling at a fixed 8-slot pool
+            (100_000, 64, 8, "uniform", "star"),
+            // sampler variants
+            (100_000, 32, 8, "weighted", "star"),
+            (100_000, 32, 8, "availability:p=0.8", "star"),
+            // the same federated round through a relay tree
+            (100_000, 32, 8, "uniform", "tree:fanout=4,depth=2"),
+        ]
+    };
+
+    println!("\n=== figS4: federation cohort scaling (d={dim}, top-k @ 90%) ===");
+    println!(
+        "{:<8} {:>7} {:>5} {:>20} {:>22} {:>10} {:>9} {:>8} {:>8} {:>10}",
+        "clients",
+        "cohort",
+        "pool",
+        "sampler",
+        "topology",
+        "round(ms)",
+        "ingress",
+        "distinct",
+        "evict",
+        "dist ratio"
+    );
+    let dir = opts.out_dir.join("figS4");
+    std::fs::create_dir_all(&dir)?;
+    let mut csv = std::io::BufWriter::new(std::fs::File::create(dir.join("cohort_sweep.csv"))?);
+    writeln!(
+        csv,
+        "population,cohort,pool,sampler,topology,mean_wall_ms,root_ingress_bytes,\
+         distinct_clients,participation_rate,ef_evictions,dist_ratio"
+    )?;
+    let noise = 0.05f32;
+    let model = MockModel::new(dim, noise, 42);
+    let d0 = model.distance_sq(&model.init_params());
+    let mut summaries = Vec::new();
+    // mean wall per uniform-star population, for the independence footnote
+    let mut indep: Vec<(usize, f64)> = Vec::new();
+    for &(population, cohort, pool, sampler, topology) in cells {
+        let mut cfg = TrainConfig::image_default(pool, SparsifierKind::TopK, 0.9);
+        cfg.rounds = rounds;
+        cfg.warmup_epochs = 0.0;
+        cfg.optim = OptimKind::Sgd { clip: None };
+        cfg.lr = LrSchedule::constant(0.2);
+        cfg.eval_every = rounds;
+        cfg.seed = opts.seed;
+        cfg.subsample_ratio = 1.0 / cohort as f64;
+        cfg.set_topology(topology)?;
+        let mut fed = FederationConfig::new(population, cohort, pool);
+        fed.sampler = SamplerKind::parse(sampler)?;
+        fed.client_ef = ClientEfPolicy::Evict { cap: None };
+        fed.population_seed = opts.seed;
+        cfg.federation = Some(fed);
+        let name = format!("figS4-p{population}-m{cohort}-{sampler}-{topology}");
+        let res = coordinator::run(
+            &cfg,
+            &name,
+            model.init_params(),
+            mock_client_factory(dim, noise, 8),
+            Box::new(|| Ok(None)),
+        )?;
+        let mean_wall: f64 = res.metrics.records.iter().map(|r| r.wall_ms).sum::<f64>()
+            / res.metrics.records.len().max(1) as f64;
+        let ingress = res.metrics.mean_root_ingress_bytes();
+        let fs = res.metrics.federation.as_ref().expect("federated run folds a summary");
+        let part_rate = fs.reported as f64 / fs.scheduled.max(1) as f64;
+        let dist_ratio = model.distance_sq(&res.params) / d0;
+        if sampler == "uniform" && topology == "star" && (cohort, pool) == (cells[0].1, cells[0].2)
+        {
+            indep.push((population, mean_wall));
+        }
+        println!(
+            "{:<8} {:>7} {:>5} {:>20} {:>22} {:>10.3} {:>9.0} {:>8} {:>8} {:>10.4}",
+            population,
+            cohort,
+            pool,
+            sampler,
+            topology,
+            mean_wall,
+            ingress,
+            fs.distinct_clients,
+            fs.ef_evictions,
+            dist_ratio
+        );
+        writeln!(
+            csv,
+            "{population},{cohort},{pool},{sampler},{topology},{mean_wall},{ingress},{},{part_rate},{},{dist_ratio}",
+            fs.distinct_clients, fs.ef_evictions
+        )?;
+        summaries.push(obj(vec![
+            ("population", Json::from(population)),
+            ("cohort", Json::from(cohort)),
+            ("pool", Json::from(pool)),
+            ("sampler", Json::from(sampler)),
+            ("topology", Json::from(topology)),
+            ("mean_wall_ms", Json::from(mean_wall)),
+            ("root_ingress_bytes_per_round", Json::from(ingress)),
+            ("distinct_clients", Json::from(fs.distinct_clients)),
+            ("participation_rate", Json::from(part_rate)),
+            ("ef_evictions", Json::from(fs.ef_evictions as usize)),
+            ("dist_ratio", Json::from(dist_ratio)),
+        ]));
+    }
+    std::fs::write(
+        dir.join("summary.json"),
+        obj(vec![("id", Json::from("figS4")), ("runs", Json::Arr(summaries))]).to_pretty(),
+    )?;
+    if indep.len() >= 2 {
+        let (p_lo, w_lo) = indep[0];
+        let (p_hi, w_hi) = indep[indep.len() - 1];
+        println!(
+            "(population independence: {p_lo} -> {p_hi} registered clients moved mean round \
+             wall {w_lo:.3} ms -> {w_hi:.3} ms at fixed cohort — the round loop only ever \
+             touches O(cohort) client state)"
+        );
+    }
+    Ok(())
+}

@@ -1,6 +1,7 @@
 //! Experiment harness: one runner per paper table/figure (DESIGN.md §4).
 
 pub mod ablations;
+pub mod cohort;
 pub mod layerwise;
 pub mod straggler;
 pub mod tables;

@@ -368,17 +368,18 @@ pub fn run_experiment(id: &str, opts: &ExperimentOptions) -> anyhow::Result<()> 
         "figS1" => super::straggler::run_fig_s1(opts)?,
         "figS2" => super::layerwise::run_fig_s2(opts)?,
         "figS3" => super::topo_sweep::run_fig_s3(opts)?,
+        "figS4" => super::cohort::run_fig_s4(opts)?,
         "all" => {
             for id in [
                 "table1", "table2", "table3", "table4", "table5", "figT1", "figT2", "figA1",
-                "figA2", "figS1", "figS2", "figS3",
+                "figA2", "figS1", "figS2", "figS3", "figS4",
             ] {
                 run_experiment(id, opts)?;
             }
         }
         other => anyhow::bail!(
             "unknown experiment {other:?}; have table1..table5, fig2..fig6, figT1, figT2, \
-             figA1, figA2, figS1, figS2, figS3, all"
+             figA1, figA2, figS1, figS2, figS3, figS4, all"
         ),
     }
     Ok(())

@@ -100,15 +100,35 @@ SUBCOMMANDS
                 --relay-budget K         gTop-k-style lossy reduction at
                                          relays: keep only the K largest
                                          union coordinates per merge
+                --clients P              federation mode: P registered
+                                         clients (lazy non-IID shards)
+                                         multiplexed over a bounded pool
+                                         of live workers; without it the
+                                         run is fixed-membership and
+                                         bit-identical to the classic path
+                --cohort M               clients scheduled per round
+                                         (default: the pool size)
+                --sampler uniform|weighted|availability:p=0.8
+                                         cohort draw; availability makes
+                                         each scheduled client report only
+                                         with probability p
+                --pool W                 live virtual-worker slots
+                                         (default --nodes; sets the node
+                                         count in federation mode)
+                --client-ef resident|evict[:cap=N]|off
+                                         per-client error-feedback store
+                                         (default evict, cap 2x cohort)
                 --artifacts DIR --out results/train
   experiment  regenerate a paper table/figure
-                --id table1..table5|fig2..fig6|figT1|figT2|figS1|figS2|figS3|all
+                --id table1..table5|fig2..fig6|figT1|figT2|figS1|figS2|figS3|figS4|all
                                          figS1 = straggler sweep over
                                          quorum m x injected delay
                                          figS2 = layerwise-vs-flat sweep
                                          over layout x budget policy
                                          figS3 = topology sweep: star vs
                                          tree, root ingress + merge time
+                                         figS4 = federation cohort-scaling
+                                         sweep over population x cohort
                 --quick  --nodes 5  --artifacts DIR  --out results
                 --lm-preset lm_small
                 --wire "bf16|delta"      wire-format override for every row
@@ -201,6 +221,36 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
             anyhow::anyhow!("relay-budget expects an integer coordinate count, got {b:?}")
         })?;
         cfg.relay_budget = Some(b);
+    }
+    // Federation mode: --clients turns the n live nodes into a virtual-
+    // worker pool over a registered population. The pool IS the node
+    // count (--pool wins over --nodes when both are given).
+    if let Some(c) = args.get("clients") {
+        let population: usize = c.parse().map_err(|_| {
+            anyhow::anyhow!("--clients expects a registered-client count, got {c:?}")
+        })?;
+        let pool = args.usize_or("pool", cfg.nodes)?;
+        let cohort = args.usize_or("cohort", pool)?;
+        let mut fed = coordinator::FederationConfig::new(population, cohort, pool);
+        if let Some(s) = args.get("sampler") {
+            fed.sampler = coordinator::SamplerKind::parse(s)?;
+        }
+        if let Some(p) = args.get("client-ef") {
+            fed.client_ef = coordinator::ClientEfPolicy::parse(p)?;
+        }
+        fed.population_seed = cfg.seed;
+        cfg.nodes = pool;
+        cfg.subsample_ratio = 1.0 / cohort as f64;
+        cfg.federation = Some(fed);
+    } else {
+        // the dependent flags mean nothing without a population — reject
+        // loudly instead of silently running fixed-membership
+        for f in ["cohort", "sampler", "pool", "client-ef"] {
+            anyhow::ensure!(
+                args.get(f).is_none(),
+                "--{f} requires --clients <population> (federation mode)"
+            );
+        }
     }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     Ok((cfg, artifacts))
@@ -297,6 +347,20 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             cfg.gather.label(),
             metrics.participation_rate(cfg.nodes),
             metrics.stale_total()
+        );
+    }
+    if let Some(fs) = &metrics.federation {
+        println!(
+            "federation: population {} cohort {} pool {} ({}); \
+             reported {}/{} scheduled, {} distinct clients, {} EF evictions",
+            fs.population,
+            fs.cohort,
+            fs.pool,
+            fs.sampler,
+            fs.reported,
+            fs.scheduled,
+            fs.distinct_clients,
+            fs.ef_evictions
         );
     }
     if !metrics.relay_levels.is_empty() {

@@ -86,6 +86,34 @@ pub struct RelayLevelStats {
     pub stale_updates: u64,
 }
 
+/// Run-level federation accounting (filled by the cluster from the pool
+/// slots' counters when `--clients` is set; `None` for fixed-membership
+/// runs). Cohort/population shape is echoed alongside the measured
+/// counters so a summary is self-describing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FederationSummary {
+    /// Registered clients.
+    pub population: usize,
+    /// Clients scheduled per round.
+    pub cohort: usize,
+    /// Live virtual-worker slots.
+    pub pool: usize,
+    pub sampler: String,
+    pub client_ef: String,
+    /// Client-round schedulings over the run (= rounds × cohort).
+    pub scheduled: u64,
+    /// Client-rounds that actually computed and were folded into an uplink
+    /// frame (< scheduled under an availability sampler).
+    pub reported: u64,
+    /// Distinct registered clients seen at least once.
+    pub distinct_clients: usize,
+    /// Error-feedback residuals dropped by the capped per-client store.
+    pub ef_evictions: u64,
+    /// `participation_hist[i]` = distinct clients that reported in exactly
+    /// `i + 1` rounds.
+    pub participation_hist: Vec<u64>,
+}
+
 #[derive(Debug, Clone, Copy)]
 pub enum EvalRecord {
     /// Classification accuracy in [0,1].
@@ -127,6 +155,9 @@ pub struct RunMetrics {
     /// Per-level relay accounting under a tree topology (filled by the
     /// cluster at shutdown; empty for star runs).
     pub relay_levels: Vec<RelayLevelStats>,
+    /// Federation accounting (filled by the cluster when the run used a
+    /// client population; `None` in fixed-membership mode).
+    pub federation: Option<FederationSummary>,
 }
 
 impl RunMetrics {
@@ -138,6 +169,7 @@ impl RunMetrics {
             worker_participation: Vec::new(),
             segment_names: Vec::new(),
             relay_levels: Vec::new(),
+            federation: None,
         }
     }
 
@@ -395,6 +427,31 @@ impl RunMetrics {
                 ),
             ));
         }
+        if let Some(fs) = &self.federation {
+            pairs.push((
+                "federation",
+                obj(vec![
+                    ("population", Json::from(fs.population)),
+                    ("cohort", Json::from(fs.cohort)),
+                    ("pool", Json::from(fs.pool)),
+                    ("sampler", Json::from(fs.sampler.clone())),
+                    ("client_ef", Json::from(fs.client_ef.clone())),
+                    ("scheduled", Json::from(fs.scheduled as usize)),
+                    ("reported", Json::from(fs.reported as usize)),
+                    ("distinct_clients", Json::from(fs.distinct_clients)),
+                    ("ef_evictions", Json::from(fs.ef_evictions as usize)),
+                    (
+                        "participation_hist",
+                        Json::Arr(
+                            fs.participation_hist
+                                .iter()
+                                .map(|&c| Json::from(c as usize))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ));
+        }
         if !self.worker_participation.is_empty() {
             pairs.push((
                 "participation_rate",
@@ -616,6 +673,38 @@ mod tests {
                 assert_eq!(xs[1].get("ingress_bytes").unwrap().as_f64(), Some(800.0));
             }
             other => panic!("relay_levels must be an array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn federation_summary_surfaces_only_when_present() {
+        let mut m = RunMetrics::new("t", "rtopk");
+        m.push(rec(0, 10, 100, None));
+        assert!(
+            m.summary_json().get("federation").is_none(),
+            "fixed-membership runs must not grow a federation key"
+        );
+        m.federation = Some(FederationSummary {
+            population: 100_000,
+            cohort: 32,
+            pool: 8,
+            sampler: "uniform".to_string(),
+            client_ef: "evict".to_string(),
+            scheduled: 320,
+            reported: 300,
+            distinct_clients: 290,
+            ef_evictions: 12,
+            participation_hist: vec![280, 10],
+        });
+        let j = m.summary_json();
+        let f = j.get("federation").expect("federated runs export the block");
+        assert_eq!(f.get("population").unwrap().as_f64(), Some(100_000.0));
+        assert_eq!(f.get("cohort").unwrap().as_f64(), Some(32.0));
+        assert_eq!(f.get("reported").unwrap().as_f64(), Some(300.0));
+        assert_eq!(f.get("sampler").unwrap().as_str(), Some("uniform"));
+        match f.get("participation_hist").unwrap() {
+            Json::Arr(xs) => assert_eq!(xs.len(), 2),
+            other => panic!("participation_hist must be an array, got {other:?}"),
         }
     }
 

@@ -5,8 +5,19 @@
 //! essentials: median / mean / p95 wall time per iteration plus derived
 //! throughput, printed as aligned rows so `cargo bench` output is directly
 //! pasteable into EXPERIMENTS.md.
+//!
+//! Perf trajectory: [`Bench::write_json`] additionally emits the group's
+//! rows as machine-readable `BENCH_<group>.json` (under
+//! `RTOPK_BENCH_JSON_DIR`, default `target/bench-json`), so CI can archive
+//! one artifact per gate and throughput regressions show up as a diffable
+//! time series instead of scrollback archaeology. Externally-timed rows
+//! (e.g. full end-to-end rounds measured by the cluster itself) join the
+//! same stream through [`Bench::record`].
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use super::json::{obj, Json};
 
 /// Optimizer barrier (criterion's `black_box` equivalent).
 #[inline]
@@ -23,6 +34,9 @@ pub struct Stats {
     pub p95_ns: f64,
     /// Optional elements-per-iteration for throughput reporting.
     pub elems: Option<usize>,
+    /// Optional wire bytes per iteration (end-to-end rows report the
+    /// measured uplink so the JSON trajectory tracks bytes, not just time).
+    pub bytes: Option<u64>,
 }
 
 impl Stats {
@@ -118,6 +132,7 @@ impl Bench {
             mean_ns: mean,
             p95_ns: p95,
             elems,
+            bytes: None,
         };
         let tput = stats
             .throughput_m_elems_s()
@@ -133,6 +148,86 @@ impl Bench {
         );
         self.results.push(stats);
         self.results.last().unwrap()
+    }
+
+    /// Register an externally-timed row (one measurement, e.g. a mean
+    /// round time reported by the cluster) so it prints like the others
+    /// and joins the group's JSON output.
+    pub fn record(
+        &mut self,
+        name: &str,
+        median_ns: f64,
+        elems: Option<usize>,
+        bytes: Option<u64>,
+    ) -> &Stats {
+        let stats = Stats {
+            name: format!("{}/{name}", self.group),
+            iters: 1,
+            median_ns,
+            mean_ns: median_ns,
+            p95_ns: median_ns,
+            elems,
+            bytes,
+        };
+        let tput = stats
+            .throughput_m_elems_s()
+            .map(|t| format!("{t:9.1} Me/s"))
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "{:<44} {} {} {} {:>12}",
+            stats.name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+            tput
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Write every recorded row as `BENCH_<group>.json` under
+    /// `RTOPK_BENCH_JSON_DIR` (default `target/bench-json`). Returns the
+    /// path so callers can echo it.
+    pub fn write_json(&self) -> anyhow::Result<PathBuf> {
+        let dir = PathBuf::from(
+            std::env::var("RTOPK_BENCH_JSON_DIR")
+                .unwrap_or_else(|_| "target/bench-json".to_string()),
+        );
+        std::fs::create_dir_all(&dir)?;
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|s| {
+                let mut fields = vec![
+                    ("name", Json::from(s.name.as_str())),
+                    ("iters", Json::from(s.iters)),
+                    ("median_ns", Json::from(s.median_ns)),
+                    ("mean_ns", Json::from(s.mean_ns)),
+                    ("p95_ns", Json::from(s.p95_ns)),
+                ];
+                if let Some(e) = s.elems {
+                    fields.push(("elems", Json::from(e)));
+                }
+                if let Some(t) = s.throughput_m_elems_s() {
+                    fields.push(("throughput_m_elems_s", Json::from(t)));
+                }
+                if let Some(b) = s.bytes {
+                    fields.push(("bytes", Json::from(b as usize)));
+                }
+                obj(fields)
+            })
+            .collect();
+        let path = dir.join(format!("BENCH_{}.json", self.group));
+        std::fs::write(
+            &path,
+            obj(vec![
+                ("group", Json::from(self.group.as_str())),
+                ("quick", Json::from(self.quick)),
+                ("results", Json::Arr(rows)),
+            ])
+            .to_pretty(),
+        )?;
+        Ok(path)
     }
 }
 
@@ -155,6 +250,23 @@ mod tests {
         });
         assert!(s.median_ns > 0.0 && s.median_ns < 1e6);
         assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn record_and_write_json_round_trip() {
+        std::env::set_var("RTOPK_BENCH_QUICK", "1");
+        let dir = std::env::temp_dir().join("rtopk-bench-json-test");
+        std::env::set_var("RTOPK_BENCH_JSON_DIR", &dir);
+        let mut b = Bench::new("selftest3");
+        b.record("e2e_round", 1.5e6, Some(4096), Some(1234));
+        let path = b.write_json().unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("group").unwrap().as_str(), Some("selftest3"));
+        let rows = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("selftest3/e2e_round"));
+        assert_eq!(rows[0].get("bytes").unwrap().as_usize(), Some(1234));
+        assert!(rows[0].get("median_ns").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

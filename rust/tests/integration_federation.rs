@@ -1,0 +1,264 @@
+//! Integration tests for the federation subsystem: fixed-membership
+//! bit-identity, bitwise reproducibility across reruns / transports /
+//! topologies, population-independence of round cost, availability +
+//! quorum composition, and EF-eviction accounting.
+
+use rtopk::coordinator::{
+    self, mock_client_factory, mock_worker_factory, ClientEfPolicy, FederationConfig, OptimKind,
+    SamplerKind, TrainConfig,
+};
+use rtopk::optim::LrSchedule;
+use rtopk::runtime::{Batch, MockModel, ModelRuntime};
+use rtopk::sparsify::SparsifierKind;
+
+fn fed_cfg(population: usize, cohort: usize, pool: usize, rounds: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::image_default(pool, SparsifierKind::TopK, 0.9);
+    cfg.rounds = rounds;
+    cfg.warmup_epochs = 0.0;
+    cfg.optim = OptimKind::Sgd { clip: None };
+    cfg.lr = LrSchedule::constant(0.2);
+    cfg.eval_every = rounds;
+    cfg.subsample_ratio = 1.0 / cohort as f64;
+    let mut fed = FederationConfig::new(population, cohort, pool);
+    fed.population_seed = cfg.seed;
+    cfg.federation = Some(fed);
+    cfg
+}
+
+fn run_fed(
+    cfg: &TrainConfig,
+    dim: usize,
+    transport: coordinator::Transport,
+) -> coordinator::ClusterResult {
+    let model = MockModel::new(dim, 0.05, 42);
+    coordinator::run_with(
+        cfg,
+        "federation-itest",
+        model.init_params(),
+        mock_client_factory(dim, 0.05, 8),
+        Box::new(|| Ok(None)),
+        transport,
+    )
+    .unwrap()
+}
+
+/// The fixed-membership invariant: with `federation: None` (the only mode
+/// the presets construct) the cluster must reproduce the classic
+/// distributed trajectory BITWISE — here pinned against a local replica of
+/// 2-worker baseline SGD, exactly the pre-federation equivalence — and the
+/// metrics must carry no federation block.
+#[test]
+fn fixed_membership_path_is_bit_identical_to_pre_federation_run() {
+    let dim = 64;
+    let mut cfg = TrainConfig::image_default(2, SparsifierKind::Baseline, 0.0);
+    cfg.rounds = 10;
+    cfg.warmup_epochs = 0.0;
+    cfg.optim = OptimKind::Sgd { clip: None };
+    cfg.lr = LrSchedule::constant(0.3);
+    cfg.eval_every = 30;
+    assert!(cfg.federation.is_none());
+    let res = coordinator::run(
+        &cfg,
+        "fixed-membership",
+        vec![0.0; dim],
+        mock_worker_factory(dim, 0.1, 8),
+        Box::new(|| Ok(None)),
+    )
+    .unwrap();
+    assert!(res.metrics.federation.is_none(), "no federation block without --clients");
+    // local replica: average gradient of the two mock workers
+    let mut m0 = MockModel::new(dim, 0.1, 42);
+    let mut params = vec![0.0f32; dim];
+    let (mut c0, mut c1) = (0u64, 1_000_000u64);
+    let mut g0 = Vec::new();
+    let mut g1 = Vec::new();
+    for _ in 0..10 {
+        c0 += 1;
+        c1 += 1;
+        m0.train_step(&params, &Batch::Seed(c0), &mut g0).unwrap();
+        m0.train_step(&params, &Batch::Seed(c1), &mut g1).unwrap();
+        for ((w, &a), &b) in params.iter_mut().zip(&g0).zip(&g1) {
+            *w -= 0.3 * 0.5 * (a + b);
+        }
+    }
+    for (a, b) in res.params.iter().zip(&params) {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "fixed-membership run must equal the pre-federation trajectory bitwise"
+        );
+    }
+}
+
+/// A federated run is a pure function of its seeds: rerunning it — on
+/// either transport — must give the same cohorts, the same folded frames,
+/// and bit-identical parameters, and it must actually converge.
+#[test]
+fn federated_run_is_bitwise_reproducible_across_reruns_and_transports_tcp() {
+    let dim = 512;
+    let rounds = 40;
+    let cfg = fed_cfg(2_000, 16, 4, rounds);
+    let a = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let b = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let c = run_fed(&cfg, dim, coordinator::Transport::Tcp);
+    for (x, y) in a.params.iter().zip(&b.params) {
+        assert_eq!(x.to_bits(), y.to_bits(), "rerun must be bitwise identical");
+    }
+    for (x, y) in a.params.iter().zip(&c.params) {
+        assert_eq!(x.to_bits(), y.to_bits(), "transports must agree bitwise");
+    }
+    // the folded federation summaries agree too (same cohorts, same
+    // participation maps, same eviction counts)
+    assert_eq!(a.metrics.federation, b.metrics.federation);
+    assert_eq!(a.metrics.federation, c.metrics.federation);
+    let fs = a.metrics.federation.as_ref().unwrap();
+    assert_eq!(fs.scheduled, rounds * 16, "uniform sampler schedules the full cohort");
+    assert_eq!(fs.reported, fs.scheduled, "no availability model: everyone reports");
+    assert!(fs.distinct_clients >= 16 && fs.distinct_clients <= (rounds as usize) * 16);
+    assert_eq!(fs.participation_hist.iter().sum::<u64>() as usize, fs.distinct_clients);
+    // every round folds the whole cohort
+    for r in &a.metrics.records {
+        assert_eq!(r.participants, 16, "round {}: cohort-sized participation", r.round);
+    }
+    // and the thing converges
+    let model = MockModel::new(dim, 0.05, 42);
+    let d0 = model.distance_sq(&model.init_params());
+    let d1 = model.distance_sq(&a.params);
+    assert!(d1 < 0.35 * d0, "federated run must converge: {d0} -> {d1}");
+}
+
+/// The same federated round routed through a relay tree: pool slots are
+/// the leaves, relays fold slot frames (which already fold cohort shares),
+/// and the run stays deterministic across reruns and wires.
+#[test]
+fn federated_tree_topology_is_reproducible_on_both_transports_tcp() {
+    let dim = 256;
+    let mut cfg = fed_cfg(2_000, 16, 8, 15);
+    cfg.set_topology("tree:fanout=4,depth=2").unwrap();
+    let a = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let b = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let c = run_fed(&cfg, dim, coordinator::Transport::Tcp);
+    assert_eq!(a.params, b.params, "federated tree rerun must be reproducible");
+    assert_eq!(a.params, c.params, "federated tree transports must agree");
+    assert_eq!(a.metrics.federation, c.metrics.federation);
+    // participants stay in CLIENT units through the relay fold
+    for r in &a.metrics.records {
+        assert_eq!(r.participants, 16, "round {}: relays preserve client counts", r.round);
+    }
+    assert_eq!(a.metrics.relay_levels.len(), 1, "one relay level folds the slots");
+}
+
+/// The acceptance bound: a 10× larger registered population at a fixed
+/// cohort must not change what a round touches — same schedule volume,
+/// same per-round participation, and wall time in the same regime (the
+/// round loop never walks the population).
+#[test]
+fn round_cost_is_independent_of_population_size() {
+    let dim = 4096;
+    let rounds = 10;
+    let small = run_fed(&fed_cfg(10_000, 32, 8, rounds), dim, coordinator::Transport::InProcess);
+    let large = run_fed(&fed_cfg(100_000, 32, 8, rounds), dim, coordinator::Transport::InProcess);
+    for res in [&small, &large] {
+        let fs = res.metrics.federation.as_ref().unwrap();
+        assert_eq!(fs.scheduled, rounds * 32);
+        assert_eq!(fs.reported, rounds * 32);
+        assert!(fs.distinct_clients <= (rounds as usize) * 32);
+        for r in &res.metrics.records {
+            assert_eq!(r.participants, 32);
+        }
+    }
+    let wall = |res: &coordinator::ClusterResult| {
+        res.metrics.records.iter().map(|r| r.wall_ms).sum::<f64>()
+    };
+    let (w_small, w_large) = (wall(&small), wall(&large));
+    // generous bound: scheduling O(population) work per round would blow
+    // past 10× immediately; genuine O(cohort) rounds sit near 1× modulo
+    // CI timing noise
+    assert!(
+        w_large < 10.0 * w_small.max(1.0),
+        "round cost must not scale with population: 10^4 clients took {w_small:.1} ms, \
+         10^5 took {w_large:.1} ms"
+    );
+}
+
+/// Availability sampling composes with the quorum gather: scheduled
+/// clients that never report shrink the folded frames, empty slot frames
+/// still close the gather, and the run stays deterministic and healthy.
+#[test]
+fn availability_model_composes_with_quorum_and_stays_deterministic() {
+    let dim = 256;
+    let rounds = 20;
+    let mut cfg = fed_cfg(2_000, 16, 4, rounds);
+    cfg.federation.as_mut().unwrap().sampler = SamplerKind::Availability { p: 0.6 };
+    cfg.set_gather("quorum:m=4,timeout_ms=50").unwrap();
+    let a = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let b = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    assert_eq!(a.params, b.params, "availability coins are seeded, not wall-clock");
+    let fs = a.metrics.federation.as_ref().unwrap();
+    assert_eq!(fs.scheduled, rounds * 16);
+    assert!(
+        fs.reported < fs.scheduled,
+        "p=0.6 must lose some scheduled clients ({} of {})",
+        fs.reported,
+        fs.scheduled
+    );
+    assert!(fs.reported > 0, "p=0.6 cannot silence everyone over {rounds} rounds");
+    // per-round participation equals that round's reporting clients
+    let from_records: u64 =
+        a.metrics.records.iter().map(|r| r.participants as u64).sum();
+    assert_eq!(from_records, fs.reported);
+}
+
+/// EF-store policies surface in the folded metrics: a tight cap must
+/// evict (and count it), `off` must not, and the eviction pressure shows
+/// up in the summary JSON consumers read.
+#[test]
+fn ef_eviction_policies_surface_in_metrics() {
+    let dim = 128;
+    let rounds = 12;
+    let mut cfg = fed_cfg(500, 16, 2, rounds);
+    cfg.federation.as_mut().unwrap().client_ef = ClientEfPolicy::Evict { cap: Some(2) };
+    let tight = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let fs = tight.metrics.federation.as_ref().unwrap();
+    // each slot folds ~8 fresh clients per round into a 2-entry store
+    assert!(fs.ef_evictions > 0, "cap=2 under 8 clients/slot/round must evict");
+    assert_eq!(fs.client_ef, "evict:cap=2");
+    let mut cfg_off = fed_cfg(500, 16, 2, rounds);
+    cfg_off.federation.as_mut().unwrap().client_ef = ClientEfPolicy::Off;
+    let off = run_fed(&cfg_off, dim, coordinator::Transport::InProcess);
+    let fs_off = off.metrics.federation.as_ref().unwrap();
+    assert_eq!(fs_off.ef_evictions, 0, "no store, no evictions");
+    assert_eq!(fs_off.client_ef, "off");
+    // the summary JSON carries the block
+    let json = tight.metrics.summary_json().to_pretty();
+    assert!(json.contains("\"federation\""), "summary must surface federation: {json}");
+    assert!(json.contains("ef_evictions"), "{json}");
+}
+
+/// Weighted sampling skews cohorts toward the hot tier but still covers
+/// the run deterministically end to end.
+#[test]
+fn weighted_sampler_runs_end_to_end_and_prefers_hot_clients() {
+    let dim = 128;
+    let rounds = 30;
+    let mut cfg = fed_cfg(1_000, 20, 4, rounds);
+    cfg.federation.as_mut().unwrap().sampler = SamplerKind::Weighted;
+    let a = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let b = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    assert_eq!(a.params, b.params);
+    let fs = a.metrics.federation.as_ref().unwrap();
+    assert_eq!(fs.scheduled, rounds * 20);
+    // hot tier = first 100 ids at weight 4: expect ~31% of slots vs 10%
+    // under uniform; the recomputed cohorts let us count directly
+    let fed = cfg.federation.as_ref().unwrap();
+    let mut hot = 0usize;
+    let mut total = 0usize;
+    for round in 0..rounds {
+        for c in coordinator::CohortSampler::round_cohort(fed, cfg.seed, round) {
+            total += 1;
+            hot += usize::from(c < 100);
+        }
+    }
+    let frac = hot as f64 / total as f64;
+    assert!(frac > 0.2, "hot-tier fraction {frac} should exceed the uniform 0.1");
+}

@@ -7,6 +7,8 @@
 
 use rtopk::comms::codec::{self, value_roundtrip, CodecConfig, IndexFormat, ValueFormat};
 use rtopk::compress::aggregate::{merge_scaled_into, merge_tree_scaled_into};
+use rtopk::coordinator::{CohortSampler, FederationConfig, SamplerKind};
+use rtopk::data::PopulationSharder;
 use rtopk::compress::{
     BudgetPolicy, GradientCompressor, PartitionedCompressor, PipelineSpec, SegmentLayout, Select,
 };
@@ -1018,6 +1020,143 @@ fn prop_simulated_relay_path_matches_tree_fold_reference() {
                 }
             }
         }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Federation invariants: lazy population shards and per-round cohort
+// sampling over a registered-client population (DESIGN.md §9).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_population_sharder_is_deterministic_and_in_range() {
+    check("sharder-deterministic", default_cases(), |rng| {
+        let n_groups = 1 + rng.index(16);
+        let n_examples = n_groups + rng.index(10_000);
+        let skew = rng.f64();
+        let seed = rng.next_u64();
+        let s = PopulationSharder::new(n_examples, n_groups, skew, seed);
+        let s2 = PopulationSharder::new(n_examples, n_groups, skew, seed);
+        for _ in 0..32 {
+            let client = rng.next_u64() % 1_000_000;
+            let step = rng.next_u64() % 10_000;
+            let a = s.draw(client, step);
+            prop_assert!(a == s2.draw(client, step), "draw must be a pure function");
+            prop_assert!(a == s.draw(client, step), "draw must not keep state");
+            prop_assert!(a < n_examples, "draw {a} out of range {n_examples}");
+            let g = s.home_group(client);
+            prop_assert!(g < n_groups, "home group {g} out of range");
+            prop_assert!(g == s2.home_group(client), "home group must be stable");
+        }
+        // group blocks tile [0, n_examples) exactly: no client materialises
+        // a shard, yet every example is owned by exactly one group
+        let mut covered = 0usize;
+        for g in 0..n_groups {
+            let (start, len) = s.group_block(g);
+            prop_assert!(start == covered, "block {g} starts at {start}, expected {covered}");
+            prop_assert!(len >= 1, "block {g} is empty");
+            covered = start + len;
+        }
+        prop_assert!(covered == n_examples, "blocks cover {covered} != {n_examples}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_population_sharder_skew_extremes() {
+    check("sharder-skew", default_cases(), |rng| {
+        let n_groups = 2 + rng.index(8);
+        let n_examples = n_groups * (1 + rng.index(500));
+        let seed = rng.next_u64();
+        // skew 1: every draw stays inside the client's home block
+        let hard = PopulationSharder::new(n_examples, n_groups, 1.0, seed);
+        for _ in 0..16 {
+            let client = rng.next_u64() % 10_000;
+            let (start, len) = hard.group_block(hard.home_group(client));
+            let i = hard.draw(client, rng.next_u64() % 1_000);
+            prop_assert!(i >= start && i < start + len, "skew=1 draw {i} left home block");
+        }
+        // skew 0: draws from many clients reach beyond any single block
+        let iid_sharder = PopulationSharder::new(n_examples, n_groups, 0.0, seed);
+        let mut groups_hit = std::collections::HashSet::new();
+        for c in 0..64u64 {
+            let i = iid_sharder.draw(c, 0);
+            let g = (0..n_groups)
+                .find(|&g| {
+                    let (start, len) = iid_sharder.group_block(g);
+                    i >= start && i < start + len
+                })
+                .unwrap();
+            groups_hit.insert(g);
+        }
+        prop_assert!(groups_hit.len() >= 2, "skew=0 draws collapsed to one group");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cohort_sampler_deterministic_sorted_distinct_in_range() {
+    check("cohort-sampler", default_cases(), |rng| {
+        let cohort = 1 + rng.index(64);
+        let population = cohort + rng.index(10_000);
+        let run_seed = rng.next_u64();
+        let round = rng.next_u64() % 1_000;
+        for sampler in [
+            SamplerKind::Uniform,
+            SamplerKind::Weighted,
+            SamplerKind::Availability { p: 0.01 + 0.99 * rng.f64() },
+        ] {
+            let mut fed = FederationConfig::new(population, cohort, 1);
+            fed.sampler = sampler;
+            fed.population_seed = run_seed;
+            let a = CohortSampler::round_cohort(&fed, run_seed, round);
+            let b = CohortSampler::round_cohort(&fed, run_seed, round);
+            prop_assert!(a == b, "cohort must be a pure function of (seed, round)");
+            prop_assert!(a.len() == cohort, "cohort size {} != {cohort}", a.len());
+            prop_assert!(
+                a.windows(2).all(|w| w[0] < w[1]),
+                "cohort not sorted/distinct: {a:?}"
+            );
+            prop_assert!(
+                a.iter().all(|&c| (c as usize) < population),
+                "client id out of range: {a:?}"
+            );
+            // the reporting coin is deterministic too, and only the
+            // availability model may flip it off
+            for &c in a.iter().take(8) {
+                let r1 = CohortSampler::reports(&fed, run_seed, round, c);
+                let r2 = CohortSampler::reports(&fed, run_seed, round, c);
+                prop_assert!(r1 == r2, "reports({c}) must be deterministic");
+                if !matches!(fed.sampler, SamplerKind::Availability { .. }) {
+                    prop_assert!(r1, "scheduled client {c} must report without availability");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_cohorts_cover_a_small_population() {
+    check("cohort-coverage", default_cases() / 2, |rng| {
+        let cohort = 2 + rng.index(32);
+        let population = cohort * 2;
+        let mut fed = FederationConfig::new(population, cohort, 1);
+        fed.population_seed = rng.next_u64();
+        let seed = fed.population_seed;
+        let mut seen = std::collections::HashSet::new();
+        for round in 0..50u64 {
+            for c in CohortSampler::round_cohort(&fed, seed, round) {
+                prop_assert!((c as usize) < population, "id {c} out of range");
+                seen.insert(c);
+            }
+        }
+        prop_assert!(
+            seen.len() == population,
+            "50 half-population cohorts must cover everyone: {} of {population}",
+            seen.len()
+        );
         Ok(())
     });
 }
