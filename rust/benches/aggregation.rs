@@ -11,7 +11,7 @@
 //! or the bench aborts — run by CI in quick mode.
 
 use rtopk::compress::aggregate::merge_scaled_into;
-use rtopk::comms::codec::{decode, encode, CodecConfig};
+use rtopk::compress::codec::{decode, encode, CodecConfig};
 use rtopk::optim::{MomentumSgd, Optimizer, Sgd};
 use rtopk::sparsify::SparseVec;
 use rtopk::util::bench::{bb, Bench};

@@ -7,7 +7,7 @@
 use rtopk::compress::{
     BudgetPolicy, GradientCompressor, PartitionedCompressor, PipelineSpec, SegmentLayout, Select,
 };
-use rtopk::comms::codec::{bitmap_wins, decode, encode, CodecConfig, IndexFormat, ValueFormat};
+use rtopk::compress::codec::{bitmap_wins, decode, encode, CodecConfig, IndexFormat, ValueFormat};
 use rtopk::sparsify::{CompressionOperator, SparseVec, TopK};
 use rtopk::util::bench::{bb, Bench};
 use rtopk::util::rng::Rng;

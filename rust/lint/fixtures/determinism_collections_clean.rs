@@ -1,0 +1,6 @@
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+pub struct FederationStats {
+    pub participation: Mutex<BTreeMap<u64, u64>>,
+}

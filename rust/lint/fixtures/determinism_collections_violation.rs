@@ -1,0 +1,8 @@
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Mirror of the pre-existing federation finding: per-client counters in
+/// a hash-ordered map made summary JSON flap across reruns.
+pub struct FederationStats {
+    pub participation: Mutex<HashMap<u64, u64>>,
+}

@@ -1,0 +1,5 @@
+pub fn distinct(xs: &[u64]) -> usize {
+    // lint:allow(determinism-collections): count only; iteration order is never observed
+    let seen: std::collections::HashSet<u64> = xs.iter().copied().collect();
+    seen.len()
+}

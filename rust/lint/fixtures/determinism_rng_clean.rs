@@ -1,0 +1,5 @@
+use crate::util::rng::Rng;
+
+pub fn shard_stream(seed: u64, shard: u64) -> Rng {
+    Rng::new(seed ^ shard)
+}

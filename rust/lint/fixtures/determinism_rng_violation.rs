@@ -1,0 +1,6 @@
+use std::hash::Hasher;
+
+pub fn entropy_seed() -> u64 {
+    let h = std::collections::hash_map::DefaultHasher::new();
+    h.finish()
+}

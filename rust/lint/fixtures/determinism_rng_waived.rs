@@ -1,0 +1,4 @@
+pub fn jitter() -> u64 {
+    // lint:allow(determinism-rng): port-selection jitter only; never feeds training state
+    rand_like::thread_rng().next_u64()
+}

@@ -1,0 +1,3 @@
+pub fn round_elapsed_ms(elapsed_ms: u128) -> u128 {
+    elapsed_ms
+}

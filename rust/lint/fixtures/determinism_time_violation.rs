@@ -1,0 +1,6 @@
+use std::time::Instant;
+
+pub fn round_elapsed_ms() -> u128 {
+    let t0 = Instant::now();
+    t0.elapsed().as_millis()
+}

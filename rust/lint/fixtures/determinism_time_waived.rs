@@ -1,0 +1,6 @@
+use std::time::Instant;
+
+pub fn drain_deadline(drain_ms: u64) -> Instant {
+    // lint:allow(determinism-time): quorum drain deadline is a wall-clock timeout, not training state
+    Instant::now() + std::time::Duration::from_millis(drain_ms)
+}

@@ -1,0 +1,5 @@
+use crate::sparsify::SparseVec;
+
+pub fn nnz(sv: &SparseVec) -> usize {
+    sv.idx.len()
+}

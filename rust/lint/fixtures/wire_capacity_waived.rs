@@ -1,0 +1,8 @@
+pub fn parse_table(buf: &[u8], nseg: usize) -> Option<Vec<u32>> {
+    if buf.len() < nseg.checked_mul(12)? {
+        return None;
+    }
+    // lint:allow(wire-capacity): nseg bounded by the buffer check above
+    let table = Vec::with_capacity(nseg);
+    Some(table)
+}

@@ -1,0 +1,3 @@
+pub fn read_len(len: u64) -> Option<u32> {
+    u32::try_from(len).ok()
+}

@@ -1,0 +1,3 @@
+pub fn read_len(len: u64) -> u32 {
+    len as u32
+}

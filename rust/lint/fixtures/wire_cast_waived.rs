@@ -1,0 +1,4 @@
+pub fn read_flags(word: u64) -> u8 {
+    // lint:allow(wire-cast): low byte extraction after the & 0xFF mask
+    (word & 0xFF) as u8
+}

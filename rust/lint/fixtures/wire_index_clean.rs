@@ -1,0 +1,3 @@
+pub fn decode_tag(buf: &[u8]) -> Option<u8> {
+    buf.first().copied()
+}

@@ -1,0 +1,3 @@
+pub fn decode_tag(buf: &[u8]) -> u8 {
+    buf[0]
+}

@@ -1,0 +1,5 @@
+pub fn decode_tag(buf: &[u8]) -> u8 {
+    assert!(!buf.is_empty());
+    // lint:allow(wire-index): asserted non-empty on the line above
+    buf[0]
+}

@@ -1,0 +1,7 @@
+pub fn read_u32(buf: &[u8], at: usize) -> Option<u32> {
+    let end = at.checked_add(4)?;
+    match buf.get(at..end) {
+        Some(&[a, b, c, d]) => Some(u32::from_le_bytes([a, b, c, d])),
+        _ => None,
+    }
+}

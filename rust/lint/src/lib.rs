@@ -1,0 +1,78 @@
+//! `rtopk-lint` — the workspace's static-analysis gate.
+//!
+//! Enforces three contracts over `rust/src/**` (see DESIGN.md §10):
+//!
+//! * **determinism** — no hash-ordered collections, wall-clock reads, or
+//!   ambient RNG in the layers whose output must be bit-reproducible;
+//! * **wire-safety** — decode paths that touch untrusted bytes never
+//!   panic: no `unwrap`/`expect`/`panic!`, no unchecked indexing, no
+//!   attacker-sized `Vec::with_capacity`, no narrowing `as` casts;
+//! * **layering** — the `use crate::` graph stays a DAG:
+//!   `compress`/`estimation`/`sparsify` never import `comms` or
+//!   `coordinator`, and `comms` never imports `coordinator`.
+//!
+//! The tool is a lexical scanner, not a parser: the offline image has no
+//! crates.io registry (so no `syn`), and the contracts above are all
+//! checkable from comment-stripped, literal-stripped source plus a little
+//! brace accounting. Violations that are intentional carry an inline
+//! waiver — `// lint:allow(rule): justification` — and a waiver with an
+//! empty justification, an unknown rule name, or nothing to suppress is
+//! itself an error, so the waiver inventory can never rot silently.
+
+pub mod rules;
+pub mod scan;
+
+pub use rules::{lint_source, Finding, RULES};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Result of linting a whole source tree.
+#[derive(Debug)]
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// All diagnostics, ordered by (file, line).
+    pub findings: Vec<Finding>,
+}
+
+/// Lint every `.rs` file under `src_root` (the repo's `rust/src`).
+/// File order is deterministic (sorted by name at every level).
+pub fn lint_tree(src_root: &Path) -> io::Result<Report> {
+    let mut paths = Vec::new();
+    walk(src_root, &mut paths)?;
+    let mut findings = Vec::new();
+    let files = paths.len();
+    for path in paths {
+        let text = fs::read_to_string(&path)?;
+        let rel = rel_path(src_root, &path);
+        findings.extend(lint_source(&rel, &text));
+    }
+    Ok(Report { files, findings })
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Path relative to the scan root, with forward slashes (rule scoping is
+/// expressed in `/`-separated prefixes regardless of host OS).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    parts.join("/")
+}

@@ -1,0 +1,60 @@
+//! CLI for the workspace lint gate. Scans `<root>/rust/src/**` and exits
+//! nonzero when any contract is violated (see DESIGN.md §10).
+//!
+//! Usage: `cargo run --release -p rtopk-lint [-- --root <repo-root>]`
+//! (the default root is the current directory, i.e. the workspace root
+//! when invoked through cargo).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("rtopk-lint: --root needs a directory argument");
+                    return ExitCode::from(2);
+                }
+            },
+            "-h" | "--help" => {
+                println!("usage: rtopk-lint [--root <repo-root>]");
+                println!("lints rust/src/** for determinism, wire-safety and layering");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("rtopk-lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        eprintln!("rtopk-lint: {} is not a directory", src.display());
+        return ExitCode::from(2);
+    }
+    let report = match rtopk_lint::lint_tree(&src) {
+        Ok(report) => report,
+        Err(err) => {
+            eprintln!("rtopk-lint: io error scanning {}: {err}", src.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &report.findings {
+        println!("rust/src/{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+    }
+    if report.findings.is_empty() {
+        println!("rtopk-lint: clean ({} files)", report.files);
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "rtopk-lint: {} finding(s) across {} file(s) scanned",
+            report.findings.len(),
+            report.files
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,339 @@
+//! The rule set and its application, including waiver resolution.
+//!
+//! Rule scoping is path-based (paths relative to `rust/src`, forward
+//! slashes). Wire-safety rules additionally apply only inside functions
+//! whose names mark them as decode paths — code that parses bytes a peer
+//! controls — so encode paths keep their (panic-free-by-construction)
+//! idioms like `Vec::with_capacity(nnz)`.
+
+use crate::scan;
+
+/// Every rule name a waiver may reference. The pseudo-rule `waiver`
+/// (malformed/unknown/unused waiver diagnostics) is deliberately absent:
+/// waiver errors cannot themselves be waived.
+pub const RULES: [&str; 8] = [
+    "determinism-collections",
+    "determinism-time",
+    "determinism-rng",
+    "wire-panic",
+    "wire-capacity",
+    "wire-cast",
+    "wire-index",
+    "layering",
+];
+
+/// Directories whose non-test code must not touch hash-ordered
+/// collections (round outcomes there must be bit-reproducible).
+const GUARDED_DIRS: [&str; 5] = ["compress/", "comms/", "coordinator/", "data/", "sparsify/"];
+
+/// Wall-clock reads are confined to the metrics layer and the bench
+/// harness; anywhere else they need a waiver (e.g. gather timeouts).
+const TIME_ALLOWED_DIRS: [&str; 1] = ["metrics/"];
+const TIME_ALLOWED_FILES: [&str; 1] = ["util/bench.rs"];
+
+/// The one module allowed to talk about entropy sources.
+const RNG_ALLOWED_FILES: [&str; 1] = ["util/rng.rs"];
+
+/// Files whose decode paths parse peer-controlled bytes.
+const WIRE_FILES: [&str; 2] = ["compress/codec.rs", "comms/tcp.rs"];
+
+/// A function in a wire file is a decode path when its name starts with
+/// one of these (covers `decode*`, `read*`, `parse*`, `scan*`, the
+/// `BitReader::get`/`get_varint` primitives, `is_segmented`, and the
+/// `checked_*` helpers).
+const DECODE_FN_PREFIXES: [&str; 7] = ["decode", "read", "parse", "scan", "get", "is_", "checked_"];
+
+/// Layers that must never import upward: `compress`, `estimation` and
+/// `sparsify` sit below `comms`; `comms` sits below `coordinator`.
+const LOW_LAYERS: [&str; 3] = ["compress/", "estimation/", "sparsify/"];
+
+/// Cast targets that narrow a 64-bit length/index on this platform.
+const NARROW_INT_TYPES: [&str; 6] = ["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// One diagnostic.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Path relative to `rust/src`, forward slashes.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// Lint one file's source text. `rel` is the path relative to `rust/src`
+/// (it drives rule scoping). Returns diagnostics ordered by line.
+pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
+    let sf = scan::scan(rel, text);
+    let mut findings = Vec::new();
+    for (idx, line) in sf.lines.iter().enumerate() {
+        check_line(&sf.rel, idx + 1, line, &mut findings);
+    }
+    apply_waivers(&sf, findings)
+}
+
+fn check_line(rel: &str, no: usize, line: &scan::Line, out: &mut Vec<Finding>) {
+    if line.in_test {
+        return;
+    }
+    let code = line.code.as_str();
+    let mut push = |rule: &'static str, msg: String| {
+        out.push(Finding { file: rel.to_string(), line: no, rule, msg });
+    };
+
+    if GUARDED_DIRS.iter().any(|d| rel.starts_with(d)) {
+        for t in ["HashMap", "HashSet", "RandomState"] {
+            if has_token(code, t) {
+                let msg = format!("`{t}` is hash-ordered; use BTreeMap/BTreeSet");
+                push("determinism-collections", msg);
+            }
+        }
+    }
+
+    let time_ok = TIME_ALLOWED_DIRS.iter().any(|d| rel.starts_with(d))
+        || TIME_ALLOWED_FILES.contains(&rel);
+    if !time_ok {
+        for t in ["Instant::now", "SystemTime"] {
+            if has_token(code, t) {
+                let msg = format!("`{t}` outside metrics; wall-clock reads break replay");
+                push("determinism-time", msg);
+            }
+        }
+    }
+
+    if !RNG_ALLOWED_FILES.contains(&rel) {
+        for t in ["thread_rng", "from_entropy", "getrandom", "DefaultHasher"] {
+            if has_token(code, t) {
+                let msg = format!("`{t}` draws ambient entropy; seed through util::rng");
+                push("determinism-rng", msg);
+            }
+        }
+    }
+
+    if WIRE_FILES.contains(&rel) && is_decode_fn(line.fn_name.as_deref()) {
+        for t in ["unwrap", "expect"] {
+            if has_token(code, t) {
+                let msg = format!("`{t}()` panics on malformed bytes; return an error");
+                push("wire-panic", msg);
+            }
+        }
+        for m in ["panic", "todo", "unimplemented", "unreachable"] {
+            if has_macro(code, m) {
+                let msg = format!("`{m}!` in a decode path; corrupt bytes must error");
+                push("wire-panic", msg);
+            }
+        }
+        if has_token(code, "with_capacity") {
+            let msg = "allocation sized by untrusted input; bound it first".to_string();
+            push("wire-capacity", msg);
+        }
+        if let Some(ty) = narrowing_cast(code) {
+            let msg = format!("narrowing `as {ty}` truncates silently; use try_from");
+            push("wire-cast", msg);
+        }
+        if has_unchecked_index(code) {
+            let msg = "unchecked indexing panics on short input; use get(..)".to_string();
+            push("wire-index", msg);
+        }
+    }
+
+    if LOW_LAYERS.iter().any(|d| rel.starts_with(d)) {
+        for t in ["crate::comms", "crate::coordinator"] {
+            if has_token(code, t) {
+                let msg = format!("`{t}` referenced from below it in the layer DAG");
+                push("layering", msg);
+            }
+        }
+    } else if rel.starts_with("comms/") && has_token(code, "crate::coordinator") {
+        let msg = "comms must not depend on coordinator".to_string();
+        push("layering", msg);
+    }
+}
+
+fn is_decode_fn(name: Option<&str>) -> bool {
+    name.is_some_and(|n| DECODE_FN_PREFIXES.iter().any(|p| n.starts_with(p)))
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// True when `needle` occurs in `code` bounded by non-identifier chars on
+/// both sides. Needles are ASCII and may contain `::` (path patterns).
+fn has_token(code: &str, needle: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while start + needle.len() <= code.len() {
+        let Some(pos) = code[start..].find(needle) else {
+            return false;
+        };
+        let at = start + pos;
+        let end = at + needle.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = !bytes.get(end).is_some_and(|&b| is_ident_byte(b));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// True when macro `name` is invoked (`name!`) in `code`.
+fn has_macro(code: &str, name: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while start + name.len() <= code.len() {
+        let Some(pos) = code[start..].find(name) else {
+            return false;
+        };
+        let at = start + pos;
+        let end = at + name.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        if before_ok && bytes.get(end) == Some(&b'!') {
+            return true;
+        }
+        start = at + 1;
+    }
+    false
+}
+
+/// First narrowing integer type used as an `as` cast target, if any.
+fn narrowing_cast(code: &str) -> Option<&'static str> {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while start + 2 <= code.len() {
+        let Some(pos) = code[start..].find("as") else {
+            return None;
+        };
+        let at = start + pos;
+        let end = at + 2;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = !bytes.get(end).is_some_and(|&b| is_ident_byte(b));
+        if before_ok && after_ok {
+            let mut t = end;
+            while bytes.get(t).is_some_and(|b| b.is_ascii_whitespace()) {
+                t += 1;
+            }
+            let ty_start = t;
+            while bytes.get(t).is_some_and(|&b| is_ident_byte(b)) {
+                t += 1;
+            }
+            let ty = &code[ty_start..t];
+            if let Some(hit) = NARROW_INT_TYPES.iter().find(|&&n| n == ty) {
+                return Some(hit);
+            }
+        }
+        start = at + 1;
+    }
+    None
+}
+
+/// `expr[...]`-style indexing: a `[` directly preceded by an identifier
+/// char, `)`, or `]`. Slice patterns (`&[a, b]`), array types/literals
+/// (`[u8; 4]`), attributes (`#[..]`) and macros (`vec![..]`) don't match.
+fn has_unchecked_index(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    bytes.iter().enumerate().any(|(i, &b)| {
+        b == b'['
+            && i > 0
+            && (is_ident_byte(bytes[i - 1]) || bytes[i - 1] == b')' || bytes[i - 1] == b']')
+    })
+}
+
+/// Validate waivers, subtract what they cover, and report waiver misuse
+/// (malformed grammar, unknown rules, nothing suppressed).
+fn apply_waivers(sf: &scan::SourceFile, findings: Vec<Finding>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut valid = vec![false; sf.waivers.len()];
+    let mut used = vec![false; sf.waivers.len()];
+    for (wi, w) in sf.waivers.iter().enumerate() {
+        if let Some(err) = &w.error {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line: w.line,
+                rule: "waiver",
+                msg: format!("malformed waiver: {err}"),
+            });
+        } else if let Some(bad) = w.rules.iter().find(|r| !RULES.contains(&r.as_str())) {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line: w.line,
+                rule: "waiver",
+                msg: format!("unknown rule `{bad}` in waiver"),
+            });
+        } else {
+            valid[wi] = true;
+        }
+    }
+    for f in findings {
+        let mut waived = false;
+        for (wi, w) in sf.waivers.iter().enumerate() {
+            if valid[wi] && w.applies_to == f.line && w.rules.iter().any(|r| r == f.rule) {
+                used[wi] = true;
+                waived = true;
+            }
+        }
+        if !waived {
+            out.push(f);
+        }
+    }
+    for (wi, w) in sf.waivers.iter().enumerate() {
+        if valid[wi] && !used[wi] {
+            out.push(Finding {
+                file: sf.rel.clone(),
+                line: w.line,
+                rule: "waiver",
+                msg: format!(
+                    "unused waiver for `{}`: line {} triggers none of those rules",
+                    w.rules.join(", "),
+                    w.applies_to
+                ),
+            });
+        }
+    }
+    out.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("let m = HashMap::new();", "HashMap"));
+        assert!(!has_token("let m = MyHashMapLike::new();", "HashMap"));
+        assert!(!has_token("decode_expecting(buf)", "expect"));
+        assert!(has_token("x.expect(\"msg\")", "expect"));
+        assert!(has_token("use crate::comms::tcp;", "crate::comms"));
+        assert!(!has_token("use crate::compress::codec;", "crate::comms"));
+    }
+
+    #[test]
+    fn macro_detection() {
+        assert!(has_macro("panic!(\"boom\")", "panic"));
+        assert!(!has_macro("fn panic_free() {}", "panic"));
+        assert!(!has_macro("let panic = 1;", "panic"));
+    }
+
+    #[test]
+    fn narrowing_casts() {
+        assert_eq!(narrowing_cast("let x = n as u32;"), Some("u32"));
+        assert_eq!(narrowing_cast("let x = n as u16;"), Some("u16"));
+        assert_eq!(narrowing_cast("let x = n as usize;"), None);
+        assert_eq!(narrowing_cast("let x = n as u64;"), None);
+        assert_eq!(narrowing_cast("let x = base_mask;"), None);
+    }
+
+    #[test]
+    fn index_detection() {
+        assert!(has_unchecked_index("let b = buf[0];"));
+        assert!(has_unchecked_index("let b = &buf[..4];"));
+        assert!(has_unchecked_index("f(x)[1]"));
+        assert!(!has_unchecked_index("let a = [0u8; 4];"));
+        assert!(!has_unchecked_index("let v = vec![0u8; n];"));
+        assert!(!has_unchecked_index("if let Some(&[a, b]) = s.get(..2) {}"));
+        assert!(!has_unchecked_index("#[inline]"));
+    }
+}

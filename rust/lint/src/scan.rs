@@ -1,0 +1,586 @@
+//! Lexical model of one Rust source file.
+//!
+//! [`scan`] produces, per line: the source with comments and the
+//! *contents* of string/char literals blanked (delimiters kept, columns
+//! preserved) so token searches never match inside text; whether the line
+//! sits inside a `#[cfg(test)]`/`#[test]` item; and the name of the
+//! innermost enclosing `fn`. It also collects every
+//! `// lint:allow(rule, ...): justification` waiver with the line it
+//! covers (its own line for a trailing comment, the next code line for a
+//! standalone one).
+//!
+//! This is deliberately not a parser. The grammar subset it understands —
+//! nested block comments, raw/byte strings, char-literal vs. lifetime
+//! disambiguation, brace/paren depth — is exactly what the rules in
+//! [`crate::rules`] need, and nothing more.
+
+/// One source line after stripping.
+#[derive(Debug)]
+pub struct Line {
+    /// Source with comments and literal contents replaced by spaces.
+    pub code: String,
+    /// Text of any comment on this line (used for waiver parsing).
+    pub comment: String,
+    /// Inside (or on the attribute line of) a `#[cfg(test)]`/`#[test]` item.
+    pub in_test: bool,
+    /// Name of the innermost enclosing `fn`, if any.
+    pub fn_name: Option<String>,
+}
+
+/// A parsed `lint:allow` waiver.
+#[derive(Debug)]
+pub struct Waiver {
+    /// 1-based line the waiver comment is on.
+    pub line: usize,
+    /// 1-based line the waiver covers.
+    pub applies_to: usize,
+    /// Rule names listed inside `lint:allow(...)`.
+    pub rules: Vec<String>,
+    /// Free-text justification after the colon.
+    pub justification: String,
+    /// Grammar error, if malformed. Malformed waivers suppress nothing.
+    pub error: Option<String>,
+}
+
+/// A scanned source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to `rust/src`, forward slashes.
+    pub rel: String,
+    /// Lines in order; index 0 is line 1.
+    pub lines: Vec<Line>,
+    pub waivers: Vec<Waiver>,
+}
+
+pub fn scan(rel: &str, text: &str) -> SourceFile {
+    let stripped = strip(text);
+    let lines = annotate(stripped);
+    let waivers = collect_waivers(&lines);
+    SourceFile { rel: rel.replace('\\', "/"), lines, waivers }
+}
+
+/// Lexer state between lines (literals and comments can span lines).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum LexState {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+/// Pass 1: split into lines of (stripped code, comment text). Every
+/// non-newline source char maps to exactly one output char, so columns in
+/// `code` line up with the original.
+fn strip(text: &str) -> Vec<(String, String)> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut st = LexState::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == LexState::LineComment {
+                st = LexState::Code;
+            }
+            out.push((std::mem::take(&mut code), std::mem::take(&mut comment)));
+            i += 1;
+            continue;
+        }
+        match st {
+            LexState::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = LexState::LineComment;
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = LexState::BlockComment(1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = LexState::Str;
+                    code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !ends_in_ident(&code) {
+                    if let Some(consumed) = try_raw_or_byte(&chars, i, &mut code, &mut st) {
+                        i += consumed;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    i += char_or_lifetime(&chars, i, &mut code);
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            LexState::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            LexState::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    st = LexState::BlockComment(depth + 1);
+                    comment.push_str("/*");
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    st = if depth == 1 {
+                        LexState::Code
+                    } else {
+                        LexState::BlockComment(depth - 1)
+                    };
+                    comment.push_str("*/");
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if c == '\\' && chars.get(i + 1) == Some(&'\n') {
+                    // Line continuation: keep the newline for the outer
+                    // loop so line numbering stays intact.
+                    code.push(' ');
+                    i += 1;
+                } else if c == '\\' && i + 1 < chars.len() {
+                    code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = LexState::Code;
+                    code.push('"');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i + 1, hashes) {
+                    st = LexState::Code;
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    i += 1 + hashes as usize;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push((code, comment));
+    }
+    out
+}
+
+fn ends_in_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|p| p.is_alphanumeric() || p == '_')
+}
+
+fn closes_raw(chars: &[char], from: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(from + k) == Some(&'#'))
+}
+
+/// At `chars[i] == 'r' | 'b'`: recognise `r"`, `r#"`, `b"`, `br"`, `br#"`,
+/// and `b'`. On a match, push the opening delimiters to `code`, set the
+/// lexer state, and return the chars consumed; `None` means plain ident.
+fn try_raw_or_byte(
+    chars: &[char],
+    i: usize,
+    code: &mut String,
+    st: &mut LexState,
+) -> Option<usize> {
+    let c = chars[i];
+    let next = chars.get(i + 1).copied();
+    if c == 'b' && next == Some('\'') {
+        code.push('b');
+        let consumed = char_or_lifetime(chars, i + 1, code);
+        return Some(1 + consumed);
+    }
+    if c == 'b' && next == Some('"') {
+        // Plain byte string: same escape rules as `"`.
+        code.push_str("b\"");
+        *st = LexState::Str;
+        return Some(2);
+    }
+    // r"  r#"  br"  br#"
+    let after_r = if c == 'r' {
+        i + 1
+    } else if next == Some('r') {
+        i + 2
+    } else {
+        return None;
+    };
+    let mut hashes = 0usize;
+    while chars.get(after_r + hashes) == Some(&'#') {
+        hashes += 1;
+    }
+    if chars.get(after_r + hashes) != Some(&'"') {
+        return None; // raw identifier (`r#foo`) or plain ident
+    }
+    for &d in chars.get(i..=after_r + hashes)?.iter() {
+        code.push(d);
+    }
+    *st = LexState::RawStr(hashes as u32);
+    Some(after_r + hashes + 1 - i)
+}
+
+/// At `chars[i] == '\''`: disambiguate char literal vs. lifetime. Pushes
+/// the stripped form and returns chars consumed.
+fn char_or_lifetime(chars: &[char], i: usize, code: &mut String) -> usize {
+    let next = chars.get(i + 1).copied();
+    if next == Some('\\') {
+        // Escaped char literal: `'\n'`, `'\''`, `'\u{1F600}'`.
+        let mut j = i + 2;
+        if j < chars.len() {
+            j += 1; // the escaped char itself (never the closing quote)
+        }
+        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+            j += 1;
+        }
+        let close = usize::from(chars.get(j) == Some(&'\''));
+        code.push('\'');
+        for _ in i + 1..j {
+            code.push(' ');
+        }
+        if close == 1 {
+            code.push('\'');
+        }
+        return j + close - i;
+    }
+    let is_char = next.is_some() && next != Some('\'') && chars.get(i + 2) == Some(&'\'');
+    if is_char {
+        code.push_str("' '");
+        return 3;
+    }
+    // Lifetime (or loop label): keep the quote; the following ident chars
+    // pass through the normal path.
+    code.push('\'');
+    1
+}
+
+/// Pass 2: brace accounting — test regions and enclosing-fn names.
+fn annotate(stripped: Vec<(String, String)>) -> Vec<Line> {
+    let mut lines = Vec::with_capacity(stripped.len());
+    let mut depth: i32 = 0;
+    let mut group: i32 = 0; // combined ( ) [ ] nesting
+    let mut test_stack: Vec<i32> = Vec::new();
+    let mut fn_stack: Vec<(i32, String)> = Vec::new();
+    let mut pending_test = false;
+    let mut pending_fn: Option<String> = None;
+    let mut after_fn_kw = false;
+
+    for (code, comment) in stripped {
+        let test_at_start = !test_stack.is_empty() || pending_test;
+        let fn_at_start = fn_stack.last().map(|(_, name)| name.clone());
+        if code.contains("#[cfg(test)]") || code.contains("#[test]") {
+            pending_test = true;
+        }
+        let mut pushed_test = false;
+        let mut pushed_fn: Option<String> = None;
+
+        let mut it = code.chars().peekable();
+        while let Some(c) = it.next() {
+            if c.is_alphanumeric() || c == '_' {
+                let mut ident = String::from(c);
+                while let Some(&n) = it.peek() {
+                    if n.is_alphanumeric() || n == '_' {
+                        ident.push(n);
+                        it.next();
+                    } else {
+                        break;
+                    }
+                }
+                if after_fn_kw {
+                    // The name slot right after the `fn` keyword.
+                    pending_fn = Some(ident);
+                    after_fn_kw = false;
+                } else if ident == "fn" {
+                    after_fn_kw = true;
+                }
+                continue;
+            }
+            if c.is_whitespace() {
+                continue;
+            }
+            // Any punctuation between `fn` and an ident means this is a
+            // fn-pointer type (`fn(usize) -> u8`), not a definition.
+            after_fn_kw = false;
+            match c {
+                '{' => {
+                    if pending_test {
+                        test_stack.push(depth);
+                        pending_test = false;
+                        pushed_test = true;
+                    }
+                    if let Some(name) = pending_fn.take() {
+                        pushed_fn = Some(name.clone());
+                        fn_stack.push((depth, name));
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    while test_stack.last() == Some(&depth) {
+                        test_stack.pop();
+                    }
+                    while fn_stack.last().map(|(d, _)| *d) == Some(depth) {
+                        fn_stack.pop();
+                    }
+                }
+                '(' | '[' => group += 1,
+                ')' | ']' => group -= 1,
+                ';' if group == 0 => {
+                    // Item-level `;` with no body: a trait method decl or
+                    // `#[cfg(test)] use ...;` — cancel pending state.
+                    pending_fn = None;
+                    pending_test = false;
+                }
+                _ => {}
+            }
+        }
+        let in_test = test_at_start || pushed_test || pending_test;
+        let fn_name = pushed_fn.or(fn_at_start);
+        lines.push(Line { code, comment, in_test, fn_name });
+    }
+    lines
+}
+
+/// Pass 3: parse waivers out of comment text and resolve the line each
+/// one covers.
+fn collect_waivers(lines: &[Line]) -> Vec<Waiver> {
+    let mut waivers = Vec::new();
+    for no in 1..=lines.len() {
+        let Some(mut w) = parse_waiver(no, &lines[no - 1].comment) else {
+            continue;
+        };
+        if lines[no - 1].code.trim().is_empty() {
+            // Standalone comment: covers the next non-blank code line.
+            match next_code_line(lines, no) {
+                Some(target) => w.applies_to = target,
+                None => {
+                    if w.error.is_none() {
+                        w.error = Some("standalone waiver with no code line after it".to_string());
+                    }
+                }
+            }
+        }
+        waivers.push(w);
+    }
+    waivers
+}
+
+fn next_code_line(lines: &[Line], after: usize) -> Option<usize> {
+    (after + 1..=lines.len()).find(|&no| !lines[no - 1].code.trim().is_empty())
+}
+
+/// Parse `lint:allow(rule, ...): justification` from one line's comment
+/// text. Returns `None` when the line carries no waiver at all.
+fn parse_waiver(line: usize, comment: &str) -> Option<Waiver> {
+    let at = comment.find("lint:allow")?;
+    let rest = &comment[at + "lint:allow".len()..];
+    let mut w = Waiver {
+        line,
+        applies_to: line,
+        rules: Vec::new(),
+        justification: String::new(),
+        error: None,
+    };
+    let Some(rest) = rest.strip_prefix('(') else {
+        w.error = Some("expected '(' after lint:allow".to_string());
+        return Some(w);
+    };
+    let Some(close) = rest.find(')') else {
+        w.error = Some("unclosed rule list".to_string());
+        return Some(w);
+    };
+    w.rules = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if w.rules.is_empty() {
+        w.error = Some("empty rule list".to_string());
+        return Some(w);
+    }
+    let Some(just) = rest[close + 1..].trim_start().strip_prefix(':') else {
+        w.error = Some("expected ': justification' after the rule list".to_string());
+        return Some(w);
+    };
+    w.justification = just.trim().to_string();
+    if w.justification.is_empty() {
+        w.error = Some("empty justification".to_string());
+    }
+    Some(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        strip(text).into_iter().map(|(c, _)| c).collect()
+    }
+
+    #[test]
+    fn strips_line_and_block_comments() {
+        let c = codes("let x = 1; // HashMap\n/* Instant::now */ let y = 2;\n");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("let x = 1;"));
+        assert!(!c[1].contains("Instant"));
+        assert!(c[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn strips_nested_block_comments() {
+        let c = codes("/* outer /* HashMap */ still */ let z = 3;\n");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("let z = 3;"));
+    }
+
+    #[test]
+    fn strips_string_contents_and_keeps_columns() {
+        let src = "let s = \"HashMap::new()\"; let t = 1;\n";
+        let c = codes(src);
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("let t = 1;"));
+        assert_eq!(c[0].chars().count(), src.chars().count() - 1);
+    }
+
+    #[test]
+    fn strips_raw_and_byte_strings() {
+        let c = codes("let a = r#\"unwrap()\"#; let b = b\"panic!\"; let d = br\"expect\";\n");
+        assert!(!c[0].contains("unwrap"));
+        assert!(!c[0].contains("panic"));
+        assert!(!c[0].contains("expect"));
+        assert!(c[0].contains("let d ="));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let c = codes("fn f<'a>(x: &'a str) -> char { 'x' }\nlet q = '\\'';\nlet e = '\\u{41}';\n");
+        assert_eq!(c[0], "fn f<'a>(x: &'a str) -> char { ' ' }");
+        assert_eq!(c[1], "let q = '  ';");
+        assert!(!c[2].contains("u{41}"));
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let c = codes("let s = \"line one\nHashMap two\";\nlet z = 9;\n");
+        assert!(!c[1].contains("HashMap"));
+        assert!(c[2].contains("let z = 9;"));
+    }
+
+    #[test]
+    fn tracks_test_regions_and_fn_names() {
+        let src = "\
+pub fn decode_frame(b: &[u8]) -> u8 {\n\
+    b[0]\n\
+}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    #[test]\n\
+    fn roundtrip() {\n\
+        let x = 1;\n\
+    }\n\
+}\n";
+        let sf = scan("compress/codec.rs", src);
+        assert_eq!(sf.lines[1].fn_name.as_deref(), Some("decode_frame"));
+        assert!(!sf.lines[1].in_test);
+        assert!(sf.lines[3].in_test);
+        assert!(sf.lines[7].in_test);
+        assert_eq!(sf.lines[7].fn_name.as_deref(), Some("roundtrip"));
+    }
+
+    #[test]
+    fn code_after_test_mod_is_not_test() {
+        let src = "\
+#[cfg(test)]\n\
+mod tests {\n\
+    fn helper() {}\n\
+}\n\
+pub fn decode_more(b: &[u8]) -> usize {\n\
+    b.len()\n\
+}\n";
+        let sf = scan("compress/codec.rs", src);
+        assert!(sf.lines[2].in_test);
+        assert!(!sf.lines[4].in_test);
+        assert!(!sf.lines[5].in_test);
+        assert_eq!(sf.lines[5].fn_name.as_deref(), Some("decode_more"));
+    }
+
+    #[test]
+    fn multiline_fn_signature_gets_named() {
+        let src = "\
+pub fn parse_header(\n\
+    buf: &[u8],\n\
+    expected: Option<usize>,\n\
+) -> Result<(), ()> {\n\
+    let x = 1;\n\
+    Ok(())\n\
+}\n";
+        let sf = scan("compress/codec.rs", src);
+        assert_eq!(sf.lines[4].fn_name.as_deref(), Some("parse_header"));
+    }
+
+    #[test]
+    fn fn_pointer_type_is_not_a_definition() {
+        let src = "\
+pub fn read_with(cb: fn(usize) -> u8) -> u8 {\n\
+    cb(1)\n\
+}\n";
+        let sf = scan("compress/codec.rs", src);
+        assert_eq!(sf.lines[1].fn_name.as_deref(), Some("read_with"));
+    }
+
+    #[test]
+    fn trait_method_decl_does_not_leak_fn_name() {
+        let src = "\
+trait T {\n\
+    fn decode_it(&self) -> u8;\n\
+}\n\
+const X: u8 = 1;\n";
+        let sf = scan("compress/codec.rs", src);
+        assert_eq!(sf.lines[3].fn_name, None);
+    }
+
+    #[test]
+    fn waiver_trailing_and_standalone() {
+        let src = "\
+// lint:allow(wire-capacity): size was bounds-checked above\n\
+let v = Vec::with_capacity(n);\n\
+let w = q.last(); // lint:allow(wire-panic): harness only\n";
+        let sf = scan("compress/codec.rs", src);
+        assert_eq!(sf.waivers.len(), 2);
+        assert_eq!(sf.waivers[0].applies_to, 2);
+        assert_eq!(sf.waivers[0].rules, vec!["wire-capacity".to_string()]);
+        assert!(sf.waivers[0].error.is_none());
+        assert_eq!(sf.waivers[1].applies_to, 3);
+        assert!(sf.waivers[1].error.is_none());
+    }
+
+    #[test]
+    fn waiver_grammar_errors() {
+        let src = "\
+// lint:allow(wire-panic):\n\
+let a = 1;\n\
+// lint:allow(): because\n\
+let b = 2;\n\
+// lint:allow(wire-panic) missing colon\n\
+let c = 3;\n";
+        let sf = scan("compress/codec.rs", src);
+        let errs: Vec<_> = sf.waivers.iter().filter(|w| w.error.is_some()).collect();
+        assert_eq!(errs.len(), 3);
+    }
+}

@@ -1,0 +1,224 @@
+//! Fixture corpus for the lint engine: one violating / clean / waived
+//! snippet per rule, the waiver-grammar negatives, and the real-tree
+//! gate. Fixture files live in `rust/lint/fixtures/` and are plain text
+//! to the build — they are loaded at test time with a synthetic
+//! `rust/src`-relative path so path-scoped rules trigger.
+
+use std::path::Path;
+
+use rtopk_lint::{lint_source, Finding};
+
+fn lint_fixture(rel: &str, fixture: &str) -> Vec<Finding> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(fixture);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading fixture {}: {e}", path.display()));
+    lint_source(rel, &text)
+}
+
+/// (line, rule) pairs, in reported order.
+fn hits(findings: &[Finding]) -> Vec<(usize, &str)> {
+    findings.iter().map(|f| (f.line, f.rule)).collect()
+}
+
+fn assert_clean(rel: &str, fixture: &str) {
+    let f = lint_fixture(rel, fixture);
+    assert!(f.is_empty(), "{fixture} expected clean, got: {f:#?}");
+}
+
+#[test]
+fn determinism_collections_fires_and_mirrors_federation_finding() {
+    // Mirrors the pre-existing finding this PR fixed: FederationStats
+    // kept per-client counters in a HashMap, so summary JSON key order
+    // flapped across reruns.
+    let f = lint_fixture(
+        "coordinator/federation/mod.rs",
+        "determinism_collections_violation.rs",
+    );
+    assert_eq!(
+        hits(&f),
+        vec![(1, "determinism-collections"), (7, "determinism-collections")],
+        "{f:#?}"
+    );
+}
+
+#[test]
+fn determinism_collections_clean_and_waived() {
+    assert_clean(
+        "coordinator/federation/mod.rs",
+        "determinism_collections_clean.rs",
+    );
+    assert_clean(
+        "coordinator/federation/mod.rs",
+        "determinism_collections_waived.rs",
+    );
+}
+
+#[test]
+fn determinism_collections_ignored_outside_guarded_dirs() {
+    // The same source under metrics/ is out of scope for the rule.
+    assert_clean("metrics/mod.rs", "determinism_collections_violation.rs");
+}
+
+#[test]
+fn determinism_time_fires() {
+    let f = lint_fixture(
+        "coordinator/engine/gather.rs",
+        "determinism_time_violation.rs",
+    );
+    assert_eq!(hits(&f), vec![(4, "determinism-time")], "{f:#?}");
+}
+
+#[test]
+fn determinism_time_clean_waived_and_allowed_in_metrics() {
+    assert_clean("coordinator/engine/gather.rs", "determinism_time_clean.rs");
+    assert_clean("coordinator/engine/gather.rs", "determinism_time_waived.rs");
+    assert_clean("metrics/mod.rs", "determinism_time_violation.rs");
+    assert_clean("util/bench.rs", "determinism_time_violation.rs");
+}
+
+#[test]
+fn determinism_rng_fires() {
+    let f = lint_fixture("data/shard.rs", "determinism_rng_violation.rs");
+    assert_eq!(hits(&f), vec![(4, "determinism-rng")], "{f:#?}");
+}
+
+#[test]
+fn determinism_rng_clean_waived_and_allowed_in_util_rng() {
+    assert_clean("data/shard.rs", "determinism_rng_clean.rs");
+    assert_clean("data/shard.rs", "determinism_rng_waived.rs");
+    assert_clean("util/rng.rs", "determinism_rng_violation.rs");
+}
+
+#[test]
+fn wire_panic_fires_and_mirrors_codec_finding() {
+    // Mirrors the pre-existing finding this PR fixed: post-bounds reads in
+    // the codec done with `buf[..].try_into().unwrap()`. The same line
+    // also trips the indexing rule — both must be reported.
+    let f = lint_fixture("compress/codec.rs", "wire_panic_violation.rs");
+    assert_eq!(hits(&f), vec![(4, "wire-index"), (4, "wire-panic")], "{f:#?}");
+}
+
+#[test]
+fn wire_panic_clean_and_waived() {
+    assert_clean("compress/codec.rs", "wire_panic_clean.rs");
+    assert_clean("compress/codec.rs", "wire_panic_waived.rs");
+}
+
+#[test]
+fn wire_rules_only_apply_to_decode_fns_in_wire_files() {
+    // Same violating source, non-wire path: the wire rules stay quiet.
+    assert_clean("sparsify/rtopk.rs", "wire_panic_violation.rs");
+}
+
+#[test]
+fn wire_capacity_fires() {
+    let f = lint_fixture("compress/codec.rs", "wire_capacity_violation.rs");
+    assert_eq!(hits(&f), vec![(2, "wire-capacity")], "{f:#?}");
+}
+
+#[test]
+fn wire_capacity_clean_and_waived() {
+    assert_clean("compress/codec.rs", "wire_capacity_clean.rs");
+    assert_clean("compress/codec.rs", "wire_capacity_waived.rs");
+}
+
+#[test]
+fn wire_cast_fires() {
+    let f = lint_fixture("comms/tcp.rs", "wire_cast_violation.rs");
+    assert_eq!(hits(&f), vec![(2, "wire-cast")], "{f:#?}");
+}
+
+#[test]
+fn wire_cast_clean_and_waived() {
+    assert_clean("comms/tcp.rs", "wire_cast_clean.rs");
+    assert_clean("comms/tcp.rs", "wire_cast_waived.rs");
+}
+
+#[test]
+fn wire_index_fires() {
+    let f = lint_fixture("compress/codec.rs", "wire_index_violation.rs");
+    assert_eq!(hits(&f), vec![(2, "wire-index")], "{f:#?}");
+}
+
+#[test]
+fn wire_index_clean_and_waived() {
+    assert_clean("compress/codec.rs", "wire_index_clean.rs");
+    assert_clean("compress/codec.rs", "wire_index_waived.rs");
+}
+
+#[test]
+fn layering_fires() {
+    let f = lint_fixture("compress/mod.rs", "layering_violation.rs");
+    assert_eq!(hits(&f), vec![(1, "layering")], "{f:#?}");
+}
+
+#[test]
+fn layering_clean_waived_and_directional() {
+    assert_clean("compress/mod.rs", "layering_clean.rs");
+    assert_clean("compress/mod.rs", "layering_waived.rs");
+    // The import is legal in the other direction: coordinator sits above
+    // comms and may use it freely.
+    assert_clean("coordinator/relay.rs", "layering_violation.rs");
+}
+
+#[test]
+fn malformed_waiver_is_an_error_and_suppresses_nothing() {
+    let f = lint_fixture("compress/codec.rs", "waiver_empty_justification.rs");
+    assert_eq!(hits(&f), vec![(2, "waiver"), (3, "wire-index")], "{f:#?}");
+    assert!(f[0].msg.contains("empty justification"), "{f:#?}");
+}
+
+#[test]
+fn unknown_rule_in_waiver_is_an_error_and_suppresses_nothing() {
+    let f = lint_fixture("compress/codec.rs", "waiver_unknown_rule.rs");
+    assert_eq!(hits(&f), vec![(2, "waiver"), (3, "wire-index")], "{f:#?}");
+    assert!(f[0].msg.contains("no-such-rule"), "{f:#?}");
+}
+
+#[test]
+fn unused_waiver_is_an_error() {
+    let f = lint_fixture("compress/codec.rs", "waiver_unused.rs");
+    assert_eq!(hits(&f), vec![(1, "waiver")], "{f:#?}");
+    assert!(f[0].msg.contains("unused"), "{f:#?}");
+}
+
+#[test]
+fn test_code_is_skipped() {
+    assert_clean("compress/codec.rs", "test_code_skipped.rs");
+}
+
+#[test]
+fn every_violation_fixture_fails_by_itself() {
+    // The acceptance bar for the corpus: each *_violation.rs fixture must
+    // make the gate nonzero on its own.
+    let cases = [
+        ("coordinator/federation/mod.rs", "determinism_collections_violation.rs"),
+        ("coordinator/engine/gather.rs", "determinism_time_violation.rs"),
+        ("data/shard.rs", "determinism_rng_violation.rs"),
+        ("compress/codec.rs", "wire_panic_violation.rs"),
+        ("compress/codec.rs", "wire_capacity_violation.rs"),
+        ("comms/tcp.rs", "wire_cast_violation.rs"),
+        ("compress/codec.rs", "wire_index_violation.rs"),
+        ("compress/mod.rs", "layering_violation.rs"),
+    ];
+    for (rel, fixture) in cases {
+        let f = lint_fixture(rel, fixture);
+        assert!(!f.is_empty(), "{fixture} should produce findings at {rel}");
+    }
+}
+
+#[test]
+fn real_tree_is_clean() {
+    // The gate itself: the repo's rust/src must lint clean, with every
+    // intentional exception carried by a used, justified waiver.
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let src = src.canonicalize().expect("rust/src exists next to rust/lint");
+    let report = rtopk_lint::lint_tree(&src).expect("scan rust/src");
+    assert!(report.files > 30, "expected the full tree, saw {} files", report.files);
+    let msgs: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("rust/src/{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg))
+        .collect();
+    assert!(msgs.is_empty(), "rust/src is not lint-clean:\n{}", msgs.join("\n"));
+}

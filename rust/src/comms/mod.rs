@@ -1,16 +1,13 @@
-//! Communication substrate: the wire format (the value/index stage
-//! internals of [`crate::compress::GradientCompressor`]) + transports with
-//! exact byte accounting (compression ratios in the experiment tables are
-//! *measured* from these counters, never assumed).
+//! Communication substrate: transports with exact byte accounting
+//! (compression ratios in the experiment tables are *measured* from these
+//! counters, never assumed). Payloads are opaque byte frames produced by
+//! [`crate::compress::codec`] — this layer carries and counts them, it
+//! never parses them (layering: `comms` sits above `compress` and below
+//! `coordinator`; see DESIGN.md §10).
 
-pub mod codec;
 pub mod tcp;
 pub mod topology;
 pub mod transport;
 
-pub use codec::{
-    decode, decode_expecting, encode, encode_segmented, is_segmented, CodecConfig, IndexFormat,
-    SegEntry, ValueFormat,
-};
 pub use topology::{node_label, NodeRef, Topology, TreePlan};
 pub use transport::{star, tree, LeaderEndpoints, Message, RelayEndpoints, WorkerEndpoints};

@@ -10,6 +10,7 @@ use std::net::{TcpListener, TcpStream};
 
 use super::topology::{node_label, NodeRef, TreePlan};
 use super::transport::Message;
+use crate::compress::codec;
 
 const TAG_PARAMS: u8 = 1;
 const TAG_UPDATE: u8 = 2;
@@ -99,10 +100,11 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
 pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
     let mut tag = [0u8; 1];
     r.read_exact(&mut tag)?;
+    let [tag] = tag;
     let mut round_b = [0u8; 8];
     r.read_exact(&mut round_b)?;
     let round = u64::from_le_bytes(round_b);
-    match tag[0] {
+    match tag {
         TAG_PARAMS => {
             let mut len_b = [0u8; 4];
             r.read_exact(&mut len_b)?;
@@ -111,8 +113,9 @@ pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
             r.read_exact(&mut buf)?;
             let data = buf
                 .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect();
+                .map(|c| codec::read_f32_le(c, 0))
+                .collect::<Result<Vec<f32>, _>>()
+                .map_err(|e| anyhow::anyhow!("params frame: {e}"))?;
             Ok(Message::Params { round, data })
         }
         TAG_UPDATE => {

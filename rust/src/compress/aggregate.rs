@@ -19,7 +19,7 @@
 //! accumulator bit for bit — the engine's dense fallback (momentum, or
 //! near-dense warm-up rounds) relies on this.
 
-use crate::comms::codec::CodecError;
+use crate::compress::codec::CodecError;
 use crate::sparsify::SparseVec;
 
 use super::layout::SegmentLayout;
@@ -243,7 +243,7 @@ impl SparseAggregator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comms::codec::{self, CodecConfig};
+    use crate::compress::codec::{self, CodecConfig};
     use crate::util::rng::Rng;
 
     fn random_sparse(dim: usize, k: usize, rng: &mut Rng) -> SparseVec {

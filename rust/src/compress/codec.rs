@@ -77,6 +77,33 @@ impl std::fmt::Display for CodecError {
 
 impl std::error::Error for CodecError {}
 
+/// Checked little-endian field reads over untrusted wire bytes. Every
+/// helper returns `Err(CodecError::Truncated)` instead of panicking when
+/// the requested range runs past the buffer, so the decode paths can stay
+/// free of `unwrap`/direct indexing — the never-panic contract `rtopk-lint`
+/// enforces statically (DESIGN.md §10).
+pub fn read_u16_le(buf: &[u8], at: usize) -> Result<u16, CodecError> {
+    let end = at.checked_add(2).ok_or(CodecError::Truncated(buf.len()))?;
+    match buf.get(at..end) {
+        Some(&[a, b]) => Ok(u16::from_le_bytes([a, b])),
+        _ => Err(CodecError::Truncated(buf.len())),
+    }
+}
+
+/// See [`read_u16_le`].
+pub fn read_u32_le(buf: &[u8], at: usize) -> Result<u32, CodecError> {
+    let end = at.checked_add(4).ok_or(CodecError::Truncated(buf.len()))?;
+    match buf.get(at..end) {
+        Some(&[a, b, c, d]) => Ok(u32::from_le_bytes([a, b, c, d])),
+        _ => Err(CodecError::Truncated(buf.len())),
+    }
+}
+
+/// See [`read_u16_le`].
+pub fn read_f32_le(buf: &[u8], at: usize) -> Result<f32, CodecError> {
+    read_u32_le(buf, at).map(f32::from_bits)
+}
+
 /// Bits needed to address a coordinate of a dim-`d` vector.
 pub fn index_bits(dim: usize) -> u32 {
     if dim <= 1 {
@@ -209,7 +236,7 @@ const SEG_MAGIC: u16 = 0x4753;
 
 /// True when `buf` starts with the segmented-frame magic.
 pub fn is_segmented(buf: &[u8]) -> bool {
-    buf.len() >= 2 && u16::from_le_bytes([buf[0], buf[1]]) == SEG_MAGIC
+    matches!(read_u16_le(buf, 0), Ok(m) if m == SEG_MAGIC)
 }
 
 /// Whether the occupancy-bitmap layout beats the configured per-entry
@@ -363,25 +390,26 @@ fn decode_flat_into(
     if buf.len() < 12 {
         return Err(CodecError::Truncated(buf.len()));
     }
-    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    let magic = read_u16_le(buf, 0)?;
     if magic != MAGIC {
         return Err(CodecError::BadMagic(magic));
     }
-    let flags = buf[2];
-    let dim = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
-    let nnz = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let flags = *buf.get(2).ok_or(CodecError::Truncated(buf.len()))?;
+    let dim = read_u32_le(buf, 4)? as usize;
+    let nnz = read_u32_le(buf, 8)? as usize;
     if expected_dim.is_some_and(|expected| expected != dim) {
         return Err(CodecError::Corrupt("dim != expected dim"));
     }
     if nnz > dim {
         return Err(CodecError::Corrupt("nnz > dim"));
     }
-    let body = &buf[12..];
+    let body = buf.get(12..).ok_or(CodecError::Truncated(buf.len()))?;
     // The values section is a fixed nnz * width tail; a claimed nnz the
     // body cannot possibly back is rejected before any index parsing (and
     // before `sv`'s buffers grow towards it).
     let vbytes = if flags & 1 == 0 { 4 } else { 2 };
-    if nnz * vbytes > body.len() {
+    let val_bytes = nnz.checked_mul(vbytes).ok_or(CodecError::Truncated(buf.len()))?;
+    if val_bytes > body.len() {
         return Err(CodecError::Truncated(buf.len()));
     }
     if reset {
@@ -391,14 +419,20 @@ fn decode_flat_into(
     let mut pos = 0usize;
 
     if flags & 4 != 0 {
-        // bitmap layout
+        // bitmap layout, LSB-first; a set bit past `dim` in the final byte
+        // is corruption (the encoder never emits one)
         let nbytes = dim.div_ceil(8);
-        if body.len() < nbytes {
-            return Err(CodecError::Truncated(buf.len()));
-        }
-        for i in 0..dim {
-            if body[i / 8] & (1 << (i % 8)) != 0 {
-                sv.idx.push(i as u32 + base);
+        let bitmap = body.get(..nbytes).ok_or(CodecError::Truncated(buf.len()))?;
+        for (byte_at, &byte) in bitmap.iter().enumerate() {
+            let mut bits = byte;
+            while bits != 0 {
+                let i = byte_at * 8 + bits.trailing_zeros() as usize;
+                if i >= dim {
+                    return Err(CodecError::Corrupt("bitmap bit past dim"));
+                }
+                let iu = u32::try_from(i).map_err(|_| CodecError::Corrupt("index overflow"))?;
+                sv.idx.push(iu + base);
+                bits &= bits - 1;
             }
         }
         if sv.idx.len() - start_nnz != nnz {
@@ -410,16 +444,18 @@ fn decode_flat_into(
         let mut br = BitReader::new(body);
         let mut prev: i64 = -1;
         for _ in 0..nnz {
-            let i = br.get(bits)? as i64;
-            if i as usize >= dim {
+            let v = br.get(bits)?;
+            if v >= dim as u64 {
                 return Err(CodecError::Corrupt("index out of range"));
             }
             // every encoder emits sorted unique indices; anything else is
             // corruption (and would double-apply coordinates downstream)
+            let i = v as i64;
             if i <= prev {
                 return Err(CodecError::Corrupt("indices not strictly increasing"));
             }
-            sv.idx.push(i as u32 + base);
+            let iu = u32::try_from(v).map_err(|_| CodecError::Corrupt("index overflow"))?;
+            sv.idx.push(iu + base);
             prev = i;
         }
         pos = br.bytes_consumed();
@@ -434,23 +470,25 @@ fn decode_flat_into(
                 return Err(CodecError::Corrupt("index out of range"));
             }
             let i = prev + 1 + gap as i64;
-            if i as usize >= dim {
+            if i >= dim as i64 {
                 return Err(CodecError::Corrupt("index out of range"));
             }
-            sv.idx.push(i as u32 + base);
+            let iu = u32::try_from(i).map_err(|_| CodecError::Corrupt("index overflow"))?;
+            sv.idx.push(iu + base);
             prev = i;
         }
     }
 
-    if body.len() < pos + nnz * vbytes {
+    let val_end = pos.checked_add(val_bytes).ok_or(CodecError::Truncated(buf.len()))?;
+    if body.len() < val_end {
         return Err(CodecError::Truncated(buf.len()));
     }
     for j in 0..nnz {
         let off = pos + j * vbytes;
         let v = if flags & 1 == 0 {
-            f32::from_le_bytes(body[off..off + 4].try_into().unwrap())
+            read_f32_le(body, off)?
         } else {
-            bf16_to_f32(u16::from_le_bytes(body[off..off + 2].try_into().unwrap()))
+            bf16_to_f32(read_u16_le(body, off)?)
         };
         sv.val.push(v);
     }
@@ -512,15 +550,15 @@ fn parse_segmented_header(
     if buf.len() < 12 {
         return Err(CodecError::Truncated(buf.len()));
     }
-    let magic = u16::from_le_bytes([buf[0], buf[1]]);
+    let magic = read_u16_le(buf, 0)?;
     if magic != SEG_MAGIC {
         return Err(CodecError::BadMagic(magic));
     }
-    if buf[2] != 0 {
+    if *buf.get(2).ok_or(CodecError::Truncated(buf.len()))? != 0 {
         return Err(CodecError::Corrupt("unknown segmented-frame flags"));
     }
-    let dim = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
-    let nseg = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    let dim = read_u32_le(buf, 4)? as usize;
+    let nseg = read_u32_le(buf, 8)? as usize;
     if expected_dim.is_some_and(|expected| expected != dim) {
         return Err(CodecError::Corrupt("dim != expected dim"));
     }
@@ -540,15 +578,16 @@ fn parse_segmented_header(
     if buf.len() < 12 + table_bytes {
         return Err(CodecError::Truncated(buf.len()));
     }
+    // lint:allow(wire-capacity): nseg <= dim and the 12*nseg table bytes were just verified to fit buf
     let mut table = Vec::with_capacity(nseg);
     let mut expect_offset = 0usize;
     let mut body_bytes = 0usize;
     for s in 0..nseg {
         let at = 12 + 12 * s;
         let e = SegEntry {
-            offset: u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()),
-            len: u32::from_le_bytes(buf[at + 4..at + 8].try_into().unwrap()),
-            nbytes: u32::from_le_bytes(buf[at + 8..at + 12].try_into().unwrap()),
+            offset: read_u32_le(buf, at)?,
+            len: read_u32_le(buf, at + 4)?,
+            nbytes: read_u32_le(buf, at + 8)?,
         };
         if e.len == 0 {
             return Err(CodecError::Corrupt("zero-length segment"));
@@ -591,12 +630,15 @@ pub fn decode_segmented_expecting(
     sv.clear(dim);
     let mut at = 12 + 12 * table.len();
     for e in &table {
-        let body = &buf[at..at + e.nbytes as usize];
+        let end = at
+            .checked_add(e.nbytes as usize)
+            .ok_or(CodecError::Truncated(buf.len()))?;
+        let body = buf.get(at..end).ok_or(CodecError::Truncated(buf.len()))?;
         if is_segmented(body) {
             return Err(CodecError::Corrupt("nested segmented frame"));
         }
         decode_flat_into(body, Some(e.len as usize), e.offset, false, sv)?;
-        at += e.nbytes as usize;
+        at = end;
     }
     Ok(())
 }
@@ -608,16 +650,16 @@ pub fn decode_segmented_expecting(
 /// nothing and allocates nothing — the caller guarantees the frame was
 /// just accepted by [`decode_segmented_expecting`].
 pub fn scan_segment_sizes(buf: &[u8], mut f: impl FnMut(usize, usize)) -> Option<usize> {
-    if !is_segmented(buf) || buf.len() < 12 {
+    if !is_segmented(buf) {
         return None;
     }
-    let nseg = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
-    if nseg == 0 || buf.len() < 12 + nseg.checked_mul(12)? {
+    let nseg = read_u32_le(buf, 8).ok()? as usize;
+    if nseg == 0 || buf.len() < nseg.checked_mul(12)?.checked_add(12)? {
         return None;
     }
     for s in 0..nseg {
         let at = 12 + 12 * s;
-        f(s, u32::from_le_bytes(buf[at + 8..at + 12].try_into().unwrap()) as usize);
+        f(s, read_u32_le(buf, at + 8).ok()? as usize);
     }
     Some(segmented_overhead(nseg))
 }

@@ -31,18 +31,23 @@
 //! unit tests, the estimation layer's simulators, examples).
 
 pub mod aggregate;
+pub mod codec;
 pub mod layout;
 pub mod partition;
 pub mod select;
 pub mod spec;
 
 pub use aggregate::SparseAggregator;
+pub use codec::{
+    decode, decode_expecting, encode, encode_segmented, is_segmented, CodecConfig, IndexFormat,
+    SegEntry, ValueFormat,
+};
 pub use layout::{BudgetPolicy, LayoutSpec, Segment, SegmentLayout};
 pub use partition::{PartitionedCompressor, SegmentStats};
 pub use select::{Select, SelectScratch, Stage};
 pub use spec::{PipelineSpec, Quant, StageSpec};
 
-use crate::comms::codec::{self, CodecConfig, CodecError, IndexFormat, ValueFormat};
+use self::codec::CodecError;
 use crate::sparsify::SparseVec;
 use crate::util::rng::Rng;
 
@@ -228,7 +233,7 @@ impl GradientCompressorBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comms::codec::value_roundtrip;
+    use crate::compress::codec::value_roundtrip;
 
     fn randvec(n: usize, seed: u64) -> Vec<f32> {
         let mut rng = Rng::new(seed);

@@ -8,7 +8,7 @@
 //! slices the flat compensated gradient by the [`SegmentLayout`], runs the
 //! configured pipeline per segment at its allocated budget, and assembles
 //! the sub-payloads into a segmented frame
-//! ([`crate::comms::codec::encode_segmented`]). The receive side decodes
+//! ([`crate::compress::codec::encode_segmented`]). The receive side decodes
 //! through the same `decode_expecting` entry point the flat frames use, so
 //! aggregation, `step_sparse`, and the delta downlink are untouched.
 //!
@@ -25,7 +25,7 @@
 //! per-segment restriction of `g + m == ĝ + m'` is exact because the
 //! identity is coordinate-wise.
 
-use crate::comms::codec::{self, SegEntry};
+use crate::compress::codec::{self, SegEntry};
 use crate::sparsify::SparseVec;
 use crate::util::rng::Rng;
 

@@ -30,7 +30,7 @@
 
 use super::select::{Select, Stage};
 use super::GradientCompressor;
-use crate::comms::codec::{IndexFormat, ValueFormat};
+use crate::compress::codec::{IndexFormat, ValueFormat};
 use crate::sparsify::SparsifierKind;
 
 /// A stage size that may be relative to the scheduled k or the dimension.

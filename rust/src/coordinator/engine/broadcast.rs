@@ -23,7 +23,7 @@
 
 use std::sync::Arc;
 
-use crate::comms::codec::{self, CodecConfig};
+use crate::compress::codec::{self, CodecConfig};
 use crate::comms::transport::{LeaderEndpoints, Message};
 use crate::sparsify::SparseVec;
 

@@ -242,7 +242,9 @@ impl GatherPhase {
             let msg = if must_block {
                 Some(endpoints.recv()?)
             } else {
+                // lint:allow(determinism-time): quorum drain deadline is a wall-clock timeout, not training state
                 let d = *deadline.get_or_insert_with(|| Instant::now() + drain);
+                // lint:allow(determinism-time): wall-clock comparison against the drain deadline above
                 let now = Instant::now();
                 if now >= d {
                     None

@@ -35,7 +35,7 @@ pub use gather::{GatherPolicy, GatherStats};
 
 use std::time::Instant;
 
-use crate::comms::codec;
+use crate::compress::codec;
 use crate::comms::transport::{self, LeaderEndpoints, Message};
 use crate::compress::{aggregate, SparseAggregator};
 use crate::metrics::{RoundRecord, RunMetrics};
@@ -140,6 +140,7 @@ impl<'a> RoundEngine<'a> {
         };
 
         for round in 0..cfg.rounds {
+            // lint:allow(determinism-time): wall_ms metric timing only; never feeds training state
             let t0 = Instant::now();
             let epoch = match cfg.mode {
                 RoundMode::Distributed => round as f64 / self.batches_per_epoch as f64,
@@ -255,6 +256,7 @@ impl<'a> RoundEngine<'a> {
             let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
             let (eval, eval_ms) = if let Some(ev) = evaluator.as_mut() {
                 if round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds {
+                    // lint:allow(determinism-time): eval_ms metric timing only; never feeds training state
                     let te = Instant::now();
                     let rec = ev.evaluate(&params)?;
                     (Some(rec), te.elapsed().as_secs_f64() * 1e3)

@@ -6,8 +6,9 @@
 //! clients: under [`ClientEfPolicy::Evict`] it holds at most `cap` entries
 //! and evicts the least-recently-participating client (ties toward the
 //! HIGHER client id) whenever it overflows. Eviction is a full-scan argmin
-//! over `(last_round, Reverse(client))` — deterministic regardless of hash
-//! iteration order, and `cap` is small (O(cohort)) so the scan is cheap.
+//! over `(last_round, Reverse(client))` on a key-ordered `BTreeMap` —
+//! fully deterministic, and `cap` is small (O(cohort)) so the scan is
+//! cheap.
 //!
 //! Accuracy trade-off: an evicted client restarts from a zero residual, so
 //! the unsent mass its memory held is dropped — conservation (`g + m =
@@ -16,7 +17,7 @@
 //! `ef_evictions` counter in [`crate::metrics::FederationSummary`] makes
 //! the rate visible so runs can size `cap` against their cohort churn.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::sparsify::ErrorFeedback;
 
@@ -33,7 +34,7 @@ pub struct ClientEfStore {
     dim: usize,
     /// `usize::MAX` for resident, the resolved cap for evict, 0 for off.
     cap: usize,
-    entries: HashMap<u64, EfEntry>,
+    entries: BTreeMap<u64, EfEntry>,
     /// Cumulative evictions (mirrored into the slot's shared stats).
     pub evictions: u64,
 }
@@ -47,7 +48,7 @@ impl ClientEfStore {
             ClientEfPolicy::Evict { cap } => cap.unwrap_or(2 * cohort).max(1),
             ClientEfPolicy::Off => 0,
         };
-        ClientEfStore { dim, cap, entries: HashMap::new(), evictions: 0 }
+        ClientEfStore { dim, cap, entries: BTreeMap::new(), evictions: 0 }
     }
 
     pub fn len(&self) -> usize {

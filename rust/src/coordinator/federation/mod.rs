@@ -271,7 +271,11 @@ impl ClientPopulation {
 /// [`FederationSummary`] after the run). Atomics are relaxed: totals only,
 /// read after the threads joined. The participation map holds only this
 /// slot's clients (slot assignment is `client % pool`), so maps from
-/// different slots never overlap.
+/// different slots never overlap. It is a `BTreeMap` on purpose:
+/// [`fold_stats`] iterates it into the summary JSON, and key-ordered
+/// iteration keeps that output byte-identical across reruns (a `HashMap`
+/// here is exactly the kind of silent reproducibility leak `rtopk-lint`'s
+/// determinism rule exists to catch).
 #[derive(Debug, Default)]
 pub struct FederationStats {
     /// Client-round schedulings handled by this slot.
@@ -281,7 +285,7 @@ pub struct FederationStats {
     /// Cumulative EF-store evictions on this slot.
     pub ef_evictions: AtomicU64,
     /// client id -> rounds reported (this slot's clients only).
-    pub participation: Mutex<std::collections::HashMap<u64, u64>>,
+    pub participation: Mutex<std::collections::BTreeMap<u64, u64>>,
 }
 
 impl FederationStats {

@@ -34,7 +34,7 @@
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use crate::comms::codec::{self, CodecConfig, SegEntry};
+use crate::compress::codec::{self, CodecConfig, SegEntry};
 use crate::comms::transport::{Message, WorkerEndpoints};
 use crate::compress::aggregate::merge_scaled_into;
 use crate::compress::GradientCompressor;

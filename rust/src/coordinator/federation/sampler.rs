@@ -40,7 +40,7 @@ impl CohortSampler {
         let pop = fed.population as u64;
         let hot = pop / 10;
         let total_weight = 4 * hot + (pop - hot);
-        let mut seen = std::collections::HashSet::with_capacity(fed.cohort * 2);
+        let mut seen = std::collections::BTreeSet::new();
         let mut out = Vec::with_capacity(fed.cohort);
         let max_attempts = 20 * fed.cohort + 200;
         let mut attempts = 0;

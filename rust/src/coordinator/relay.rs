@@ -49,7 +49,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::comms::codec::{self, CodecConfig, SegEntry};
+use crate::compress::codec::{self, CodecConfig, SegEntry};
 use crate::comms::transport::{self, Message, RelayEndpoints};
 use crate::compress::aggregate::{merge_scaled_into, truncate_topk};
 use crate::compress::{SegmentLayout, SparseAggregator};
@@ -223,6 +223,7 @@ pub fn run_relay(
         stats.stale.store(gather.stale_total, Ordering::Relaxed);
 
         // ---- merge in the sparse domain, child order, scale 1.0 ----
+        // lint:allow(determinism-time): merge_ms metric timing only; never feeds training state
         let t0 = Instant::now();
         agg.begin();
         for u in gather.updates().iter().flatten() {

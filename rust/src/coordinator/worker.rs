@@ -269,7 +269,7 @@ mod tests {
         match leader.from_workers.recv().unwrap() {
             Message::SparseUpdate { payload, .. } => {
                 assert!(
-                    crate::comms::codec::is_segmented(&payload),
+                    crate::compress::codec::is_segmented(&payload),
                     "non-flat layout must put a segmented frame on the wire"
                 );
                 let mut sv = SparseVec::default();
@@ -325,9 +325,9 @@ mod tests {
         // delta: +0.5 on coordinate 7 only
         let delta = SparseVec { dim, idx: vec![7], val: vec![0.5] };
         let mut frame = Vec::new();
-        crate::comms::codec::encode(
+        crate::compress::codec::encode(
             &delta,
-            crate::comms::codec::CodecConfig::default(),
+            crate::compress::codec::CodecConfig::default(),
             &mut frame,
         );
         leader
@@ -369,9 +369,9 @@ mod tests {
         // a delta with no prior dense base must trigger a resync request
         let delta = SparseVec { dim, idx: vec![0], val: vec![1.0] };
         let mut frame = Vec::new();
-        crate::comms::codec::encode(
+        crate::compress::codec::encode(
             &delta,
-            crate::comms::codec::CodecConfig::default(),
+            crate::compress::codec::CodecConfig::default(),
             &mut frame,
         );
         leader.broadcast_shared(0, frame.into()).unwrap();
@@ -406,9 +406,9 @@ mod tests {
         // error (fail fast), not silent corruption
         let delta = SparseVec { dim: dim * 2, idx: vec![0], val: vec![1.0] };
         let mut frame = Vec::new();
-        crate::comms::codec::encode(
+        crate::compress::codec::encode(
             &delta,
-            crate::comms::codec::CodecConfig::default(),
+            crate::compress::codec::CodecConfig::default(),
             &mut frame,
         );
         leader.broadcast_shared(1, frame.into()).unwrap();
@@ -457,9 +457,9 @@ mod tests {
         for (round, val) in [(1u64, 0.25f32), (2, 0.5)] {
             let delta = SparseVec { dim, idx: vec![3], val: vec![val] };
             let mut frame = Vec::new();
-            crate::comms::codec::encode(
+            crate::compress::codec::encode(
                 &delta,
-                crate::comms::codec::CodecConfig::default(),
+                crate::compress::codec::CodecConfig::default(),
                 &mut frame,
             );
             leader.broadcast_shared(round, frame.into()).unwrap();

@@ -235,6 +235,27 @@ fn ef_eviction_policies_surface_in_metrics() {
     assert!(json.contains("ef_evictions"), "{json}");
 }
 
+/// The rendered summary JSON — not just the folded struct — must be
+/// byte-identical across reruns. This pins the BTreeMap conversions in
+/// `FederationStats.participation` and `ClientEfStore.entries`: with
+/// hash-ordered maps the participation histogram and eviction counts
+/// were fold-order dependent, so the string could flap run to run.
+#[test]
+fn federation_summary_json_is_byte_identical_across_reruns() {
+    let dim = 64;
+    let rounds = 10;
+    let mut cfg = fed_cfg(500, 16, 4, rounds);
+    // a tight EF cap keeps the per-slot store churning, so entry
+    // iteration order feeds the eviction counts the summary reports
+    cfg.federation.as_mut().unwrap().client_ef = ClientEfPolicy::Evict { cap: Some(2) };
+    let a = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let b = run_fed(&cfg, dim, coordinator::Transport::InProcess);
+    let ja = a.metrics.summary_json().to_pretty();
+    let jb = b.metrics.summary_json().to_pretty();
+    assert!(ja.contains("participation_hist"), "summary must carry the histogram: {ja}");
+    assert_eq!(ja, jb, "summary JSON must be byte-identical across reruns");
+}
+
 /// Weighted sampling skews cohorts toward the hot tier but still covers
 /// the run deterministically end to end.
 #[test]

@@ -5,7 +5,7 @@
 //! seeded random cases including adversarial value distributions (ties,
 //! zeros, huge/tiny magnitudes — see `gen_vector`).
 
-use rtopk::comms::codec::{self, value_roundtrip, CodecConfig, IndexFormat, ValueFormat};
+use rtopk::compress::codec::{self, value_roundtrip, CodecConfig, IndexFormat, ValueFormat};
 use rtopk::compress::aggregate::{merge_scaled_into, merge_tree_scaled_into};
 use rtopk::coordinator::{CohortSampler, FederationConfig, SamplerKind};
 use rtopk::data::PopulationSharder;
