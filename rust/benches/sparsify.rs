@@ -4,13 +4,19 @@
 //! histogram threshold), the operator adapters at paper-realistic k/d,
 //! the composed `GradientCompressor` pipelines built from spec strings,
 //! and the fused error-feedback step.
+//!
+//! A second group ("select", emitted as `BENCH_select.json`) sweeps the
+//! sampled-threshold `atopk` stage against exact top-r at d ∈ {10⁶, 10⁷}
+//! across `--select-threads` ∈ {1, 2, 8} — the headline rows the
+//! `bench-compare` cross-PR gate tracks (DESIGN.md §11).
 
-use rtopk::compress::GradientCompressor;
+use rtopk::compress::{GradientCompressor, Select, SelectScratch};
 use rtopk::sparsify::{
     select_top_r, threshold_for_rank, CompressionOperator, ErrorFeedback, MagnitudeHistogram,
     RTopK, RandomK, SparseVec, Threshold, TopK,
 };
 use rtopk::util::bench::{bb, Bench};
+use rtopk::util::chunkpool::ChunkPool;
 use rtopk::util::rng::Rng;
 
 fn main() {
@@ -92,5 +98,32 @@ fn main() {
         });
     }
     let path = bench.write_json().expect("bench json");
+    println!("bench json: {}", path.display());
+
+    // -- select-throughput sweep: exact top-r vs sampled-threshold atopk --
+    // Its own group so the cross-PR gate can diff BENCH_select.json rows
+    // by name. atopk consumes RNG draws (the threshold sample), so every
+    // timed call advances the same shared rng — throughput, not bytes, is
+    // what these rows measure.
+    let mut sel_bench = Bench::new("select");
+    for &d in &[1_000_000usize, 10_000_000] {
+        let w = rng.normal_vec(d, 0.0, 1.0);
+        let r = d / 1000;
+        let mut scratch = SelectScratch::default();
+        let exact = Select::top_r(r);
+        sel_bench.run_elems(&format!("exact-topr/d={d}/r={r}"), Some(d), || {
+            exact.apply(&w, &mut rng, &mut scratch);
+            bb(scratch.survivors.len());
+        });
+        let atopk = Select::approx_top_r(r, 16 * 1024);
+        for &threads in &[1usize, 2, 8] {
+            let pool = ChunkPool::new(threads);
+            sel_bench.run_elems(&format!("atopk/d={d}/r={r}/threads={threads}"), Some(d), || {
+                atopk.apply_pooled(&w, &mut rng, &mut scratch, &pool);
+                bb(scratch.survivors.len());
+            });
+        }
+    }
+    let path = sel_bench.write_json().expect("bench json");
     println!("bench json: {}", path.display());
 }

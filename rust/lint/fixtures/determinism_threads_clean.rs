@@ -1,0 +1,8 @@
+use crate::util::chunkpool::ChunkPool;
+
+/// Thread counts come from validated config (`--select-threads`), so the
+/// chunk decomposition — and therefore every byte on the wire — replays
+/// identically on any host.
+pub fn pool_from_config(select_threads: usize) -> ChunkPool {
+    ChunkPool::new(select_threads)
+}

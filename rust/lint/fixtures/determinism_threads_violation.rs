@@ -1,0 +1,3 @@
+pub fn pool_size() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

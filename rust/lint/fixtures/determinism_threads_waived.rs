@@ -1,0 +1,4 @@
+pub fn default_bench_threads() -> usize {
+    // lint:allow(determinism-threads): bench-only default; never feeds a training run
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

@@ -11,10 +11,11 @@ use crate::scan;
 /// Every rule name a waiver may reference. The pseudo-rule `waiver`
 /// (malformed/unknown/unused waiver diagnostics) is deliberately absent:
 /// waiver errors cannot themselves be waived.
-pub const RULES: [&str; 8] = [
+pub const RULES: [&str; 9] = [
     "determinism-collections",
     "determinism-time",
     "determinism-rng",
+    "determinism-threads",
     "wire-panic",
     "wire-capacity",
     "wire-cast",
@@ -107,6 +108,20 @@ fn check_line(rel: &str, no: usize, line: &scan::Line, out: &mut Vec<Finding>) {
                 let msg = format!("`{t}` draws ambient entropy; seed through util::rng");
                 push("determinism-rng", msg);
             }
+        }
+    }
+
+    // Global: thread counts must come from config (`--select-threads`),
+    // never from the machine the process happens to land on — ambient
+    // parallelism probes make "same seed, same bytes" runs depend on the
+    // host. See DESIGN.md §11 (the ChunkPool determinism contract).
+    for t in ["available_parallelism", "num_cpus"] {
+        if has_token(code, t) {
+            let msg = format!(
+                "`{t}` reads ambient machine parallelism; take thread counts from config \
+                 (--select-threads) so runs replay bit-identically on any host"
+            );
+            push("determinism-threads", msg);
         }
     }
 

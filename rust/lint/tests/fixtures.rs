@@ -90,6 +90,23 @@ fn determinism_rng_clean_waived_and_allowed_in_util_rng() {
 }
 
 #[test]
+fn determinism_threads_fires_everywhere() {
+    // The rule is global — worker-side selection (where the ChunkPool
+    // lives) and even util/ itself must take thread counts from config,
+    // never probe the host.
+    let f = lint_fixture("compress/select.rs", "determinism_threads_violation.rs");
+    assert_eq!(hits(&f), vec![(2, "determinism-threads")], "{f:#?}");
+    let f = lint_fixture("util/chunkpool.rs", "determinism_threads_violation.rs");
+    assert_eq!(hits(&f), vec![(2, "determinism-threads")], "{f:#?}");
+}
+
+#[test]
+fn determinism_threads_clean_and_waived() {
+    assert_clean("compress/select.rs", "determinism_threads_clean.rs");
+    assert_clean("util/bench.rs", "determinism_threads_waived.rs");
+}
+
+#[test]
 fn wire_panic_fires_and_mirrors_codec_finding() {
     // Mirrors the pre-existing finding this PR fixed: post-bounds reads in
     // the codec done with `buf[..].try_into().unwrap()`. The same line
@@ -195,6 +212,7 @@ fn every_violation_fixture_fails_by_itself() {
         ("coordinator/federation/mod.rs", "determinism_collections_violation.rs"),
         ("coordinator/engine/gather.rs", "determinism_time_violation.rs"),
         ("data/shard.rs", "determinism_rng_violation.rs"),
+        ("compress/select.rs", "determinism_threads_violation.rs"),
         ("compress/codec.rs", "wire_panic_violation.rs"),
         ("compress/codec.rs", "wire_capacity_violation.rs"),
         ("comms/tcp.rs", "wire_cast_violation.rs"),

@@ -1,0 +1,286 @@
+//! bench-compare — the cross-PR perf gate (ROADMAP item 4).
+//!
+//! Diffs the current run's `BENCH_<group>.json` files (written by the
+//! bench targets into `RTOPK_BENCH_JSON_DIR`, default `target/bench-json`)
+//! against committed baselines under `bench-baselines/`, matching rows by
+//! name. A row whose median throughput drops below `--min-ratio` (default
+//! 0.8, i.e. a >20% regression) fails the gate; rows that only exist on
+//! one side are reported but never fail (benches grow across PRs).
+//!
+//! Baselines marked `"provisional": true` (hand-seeded placeholders, or
+//! numbers from non-comparable hardware) are compared informationally and
+//! never fail CI. Run `bench-compare --update` after a real bench run on
+//! reference hardware to promote the current numbers to hard baselines —
+//! the copied files carry no `provisional` flag. See DESIGN.md §11.
+//!
+//! ```text
+//! bench-compare [--baselines DIR] [--current DIR] [--min-ratio 0.8]
+//!               [--groups select,codec,aggregation] [--update]
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use rtopk::util::json::Json;
+
+const DEFAULT_GROUPS: &str = "select,codec,aggregation";
+const DEFAULT_MIN_RATIO: f64 = 0.8;
+
+#[derive(Debug, Clone, PartialEq)]
+struct Row {
+    name: String,
+    median_ns: f64,
+    tput: Option<f64>,
+}
+
+/// Extract comparable rows from a `BENCH_<group>.json` document.
+fn rows_of(doc: &Json) -> Vec<Row> {
+    let mut out = Vec::new();
+    let Some(results) = doc.get("results").and_then(Json::as_arr) else {
+        return out;
+    };
+    for r in results {
+        let (Some(name), Some(median_ns)) = (
+            r.get("name").and_then(Json::as_str),
+            r.get("median_ns").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        if median_ns <= 0.0 {
+            continue;
+        }
+        out.push(Row {
+            name: name.to_string(),
+            median_ns,
+            tput: r.get("throughput_m_elems_s").and_then(Json::as_f64),
+        });
+    }
+    out
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Regression {
+    name: String,
+    /// current/baseline throughput ratio (< 1 is slower).
+    ratio: f64,
+    baseline: f64,
+    current: f64,
+    metric: &'static str,
+}
+
+#[derive(Debug, Default)]
+struct GroupReport {
+    provisional: bool,
+    compared: usize,
+    /// Rows only in the current run (new benches) / only in the baseline.
+    added: usize,
+    removed: usize,
+    regressions: Vec<Regression>,
+}
+
+/// Compare one group's baseline vs current documents. Throughput is the
+/// preferred metric; rows without it (no `elems`) compare inverse median
+/// time. Either way `ratio < min_ratio` flags a regression.
+fn compare_group(baseline: &Json, current: &Json, min_ratio: f64) -> GroupReport {
+    let base_rows = rows_of(baseline);
+    let cur_rows = rows_of(current);
+    let mut report = GroupReport {
+        provisional: baseline.get("provisional").and_then(Json::as_bool).unwrap_or(false),
+        ..GroupReport::default()
+    };
+    for cur in &cur_rows {
+        let Some(base) = base_rows.iter().find(|b| b.name == cur.name) else {
+            report.added += 1;
+            continue;
+        };
+        report.compared += 1;
+        let (ratio, baseline_v, current_v, metric) = match (base.tput, cur.tput) {
+            (Some(b), Some(c)) if b > 0.0 => (c / b, b, c, "Me/s"),
+            _ => (base.median_ns / cur.median_ns, base.median_ns, cur.median_ns, "median_ns"),
+        };
+        if ratio < min_ratio {
+            report.regressions.push(Regression {
+                name: cur.name.clone(),
+                ratio,
+                baseline: baseline_v,
+                current: current_v,
+                metric,
+            });
+        }
+    }
+    report.removed = base_rows
+        .iter()
+        .filter(|b| !cur_rows.iter().any(|c| c.name == b.name))
+        .count();
+    report
+}
+
+fn read_doc(path: &Path) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    match Json::parse(&text) {
+        Ok(doc) => Some(doc),
+        Err(e) => {
+            eprintln!("bench-compare: unparseable {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if let Some(v) = a.strip_prefix(&format!("--{name}=")) {
+            return Some(v.to_string());
+        }
+        if a == &format!("--{name}") {
+            return it.next().cloned();
+        }
+    }
+    None
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let baselines = PathBuf::from(
+        flag_value(&args, "baselines").unwrap_or_else(|| "bench-baselines".to_string()),
+    );
+    let current = PathBuf::from(flag_value(&args, "current").unwrap_or_else(|| {
+        std::env::var("RTOPK_BENCH_JSON_DIR").unwrap_or_else(|_| "target/bench-json".to_string())
+    }));
+    let min_ratio: f64 = flag_value(&args, "min-ratio")
+        .map(|v| v.parse().expect("--min-ratio expects a float"))
+        .unwrap_or(DEFAULT_MIN_RATIO);
+    let groups = flag_value(&args, "groups").unwrap_or_else(|| DEFAULT_GROUPS.to_string());
+    let update = args.iter().any(|a| a == "--update");
+
+    let mut failed = false;
+    for group in groups.split(',').map(str::trim).filter(|g| !g.is_empty()) {
+        let file = format!("BENCH_{group}.json");
+        let cur_path = current.join(&file);
+        let base_path = baselines.join(&file);
+        let Some(cur_doc) = read_doc(&cur_path) else {
+            println!("[{group}] no current run at {} — skipped", cur_path.display());
+            continue;
+        };
+        if update {
+            std::fs::create_dir_all(&baselines).expect("create baselines dir");
+            // Promote the measured file as-is: it carries no `provisional`
+            // flag, so the gate becomes hard from the next run on.
+            std::fs::copy(&cur_path, &base_path).expect("copy baseline");
+            println!("[{group}] baseline updated from {}", cur_path.display());
+            continue;
+        }
+        let Some(base_doc) = read_doc(&base_path) else {
+            println!(
+                "[{group}] no baseline at {} — run bench-compare --update to record one",
+                base_path.display()
+            );
+            continue;
+        };
+        let report = compare_group(&base_doc, &cur_doc, min_ratio);
+        let tag = if report.provisional { " (provisional baseline — informational)" } else { "" };
+        println!(
+            "[{group}] {} rows compared, {} new, {} missing{tag}",
+            report.compared, report.added, report.removed
+        );
+        for r in &report.regressions {
+            println!(
+                "  REGRESSION {}: {:.1} -> {:.1} {} ({:.0}% of baseline, floor {:.0}%)",
+                r.name,
+                r.baseline,
+                r.current,
+                r.metric,
+                100.0 * r.ratio,
+                100.0 * min_ratio
+            );
+        }
+        if report.regressions.is_empty() {
+            println!("  ok: no row below {:.0}% of baseline throughput", 100.0 * min_ratio);
+        } else if !report.provisional {
+            failed = true;
+        }
+    }
+    if failed {
+        eprintln!("bench-compare: throughput regression past the {min_ratio:.2} floor");
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(provisional: bool, rows: &[(&str, f64, Option<f64>)]) -> Json {
+        let rows_json: Vec<String> = rows
+            .iter()
+            .map(|(name, median, tput)| {
+                let t = tput
+                    .map(|t| format!(",\"throughput_m_elems_s\":{t}"))
+                    .unwrap_or_default();
+                format!("{{\"name\":\"{name}\",\"median_ns\":{median}{t}}}")
+            })
+            .collect();
+        let p = if provisional { ",\"provisional\":true" } else { "" };
+        Json::parse(&format!(
+            "{{\"group\":\"g\",\"quick\":false{p},\"results\":[{}]}}",
+            rows_json.join(",")
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn regression_fires_below_floor_only() {
+        let base = doc(false, &[("g/a", 100.0, Some(100.0)), ("g/b", 100.0, Some(100.0))]);
+        // a: -30% -> regression; b: -10% -> fine.
+        let cur = doc(false, &[("g/a", 100.0, Some(70.0)), ("g/b", 100.0, Some(90.0))]);
+        let r = compare_group(&base, &cur, 0.8);
+        assert_eq!(r.compared, 2);
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].name, "g/a");
+        assert!((r.regressions[0].ratio - 0.7).abs() < 1e-9);
+        assert!(!r.provisional);
+    }
+
+    #[test]
+    fn median_time_fallback_when_no_throughput() {
+        let base = doc(false, &[("g/a", 100.0, None)]);
+        let cur = doc(false, &[("g/a", 150.0, None)]); // 50% slower
+        let r = compare_group(&base, &cur, 0.8);
+        assert_eq!(r.regressions.len(), 1);
+        assert_eq!(r.regressions[0].metric, "median_ns");
+        assert!((r.regressions[0].ratio - 100.0 / 150.0).abs() < 1e-9);
+        // faster is never a regression
+        let faster = doc(false, &[("g/a", 50.0, None)]);
+        assert!(compare_group(&base, &faster, 0.8).regressions.is_empty());
+    }
+
+    #[test]
+    fn provisional_baselines_report_but_never_gate() {
+        let base = doc(true, &[("g/a", 100.0, Some(100.0))]);
+        let cur = doc(false, &[("g/a", 100.0, Some(10.0))]); // 10x slower
+        let r = compare_group(&base, &cur, 0.8);
+        assert!(r.provisional);
+        assert_eq!(r.regressions.len(), 1, "still reported, just not fatal");
+    }
+
+    #[test]
+    fn unmatched_rows_counted_not_compared() {
+        let base = doc(false, &[("g/old", 100.0, Some(100.0)), ("g/same", 1.0, Some(1.0))]);
+        let cur = doc(false, &[("g/new", 100.0, Some(100.0)), ("g/same", 1.0, Some(1.0))]);
+        let r = compare_group(&base, &cur, 0.8);
+        assert_eq!((r.compared, r.added, r.removed), (1, 1, 1));
+        assert!(r.regressions.is_empty());
+    }
+
+    #[test]
+    fn malformed_rows_skipped() {
+        let base = doc(false, &[("g/a", 100.0, Some(100.0))]);
+        let cur = Json::parse(
+            "{\"results\":[{\"name\":\"g/a\"},{\"median_ns\":5},\
+             {\"name\":\"g/a\",\"median_ns\":0}]}",
+        )
+        .unwrap();
+        let r = compare_group(&base, &cur, 0.8);
+        assert_eq!(r.compared, 0);
+        assert_eq!(r.removed, 1);
+    }
+}

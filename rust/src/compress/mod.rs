@@ -44,11 +44,12 @@ pub use codec::{
 };
 pub use layout::{BudgetPolicy, LayoutSpec, Segment, SegmentLayout};
 pub use partition::{PartitionedCompressor, SegmentStats};
-pub use select::{Select, SelectScratch, Stage};
+pub use select::{AtopkOutcome, Select, SelectScratch, Stage};
 pub use spec::{PipelineSpec, Quant, StageSpec};
 
 use self::codec::CodecError;
 use crate::sparsify::SparseVec;
+use crate::util::chunkpool::ChunkPool;
 use crate::util::rng::Rng;
 
 /// What one `compress` call produced (per-round accounting).
@@ -81,8 +82,7 @@ impl CompressStats {
 
 /// A reusable gradient compressor: selection chain + wire formats +
 /// scratch buffers. In steady state (same dimension every round) a
-/// `compress` call allocates nothing beyond the output buffer's growth
-/// and the RNG sampling set.
+/// `compress` call allocates nothing beyond the output buffer's growth.
 #[derive(Debug, Clone)]
 pub struct GradientCompressor {
     select: Select,
@@ -90,6 +90,10 @@ pub struct GradientCompressor {
     indices: IndexFormat,
     scratch: SelectScratch,
     kept: SparseVec,
+    /// Pool for the O(d) selection scans. Defaults to serial; sized from
+    /// config (`--select-threads`) via [`Self::set_threads`]. The pool
+    /// size never changes the compressed bytes.
+    pool: ChunkPool,
 }
 
 impl GradientCompressor {
@@ -100,7 +104,17 @@ impl GradientCompressor {
             indices,
             scratch: SelectScratch::default(),
             kept: SparseVec::default(),
+            pool: ChunkPool::serial(),
         }
+    }
+
+    /// Size the selection chunk pool (clamped to >= 1 thread).
+    pub fn set_threads(&mut self, threads: usize) {
+        self.pool = ChunkPool::new(threads);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 
     /// Start a builder from a selection chain.
@@ -162,7 +176,7 @@ impl GradientCompressor {
     /// the wire, the rounding error of every sent coordinate re-enters the
     /// next round's memory instead of being silently dropped.
     pub fn compress(&mut self, w: &[f32], rng: &mut Rng, out: &mut Vec<u8>) -> CompressStats {
-        self.select.apply(w, rng, &mut self.scratch);
+        self.select.apply_pooled(w, rng, &mut self.scratch, &self.pool);
         let idx = &self.scratch.survivors;
         self.kept.clear(w.len());
         for &i in idx {
@@ -355,6 +369,28 @@ mod tests {
         assert_eq!(gc.compress(&w, &mut rng, &mut buf).nnz, 100);
         gc.set_select(Select::top_k(10));
         assert_eq!(gc.compress(&w, &mut rng, &mut buf).nnz, 10);
+    }
+
+    #[test]
+    fn select_threads_never_change_compressed_bytes() {
+        // The full fused path (atopk chain + codec) must emit identical
+        // bytes for every pool size — parallelism is invisible on the wire.
+        let w = randvec(200_000, 8);
+        let mut bufs: Vec<Vec<u8>> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut gc = GradientCompressor::builder(
+                Select::approx_top_r(2000, 4096).then_random_k(500),
+            )
+            .indices(IndexFormat::DeltaVarint)
+            .build();
+            gc.set_threads(threads);
+            assert_eq!(gc.threads(), threads);
+            let mut buf = Vec::new();
+            let stats = gc.compress(&w, &mut Rng::new(9), &mut buf);
+            assert_eq!(stats.nnz, 500);
+            bufs.push(buf);
+        }
+        assert!(bufs.windows(2).all(|p| p[0] == p[1]), "threads changed wire bytes");
     }
 
     #[test]

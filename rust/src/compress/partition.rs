@@ -122,6 +122,14 @@ impl PartitionedCompressor {
         &self.seg_stats
     }
 
+    /// Size every segment compressor's selection chunk pool (config's
+    /// `--select-threads`; never changes the frame bytes).
+    pub fn set_threads(&mut self, threads: usize) {
+        for gc in &mut self.inner {
+            gc.set_threads(threads);
+        }
+    }
+
     /// Re-split the round's total budget across segments (the warm-up
     /// schedule moves k every round; the adaptive policy also folds in the
     /// previous round's observed kept mass) and retarget every segment's

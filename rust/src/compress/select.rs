@@ -9,6 +9,7 @@
 //! Select::top_r(1024).then_random_k(256)   // rTop-k, literally
 //! Select::top_k(256)                       // Top-k   (Def. 1)
 //! Select::random_k(256)                    // Random-k (Def. 2)
+//! Select::approx_top_r(1024, 4096)         // sampled-threshold top-r
 //! Select::threshold(0.01)                  // Aji–Heafield magnitude cut
 //! Select::all()                            // Baseline (identity)
 //! ```
@@ -18,8 +19,17 @@
 //! survivor set. The survivor list lives in a caller-provided
 //! [`SelectScratch`] and is always sorted ascending on exit, so the codec
 //! can bit-pack it directly — no intermediate `SparseVec`.
+//!
+//! The O(d) first-stage scans (`atopk` filter, histogram build, max-abs)
+//! can run over a [`ChunkPool`] via [`Select::apply_pooled`]: fixed
+//! [`SELECT_CHUNK`]-element chunk boundaries, per-chunk outputs merged in
+//! chunk order, RNG draws strictly serial before the parallel pass — the
+//! selected bytes are identical for any thread count, including 1.
 
-use crate::sparsify::select::{partial_select_by_magnitude, threshold_for_rank, MagnitudeHistogram};
+use crate::sparsify::select::{
+    partial_select_by_magnitude, threshold_for_rank, HistScratch, MagnitudeHistogram,
+};
+use crate::util::chunkpool::{num_chunks, ChunkPool, SELECT_CHUNK};
 use crate::util::rng::Rng;
 
 /// One primitive selection stage.
@@ -36,17 +46,55 @@ pub enum Stage {
     /// Histogram-calibrated threshold targeting ~r survivors (the same
     /// log-binned CDF walk as the Pallas/XLA pipeline).
     ThresholdRank(usize),
+    /// Sampled-threshold approximate top-r (`atopk`), the Rust port of
+    /// `python/compile/kernels/topk_threshold.py`: estimate the r-th
+    /// magnitude from `sample` seeded draws, filter `|w_i| >= t` in one
+    /// chunked pass, then trim (exact quickselect over survivors) on
+    /// overshoot or fall back to exact top-r on undershoot. Always
+    /// returns exactly `min(r, d)` sorted survivors, and — because a
+    /// filter with >= r survivors necessarily used `t <=` the r-th
+    /// magnitude — the result is always a *valid* top-r set (ties broken
+    /// arbitrarily, as paper Def. 1 allows). Only the RNG draw sequence
+    /// and the speed differ from [`Stage::TopR`].
+    ApproxTopR { r: usize, sample: usize },
+}
+
+/// How the most recent first-stage `atopk` resolved (diagnostics only —
+/// every path yields a valid exact-size top-r set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AtopkOutcome {
+    /// The threshold filter kept exactly r survivors.
+    Exact,
+    /// Filter kept more than r; trimmed by quickselect. `filtered` is the
+    /// pre-trim survivor count.
+    Overshoot { filtered: usize },
+    /// Filter kept fewer than r; fell back to exact top-r over [0, d).
+    Undershoot { filtered: usize },
 }
 
 /// Reusable buffers for [`Select::apply`]. In steady state (same dim every
-/// round) applying a chain allocates nothing beyond the RNG's sampling
-/// set.
+/// round) applying a chain allocates nothing.
 #[derive(Debug, Clone, Default)]
 pub struct SelectScratch {
     /// The surviving coordinate indices, sorted ascending after `apply`.
     pub survivors: Vec<u32>,
     aux: Vec<u32>,
     vals: Vec<f32>,
+    /// Persistent index permutation for allocation-free `RandomK` draws.
+    perm: Vec<u32>,
+    /// Per-chunk survivor buffers for the chunked `atopk` filter.
+    chunks: Vec<Vec<u32>>,
+    /// Per-chunk partials for chunked histogram / max-abs passes.
+    hist: HistScratch,
+    last_atopk: Option<AtopkOutcome>,
+}
+
+impl SelectScratch {
+    /// Outcome of the most recent first-stage `atopk`, if the last chain
+    /// applied had one.
+    pub fn last_atopk(&self) -> Option<AtopkOutcome> {
+        self.last_atopk
+    }
 }
 
 /// A left-to-right chain of selection stages.
@@ -91,6 +139,13 @@ impl Select {
         Select { stages: vec![Stage::ThresholdRank(r)] }
     }
 
+    /// Sampled-threshold approximate top-r: exactly r survivors, a valid
+    /// top-r set, ~1 pass over the gradient instead of a quickselect over
+    /// a full index permutation.
+    pub fn approx_top_r(r: usize, sample: usize) -> Select {
+        Select { stages: vec![Stage::ApproxTopR { r, sample }] }
+    }
+
     /// The paper's operator (Def. 3) as an explicit composition.
     pub fn rtop_k(k: usize, r: usize) -> Select {
         Select::top_r(r).then_random_k(k)
@@ -118,6 +173,10 @@ impl Select {
         self.then(Stage::ThresholdRank(r))
     }
 
+    pub fn then_approx_top_r(self, r: usize, sample: usize) -> Select {
+        self.then(Stage::ApproxTopR { r, sample })
+    }
+
     pub fn stages(&self) -> &[Stage] {
         &self.stages
     }
@@ -137,6 +196,7 @@ impl Select {
                 Stage::TopR(r) => cap.min(r),
                 Stage::RandomK(k) => cap.min(k),
                 Stage::ThresholdRank(r) => cap.min(r),
+                Stage::ApproxTopR { r, .. } => cap.min(r),
             };
         }
         cap
@@ -159,6 +219,7 @@ impl Select {
                 Stage::RandomK(k) => format!("random{k}"),
                 Stage::ThresholdAbs(t) => format!("thresh{t}"),
                 Stage::ThresholdRank(r) => format!("threshrank{r}"),
+                Stage::ApproxTopR { r, sample } => format!("atop{r}@{sample}"),
             })
             .collect();
         parts.join(">")
@@ -167,11 +228,25 @@ impl Select {
     /// Run the chain over `w`. On return `scratch.survivors` holds the
     /// selected coordinate indices, sorted ascending, each < `w.len()`.
     pub fn apply(&self, w: &[f32], rng: &mut Rng, scratch: &mut SelectScratch) {
+        self.apply_pooled(w, rng, scratch, &ChunkPool::serial());
+    }
+
+    /// [`Select::apply`] with the O(d) first-stage scans fanned out over
+    /// `pool`. The survivor bytes are identical for every pool size —
+    /// parallelism only changes wall-clock time, never selection.
+    pub fn apply_pooled(
+        &self,
+        w: &[f32],
+        rng: &mut Rng,
+        scratch: &mut SelectScratch,
+        pool: &ChunkPool,
+    ) {
         scratch.survivors.clear();
+        scratch.last_atopk = None;
         let mut first = true;
         for &stage in &self.stages {
             if first {
-                apply_first(stage, w, rng, scratch);
+                apply_first(stage, w, rng, scratch, pool);
                 first = false;
             } else {
                 apply_rest(stage, w, rng, scratch);
@@ -184,35 +259,131 @@ impl Select {
     }
 }
 
+/// Exact top-r over the full range, into `s.survivors` (assumed clear).
+fn exact_first_top_r(w: &[f32], r: usize, s: &mut SelectScratch) {
+    s.aux.clear();
+    s.aux.extend(0..w.len() as u32);
+    partial_select_by_magnitude(w, &mut s.aux, r);
+    s.survivors.extend_from_slice(&s.aux[..r]);
+    s.survivors.sort_unstable();
+}
+
+/// First-stage `atopk`: sample → threshold → chunked filter → trim or
+/// exact fallback. See [`Stage::ApproxTopR`] for the contract.
+fn atopk_first(
+    w: &[f32],
+    r: usize,
+    sample: usize,
+    rng: &mut Rng,
+    s: &mut SelectScratch,
+    pool: &ChunkPool,
+) {
+    let d = w.len();
+    let r = r.min(d);
+    s.last_atopk = Some(AtopkOutcome::Exact);
+    if r == 0 {
+        return;
+    }
+    if r == d {
+        s.survivors.extend(0..d as u32);
+        return;
+    }
+    // 1) Threshold estimation from a seeded sample (with replacement).
+    //    Drawn serially from the pipeline Rng *before* the parallel pass,
+    //    so the draw sequence never depends on thread count.
+    let m = sample.max(1);
+    s.vals.clear();
+    for _ in 0..m {
+        s.vals.push(w[rng.index(d)].abs());
+    }
+    // 2) Pick the sample rank whose order statistic estimates the r-th
+    //    magnitude, biased ~3 sigma toward a *smaller* threshold: an
+    //    overshoot costs a quickselect over the (still tiny) survivor
+    //    set, while an undershoot costs the full exact fallback.
+    let p = r as f64 / d as f64;
+    let mean = p * m as f64;
+    let sd = (m as f64 * p * (1.0 - p)).sqrt();
+    let q = ((mean + 3.0 * sd + 1.0).ceil() as usize).clamp(1, m);
+    let vals = &mut s.vals[..];
+    vals.select_nth_unstable_by(q - 1, |a, b| {
+        b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let t = vals[q - 1];
+    // 3) One chunked filter pass: chunk c pushes its qualifying indices
+    //    (ascending) into its own slot; slots concatenated in chunk order
+    //    are globally ascending.
+    let nchunks = num_chunks(d);
+    pool.run_chunks(nchunks, &mut s.chunks, |c, buf| {
+        buf.clear();
+        let lo = c * SELECT_CHUNK;
+        let hi = (lo + SELECT_CHUNK).min(d);
+        for (j, &v) in w[lo..hi].iter().enumerate() {
+            if v.abs() >= t {
+                buf.push((lo + j) as u32);
+            }
+        }
+    });
+    let filtered: usize = s.chunks[..nchunks].iter().map(Vec::len).sum();
+    if filtered < r {
+        // Undershoot: t overestimated the r-th magnitude; the survivor
+        // set cannot contain a full top-r. Fall back to the exact path.
+        s.last_atopk = Some(AtopkOutcome::Undershoot { filtered });
+        exact_first_top_r(w, r, s);
+        return;
+    }
+    for buf in &s.chunks[..nchunks] {
+        s.survivors.extend_from_slice(buf);
+    }
+    if filtered > r {
+        // Overshoot: >= r elements have |w_i| >= t, so t <= the r-th
+        // magnitude and the survivors contain a full valid top-r set —
+        // trimming by quickselect is exact, not approximate.
+        s.last_atopk = Some(AtopkOutcome::Overshoot { filtered });
+        partial_select_by_magnitude(w, &mut s.survivors, r);
+        s.survivors.truncate(r);
+        s.survivors.sort_unstable();
+    }
+}
+
 /// First stage: candidates are the full range [0, d).
-fn apply_first(stage: Stage, w: &[f32], rng: &mut Rng, s: &mut SelectScratch) {
+fn apply_first(stage: Stage, w: &[f32], rng: &mut Rng, s: &mut SelectScratch, pool: &ChunkPool) {
     let d = w.len();
     match stage {
         Stage::All => s.survivors.extend(0..d as u32),
-        Stage::TopR(r) => {
-            let r = r.min(d);
-            s.aux.clear();
-            s.aux.extend(0..d as u32);
-            partial_select_by_magnitude(w, &mut s.aux, r);
-            s.survivors.extend_from_slice(&s.aux[..r]);
-            s.survivors.sort_unstable();
-        }
+        Stage::TopR(r) => exact_first_top_r(w, r.min(d), s),
         Stage::RandomK(k) => {
             let k = k.min(d);
-            let mut chosen = rng.sample_indices(d, k);
-            chosen.sort_unstable();
-            s.survivors.extend(chosen.iter().map(|&i| i as u32));
+            // Partial Fisher–Yates over a persistent permutation:
+            // allocation-free in steady state, and uniform regardless of
+            // the starting permutation (swaps preserve permutation-ness
+            // across calls).
+            if s.perm.len() != d {
+                s.perm.clear();
+                s.perm.extend(0..d as u32);
+            }
+            for j in 0..k {
+                let t = j + rng.index(d - j);
+                s.perm.swap(j, t);
+            }
+            s.survivors.extend_from_slice(&s.perm[..k]);
+            s.survivors.sort_unstable();
         }
         Stage::ThresholdAbs(t) => {
             s.survivors
                 .extend((0..d as u32).filter(|&i| w[i as usize].abs() >= t));
         }
         Stage::ThresholdRank(r) => {
-            let hist = MagnitudeHistogram::build(w, MagnitudeHistogram::DEFAULT_NBINS);
+            let hist = MagnitudeHistogram::build_chunked(
+                w,
+                MagnitudeHistogram::DEFAULT_NBINS,
+                pool,
+                &mut s.hist,
+            );
             let t = threshold_for_rank(&hist, r.min(d));
             s.survivors
                 .extend((0..d as u32).filter(|&i| w[i as usize].abs() >= t));
         }
+        Stage::ApproxTopR { r, sample } => atopk_first(w, r, sample, rng, s, pool),
     }
 }
 
@@ -233,11 +404,19 @@ fn apply_rest(stage: Stage, w: &[f32], rng: &mut Rng, s: &mut SelectScratch) {
         Stage::RandomK(k) => {
             let k = k.min(n);
             if k < n {
-                // Sample k survivor *positions*; positions sorted ascending
-                // keep the index order, so the in-place gather is safe.
-                let mut pos = rng.sample_indices(n, k);
-                pos.sort_unstable();
-                for (j, &p) in pos.iter().enumerate() {
+                // Draw k survivor *positions* by partial Fisher–Yates in
+                // the aux buffer (allocation-free in steady state), sort
+                // them ascending so index order is kept and the in-place
+                // gather only reads positions >= its write cursor.
+                s.aux.clear();
+                s.aux.extend(0..n as u32);
+                for j in 0..k {
+                    let t = j + rng.index(n - j);
+                    s.aux.swap(j, t);
+                }
+                s.aux[..k].sort_unstable();
+                for j in 0..k {
+                    let p = s.aux[j] as usize;
                     s.survivors[j] = s.survivors[p];
                 }
                 s.survivors.truncate(k);
@@ -251,6 +430,17 @@ fn apply_rest(stage: Stage, w: &[f32], rng: &mut Rng, s: &mut SelectScratch) {
             let hist = MagnitudeHistogram::build(&s.vals, MagnitudeHistogram::DEFAULT_NBINS);
             let t = threshold_for_rank(&hist, r);
             s.survivors.retain(|&i| w[i as usize].abs() >= t);
+        }
+        Stage::ApproxTopR { r, .. } => {
+            // Over an already-filtered survivor set sampling buys nothing
+            // (the set is small); degrade to exact top-r, which keeps the
+            // "exactly r sorted survivors" contract.
+            let r = r.min(n);
+            if r < n {
+                partial_select_by_magnitude(w, &mut s.survivors, r);
+                s.survivors.truncate(r);
+                s.survivors.sort_unstable();
+            }
         }
     }
 }
@@ -269,6 +459,21 @@ mod tests {
         let mut s = SelectScratch::default();
         sel.apply(w, rng, &mut s);
         s.survivors
+    }
+
+    /// A shuffled vector with guaranteed-distinct magnitudes 1..=n (exact
+    /// in f32 for n < 2^24), so the top-r set is unique and exact-vs-atopk
+    /// comparisons can never hinge on tie-breaks.
+    fn distinct_mag_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut w: Vec<f32> = (0..n)
+            .map(|i| (i + 1) as f32 * if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect();
+        for j in (1..n).rev() {
+            let t = rng.index(j + 1);
+            w.swap(j, t);
+        }
+        w
     }
 
     #[test]
@@ -340,6 +545,94 @@ mod tests {
         assert_eq!(Select::all().nominal_k(64), 64);
         assert_eq!(Select::threshold(0.1).nominal_k(64), 64); // no a-priori bound
         assert_eq!(sel.nominal_k(10), 10); // caps clamp at dim
+        assert_eq!(Select::approx_top_r(40, 256).nominal_k(1000), 40);
+        assert_eq!(Select::approx_top_r(40, 256).then_random_k(8).nominal_k(1000), 8);
+    }
+
+    #[test]
+    fn atopk_matches_exact_top_r_on_distinct_magnitudes() {
+        // Every outcome path (exact / overshoot-trim / undershoot-fallback)
+        // must yield a valid top-r, which is unique when magnitudes are
+        // distinct — so atopk output == exact top_r output, always.
+        let w = distinct_mag_vec(20_000, 10);
+        let mut scratch = Vec::new();
+        for r in [0usize, 1, 17, 1000, 19_999, 20_000] {
+            for sample in [1usize, 64, 4096] {
+                let got = apply(&Select::approx_top_r(r, sample), &w, &mut Rng::new(11));
+                let want = select_top_r(&w, r, &mut scratch);
+                assert_eq!(got, want, "r={r} sample={sample}");
+            }
+        }
+    }
+
+    #[test]
+    fn atopk_overshoot_trims_duplicate_magnitudes_to_exactly_r() {
+        // Adversarial all-equal magnitudes: any sampled threshold keeps
+        // everything, forcing the overshoot trim path deterministically.
+        let w = vec![1.0f32; 4096];
+        let mut s = SelectScratch::default();
+        Select::approx_top_r(64, 128).apply(&w, &mut Rng::new(12), &mut s);
+        assert_eq!(s.last_atopk(), Some(AtopkOutcome::Overshoot { filtered: 4096 }));
+        assert_eq!(s.survivors.len(), 64);
+        assert!(s.survivors.windows(2).all(|p| p[0] < p[1]), "sorted unique");
+    }
+
+    #[test]
+    fn atopk_exercises_undershoot_and_overshoot_and_stays_exact() {
+        // sample=1 makes the threshold a single random magnitude: rank < r
+        // -> undershoot (exact fallback), rank >= r -> overshoot (trim).
+        // Across seeds both paths must fire, and every result must still
+        // equal the exact top-r (unique: magnitudes are distinct).
+        let w = distinct_mag_vec(4096, 13);
+        let sel = Select::approx_top_r(2048, 1);
+        let mut scratch = Vec::new();
+        let want = select_top_r(&w, 2048, &mut scratch);
+        let (mut under, mut over) = (0usize, 0usize);
+        for seed in 0..64 {
+            let mut s = SelectScratch::default();
+            sel.apply(&w, &mut Rng::new(seed), &mut s);
+            assert_eq!(s.survivors, want, "seed={seed}");
+            match s.last_atopk() {
+                Some(AtopkOutcome::Undershoot { filtered }) => {
+                    assert!(filtered < 2048);
+                    under += 1;
+                }
+                Some(AtopkOutcome::Overshoot { filtered }) => {
+                    assert!(filtered > 2048);
+                    over += 1;
+                }
+                Some(AtopkOutcome::Exact) => {} // filter landed on r exactly
+                None => panic!("seed={seed}: atopk recorded no outcome"),
+            }
+        }
+        assert!(under > 0 && over > 0, "under={under} over={over}");
+    }
+
+    #[test]
+    fn atopk_is_bit_identical_across_thread_counts_and_reruns() {
+        // Spans several SELECT_CHUNK chunks with a ragged tail; the chunk
+        // merge order — not the thread schedule — defines the output.
+        let w = randvec(300_000, 14);
+        let sel = Select::approx_top_r(1500, 4096);
+        let mut runs: Vec<Vec<u32>> = Vec::new();
+        for threads in [1usize, 2, 8, 8] {
+            let pool = ChunkPool::new(threads);
+            let mut s = SelectScratch::default();
+            let mut rng = Rng::new(15);
+            sel.apply_pooled(&w, &mut rng, &mut s, &pool);
+            assert_eq!(s.survivors.len(), 1500);
+            runs.push(s.survivors.clone());
+        }
+        assert!(runs.windows(2).all(|p| p[0] == p[1]), "thread count changed selection");
+    }
+
+    #[test]
+    fn atopk_as_later_stage_degrades_to_exact_top_r() {
+        let w = randvec(1000, 16);
+        let mut rng = Rng::new(17);
+        let chain = apply(&Select::random_k(100).then_approx_top_r(10, 64), &w, &mut rng);
+        assert_eq!(chain.len(), 10);
+        assert!(chain.windows(2).all(|p| p[0] < p[1]));
     }
 
     #[test]
@@ -376,6 +669,40 @@ mod tests {
         }
         assert_eq!(s.survivors.capacity(), cap_survivors);
         assert_eq!(s.aux.capacity(), cap_aux);
+
+        // random_k (both first-stage and rest-stage) and atopk are also
+        // allocation-free in steady state: after one warm-up call every
+        // buffer keeps its capacity. atopk runs on an all-ties vector so
+        // its path (always overshoot-trim) is deterministic.
+        let ties = vec![1.0f32; 1000];
+        for (sel, w) in [
+            (Select::random_k(20), &w),
+            (Select::random_k(200).then_random_k(20), &w),
+            (Select::approx_top_r(50, 64), &ties),
+            (Select::approx_top_r(50, 64).then_random_k(20), &ties),
+        ] {
+            let mut s = SelectScratch::default();
+            sel.apply(w, &mut rng, &mut s);
+            let caps = (
+                s.survivors.capacity(),
+                s.aux.capacity(),
+                s.perm.capacity(),
+                s.chunks.capacity(),
+                s.vals.capacity(),
+            );
+            for _ in 0..10 {
+                sel.apply(w, &mut rng, &mut s);
+                assert_eq!(s.survivors.len(), sel.nominal_k(w.len()), "{}", sel.label());
+            }
+            let after = (
+                s.survivors.capacity(),
+                s.aux.capacity(),
+                s.perm.capacity(),
+                s.chunks.capacity(),
+                s.vals.capacity(),
+            );
+            assert_eq!(caps, after, "{} reallocated in steady state", sel.label());
+        }
     }
 
     #[test]
@@ -386,6 +713,7 @@ mod tests {
             Select::top_k(4),
             Select::random_k(4),
             Select::rtop_k(2, 4),
+            Select::approx_top_r(4, 8),
             Select::threshold(0.5),
         ] {
             let got = apply(&sel, &w, &mut Rng::new(0));

@@ -7,7 +7,7 @@
 //! pipeline := select [ "|" wire ]*          wire ∈ {f32, bf16, fixed, delta}
 //! select   := stage ( ">" stage )*
 //! stage    := name [ ":" key "=" value ( "," key "=" value )* ]
-//! name     := baseline | topk | randomk | rtopk | threshold | top | random
+//! name     := baseline | topk | randomk | rtopk | atopk | threshold | top | random
 //! value    := 256        absolute count
 //!           | 4k         multiple of the pipeline's k
 //!           | 0.001d     fraction of the gradient dimension
@@ -21,6 +21,7 @@
 //! "rtopk:r=4k,k=256|bf16|delta" pinned k=256, r=1024, bf16 values, delta-varint indices
 //! "top:r=1024>random:k=256"     the same selection written as an explicit chain
 //! "topk|bf16"                   top-k at the scheduled k, bf16 values
+//! "atopk:r=auto,sample=4096>random"  rTop-k with the sampled-threshold top-r
 //! "threshold:t=0.01"            fixed magnitude threshold
 //! ```
 //!
@@ -69,7 +70,12 @@ pub enum StageSpec {
     RandomK(Quant),
     ThresholdAbs(f32),
     ThresholdRank(Quant),
+    /// Sampled-threshold approximate top-r (`atopk:r=...,sample=...`).
+    ApproxTopR { r: Quant, sample: Quant },
 }
+
+/// Default `atopk` sample size when the spec omits `sample=`.
+pub const DEFAULT_ATOPK_SAMPLE: usize = 4096;
 
 /// A fully parsed pipeline specification: selection × value × index.
 #[derive(Debug, Clone, PartialEq)]
@@ -161,6 +167,9 @@ impl PipelineSpec {
                 StageSpec::RandomK(q) => Stage::RandomK(resolve(q)),
                 StageSpec::ThresholdAbs(t) => Stage::ThresholdAbs(*t),
                 StageSpec::ThresholdRank(q) => Stage::ThresholdRank(resolve(q)),
+                StageSpec::ApproxTopR { r, sample } => {
+                    Stage::ApproxTopR { r: resolve(r), sample: resolve(sample) }
+                }
             })
             .collect();
         Select::from_stages(stages)
@@ -183,6 +192,8 @@ impl PipelineSpec {
             [StageSpec::TopR(_)] => "Top-k".to_string(),
             [StageSpec::RandomK(_)] => "Random-k".to_string(),
             [StageSpec::TopR(_), StageSpec::RandomK(_)] => "rTop-k".to_string(),
+            [StageSpec::ApproxTopR { .. }] => "Top-k (approx)".to_string(),
+            [StageSpec::ApproxTopR { .. }, StageSpec::RandomK(_)] => "rTop-k (approx)".to_string(),
             [StageSpec::ThresholdAbs(_)] | [StageSpec::ThresholdRank(_)] => {
                 "Threshold".to_string()
             }
@@ -200,6 +211,11 @@ impl PipelineSpec {
                 return "rtopk".to_string()
             }
             [StageSpec::ThresholdRank(Quant::Sched)] => return "threshold".to_string(),
+            [StageSpec::ApproxTopR { r: Quant::Sched, sample: Quant::Count(s) }]
+                if *s == DEFAULT_ATOPK_SAMPLE =>
+            {
+                return "atopk".to_string()
+            }
             _ => {}
         }
         let parts: Vec<String> = self
@@ -213,6 +229,9 @@ impl PipelineSpec {
                 StageSpec::RandomK(q) => format!("random:k={}", q.token()),
                 StageSpec::ThresholdAbs(t) => format!("threshold:t={t}"),
                 StageSpec::ThresholdRank(q) => format!("threshold:rank={}", q.token()),
+                StageSpec::ApproxTopR { r, sample } => {
+                    format!("atopk:r={},sample={}", r.token(), sample.token())
+                }
             })
             .collect();
         parts.join(">")
@@ -331,6 +350,18 @@ fn parse_select(s: &str) -> anyhow::Result<Vec<StageSpec>> {
                 stages.push(StageSpec::TopR(r));
                 stages.push(StageSpec::RandomK(k));
             }
+            "atopk" | "atop-k" | "atop_k" | "atop" => {
+                let mut r = Quant::Sched;
+                let mut sample = Quant::Count(DEFAULT_ATOPK_SAMPLE);
+                for (key, value) in &params {
+                    match key.as_str() {
+                        "r" | "k" => r = parse_quant(value)?,
+                        "sample" | "s" => sample = parse_quant(value)?,
+                        other => anyhow::bail!("unknown parameter {other:?} on stage \"atopk\""),
+                    }
+                }
+                stages.push(StageSpec::ApproxTopR { r, sample });
+            }
             "threshold" | "thresh" => {
                 let mut spec = None;
                 for (key, value) in &params {
@@ -349,7 +380,8 @@ fn parse_select(s: &str) -> anyhow::Result<Vec<StageSpec>> {
                 stages.push(spec.unwrap_or(StageSpec::ThresholdRank(Quant::Sched)));
             }
             other => anyhow::bail!(
-                "unknown selection stage {other:?} (expected baseline|topk|randomk|rtopk|threshold)"
+                "unknown selection stage {other:?} \
+                 (expected baseline|topk|randomk|rtopk|atopk|threshold)"
             ),
         }
     }
@@ -447,11 +479,41 @@ mod tests {
             "topk:k=512|bf16",
             "threshold:t=0.5|delta",
             "top:r=100>random:k=10>threshold:t=0.001",
+            "atopk",
+            "atopk:r=4k,sample=8192|bf16|delta",
+            "atopk:r=auto,sample=2048>random",
         ] {
             let p = PipelineSpec::parse(s).unwrap();
             let again = PipelineSpec::parse(&p.canonical()).unwrap();
             assert_eq!(p, again, "spec {s:?} canonical {:?}", p.canonical());
         }
+    }
+
+    #[test]
+    fn atopk_spec_resolves_like_rtopk_with_sample() {
+        // Bare atopk: scheduled r, default sample.
+        let p = PipelineSpec::parse("atopk").unwrap();
+        let sel = p.select_for(100, 0.2, 1_000_000);
+        assert_eq!(
+            sel.stages(),
+            &[super::Stage::ApproxTopR { r: 100, sample: DEFAULT_ATOPK_SAMPLE }]
+        );
+        // The rtopk-shaped chain: auto r couples to k/ratio exactly like
+        // the exact pipeline, so atopk is a drop-in top-r replacement.
+        let p = PipelineSpec::parse("atopk:r=auto,sample=2048>random").unwrap();
+        let sel = p.select_for(100, 0.2, 1_000_000);
+        assert_eq!(
+            sel.stages(),
+            &[
+                super::Stage::ApproxTopR { r: 500, sample: 2048 },
+                super::Stage::RandomK(100),
+            ]
+        );
+        assert_eq!(p.method_label(), "rTop-k (approx)");
+        assert_eq!(
+            PipelineSpec::parse("atopk:r=4k,sample=8192").unwrap().method_label(),
+            "Top-k (approx)"
+        );
     }
 
     #[test]
@@ -475,6 +537,9 @@ mod tests {
             "topk:k=-5",
             "randomk:k=2d",
             "threshold:t=abc",
+            "atopk:q=3",
+            "atopk:sample=0",
+            "atopk:r=",
         ] {
             assert!(PipelineSpec::parse(s).is_err(), "{s:?} should fail");
         }

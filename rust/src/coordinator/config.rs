@@ -134,6 +134,12 @@ pub struct TrainConfig {
     /// the only mode the presets construct — is the fixed-membership path,
     /// bit-identical to the pre-federation trajectory (DESIGN.md §9).
     pub federation: Option<FederationConfig>,
+    /// Worker-side selection chunk-pool size (CLI `--select-threads`).
+    /// Drives the O(d) selection scans (`atopk` filter, histogram,
+    /// max-abs) over scoped threads; 1 (the default) is the serial path.
+    /// Determinism contract: the compressed bytes are identical for any
+    /// value — only wall-clock time changes (DESIGN.md §11).
+    pub select_threads: usize,
 }
 
 impl TrainConfig {
@@ -160,6 +166,7 @@ impl TrainConfig {
             eval_every: 10,
             seed: 0xD15C0,
             federation: None,
+            select_threads: 1,
         }
     }
 
@@ -186,6 +193,7 @@ impl TrainConfig {
             eval_every: 20,
             seed: 0x17B,
             federation: None,
+            select_threads: 1,
         }
     }
 
@@ -288,16 +296,20 @@ impl TrainConfig {
     /// with N > dim, or an explicit layout whose total ≠ dim).
     pub fn uplink_compressor(&self, k: usize, dim: usize) -> anyhow::Result<UplinkCompressor> {
         if self.layout.is_flat() {
-            return Ok(UplinkCompressor::Flat(self.compressor_for(k, dim)));
+            let mut gc = self.compressor_for(k, dim);
+            gc.set_threads(self.select_threads);
+            return Ok(UplinkCompressor::Flat(gc));
         }
         let layout = self.layout.resolve(dim)?;
-        Ok(UplinkCompressor::Partitioned(Box::new(PartitionedCompressor::new(
+        let mut pc = PartitionedCompressor::new(
             &self.pipeline,
             layout,
             self.budget,
             k,
             self.subsample_ratio,
-        ))))
+        );
+        pc.set_threads(self.select_threads);
+        Ok(UplinkCompressor::Partitioned(Box::new(pc)))
     }
 
     /// Human-readable method label, e.g. "rTop-k @ 99.9%".
@@ -319,6 +331,7 @@ impl TrainConfig {
         // The leader computes `round % eval_every`; 0 would be a division
         // by zero panic mid-run rather than a config error.
         anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
+        anyhow::ensure!(self.select_threads >= 1, "select_threads must be >= 1");
         anyhow::ensure!(
             self.keep_frac > 0.0 && self.keep_frac <= 1.0,
             "keep_frac must be in (0, 1], got {}",
@@ -587,6 +600,20 @@ mod tests {
         }
         // layout that cannot cover the model dim fails at build time
         assert!(cfg.uplink_compressor(1, 3).is_err(), "4 segments over dim 3");
+    }
+
+    #[test]
+    fn select_threads_flow_into_uplink_compressors() {
+        let mut cfg = TrainConfig::image_default(4, SparsifierKind::TopK, 0.99);
+        assert_eq!(cfg.select_threads, 1, "serial by default");
+        cfg.select_threads = 8;
+        assert!(cfg.validate().is_ok());
+        match cfg.uplink_compressor(10, 100).unwrap() {
+            UplinkCompressor::Flat(gc) => assert_eq!(gc.threads(), 8),
+            UplinkCompressor::Partitioned(_) => panic!("expected flat"),
+        }
+        cfg.select_threads = 0;
+        assert!(cfg.validate().is_err(), "0 threads is a config error");
     }
 
     #[test]

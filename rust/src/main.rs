@@ -118,6 +118,10 @@ SUBCOMMANDS
                 --client-ef resident|evict[:cap=N]|off
                                          per-client error-feedback store
                                          (default evict, cap 2x cohort)
+                --select-threads N       worker-side selection chunk pool
+                                         (default 1 = serial); compressed
+                                         bytes are identical for any N —
+                                         only wall-clock time changes
                 --artifacts DIR --out results/train
   experiment  regenerate a paper table/figure
                 --id table1..table5|fig2..fig6|figT1|figT2|figS1|figS2|figS3|figS4|all
@@ -184,6 +188,9 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
         cfg.mode = RoundMode::Federated;
     }
     cfg.warmup_epochs = args.f64_or("warmup-epochs", cfg.warmup_epochs)?;
+    // Selection chunk-pool size: explicit config only, never ambient
+    // machine parallelism (the determinism-threads lint contract).
+    cfg.select_threads = args.usize_or("select-threads", cfg.select_threads)?;
     if !args.bool_or("error-feedback", true)? {
         cfg.error_feedback = false;
     }

@@ -35,7 +35,9 @@ pub use error_feedback::ErrorFeedback;
 pub use operator::{CompressionOperator, NoCompression, SparsifierKind};
 pub use randomk::RandomK;
 pub use rtopk::RTopK;
-pub use select::{select_top_r, threshold_for_rank, MagnitudeHistogram};
+pub use select::{
+    max_abs_chunked, select_top_r, threshold_for_rank, HistScratch, MagnitudeHistogram,
+};
 pub use threshold::Threshold;
 pub use topk::TopK;
 

@@ -11,6 +11,15 @@
 //!   is the same algorithm as the Layer-1 Pallas kernels
 //!   (`python/compile/kernels/topk_threshold.py`), kept in lockstep so the
 //!   XLA-accelerated path and the pure-Rust path agree.
+//!
+//! Both scan passes also come in chunked variants ([`max_abs_chunked`],
+//! [`MagnitudeHistogram::build_chunked`]) driven by a
+//! [`ChunkPool`](crate::util::chunkpool::ChunkPool): per-chunk partials
+//! merged in chunk order, bit-identical to the serial pass for any
+//! thread count (f32 max is exact under any association; per-bin u64
+//! counts are summed).
+
+use crate::util::chunkpool::{num_chunks, ChunkPool, SELECT_CHUNK};
 
 /// Partition `idx` so its `r` largest-|w| candidates occupy `idx[..r]`
 /// (quickselect; O(len) expected, in place, allocation-free). This is the
@@ -41,6 +50,33 @@ pub fn select_top_r(w: &[f32], r: usize, scratch: &mut Vec<u32>) -> Vec<u32> {
     let mut out: Vec<u32> = scratch[..r].to_vec();
     out.sort_unstable();
     out
+}
+
+/// Reusable per-chunk partials for the chunked scan passes. One per
+/// compressor, threaded through `SelectScratch`, so steady-state calls
+/// allocate nothing.
+#[derive(Debug, Clone, Default)]
+pub struct HistScratch {
+    max_slots: Vec<f32>,
+    count_slots: Vec<Vec<u64>>,
+}
+
+/// max|w_i| over fixed [`SELECT_CHUNK`] chunks. Per-chunk maxima land in
+/// `slots` (one per chunk) and are merged in chunk order; f32 max is
+/// exact, so the result equals the serial pass bit-for-bit regardless of
+/// thread count.
+pub fn max_abs_chunked(w: &[f32], pool: &ChunkPool, slots: &mut Vec<f32>) -> f32 {
+    let nchunks = num_chunks(w.len());
+    pool.run_chunks(nchunks, slots, |c, slot| {
+        let lo = c * SELECT_CHUNK;
+        let hi = (lo + SELECT_CHUNK).min(w.len());
+        let mut mx = 0f32;
+        for &v in &w[lo..hi] {
+            mx = mx.max(v.abs());
+        }
+        *slot = mx;
+    });
+    slots[..nchunks].iter().fold(0f32, |a, &b| a.max(b))
 }
 
 /// Streaming log-spaced magnitude histogram (matches the Pallas kernel's
@@ -84,6 +120,44 @@ impl MagnitudeHistogram {
             let idx = ((t * nbins) as i64).clamp(0, self.counts.len() as i64 - 1) as usize;
             self.counts[idx] += 1;
         }
+    }
+
+    /// Chunked [`MagnitudeHistogram::build`]: parallel max-abs pass, then
+    /// a parallel binning pass with one `u64` count vector per chunk,
+    /// summed in chunk order. Bin assignment is per-element and the sums
+    /// are exact integer adds, so the result is identical to the serial
+    /// build for any thread count.
+    pub fn build_chunked(
+        w: &[f32],
+        nbins: usize,
+        pool: &ChunkPool,
+        scratch: &mut HistScratch,
+    ) -> Self {
+        let mx = max_abs_chunked(w, pool, &mut scratch.max_slots);
+        let log_hi = (mx.max(1e-38)).ln();
+        let log_lo = log_hi - Self::DEFAULT_SPAN;
+        let mut h = MagnitudeHistogram { counts: vec![0; nbins], log_lo, log_hi };
+        let nchunks = num_chunks(w.len());
+        let nbins_f = nbins as f32;
+        let inv_span = 1.0 / (log_hi - log_lo).max(1e-12);
+        pool.run_chunks(nchunks, &mut scratch.count_slots, |c, counts| {
+            counts.clear();
+            counts.resize(nbins, 0);
+            let lo = c * SELECT_CHUNK;
+            let hi = (lo + SELECT_CHUNK).min(w.len());
+            for &v in &w[lo..hi] {
+                let a = v.abs().max(1e-45).ln();
+                let t = (a - log_lo) * inv_span;
+                let idx = ((t * nbins_f) as i64).clamp(0, nbins as i64 - 1) as usize;
+                counts[idx] += 1;
+            }
+        });
+        for counts in &scratch.count_slots[..nchunks] {
+            for (acc, &c) in h.counts.iter_mut().zip(counts) {
+                *acc += c;
+            }
+        }
+        h
     }
 
     /// Lower edge (magnitude) of bin `i`.
@@ -200,6 +274,38 @@ mod tests {
                 "r={r} selected={selected} boundary={boundary_bin}"
             );
         }
+    }
+
+    #[test]
+    fn chunked_passes_match_serial_for_any_thread_count() {
+        // Spans multiple SELECT_CHUNK chunks with a ragged tail.
+        let w = randvec(3 * SELECT_CHUNK + 1234, 7);
+        let serial = MagnitudeHistogram::build(&w, 128);
+        let serial_max = w.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        for threads in [1usize, 2, 8] {
+            let pool = ChunkPool::new(threads);
+            let mut scratch = HistScratch::default();
+            let mx = max_abs_chunked(&w, &pool, &mut scratch.max_slots);
+            assert_eq!(mx.to_bits(), serial_max.to_bits(), "threads={threads}");
+            let h = MagnitudeHistogram::build_chunked(&w, 128, &pool, &mut scratch);
+            assert_eq!(h.counts, serial.counts, "threads={threads}");
+            assert_eq!(h.log_lo.to_bits(), serial.log_lo.to_bits());
+            assert_eq!(h.log_hi.to_bits(), serial.log_hi.to_bits());
+            // Steady state: a second build reuses the same scratch.
+            let caps = (scratch.max_slots.capacity(), scratch.count_slots.capacity());
+            let h2 = MagnitudeHistogram::build_chunked(&w, 128, &pool, &mut scratch);
+            assert_eq!(h2.counts, serial.counts);
+            assert_eq!(caps, (scratch.max_slots.capacity(), scratch.count_slots.capacity()));
+        }
+    }
+
+    #[test]
+    fn chunked_passes_handle_empty_input() {
+        let pool = ChunkPool::new(4);
+        let mut scratch = HistScratch::default();
+        assert_eq!(max_abs_chunked(&[], &pool, &mut scratch.max_slots), 0.0);
+        let h = MagnitudeHistogram::build_chunked(&[], 16, &pool, &mut scratch);
+        assert_eq!(h.counts.iter().sum::<u64>(), 0);
     }
 
     #[test]

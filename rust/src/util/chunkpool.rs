@@ -1,0 +1,156 @@
+//! Deterministic scoped-thread chunk pool for hot-path selection scans.
+//!
+//! The selection kernels (`atopk` filter, magnitude histogram, max-abs)
+//! walk the gradient in fixed-size chunks of [`SELECT_CHUNK`] elements.
+//! This pool fans those chunks out over a caller-chosen number of scoped
+//! threads (`std::thread::scope` — the image vendors no rayon) with one
+//! output slot per *chunk*, not per thread, and the caller merges slots
+//! in chunk order. Because chunk boundaries are fixed and every chunk
+//! writes only its own slot, the merged result is bit-identical for any
+//! thread count, including 1.
+//!
+//! The pool size flows from config (`--select-threads`); round logic
+//! must never read ambient machine parallelism (the `rtopk-lint`
+//! `determinism-threads` rule enforces this).
+
+/// Fixed chunk width for all parallel selection scans. Mirrors the
+/// Pallas prototype's block size; must never depend on thread count.
+pub const SELECT_CHUNK: usize = 65_536;
+
+/// Number of [`SELECT_CHUNK`] chunks covering `len` elements.
+pub fn num_chunks(len: usize) -> usize {
+    len.div_ceil(SELECT_CHUNK)
+}
+
+/// A fixed-size worker pool over chunked scans. Holds no OS resources:
+/// threads are scoped per call, so the pool is trivially `Copy` and
+/// cheap to embed in every compressor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkPool {
+    threads: usize,
+}
+
+impl Default for ChunkPool {
+    fn default() -> Self {
+        ChunkPool::serial()
+    }
+}
+
+impl ChunkPool {
+    /// Pool with `threads` workers (clamped to at least 1).
+    pub fn new(threads: usize) -> ChunkPool {
+        ChunkPool { threads: threads.max(1) }
+    }
+
+    /// Single-threaded pool: `run_chunks` degenerates to a plain loop.
+    pub fn serial() -> ChunkPool {
+        ChunkPool { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(chunk_index, &mut slot)` for every chunk in `0..nchunks`,
+    /// each chunk writing only its own slot. `slots` is grown (never
+    /// shrunk) to `nchunks` so steady-state calls are allocation-free;
+    /// slot contents are whatever the previous call left — `f` must
+    /// fully overwrite or clear its slot.
+    ///
+    /// Chunks are assigned to threads as contiguous blocks in index
+    /// order, but since each chunk's output lands in its own slot the
+    /// assignment is unobservable: merging `slots[..nchunks]` in order
+    /// yields the same bytes for any thread count.
+    pub fn run_chunks<T, F>(&self, nchunks: usize, slots: &mut Vec<T>, f: F)
+    where
+        T: Send + Default,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        if slots.len() < nchunks {
+            slots.resize_with(nchunks, T::default);
+        }
+        let slots = &mut slots[..nchunks];
+        let threads = self.threads.min(nchunks);
+        if threads <= 1 {
+            for (c, slot) in slots.iter_mut().enumerate() {
+                f(c, slot);
+            }
+            return;
+        }
+        let base = nchunks / threads;
+        let extra = nchunks % threads;
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = slots;
+            let mut start = 0usize;
+            for t in 0..threads {
+                let len = base + usize::from(t < extra);
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+                rest = tail;
+                let first = start;
+                scope.spawn(move || {
+                    for (j, slot) in head.iter_mut().enumerate() {
+                        f(first + j, slot);
+                    }
+                });
+                start += len;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Each chunk records its own index; the merged result must be the
+    /// identity permutation for any thread count.
+    fn indices_seen(pool: &ChunkPool, nchunks: usize) -> Vec<usize> {
+        let mut slots: Vec<usize> = Vec::new();
+        pool.run_chunks(nchunks, &mut slots, |c, slot| *slot = c + 1);
+        slots[..nchunks].iter().map(|&v| v - 1).collect()
+    }
+
+    #[test]
+    fn every_chunk_runs_exactly_once_in_slot_order() {
+        for threads in [1, 2, 3, 8, 64] {
+            let pool = ChunkPool::new(threads);
+            for nchunks in [0, 1, 2, 7, 8, 9, 100] {
+                let want: Vec<usize> = (0..nchunks).collect();
+                assert_eq!(
+                    indices_seen(&pool, nchunks),
+                    want,
+                    "threads={threads} nchunks={nchunks}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn slots_grow_but_never_shrink() {
+        let pool = ChunkPool::new(4);
+        let mut slots: Vec<u32> = Vec::new();
+        pool.run_chunks(10, &mut slots, |c, s| *s = c as u32);
+        assert_eq!(slots.len(), 10);
+        pool.run_chunks(3, &mut slots, |c, s| *s = 100 + c as u32);
+        assert_eq!(slots.len(), 10, "later smaller runs must not shrink slots");
+        assert_eq!(&slots[..3], &[100, 101, 102]);
+        assert_eq!(&slots[3..], &[3, 4, 5, 6, 7, 8, 9], "untouched slots keep old contents");
+    }
+
+    #[test]
+    fn thread_count_clamps_to_at_least_one() {
+        assert_eq!(ChunkPool::new(0).threads(), 1);
+        assert_eq!(ChunkPool::default().threads(), 1);
+        assert_eq!(ChunkPool::new(8).threads(), 8);
+    }
+
+    #[test]
+    fn chunk_math_covers_the_range() {
+        assert_eq!(num_chunks(0), 0);
+        assert_eq!(num_chunks(1), 1);
+        assert_eq!(num_chunks(SELECT_CHUNK), 1);
+        assert_eq!(num_chunks(SELECT_CHUNK + 1), 2);
+        assert_eq!(num_chunks(10 * SELECT_CHUNK), 10);
+    }
+}

@@ -9,8 +9,10 @@
 //! * [`cli`] — argument parsing (replaces `clap`)
 //! * [`bench`] — micro-benchmark harness (replaces `criterion`)
 //! * [`proptest`] — property-test driver (replaces `proptest`)
+//! * [`chunkpool`] — deterministic scoped-thread chunk pool (replaces `rayon`)
 
 pub mod bench;
+pub mod chunkpool;
 pub mod cli;
 pub mod json;
 pub mod proptest;

@@ -71,6 +71,39 @@ fn rtopk_beats_randomk_at_same_budget() {
 }
 
 #[test]
+fn atopk_chain_tracks_exact_rtopk_convergence() {
+    // The approximate chain (atopk:r=auto>random, multi-threaded select)
+    // is exact in the Definition-1 sense — only tie-breaks and the RNG
+    // stream differ from rtopk — so a full training run must land in the
+    // same convergence regime as the exact pipeline, and error feedback
+    // absorbs whichever tie-set representative each round picks.
+    let dim = 512;
+    let exact_cfg = quick_cfg(SparsifierKind::RTopK, 0.98, 60);
+    let mut approx_cfg = exact_cfg.clone();
+    approx_cfg.set_pipeline("atopk:r=auto,sample=2048>random").unwrap();
+    approx_cfg.select_threads = 4;
+    let model = MockModel::new(dim, 0.05, 42);
+    let run = |cfg: &TrainConfig, tag: &str| {
+        coordinator::run(
+            cfg,
+            tag,
+            model.init_params(),
+            mock_factory(dim, 0.05),
+            Box::new(|| Ok(None)),
+        )
+        .unwrap()
+    };
+    let d0 = model.distance_sq(&model.init_params());
+    let d_exact = model.distance_sq(&run(&exact_cfg, "rtopk-exact").params);
+    let d_approx = model.distance_sq(&run(&approx_cfg, "rtopk-atopk").params);
+    assert!(d_approx < 0.5 * d0, "atopk chain failed to converge: {d0} -> {d_approx}");
+    assert!(
+        d_approx < 3.0 * d_exact + 1e-3,
+        "atopk chain ({d_approx}) drifted far from exact rtopk ({d_exact})"
+    );
+}
+
+#[test]
 fn error_feedback_improves_topk() {
     let dim = 512;
     let mut with = quick_cfg(SparsifierKind::TopK, 0.99, 80);

@@ -11,7 +11,9 @@ use rtopk::coordinator::{CohortSampler, FederationConfig, SamplerKind};
 use rtopk::data::PopulationSharder;
 use rtopk::compress::{
     BudgetPolicy, GradientCompressor, PartitionedCompressor, PipelineSpec, SegmentLayout, Select,
+    SelectScratch,
 };
+use rtopk::util::chunkpool::ChunkPool;
 use rtopk::prop_assert;
 use rtopk::sparsify::{
     l2_sq, select_top_r, CompressionOperator, ErrorFeedback, NoCompression, RTopK, RandomK,
@@ -206,9 +208,12 @@ fn prop_pipeline_roundtrip_bit_exact_all_stage_combos() {
         // k == 0 yields an empty message; k near dim exercises the
         // automatic bitmap index layout.
         let k = rng.index(dim.min(2048) + 1);
-        let select = match rng.index(3) {
+        let select = match rng.index(5) {
             0 => Select::top_k(k),
             1 => Select::random_k(k),
+            2 => Select::approx_top_r(k, 1 + rng.index(256)),
+            3 => Select::approx_top_r((2 * k).min(dim).max(1), 1 + rng.index(256))
+                .then_random_k(k),
             _ => Select::top_r((2 * k).min(dim).max(1)).then_random_k(k),
         };
         for values in [ValueFormat::F32, ValueFormat::Bf16] {
@@ -240,6 +245,77 @@ fn prop_pipeline_roundtrip_bit_exact_all_stage_combos() {
                         "{values:?}/{indices:?}: val[{j}] {got} != {expect}"
                     );
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_atopk_is_exact_and_thread_invariant() {
+    // atopk must (a) return exactly min(r, d) sorted unique indices whose
+    // magnitudes form a valid top-r set — min kept ≥ max dropped, the
+    // paper's Definition-1 bar with ties broken arbitrarily — and (b)
+    // produce bit-identical survivors for every `--select-threads` value,
+    // because chunk boundaries, RNG draw order, and the chunk-order merge
+    // are all independent of the pool size.
+    check("atopk-exact-thread-invariant", default_cases(), |rng| {
+        let dim = 1 + rng.index(100_000);
+        let r = rng.index(dim.min(4_096) + 1);
+        let sample = 1 + rng.index(8_192);
+        let w: Vec<f32> = match rng.index(3) {
+            0 => (0..dim).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            1 => vec![1.0; dim], // all-ties: the filter keeps everything
+            _ => (0..dim)
+                .map(|_| if rng.bernoulli(0.5) { 0.0 } else { rng.normal_f32(0.0, 5.0) })
+                .collect(),
+        };
+        let sel = Select::approx_top_r(r, sample);
+        let mut reference: Vec<u32> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            // identical RNG stream per pool size via clone
+            let mut run_rng = rng.clone();
+            let mut s = SelectScratch::default();
+            sel.apply_pooled(&w, &mut run_rng, &mut s, &ChunkPool::new(threads));
+            if threads == 1 {
+                reference = s.survivors.clone();
+                prop_assert!(
+                    reference.len() == r.min(dim),
+                    "expected {} survivors, got {} (dim {dim}, sample {sample})",
+                    r.min(dim),
+                    reference.len()
+                );
+                prop_assert!(
+                    reference.windows(2).all(|p| p[0] < p[1]),
+                    "survivors not sorted/unique (dim {dim}, r {r})"
+                );
+                let mut kept = vec![false; dim];
+                for &i in &reference {
+                    kept[i as usize] = true;
+                }
+                let min_kept = reference
+                    .iter()
+                    .map(|&i| w[i as usize].abs())
+                    .fold(f32::INFINITY, f32::min);
+                let max_dropped = w
+                    .iter()
+                    .zip(&kept)
+                    .filter(|&(_, &k)| !k)
+                    .map(|(v, _)| v.abs())
+                    .fold(0.0f32, f32::max);
+                prop_assert!(
+                    min_kept >= max_dropped,
+                    "not a valid top-{r}: min kept {min_kept} < max dropped {max_dropped} \
+                     (dim {dim}, sample {sample}, outcome {:?})",
+                    s.last_atopk()
+                );
+            } else {
+                prop_assert!(
+                    s.survivors == reference,
+                    "threads={threads} diverged from serial (dim {dim}, r {r}, \
+                     sample {sample}, outcome {:?})",
+                    s.last_atopk()
+                );
             }
         }
         Ok(())
@@ -451,7 +527,7 @@ fn prop_partitioned_roundtrip_random_layouts_all_stage_combos() {
                 .collect(),
         };
         let k = rng.index(dim.min(1024) + 1);
-        let select = ["topk", "randomk", "rtopk"][rng.index(3)];
+        let select = ["topk", "randomk", "rtopk", "atopk:r=2k,sample=256>random"][rng.index(4)];
         let policy = [BudgetPolicy::Proportional, BudgetPolicy::Uniform, BudgetPolicy::Adaptive]
             [rng.index(3)];
         for values in [ValueFormat::F32, ValueFormat::Bf16] {
@@ -502,7 +578,7 @@ fn prop_partitioned_single_segment_byte_identical_to_flat() {
     check("partitioned-flat-identity", default_cases() / 2, |rng| {
         let dim = 1 + rng.index(10_000);
         let k = rng.index(dim.min(512) + 1).max(1);
-        let select = ["topk", "randomk", "rtopk"][rng.index(3)];
+        let select = ["topk", "randomk", "rtopk", "atopk:r=2k,sample=256>random"][rng.index(4)];
         for values in [ValueFormat::F32, ValueFormat::Bf16] {
             for indices in [IndexFormat::FixedWidth, IndexFormat::DeltaVarint] {
                 let spec = spec_with_wire(select, values, indices);
