@@ -1,0 +1,117 @@
+//! Wire-transport benchmarks: broadcast fan-out and uplink frame
+//! throughput over real loopback sockets, at n ∈ {32, 256, 1024} workers
+//! (quick mode trims to {32, 256} for CI).
+//!
+//! The evented reactor rows are the gate: ONE I/O thread must sustain the
+//! fan-out at every size. The legacy thread-per-connection bridge is
+//! measured at n=32 only — it spawns 4 OS threads per link, so the large
+//! sizes would benchmark the scheduler, not the wire.
+
+use std::sync::Arc;
+
+use rtopk::comms::evented::evented_star;
+use rtopk::comms::tcp::tcp_star;
+use rtopk::comms::{LeaderEndpoints, Message, WorkerEndpoints};
+use rtopk::util::bench::{bb, Bench};
+
+/// Encoded-frame stand-ins: a broadcast-sized delta payload and a
+/// worker-update-sized sparse payload (realistic frame shapes; the codec
+/// has its own bench group).
+const BCAST_BYTES: usize = 32 << 10;
+const UPLINK_BYTES: usize = 1 << 10;
+
+fn star_for(label: &str, n: usize) -> Option<(LeaderEndpoints, Vec<WorkerEndpoints>)> {
+    let build = match label {
+        "evented" => evented_star,
+        _ => tcp_star,
+    };
+    match build(n) {
+        Ok(x) => Some(x),
+        // e.g. a tight RLIMIT_NOFILE at n=1024 (2n sockets): report the
+        // skipped size instead of failing the whole group
+        Err(e) => {
+            println!("    (skipping {label}/n={n}: {e:#})");
+            None
+        }
+    }
+}
+
+/// One iteration = ONE shared frame fanned out to all n workers and
+/// drained from every worker inbox (elems = n, so throughput reads as
+/// deliveries/sec).
+fn bench_broadcast(bench: &mut Bench, label: &str, n: usize) {
+    let Some((leader, workers)) = star_for(label, n) else { return };
+    let payload: Arc<[u8]> = vec![0xA5u8; BCAST_BYTES].into();
+    let mut round = 0u64;
+    bench.run_elems(&format!("bcast_{label}/n={n}"), Some(n), || {
+        round += 1;
+        leader.broadcast_shared(round, payload.clone()).expect("broadcast");
+        for w in &workers {
+            let msg = w.from_leader.recv().expect("worker inbox");
+            bb(matches!(msg, Message::ParamsDelta { .. }));
+        }
+    });
+    shutdown(leader, workers);
+}
+
+/// One iteration = every worker sends one update frame and the leader
+/// drains all n (elems = n, so throughput reads as frames/sec into the
+/// root).
+fn bench_uplink(bench: &mut Bench, label: &str, n: usize) {
+    let Some((leader, workers)) = star_for(label, n) else { return };
+    let payload = vec![0x5Au8; UPLINK_BYTES];
+    let mut round = 0u64;
+    bench.run_elems(&format!("uplink_{label}/n={n}"), Some(n), || {
+        round += 1;
+        for w in &workers {
+            w.to_leader
+                .send(Message::SparseUpdate {
+                    round,
+                    worker: w.id,
+                    payload: payload.clone(),
+                    loss: 0.0,
+                    examples: 1,
+                    mem_norm: 0.0,
+                    participants: 1,
+                })
+                .expect("worker send");
+        }
+        for _ in 0..n {
+            bb(leader.recv().expect("leader inbox"));
+        }
+    });
+    shutdown(leader, workers);
+}
+
+/// Orderly teardown between topologies: Shutdown down every link, drain
+/// each worker to its Shutdown, then drop both ends so the socket threads
+/// (or reactor links) retire before the next group starts.
+fn shutdown(leader: LeaderEndpoints, workers: Vec<WorkerEndpoints>) {
+    for tx in &leader.to_workers {
+        let _ = tx.send(Message::Shutdown);
+    }
+    for w in &workers {
+        while let Ok(m) = w.from_leader.recv() {
+            if matches!(m, Message::Shutdown) {
+                break;
+            }
+        }
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new("transport");
+    let quick = std::env::var("RTOPK_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let sizes: &[usize] = if quick { &[32, 256] } else { &[32, 256, 1024] };
+    for &n in sizes {
+        bench_broadcast(&mut bench, "evented", n);
+    }
+    for &n in sizes {
+        bench_uplink(&mut bench, "evented", n);
+    }
+    // legacy A/B reference at the small size only
+    bench_broadcast(&mut bench, "legacy", 32);
+    bench_uplink(&mut bench, "legacy", 32);
+    let path = bench.write_json().expect("bench json");
+    println!("bench json: {}", path.display());
+}

@@ -1,0 +1,3 @@
+pub fn write_len_prefix(out: &mut Vec<u8>, len: u32) {
+    out.extend_from_slice(&len.to_le_bytes());
+}

@@ -1,0 +1,3 @@
+pub fn write_len_prefix(out: &mut Vec<u8>, len: usize) {
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+}

@@ -1,0 +1,4 @@
+pub fn write_tag(out: &mut Vec<u8>, tag: u16) {
+    // lint:allow(wire-cast): low byte after the & 0xFF mask is value-preserving
+    out.push((tag & 0xFF) as u8);
+}

@@ -36,13 +36,26 @@ const TIME_ALLOWED_FILES: [&str; 1] = ["util/bench.rs"];
 const RNG_ALLOWED_FILES: [&str; 1] = ["util/rng.rs"];
 
 /// Files whose decode paths parse peer-controlled bytes.
-const WIRE_FILES: [&str; 2] = ["compress/codec.rs", "comms/tcp.rs"];
+const WIRE_FILES: [&str; 3] = ["compress/codec.rs", "comms/tcp.rs", "comms/evented.rs"];
 
 /// A function in a wire file is a decode path when its name starts with
 /// one of these (covers `decode*`, `read*`, `parse*`, `scan*`, the
 /// `BitReader::get`/`get_varint` primitives, `is_segmented`, and the
 /// `checked_*` helpers).
 const DECODE_FN_PREFIXES: [&str; 7] = ["decode", "read", "parse", "scan", "get", "is_", "checked_"];
+
+/// Framing-layer files whose ENCODE paths are ALSO held to the
+/// narrowing-cast rule: a length or node id that wraps at encode time
+/// desyncs the stream just as surely as a bad decode (`write_message`'s
+/// unchecked `as u32` length prefixes were a real bug). `codec.rs` is
+/// deliberately absent — its bit-packing writes (`(v & 0x7F) as u8` and
+/// friends) are value-preserving masked casts, and its frame bounds are
+/// enforced at this framing layer.
+const ENCODE_WIRE_FILES: [&str; 2] = ["comms/tcp.rs", "comms/evented.rs"];
+
+/// A function in an encode wire file is an encode path when its name
+/// starts with one of these.
+const ENCODE_FN_PREFIXES: [&str; 3] = ["write", "encode", "frame"];
 
 /// Layers that must never import upward: `compress`, `estimation` and
 /// `sparsify` sit below `comms`; `comms` sits below `coordinator`.
@@ -152,6 +165,16 @@ fn check_line(rel: &str, no: usize, line: &scan::Line, out: &mut Vec<Finding>) {
         }
     }
 
+    if ENCODE_WIRE_FILES.contains(&rel) && is_encode_fn(line.fn_name.as_deref()) {
+        if let Some(ty) = narrowing_cast(code) {
+            let msg = format!(
+                "narrowing `as {ty}` on an encode path truncates lengths/ids silently on \
+                 the wire; validate with checked_encode_len / try_from"
+            );
+            push("wire-cast", msg);
+        }
+    }
+
     if LOW_LAYERS.iter().any(|d| rel.starts_with(d)) {
         for t in ["crate::comms", "crate::coordinator"] {
             if has_token(code, t) {
@@ -167,6 +190,10 @@ fn check_line(rel: &str, no: usize, line: &scan::Line, out: &mut Vec<Finding>) {
 
 fn is_decode_fn(name: Option<&str>) -> bool {
     name.is_some_and(|n| DECODE_FN_PREFIXES.iter().any(|p| n.starts_with(p)))
+}
+
+fn is_encode_fn(name: Option<&str>) -> bool {
+    name.is_some_and(|n| ENCODE_FN_PREFIXES.iter().any(|p| n.starts_with(p)))
 }
 
 fn is_ident_byte(b: u8) -> bool {

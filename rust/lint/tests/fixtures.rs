@@ -152,6 +152,29 @@ fn wire_cast_clean_and_waived() {
 }
 
 #[test]
+fn wire_cast_covers_encode_paths_in_framing_files() {
+    // Mirrors the pre-existing finding this PR fixed: `write_message`
+    // length-prefixed frames with unchecked `as u32` casts, so a >4 GiB
+    // payload would silently truncate its length word and desync the
+    // stream. Encode paths in the framing files are now in scope — for
+    // both the legacy bridge and the evented reactor.
+    let f = lint_fixture("comms/tcp.rs", "wire_cast_encode_violation.rs");
+    assert_eq!(hits(&f), vec![(2, "wire-cast")], "{f:#?}");
+    let f = lint_fixture("comms/evented.rs", "wire_cast_encode_violation.rs");
+    assert_eq!(hits(&f), vec![(2, "wire-cast")], "{f:#?}");
+}
+
+#[test]
+fn wire_cast_encode_clean_waived_and_scoped() {
+    assert_clean("comms/tcp.rs", "wire_cast_encode_clean.rs");
+    assert_clean("comms/tcp.rs", "wire_cast_encode_waived.rs");
+    // codec.rs encode paths stay out of scope: its masked bit-packing
+    // casts are value-preserving, and frame bounds live in the framing
+    // layer.
+    assert_clean("compress/codec.rs", "wire_cast_encode_violation.rs");
+}
+
+#[test]
 fn wire_index_fires() {
     let f = lint_fixture("compress/codec.rs", "wire_index_violation.rs");
     assert_eq!(hits(&f), vec![(2, "wire-index")], "{f:#?}");
@@ -216,6 +239,7 @@ fn every_violation_fixture_fails_by_itself() {
         ("compress/codec.rs", "wire_panic_violation.rs"),
         ("compress/codec.rs", "wire_capacity_violation.rs"),
         ("comms/tcp.rs", "wire_cast_violation.rs"),
+        ("comms/tcp.rs", "wire_cast_encode_violation.rs"),
         ("compress/codec.rs", "wire_index_violation.rs"),
         ("compress/mod.rs", "layering_violation.rs"),
     ];

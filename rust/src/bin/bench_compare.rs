@@ -15,14 +15,14 @@
 //!
 //! ```text
 //! bench-compare [--baselines DIR] [--current DIR] [--min-ratio 0.8]
-//!               [--groups select,codec,aggregation] [--update]
+//!               [--groups select,codec,aggregation,transport] [--update]
 //! ```
 
 use std::path::{Path, PathBuf};
 
 use rtopk::util::json::Json;
 
-const DEFAULT_GROUPS: &str = "select,codec,aggregation";
+const DEFAULT_GROUPS: &str = "select,codec,aggregation,transport";
 const DEFAULT_MIN_RATIO: f64 = 0.8;
 
 #[derive(Debug, Clone, PartialEq)]

@@ -5,6 +5,8 @@
 //! never parses them (layering: `comms` sits above `compress` and below
 //! `coordinator`; see DESIGN.md §10).
 
+pub mod evented;
+pub mod poll;
 pub mod tcp;
 pub mod topology;
 pub mod transport;

@@ -1,0 +1,82 @@
+//! Minimal `poll(2)` FFI shim for the evented transport.
+//!
+//! The build environment is offline (no mio/tokio/libc crates), so the
+//! reactor talks to the kernel through this one extern declaration. The
+//! struct layout matches `struct pollfd` from `<poll.h>` on every Linux
+//! ABI this project targets: `int fd; short events; short revents;`.
+
+use std::io;
+
+/// One kernel readiness registration, `#[repr(C)]`-identical to
+/// `struct pollfd`.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+/// Readable (or a peer hang-up is pending behind buffered data).
+pub const POLLIN: i16 = 0x001;
+/// Writable without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (always polled, never requested).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (always polled, never requested).
+pub const POLLHUP: i16 = 0x010;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+}
+
+/// Block until at least one registered fd is ready (or `timeout_ms`
+/// elapses; `-1` = wait forever). Returns the number of ready fds; the
+/// kernel writes readiness into each entry's `revents`. Retries on
+/// `EINTR`, so callers never see a spurious signal-interrupted error.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        // SAFETY: `fds` is a valid, exclusively borrowed slice of
+        // repr(C) pollfd structs; the kernel writes only within it.
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            continue;
+        }
+        return Err(err);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::fd::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn reports_writable_then_readable() {
+        let (a, mut b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd { fd: a.as_raw_fd(), events: POLLIN | POLLOUT, revents: 0 }];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!(fds[0].revents & POLLOUT, 0, "fresh socket must be writable");
+        assert_eq!(fds[0].revents & POLLIN, 0, "nothing to read yet");
+
+        b.write_all(&[42]).unwrap();
+        let mut fds = [PollFd { fd: a.as_raw_fd(), events: POLLIN, revents: 0 }];
+        let n = poll_fds(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert_ne!(fds[0].revents & POLLIN, 0, "pending byte must report readable");
+    }
+
+    #[test]
+    fn timeout_returns_zero_ready() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd { fd: a.as_raw_fd(), events: POLLIN, revents: 0 }];
+        assert_eq!(poll_fds(&mut fds, 10).unwrap(), 0);
+    }
+}

@@ -7,6 +7,7 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
 use super::topology::{node_label, NodeRef, TreePlan};
 use super::transport::Message;
@@ -38,13 +39,50 @@ fn checked_frame_len(len: u32, elem_bytes: usize, what: &str) -> anyhow::Result<
     Ok(len as usize)
 }
 
-/// Serialize a message to its wire frame.
+/// Encode-side mirror of [`checked_frame_len`]: an element count must fit
+/// the u32 length prefix AND the decode-side [`MAX_FRAME_BYTES`] bound, or
+/// the writer would silently wrap the prefix and desync the stream for
+/// every frame that follows.
+fn checked_encode_len(len: usize, elem_bytes: usize, what: &str) -> anyhow::Result<u32> {
+    checked_encode_len_bounded(len, elem_bytes, MAX_FRAME_BYTES, what)
+}
+
+/// [`checked_encode_len`] against an explicit bound (unit tests exercise
+/// the rejection paths without gigabyte allocations).
+fn checked_encode_len_bounded(
+    len: usize,
+    elem_bytes: usize,
+    bound: usize,
+    what: &str,
+) -> anyhow::Result<u32> {
+    let bytes = len
+        .checked_mul(elem_bytes)
+        .ok_or_else(|| anyhow::anyhow!("{what} frame length overflows ({len} elems)"))?;
+    anyhow::ensure!(
+        bytes <= bound,
+        "{what} frame of {bytes} bytes exceeds the {bound}-byte encode bound"
+    );
+    u32::try_from(len).map_err(|_| anyhow::anyhow!("{what} frame length {len} overflows u32"))
+}
+
+/// Encode-side validation of a node id into its u32 wire field — ids are
+/// `usize` in memory, and an unchecked narrowing would alias two nodes.
+fn checked_node_id(id: usize, what: &str) -> anyhow::Result<u32> {
+    u32::try_from(id).map_err(|_| anyhow::anyhow!("{what} node id {id} overflows the u32 wire field"))
+}
+
+/// Serialize a message to its wire frame. Every length and node id is
+/// validated before it is narrowed into its u32 wire field (mirroring the
+/// decode-side `checked_frame_len` bound): an unchecked `as u32` here once
+/// wrapped oversized payloads silently and desynced the stream for every
+/// frame after them.
 pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
     match msg {
         Message::Params { round, data } => {
+            let len = checked_encode_len(data.len(), 4, "params")?;
             w.write_all(&[TAG_PARAMS])?;
             w.write_all(&round.to_le_bytes())?;
-            w.write_all(&(data.len() as u32).to_le_bytes())?;
+            w.write_all(&len.to_le_bytes())?;
             // bulk little-endian f32s
             let mut buf = Vec::with_capacity(data.len() * 4);
             for &x in data {
@@ -61,31 +99,36 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
             mem_norm,
             participants,
         } => {
+            let wk = checked_node_id(*worker, "update")?;
+            let len = checked_encode_len(payload.len(), 1, "update")?;
             w.write_all(&[TAG_UPDATE])?;
             w.write_all(&round.to_le_bytes())?;
-            w.write_all(&(*worker as u32).to_le_bytes())?;
+            w.write_all(&wk.to_le_bytes())?;
             w.write_all(&loss.to_le_bytes())?;
             w.write_all(&examples.to_le_bytes())?;
             w.write_all(&mem_norm.to_le_bytes())?;
             w.write_all(&participants.to_le_bytes())?;
-            w.write_all(&(payload.len() as u32).to_le_bytes())?;
+            w.write_all(&len.to_le_bytes())?;
             w.write_all(payload)?;
         }
         Message::ParamsDelta { round, payload } => {
+            let len = checked_encode_len(payload.len(), 1, "delta")?;
             w.write_all(&[TAG_DELTA])?;
             w.write_all(&round.to_le_bytes())?;
-            w.write_all(&(payload.len() as u32).to_le_bytes())?;
+            w.write_all(&len.to_le_bytes())?;
             w.write_all(payload)?;
         }
         Message::ResyncRequest { worker } => {
+            let wk = checked_node_id(*worker, "resync")?;
             w.write_all(&[TAG_RESYNC])?;
             w.write_all(&0u64.to_le_bytes())?;
-            w.write_all(&(*worker as u32).to_le_bytes())?;
+            w.write_all(&wk.to_le_bytes())?;
         }
         Message::WorkerFailed { worker } => {
+            let wk = checked_node_id(*worker, "failed")?;
             w.write_all(&[TAG_FAILED])?;
             w.write_all(&0u64.to_le_bytes())?;
-            w.write_all(&(*worker as u32).to_le_bytes())?;
+            w.write_all(&wk.to_le_bytes())?;
         }
         Message::Shutdown => {
             w.write_all(&[TAG_SHUTDOWN])?;
@@ -94,6 +137,65 @@ pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> anyhow::Result<()> {
     }
     w.flush()?;
     Ok(())
+}
+
+/// Serialize a message into an owned frame buffer (the evented transport's
+/// per-link queues hold whole frames with partial-write cursors).
+pub(super) fn encode_frame(msg: &Message) -> anyhow::Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    write_message(&mut buf, msg)?;
+    Ok(buf)
+}
+
+/// Header bytes for a `ParamsDelta` frame whose body is an `Arc<[u8]>`
+/// shared across links: tag, round, validated length. The evented
+/// transport writes this 13-byte header followed by the shared body — one
+/// encode, N cursors, zero per-link copies.
+pub(super) fn encode_delta_header(round: u64, body_len: usize) -> anyhow::Result<[u8; 13]> {
+    let len = checked_encode_len(body_len, 1, "delta")?;
+    let mut h = [0u8; 13];
+    h[0] = TAG_DELTA;
+    h[1..9].copy_from_slice(&round.to_le_bytes());
+    h[9..13].copy_from_slice(&len.to_le_bytes());
+    Ok(h)
+}
+
+/// Incremental framing for the evented reader: given the bytes buffered so
+/// far, return the total frame size once the header is complete
+/// (`Ok(None)` = need more bytes; `Err` = corrupt tag or hostile length,
+/// fail the link now). Validation matches [`read_message`] exactly, so a
+/// frame this accepts always decodes past its header.
+pub(super) fn scan_frame_len(buf: &[u8]) -> anyhow::Result<Option<usize>> {
+    let Some(&tag) = buf.first() else { return Ok(None) };
+    match tag {
+        TAG_SHUTDOWN => Ok(Some(9)),
+        TAG_RESYNC | TAG_FAILED => Ok(Some(13)),
+        TAG_PARAMS => scan_len_prefixed(buf, 9, 4, "params"),
+        TAG_DELTA => scan_len_prefixed(buf, 9, 1, "delta"),
+        TAG_UPDATE => scan_len_prefixed(buf, 33, 1, "update"),
+        t => anyhow::bail!("unknown message tag {t}"),
+    }
+}
+
+/// Frame size for a tag whose u32 element count sits at `len_at`, scaled
+/// by `elem_bytes`, with the [`checked_frame_len`] bound applied before
+/// the size is trusted.
+fn scan_len_prefixed(
+    buf: &[u8],
+    len_at: usize,
+    elem_bytes: usize,
+    what: &str,
+) -> anyhow::Result<Option<usize>> {
+    let Some(end) = len_at.checked_add(4) else { return Ok(None) };
+    let Some(len_bytes) = buf.get(len_at..end) else { return Ok(None) };
+    let raw = match <[u8; 4]>::try_from(len_bytes) {
+        Ok(b) => u32::from_le_bytes(b),
+        Err(_) => return Ok(None),
+    };
+    let len = checked_frame_len(raw, elem_bytes, what)?;
+    let Some(body) = len.checked_mul(elem_bytes) else { return Ok(None) };
+    let Some(total) = end.checked_add(body) else { return Ok(None) };
+    Ok(Some(total))
 }
 
 /// Read one message frame.
@@ -172,16 +274,40 @@ pub fn read_message<R: Read>(r: &mut R) -> anyhow::Result<Message> {
     }
 }
 
+/// How long an accepted connection gets to send its 4-byte id hello before
+/// the accept loop gives up on it. Generous for loopback and LAN; the
+/// point is that a peer which connects and then stalls can no longer wedge
+/// cluster startup forever.
+pub const HELLO_TIMEOUT: Duration = Duration::from_secs(10);
+
 /// Parent side: bind, accept `n` child connections, return their streams
 /// in child-node-id order (children send their global node id as a 4-byte
 /// hello).
 pub fn accept_workers(listener: &TcpListener, n: usize) -> anyhow::Result<Vec<TcpStream>> {
+    accept_workers_timeout(listener, n, HELLO_TIMEOUT)
+}
+
+/// [`accept_workers`] with an explicit hello deadline (tests shrink it).
+/// The read timeout applies ONLY to the hello — it is cleared before the
+/// stream is returned, so bridged links keep their normal blocking reads.
+pub fn accept_workers_timeout(
+    listener: &TcpListener,
+    n: usize,
+    hello: Duration,
+) -> anyhow::Result<Vec<TcpStream>> {
     let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-    for _ in 0..n {
-        let (mut stream, _) = listener.accept()?;
+    for accepted in 0..n {
+        let (mut stream, peer) = listener.accept()?;
         stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(hello))?;
         let mut id_b = [0u8; 4];
-        stream.read_exact(&mut id_b)?;
+        stream.read_exact(&mut id_b).map_err(|e| {
+            anyhow::anyhow!(
+                "peer {peer} sent no id hello within {hello:?} \
+                 (accept slot {accepted} of {n}): {e}"
+            )
+        })?;
+        stream.set_read_timeout(None)?;
         let id = u32::from_le_bytes(id_b) as usize;
         anyhow::ensure!(id < n, "node id {id} out of range");
         anyhow::ensure!(slots[id].is_none(), "duplicate node id {id}");
@@ -194,7 +320,7 @@ pub fn accept_workers(listener: &TcpListener, n: usize) -> anyhow::Result<Vec<Tc
 pub fn connect_worker(addr: &str, id: usize) -> anyhow::Result<TcpStream> {
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
-    stream.write_all(&(id as u32).to_le_bytes())?;
+    stream.write_all(&checked_node_id(id, "hello")?.to_le_bytes())?;
     Ok(stream)
 }
 
@@ -266,6 +392,109 @@ mod tests {
     }
 
     #[test]
+    fn oversized_encode_is_rejected_not_wrapped() {
+        // Regression: these fields were narrowed with unchecked `as u32`
+        // casts — an oversized worker id or payload length wrapped
+        // silently and desynced the stream for every frame after it. The
+        // encode side must refuse instead.
+        let big = 1usize << 40;
+        for msg in [
+            Message::ResyncRequest { worker: big },
+            Message::WorkerFailed { worker: big },
+            Message::SparseUpdate {
+                round: 1,
+                worker: big,
+                payload: vec![1u8; 2],
+                loss: 0.0,
+                examples: 1,
+                mem_norm: 0.0,
+                participants: 1,
+            },
+        ] {
+            let mut buf = Vec::new();
+            assert!(write_message(&mut buf, &msg).is_err(), "{msg:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn encode_len_bound_mirrors_decode_bound() {
+        assert_eq!(checked_encode_len_bounded(3, 4, 12, "t").unwrap(), 3);
+        assert!(checked_encode_len_bounded(4, 4, 12, "t").is_err());
+        assert!(checked_encode_len_bounded(usize::MAX, 4, 12, "t").is_err());
+        // a count that fits the byte bound but not the u32 prefix is
+        // still rejected
+        assert!(checked_encode_len_bounded(1usize << 33, 0, 12, "t").is_err());
+    }
+
+    #[test]
+    fn scan_frame_len_matches_encoded_frames() {
+        let msgs = vec![
+            Message::Params { round: 7, data: vec![1.0, -2.5, 3.25] },
+            Message::SparseUpdate {
+                round: 8,
+                worker: 3,
+                payload: vec![1, 2, 3, 4, 5],
+                loss: 0.25,
+                examples: 128,
+                mem_norm: 1.5,
+                participants: 4,
+            },
+            Message::ParamsDelta { round: 9, payload: vec![9u8, 8, 7].into() },
+            Message::ResyncRequest { worker: 2 },
+            Message::WorkerFailed { worker: 1 },
+            Message::Shutdown,
+        ];
+        for msg in msgs {
+            let buf = encode_frame(&msg).unwrap();
+            // every incomplete prefix either asks for more bytes or
+            // already knows the exact total — never a wrong answer
+            for cut in 0..buf.len() {
+                if let Some(total) = scan_frame_len(&buf[..cut]).unwrap() {
+                    assert_eq!(total, buf.len(), "{msg:?} at cut {cut}");
+                }
+            }
+            assert_eq!(scan_frame_len(&buf).unwrap(), Some(buf.len()));
+            // a following frame's bytes don't change the answer
+            let mut two = buf.clone();
+            two.extend_from_slice(&buf);
+            assert_eq!(scan_frame_len(&two).unwrap(), Some(buf.len()));
+        }
+        // corrupt tag fails the link immediately
+        assert!(scan_frame_len(&[0xFF, 0, 0]).is_err());
+        // hostile length prefix fails before any allocation
+        let mut buf = vec![TAG_DELTA];
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(scan_frame_len(&buf).is_err());
+    }
+
+    #[test]
+    fn delta_header_matches_write_message() {
+        let payload = vec![5u8; 17];
+        let framed = encode_frame(&Message::ParamsDelta { round: 42, payload: payload.clone().into() })
+            .unwrap();
+        let header = encode_delta_header(42, payload.len()).unwrap();
+        assert_eq!(&framed[..13], &header[..]);
+        assert_eq!(&framed[13..], &payload[..]);
+        assert!(encode_delta_header(1, MAX_FRAME_BYTES + 1).is_err());
+    }
+
+    #[test]
+    fn stalled_hello_times_out_naming_the_slot() {
+        // Regression: accept_workers blocked indefinitely in read_exact on
+        // the 4-byte hello — one client that connects and never
+        // identifies wedged cluster startup forever.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // The connect completes via the listen backlog; then stall.
+        let _stall = TcpStream::connect(addr).unwrap();
+        let err = accept_workers_timeout(&listener, 1, Duration::from_millis(200))
+            .expect_err("stalled hello must not hang");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("hello") && msg.contains("slot 0"), "{msg}");
+    }
+
+    #[test]
     fn loopback_star() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
@@ -329,6 +558,7 @@ mod tests {
 // identical, which the equivalence tests assert).
 // ---------------------------------------------------------------------------
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
@@ -336,43 +566,85 @@ use super::transport::{
     CountedSender, LeaderEndpoints, LinkStats, RelayEndpoints, WorkerEndpoints,
 };
 
-/// Bridge one parent↔child edge over an accepted/connected socket pair.
-/// Returns the parent's counted sender toward the child, the link stat
-/// pair, and the child-side endpoints. `parent_up_tx` is the parent's
-/// shared inbox; forwarding threads are detached and exit when their
-/// socket or channel closes (after `Shutdown`).
-fn bridge_edge(
+/// A child's face of one bridged edge. Untapped builders bridge every
+/// child; the `*_tapped` builders leave designated slots as the raw
+/// unsupervised socket so fault-injection tests can drive the wire
+/// directly (half-close it, send a corrupt tag, die mid-frame) while the
+/// parent side stays fully bridged and supervised.
+pub enum ChildSide {
+    Bridged(WorkerEndpoints),
+    Raw(TcpStream),
+}
+
+impl ChildSide {
+    fn bridged(self) -> WorkerEndpoints {
+        match self {
+            ChildSide::Bridged(w) => w,
+            ChildSide::Raw(_) => unreachable!("untapped builders bridge every child"),
+        }
+    }
+}
+
+/// Parent half of one bridged edge: the parent→socket writer plus the
+/// SUPERVISED socket→parent-inbox reader. Supervision is the fix for the
+/// silent-death deadlock: a reader that hits EOF or a decode error we did
+/// not cause (by sending `Shutdown` ourselves) injects
+/// `Message::WorkerFailed { worker: child_id }` into the parent inbox —
+/// mirroring the in-process worker drop-guard protocol — so a full-sync
+/// gather aborts naming the dead hop instead of blocking forever on a
+/// channel its healthy siblings keep alive.
+fn bridge_parent_side(
     parent_sock: TcpStream,
-    child_sock: TcpStream,
     parent_up_tx: Sender<Message>,
     child_id: usize,
-    parent_label: &str,
     n_workers: usize,
-) -> anyhow::Result<(CountedSender, Arc<LinkStats>, Arc<LinkStats>, WorkerEndpoints)> {
-    let down = Arc::new(LinkStats::default());
-    let up = Arc::new(LinkStats::default());
-
-    // parent -> socket
+    down: Arc<LinkStats>,
+) -> anyhow::Result<CountedSender> {
     let (dl_tx, dl_rx) = channel::<Message>();
     let mut sock_w = parent_sock.try_clone()?;
+    // `closing` is set BEFORE the Shutdown frame can reach the wire, so by
+    // the time the child reacts (closes its socket → our reader sees EOF)
+    // the reader already knows the teardown is ours.
+    let closing = Arc::new(AtomicBool::new(false));
+    let closing_w = closing.clone();
     std::thread::spawn(move || {
         while let Ok(msg) = dl_rx.recv() {
             let quit = matches!(msg, Message::Shutdown);
+            if quit {
+                closing_w.store(true, Ordering::SeqCst);
+            }
             if write_message(&mut sock_w, &msg).is_err() || quit {
                 return;
             }
         }
     });
-    // socket -> parent inbox
     let mut sock_r = parent_sock;
-    std::thread::spawn(move || {
-        while let Ok(msg) = read_message(&mut sock_r) {
-            if parent_up_tx.send(msg).is_err() {
+    std::thread::spawn(move || loop {
+        match read_message(&mut sock_r) {
+            Ok(msg) => {
+                if parent_up_tx.send(msg).is_err() {
+                    return;
+                }
+            }
+            Err(_) => {
+                if !closing.load(Ordering::SeqCst) {
+                    let _ = parent_up_tx.send(Message::WorkerFailed { worker: child_id });
+                }
                 return;
             }
         }
     });
-    // child side: socket -> child inbox
+    Ok(CountedSender::new(dl_tx, down, &node_label(child_id, n_workers)))
+}
+
+/// Child half of one bridged edge: socket→child-inbox reader (quits after
+/// forwarding `Shutdown`) plus child-outbox→socket writer.
+fn bridge_child_side(
+    child_sock: TcpStream,
+    child_id: usize,
+    parent_label: &str,
+    up: Arc<LinkStats>,
+) -> anyhow::Result<WorkerEndpoints> {
     let (wk_tx, wk_rx) = channel::<Message>();
     let mut wsock_r = child_sock.try_clone()?;
     std::thread::spawn(move || {
@@ -383,7 +655,6 @@ fn bridge_edge(
             }
         }
     });
-    // child outbox -> socket
     let (wo_tx, wo_rx) = channel::<Message>();
     let mut wsock_w = child_sock;
     std::thread::spawn(move || {
@@ -393,19 +664,16 @@ fn bridge_edge(
             }
         }
     });
-
-    let to_child = CountedSender::new(dl_tx, down.clone(), &node_label(child_id, n_workers));
-    let child = WorkerEndpoints {
+    Ok(WorkerEndpoints {
         id: child_id,
         from_leader: wk_rx,
-        to_leader: CountedSender::new(wo_tx, up.clone(), parent_label),
-    };
-    Ok((to_child, down, up, child))
+        to_leader: CountedSender::new(wo_tx, up, parent_label),
+    })
 }
 
 /// Accept + connect one socket pair per non-root node and return them in
 /// node-id order: `(parent_side[i], child_side[i])` for node `i`.
-fn socket_pairs(total_nodes: usize) -> anyhow::Result<Vec<(TcpStream, TcpStream)>> {
+pub(super) fn socket_pairs(total_nodes: usize) -> anyhow::Result<Vec<(TcpStream, TcpStream)>> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
     // Children connect from background threads while the parent accepts.
@@ -423,25 +691,35 @@ fn socket_pairs(total_nodes: usize) -> anyhow::Result<Vec<(TcpStream, TcpStream)
     Ok(parent_streams.into_iter().zip(child_streams).collect())
 }
 
-/// Wire one parent over already-paired sockets for its children.
+/// Wire one parent over already-paired sockets for its children. Child
+/// slots listed in `taps` stay unbridged (their raw socket is returned for
+/// a fault-injection test to drive); their parent side is bridged and
+/// supervised like any other link.
 fn tcp_node(
     parent_label: &str,
     children: Vec<(usize, (TcpStream, TcpStream))>,
     n_workers: usize,
-) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoints>)> {
+    taps: &[usize],
+) -> anyhow::Result<(LeaderEndpoints, Vec<ChildSide>)> {
     let (up_tx, up_rx) = channel::<Message>();
     let mut to_workers = Vec::with_capacity(children.len());
-    let mut child_eps = Vec::with_capacity(children.len());
+    let mut child_sides = Vec::with_capacity(children.len());
     let mut down_stats = Vec::with_capacity(children.len());
     let mut up_stats = Vec::with_capacity(children.len());
     let mut child_ids = Vec::with_capacity(children.len());
     for (id, (parent_sock, child_sock)) in children {
-        let (tx, down, up, eps) =
-            bridge_edge(parent_sock, child_sock, up_tx.clone(), id, parent_label, n_workers)?;
+        let down = Arc::new(LinkStats::default());
+        let up = Arc::new(LinkStats::default());
+        let tx = bridge_parent_side(parent_sock, up_tx.clone(), id, n_workers, down.clone())?;
+        let side = if taps.contains(&id) {
+            ChildSide::Raw(child_sock)
+        } else {
+            ChildSide::Bridged(bridge_child_side(child_sock, id, parent_label, up.clone())?)
+        };
         to_workers.push(tx);
         down_stats.push(down);
         up_stats.push(up);
-        child_eps.push(eps);
+        child_sides.push(side);
         child_ids.push(id);
     }
     Ok((
@@ -453,15 +731,25 @@ fn tcp_node(
             up_stats,
             bcast_stats: Arc::new(LinkStats::default()),
         },
-        child_eps,
+        child_sides,
     ))
 }
 
 /// Build a star topology over loopback TCP. Drop-in replacement for
 /// [`super::transport::star`].
 pub fn tcp_star(n: usize) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoints>)> {
+    let (leader, sides) = tcp_star_tapped(n, &[])?;
+    Ok((leader, sides.into_iter().map(ChildSide::bridged).collect()))
+}
+
+/// [`tcp_star`] with designated worker slots left as raw sockets for
+/// fault-injection tests.
+pub fn tcp_star_tapped(
+    n: usize,
+    taps: &[usize],
+) -> anyhow::Result<(LeaderEndpoints, Vec<ChildSide>)> {
     let pairs = socket_pairs(n)?;
-    tcp_node("root", (0..n).zip(pairs).collect(), n)
+    tcp_node("root", (0..n).zip(pairs).collect(), n, taps)
 }
 
 /// Build a tree topology over loopback TCP. Drop-in replacement for
@@ -474,6 +762,29 @@ pub fn tcp_star(n: usize) -> anyhow::Result<(LeaderEndpoints, Vec<WorkerEndpoint
 pub fn tcp_tree(
     plan: &TreePlan,
 ) -> anyhow::Result<(LeaderEndpoints, Vec<RelayEndpoints>, Vec<WorkerEndpoints>)> {
+    let (leader, relays, workers, raw) = tcp_tree_tapped(plan, &[])?;
+    debug_assert!(raw.is_empty());
+    let workers = workers
+        .into_iter()
+        .map(|w| w.expect("every worker has a parent link"))
+        .collect();
+    Ok((leader, relays, workers))
+}
+
+/// [`tcp_tree`] with designated WORKER leaves left as raw sockets: the
+/// worker vector holds `None` at tapped slots and the raw `(worker_id,
+/// socket)` pairs come back in the final element. Taps must name workers,
+/// not relays.
+#[allow(clippy::type_complexity)]
+pub fn tcp_tree_tapped(
+    plan: &TreePlan,
+    taps: &[usize],
+) -> anyhow::Result<(
+    LeaderEndpoints,
+    Vec<RelayEndpoints>,
+    Vec<Option<WorkerEndpoints>>,
+    Vec<(usize, TcpStream)>,
+)> {
     let n = plan.n_workers;
     let total = n + plan.relays.len();
     let mut pairs: Vec<Option<(TcpStream, TcpStream)>> =
@@ -489,25 +800,32 @@ pub fn tcp_tree(
         (0..plan.relays.len()).map(|_| None).collect();
     let mut down_slots: Vec<Option<LeaderEndpoints>> =
         (0..plan.relays.len()).map(|_| None).collect();
+    let mut raw: Vec<(usize, TcpStream)> = Vec::new();
 
-    let root_ids: Vec<usize> = plan.root_children.iter().map(|&c| plan.node_id(c)).collect();
-    let (leader, sides) = tcp_node("root", take(&root_ids), n)?;
-    for (&child, side) in plan.root_children.iter().zip(sides) {
-        match child {
-            NodeRef::Worker(w) => worker_slots[w] = Some(side),
-            NodeRef::Relay(r) => up_slots[r] = Some(side),
-        }
-    }
-    for (r, spec) in plan.relays.iter().enumerate() {
-        let ids: Vec<usize> = spec.children.iter().map(|&c| plan.node_id(c)).collect();
-        let (down, sides) = tcp_node(&node_label(n + r, n), take(&ids), n)?;
-        down_slots[r] = Some(down);
-        for (&child, side) in spec.children.iter().zip(sides) {
-            match child {
-                NodeRef::Worker(w) => worker_slots[w] = Some(side),
-                NodeRef::Relay(c) => up_slots[c] = Some(side),
+    let mut place = |children: &[NodeRef],
+                     sides: Vec<ChildSide>,
+                     worker_slots: &mut Vec<Option<WorkerEndpoints>>,
+                     up_slots: &mut Vec<Option<WorkerEndpoints>>| {
+        for (&child, side) in children.iter().zip(sides) {
+            match (child, side) {
+                (NodeRef::Worker(w), ChildSide::Bridged(s)) => worker_slots[w] = Some(s),
+                (NodeRef::Worker(w), ChildSide::Raw(sock)) => raw.push((w, sock)),
+                (NodeRef::Relay(r), ChildSide::Bridged(s)) => up_slots[r] = Some(s),
+                (NodeRef::Relay(_), ChildSide::Raw(_)) => {
+                    unreachable!("taps name leaf workers, never relays")
+                }
             }
         }
+    };
+
+    let root_ids: Vec<usize> = plan.root_children.iter().map(|&c| plan.node_id(c)).collect();
+    let (leader, sides) = tcp_node("root", take(&root_ids), n, taps)?;
+    place(&plan.root_children, sides, &mut worker_slots, &mut up_slots);
+    for (r, spec) in plan.relays.iter().enumerate() {
+        let ids: Vec<usize> = spec.children.iter().map(|&c| plan.node_id(c)).collect();
+        let (down, sides) = tcp_node(&node_label(n + r, n), take(&ids), n, taps)?;
+        down_slots[r] = Some(down);
+        place(&spec.children, sides, &mut worker_slots, &mut up_slots);
     }
 
     let relays: Vec<RelayEndpoints> = plan
@@ -523,11 +841,7 @@ pub fn tcp_tree(
             down: down_slots[r].take().expect("every relay has child links"),
         })
         .collect();
-    let workers = worker_slots
-        .into_iter()
-        .map(|w| w.expect("every worker has a parent link"))
-        .collect();
-    Ok((leader, relays, workers))
+    Ok((leader, relays, worker_slots, raw))
 }
 
 #[cfg(test)]
@@ -558,6 +872,61 @@ mod bridge_tests {
         }
         for tx in &leader.to_workers {
             tx.send(Message::Shutdown).unwrap();
+        }
+    }
+
+    #[test]
+    fn dead_child_socket_injects_worker_failed() {
+        // Regression (silent-death deadlock): pre-fix, the parent's
+        // socket→inbox reader exited silently on a mid-stream decode
+        // error, and a full-sync gather then blocked forever because the
+        // healthy siblings kept the shared channel alive. The supervised
+        // reader must surface the dead hop as WorkerFailed.
+        let (leader, sides) = tcp_star_tapped(2, &[1]).unwrap();
+        let mut healthy = None;
+        let mut raw = None;
+        for (id, side) in sides.into_iter().enumerate() {
+            match side {
+                ChildSide::Bridged(w) => healthy = Some(w),
+                ChildSide::Raw(s) => {
+                    assert_eq!(id, 1);
+                    raw = Some(s);
+                }
+            }
+        }
+        let healthy = healthy.unwrap();
+        let mut raw = raw.unwrap();
+        // Corrupt tag mid-stream; keep the socket open so the failure is
+        // a decode error, not EOF.
+        raw.write_all(&[0xFF; 16]).unwrap();
+        let deadline = std::time::Duration::from_secs(10);
+        match leader.recv_timeout(deadline).unwrap() {
+            Some(Message::WorkerFailed { worker: 1 }) => {}
+            other => panic!("expected WorkerFailed for worker 1, got {other:?}"),
+        }
+        // The healthy sibling's link is unaffected.
+        healthy.to_leader.send(Message::ResyncRequest { worker: 0 }).unwrap();
+        match leader.recv_timeout(deadline).unwrap() {
+            Some(Message::ResyncRequest { worker: 0 }) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        for tx in &leader.to_workers {
+            let _ = tx.send(Message::Shutdown);
+        }
+    }
+
+    #[test]
+    fn clean_shutdown_is_not_reported_as_failure() {
+        let (leader, workers) = tcp_star(1).unwrap();
+        leader.to_workers[0].send(Message::Shutdown).unwrap();
+        let w = workers.into_iter().next().unwrap();
+        assert!(matches!(w.from_leader.recv().unwrap(), Message::Shutdown));
+        drop(w); // closes the child socket — the parent reader sees EOF
+        // A teardown we initiated must NOT be reported as a failure: the
+        // inbox either stays silent or simply disconnects.
+        match leader.recv_timeout(std::time::Duration::from_millis(500)) {
+            Ok(Some(msg)) => panic!("clean shutdown surfaced {msg:?}"),
+            Ok(None) | Err(_) => {}
         }
     }
 

@@ -114,20 +114,51 @@ impl LinkStats {
 /// through this constant.
 pub const LINK_HUNG_UP: &str = "hung up";
 
+/// Why a [`MessageSink`] refused a message.
+#[derive(Debug)]
+pub enum SinkError {
+    /// The far side is gone: channel receiver dropped, or the evented
+    /// link is marked dead.
+    Disconnected,
+    /// The message can never be framed for this wire (e.g. a length that
+    /// overflows the u32 prefix). Carries the encoder's own diagnosis.
+    Rejected(String),
+}
+
+/// One outbound half of a link, behind [`CountedSender`]. The in-process
+/// transport is a plain mpsc [`Sender`]; the legacy TCP bridge is a
+/// Sender drained by a per-link writer thread; the evented transport is a
+/// bounded per-link frame queue serviced by the shared reactor thread
+/// (delivery there may BLOCK briefly for write backpressure).
+pub trait MessageSink: Send + Sync {
+    fn deliver(&self, msg: Message) -> Result<(), SinkError>;
+}
+
+impl MessageSink for Sender<Message> {
+    fn deliver(&self, msg: Message) -> Result<(), SinkError> {
+        self.send(msg).map_err(|_| SinkError::Disconnected)
+    }
+}
+
 /// A counted sender: records bytes on the shared link stats, then sends.
-/// Clones share the same channel and counters (the cluster keeps one
+/// Clones share the same sink and counters (the cluster keeps one
 /// aside per node thread to report fatal errors). Each sender knows the
 /// *peer node* on the far end of its link, so a multi-hop failure names
 /// the hop that actually died instead of a generic "peer hung up".
 #[derive(Clone)]
 pub struct CountedSender {
-    tx: Sender<Message>,
+    tx: Arc<dyn MessageSink>,
     stats: Arc<LinkStats>,
     peer: Arc<str>,
 }
 
 impl CountedSender {
     pub fn new(tx: Sender<Message>, stats: Arc<LinkStats>, peer: &str) -> Self {
+        Self::from_sink(Arc::new(tx), stats, peer)
+    }
+
+    /// Wrap a non-channel sink (the evented transport's link queues).
+    pub fn from_sink(tx: Arc<dyn MessageSink>, stats: Arc<LinkStats>, peer: &str) -> Self {
         CountedSender { tx, stats, peer: Arc::from(peer) }
     }
 
@@ -139,18 +170,23 @@ impl CountedSender {
 
     pub fn send(&self, msg: Message) -> anyhow::Result<()> {
         self.stats.record(msg.wire_bytes());
-        self.tx
-            .send(msg)
-            .map_err(|_| anyhow::anyhow!("peer {} {LINK_HUNG_UP}", self.peer))
+        self.deliver_named(msg)
     }
 
     /// Deliver without touching this link's counters. Used by the
     /// encode-once broadcast path, whose single shared frame is recorded
     /// once on [`LeaderEndpoints::bcast_stats`] instead of once per link.
     pub fn send_uncounted(&self, msg: Message) -> anyhow::Result<()> {
-        self.tx
-            .send(msg)
-            .map_err(|_| anyhow::anyhow!("peer {} {LINK_HUNG_UP}", self.peer))
+        self.deliver_named(msg)
+    }
+
+    fn deliver_named(&self, msg: Message) -> anyhow::Result<()> {
+        self.tx.deliver(msg).map_err(|e| match e {
+            SinkError::Disconnected => anyhow::anyhow!("peer {} {LINK_HUNG_UP}", self.peer),
+            SinkError::Rejected(why) => {
+                anyhow::anyhow!("send to peer {} rejected: {why}", self.peer)
+            }
+        })
     }
 }
 

@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
+use crate::comms::evented::evented_tree;
 use crate::comms::tcp::tcp_tree;
 use crate::comms::transport::{self, CountedSender, Message};
 use crate::metrics::{RelayLevelStats, RunMetrics};
@@ -107,8 +108,13 @@ pub enum Transport {
     /// In-process channels (default; byte counts are codec-exact).
     #[default]
     InProcess,
-    /// Loopback TCP sockets (validates the framing layer end to end).
+    /// Loopback TCP via the legacy thread-per-connection bridge (4
+    /// forwarding threads per link; kept for A/B against the reactor).
     Tcp,
+    /// Loopback TCP via the evented reactor: ONE I/O thread multiplexes
+    /// every socket with per-link write backpressure and zero-copy
+    /// broadcast (`--transport tcp` lands here).
+    TcpEvented,
 }
 
 /// Run Algorithm 1 end to end over in-process channels (star by default;
@@ -140,6 +146,7 @@ pub fn run_with(
     let (leader_eps, relay_eps, worker_eps) = match transport {
         Transport::InProcess => transport::tree(&plan),
         Transport::Tcp => tcp_tree(&plan)?,
+        Transport::TcpEvented => evented_tree(&plan)?,
     };
     let mut root_rng = Rng::new(cfg.seed);
 

@@ -62,7 +62,10 @@ SUBCOMMANDS
                                          "rtopk:r=4k,k=256|bf16|delta"
                 --compression 0.99       target compression ratio
                 --nodes 5 --rounds 100 --federated --seed N
-                --transport inproc|tcp
+                --transport inproc|tcp|tcp-evented|tcp-legacy
+                                         tcp = evented reactor (one I/O
+                                         thread, all sockets); tcp-legacy =
+                                         thread-per-connection bridge
                 --gather full|quorum:m=M,timeout_ms=T
                                          gather policy: block for all n
                                          workers (default), or close each
@@ -285,8 +288,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     // itself trips the unknown-flag check
     let transport = match args.str_or("transport", "inproc").as_str() {
         "inproc" | "channel" => coordinator::Transport::InProcess,
-        "tcp" => coordinator::Transport::Tcp,
-        other => anyhow::bail!("unknown transport {other:?} (inproc|tcp)"),
+        // `tcp` lands on the evented reactor now that the equivalence
+        // suite pins it bit-identical; the legacy bridge stays reachable
+        // for A/B comparison.
+        "tcp" | "tcp-evented" => coordinator::Transport::TcpEvented,
+        "tcp-legacy" => coordinator::Transport::Tcp,
+        other => {
+            anyhow::bail!("unknown transport {other:?} (inproc|tcp|tcp-evented|tcp-legacy)")
+        }
     };
     args.reject_unknown()?;
 

@@ -52,7 +52,11 @@ fn tree_depth1_is_bit_identical_to_star_on_both_transports_tcp() {
         cfg_star.set_downlink(downlink).unwrap();
         let mut cfg_tree = cfg_star.clone();
         cfg_tree.set_topology("tree:fanout=4,depth=1").unwrap();
-        for transport in [coordinator::Transport::InProcess, coordinator::Transport::Tcp] {
+        for transport in [
+            coordinator::Transport::InProcess,
+            coordinator::Transport::Tcp,
+            coordinator::Transport::TcpEvented,
+        ] {
             let a = run_on(&cfg_star, dim, 0.1, transport);
             let b = run_on(&cfg_tree, dim, 0.1, transport);
             for (x, y) in a.params.iter().zip(&b.params) {
@@ -90,18 +94,23 @@ fn two_level_tree_converges_deterministically_on_both_transports_tcp() {
     let a = run_on(&cfg, dim, 0.05, coordinator::Transport::InProcess);
     let b = run_on(&cfg, dim, 0.05, coordinator::Transport::InProcess);
     let c = run_on(&cfg, dim, 0.05, coordinator::Transport::Tcp);
+    let d = run_on(&cfg, dim, 0.05, coordinator::Transport::TcpEvented);
     assert_eq!(a.params, b.params, "tree runs must be reproducible");
     assert_eq!(a.params, c.params, "transports must agree under a tree");
+    assert_eq!(a.params, d.params, "the evented reactor must agree bit-for-bit");
     let d1 = model.distance_sq(&a.params);
     assert!(d1 < 0.1 * d0, "tree run must converge: {d0} -> {d1}");
     // per-round accounting matches across wires too
-    for (ra, rc) in a.metrics.records.iter().zip(&c.metrics.records) {
+    for ((ra, rc), rd) in a.metrics.records.iter().zip(&c.metrics.records).zip(&d.metrics.records)
+    {
         assert_eq!(ra.uplink_bytes, rc.uplink_bytes, "round {}", ra.round);
         assert_eq!(ra.downlink_bytes, rc.downlink_bytes, "round {}", ra.round);
+        assert_eq!(ra.uplink_bytes, rd.uplink_bytes, "round {} (evented)", ra.round);
+        assert_eq!(ra.downlink_bytes, rd.downlink_bytes, "round {} (evented)", ra.round);
         assert_eq!(ra.participants, nodes, "round {}: FullSync over the tree", ra.round);
     }
     // relay level accounting: 4 relays, one merge each per round
-    for res in [&a, &c] {
+    for res in [&a, &c, &d] {
         assert_eq!(res.metrics.relay_levels.len(), 1);
         let l = res.metrics.relay_levels[0];
         assert_eq!(l.level, 1);
@@ -200,6 +209,12 @@ fn subtree_worker_failure_errors_cluster_tcp() {
     subtree_worker_failure_errors_cluster(coordinator::Transport::Tcp);
 }
 
+/// Same fault path over the evented reactor.
+#[test]
+fn subtree_worker_failure_errors_cluster_tcp_evented() {
+    subtree_worker_failure_errors_cluster(coordinator::Transport::TcpEvented);
+}
+
 fn subtree_worker_failure_errors_cluster(transport: coordinator::Transport) {
     let dim = 64;
     let inner = mock_worker_factory(dim, 0.05, 8);
@@ -239,7 +254,11 @@ fn subtree_worker_panic_errors_cluster_tcp() {
     });
     let mut cfg = quick_cfg(SparsifierKind::TopK, 0.9, 8, 10);
     cfg.set_topology("tree:fanout=4,depth=2").unwrap();
-    for transport in [coordinator::Transport::InProcess, coordinator::Transport::Tcp] {
+    for transport in [
+        coordinator::Transport::InProcess,
+        coordinator::Transport::Tcp,
+        coordinator::Transport::TcpEvented,
+    ] {
         let inner = factory.clone();
         let err = coordinator::run_with(
             &cfg,

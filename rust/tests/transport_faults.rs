@@ -1,0 +1,304 @@
+//! Transport fault-injection suite: a socket that dies mid-round — clean
+//! kill, half-close, mid-frame EOF, or corrupt bytes — must ERROR the
+//! cluster within bounded time, naming the dead hop, never deadlock it.
+//! Runs the same faults against BOTH wire transports (the legacy
+//! thread-per-connection bridge and the evented reactor) on star and tree
+//! topologies, under both gather policies.
+//!
+//! The harness drives the cluster manually (leader / relay / worker
+//! threads over *tapped* topology builders) so one child's socket is
+//! handed to the test raw instead of being bridged into endpoints; the
+//! fault thread then misbehaves on the real wire. Every wait is bounded:
+//! the leader's verdict arrives over a channel guarded by `recv_timeout`,
+//! so no fault path can hang CI.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use rtopk::comms::evented::{evented_star_tapped, evented_tree_tapped};
+use rtopk::comms::tcp::{read_message, tcp_star_tapped, tcp_tree_tapped, write_message, ChildSide};
+use rtopk::comms::transport::{LeaderEndpoints, RelayEndpoints, WorkerEndpoints};
+use rtopk::comms::{Message, TreePlan};
+use rtopk::coordinator::leader::run_leader;
+use rtopk::coordinator::worker::run_worker;
+use rtopk::coordinator::{
+    mock_worker_factory, run_relay, OptimKind, RelayStats, TrainConfig, WorkerFactory,
+};
+use rtopk::optim::LrSchedule;
+use rtopk::sparsify::SparsifierKind;
+use rtopk::util::rng::Rng;
+
+const DIM: usize = 64;
+/// Upper bound on "the cluster notices a dead link". Generous for CI —
+/// the point is that it is FINITE; healthy runs report in well under a
+/// second.
+const WAIT: Duration = Duration::from_secs(30);
+
+type StarBuild = fn(usize, &[usize]) -> anyhow::Result<(LeaderEndpoints, Vec<ChildSide>)>;
+#[allow(clippy::type_complexity)]
+type TreeBuild = fn(
+    &TreePlan,
+    &[usize],
+) -> anyhow::Result<(
+    LeaderEndpoints,
+    Vec<RelayEndpoints>,
+    Vec<Option<WorkerEndpoints>>,
+    Vec<(usize, TcpStream)>,
+)>;
+
+fn quick_cfg(nodes: usize, rounds: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::image_default(nodes, SparsifierKind::TopK, 0.9);
+    cfg.rounds = rounds;
+    cfg.warmup_epochs = 0.0;
+    cfg.optim = OptimKind::Sgd { clip: None };
+    cfg.lr = LrSchedule::constant(0.3);
+    cfg.eval_every = rounds;
+    cfg
+}
+
+// ---- the faults ----------------------------------------------------------
+
+/// Clean kill: the peer process vanished (socket closed mid-round).
+fn inject_kill(sock: TcpStream) {
+    drop(sock);
+}
+
+/// Half-close: FIN on the write side while the read side stays open and
+/// keeps consuming — the sneakiest variant, the link LOOKS alive to
+/// anything that only writes. Draining until error keeps the parent's
+/// writer unblocked; the read timeout bounds the drain.
+fn inject_half_close(sock: TcpStream) {
+    sock.shutdown(std::net::Shutdown::Write).expect("half-close the socket");
+    sock.set_read_timeout(Some(Duration::from_secs(10))).expect("bound the drain");
+    let mut r = &sock;
+    while read_message(&mut r).is_ok() {}
+}
+
+/// Mid-frame EOF: a valid frame header goes out, then the stream dies
+/// before the body completes.
+fn inject_midframe_eof(mut sock: TcpStream) {
+    let mut frame = Vec::new();
+    write_message(
+        &mut frame,
+        &Message::SparseUpdate {
+            round: 0,
+            worker: 0,
+            payload: vec![7u8; 64],
+            loss: 0.0,
+            examples: 1,
+            mem_norm: 0.0,
+            participants: 1,
+        },
+    )
+    .expect("encode a well-formed frame");
+    sock.write_all(&frame[..frame.len() / 2]).expect("send the truncated half");
+}
+
+/// Corrupt tag mid-stream: line noise / a buggy peer desyncs the framing.
+fn inject_corrupt_tag(mut sock: TcpStream) {
+    sock.write_all(&[0xFF; 16]).expect("send garbage bytes");
+}
+
+// ---- the harness ---------------------------------------------------------
+
+fn spawn_worker(
+    w: WorkerEndpoints,
+    factory: &WorkerFactory,
+    cfg: &TrainConfig,
+) -> std::thread::JoinHandle<()> {
+    let factory = factory.clone();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let setup = factory(w.id).expect("mock setup");
+        let rng = Rng::new(cfg.seed).fork(1_000 + w.id as u64);
+        // errors here are the cascade of the injected fault, not a verdict
+        let _ = run_worker(w, setup, &cfg, rng);
+    })
+}
+
+/// Run the leader on its own thread so the test thread can bound the wait;
+/// on any exit, push Shutdown to every child so healthy subtrees unblock.
+fn spawn_leader(
+    leader: LeaderEndpoints,
+    cfg: &TrainConfig,
+) -> std::sync::mpsc::Receiver<anyhow::Result<()>> {
+    let (done_tx, done_rx) = channel();
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        let res = run_leader(&leader, vec![0.0; DIM], None, &cfg, "fault-itest", 8);
+        for tx in &leader.to_workers {
+            let _ = tx.send(Message::Shutdown);
+        }
+        let _ = done_tx.send(res.map(|_| ()));
+    });
+    done_rx
+}
+
+/// Star: child `tap`'s socket goes to `inject`; the leader must error
+/// within WAIT naming that worker.
+fn star_fault_errors_leader(build: StarBuild, gather: &str, inject: fn(TcpStream)) {
+    let nodes = 3;
+    let tap = 2;
+    let mut cfg = quick_cfg(nodes, 6);
+    cfg.set_gather(gather).unwrap();
+    let (leader, sides) = build(nodes, &[tap]).unwrap();
+    let factory = mock_worker_factory(DIM, 0.05, 8);
+    let mut joins = Vec::new();
+    for side in sides {
+        match side {
+            ChildSide::Bridged(w) => joins.push(spawn_worker(w, &factory, &cfg)),
+            ChildSide::Raw(sock) => joins.push(std::thread::spawn(move || inject(sock))),
+        }
+    }
+    let done_rx = spawn_leader(leader, &cfg);
+    let res = done_rx.recv_timeout(WAIT).expect("leader must give a verdict in bounded time");
+    let err = res.expect_err("a dead link must error the run, not complete it");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("worker-2 reported a fatal error"),
+        "error must name the dead hop: {msg}"
+    );
+    for j in joins {
+        j.join().expect("no fault thread may panic");
+    }
+}
+
+/// Tree (`fanout=2,depth=2`, n=4): leaf worker 0's socket goes to
+/// `inject`. Its relay must error naming worker-0, and the failure must
+/// climb to the root as relay-0's — the two-hop supervision chain.
+fn tree_fault_errors_cluster(build: TreeBuild, gather: &str, inject: fn(TcpStream)) {
+    let nodes = 4;
+    let mut cfg = quick_cfg(nodes, 6);
+    cfg.set_topology("tree:fanout=2,depth=2").unwrap();
+    cfg.set_gather(gather).unwrap();
+    let plan = cfg.topology.plan(nodes).unwrap();
+    let (leader, relays, workers, raw) = build(&plan, &[0]).unwrap();
+    let factory = mock_worker_factory(DIM, 0.05, 8);
+    let mut joins = Vec::new();
+    // relay threads with the cluster's guard semantics inlined: on error,
+    // report WorkerFailed up and Shutdown down
+    let (relay_err_tx, relay_err_rx) = channel::<String>();
+    for r in relays {
+        let cfg = cfg.clone();
+        let up = r.up.to_leader.clone();
+        let down = r.down.to_workers.clone();
+        let rid = r.id;
+        let stats = Arc::new(RelayStats::new(r.level));
+        let etx = relay_err_tx.clone();
+        joins.push(std::thread::spawn(move || {
+            if let Err(e) = run_relay(r, &cfg, stats) {
+                let _ = etx.send(format!("{e:#}"));
+                let _ = up.send(Message::WorkerFailed { worker: rid });
+                for tx in &down {
+                    let _ = tx.send(Message::Shutdown);
+                }
+            }
+        }));
+    }
+    drop(relay_err_tx);
+    for w in workers.into_iter().flatten() {
+        joins.push(spawn_worker(w, &factory, &cfg));
+    }
+    for (_id, sock) in raw {
+        joins.push(std::thread::spawn(move || inject(sock)));
+    }
+    let done_rx = spawn_leader(leader, &cfg);
+    let res = done_rx.recv_timeout(WAIT).expect("leader must give a verdict in bounded time");
+    let err = res.expect_err("a dead leaf link must error the run, not complete it");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("relay-0 reported a fatal error"),
+        "the root names its failed DIRECT child: {msg}"
+    );
+    let relay_msg =
+        relay_err_rx.recv_timeout(WAIT).expect("relay-0 must have reported its own error");
+    assert!(
+        relay_msg.contains("worker-0 reported a fatal error"),
+        "the relay names the dead leaf: {relay_msg}"
+    );
+    for j in joins {
+        j.join().expect("no node or fault thread may panic");
+    }
+}
+
+// ---- the matrix ----------------------------------------------------------
+
+const FULL: &str = "full";
+const QUORUM: &str = "quorum:m=2,timeout_ms=50";
+const QUORUM_TREE: &str = "quorum:m=3,timeout_ms=50";
+
+#[test]
+fn star_socket_kill_errors_fullsync_legacy() {
+    star_fault_errors_leader(tcp_star_tapped, FULL, inject_kill);
+}
+
+#[test]
+fn star_socket_kill_errors_fullsync_evented() {
+    star_fault_errors_leader(evented_star_tapped, FULL, inject_kill);
+}
+
+#[test]
+fn star_socket_kill_errors_quorum_legacy() {
+    // The quorum CAN close without the dead worker — WorkerFailed must
+    // still abort the run instead of silently training on forever with a
+    // vanished peer.
+    star_fault_errors_leader(tcp_star_tapped, QUORUM, inject_kill);
+}
+
+#[test]
+fn star_socket_kill_errors_quorum_evented() {
+    star_fault_errors_leader(evented_star_tapped, QUORUM, inject_kill);
+}
+
+#[test]
+fn star_half_close_errors_legacy() {
+    star_fault_errors_leader(tcp_star_tapped, FULL, inject_half_close);
+}
+
+#[test]
+fn star_half_close_errors_evented() {
+    star_fault_errors_leader(evented_star_tapped, FULL, inject_half_close);
+}
+
+#[test]
+fn star_midframe_eof_errors_legacy() {
+    star_fault_errors_leader(tcp_star_tapped, FULL, inject_midframe_eof);
+}
+
+#[test]
+fn star_midframe_eof_errors_evented() {
+    star_fault_errors_leader(evented_star_tapped, FULL, inject_midframe_eof);
+}
+
+#[test]
+fn star_corrupt_tag_errors_legacy() {
+    star_fault_errors_leader(tcp_star_tapped, FULL, inject_corrupt_tag);
+}
+
+#[test]
+fn star_corrupt_tag_errors_evented() {
+    star_fault_errors_leader(evented_star_tapped, FULL, inject_corrupt_tag);
+}
+
+#[test]
+fn tree_socket_kill_errors_fullsync_legacy() {
+    tree_fault_errors_cluster(tcp_tree_tapped, FULL, inject_kill);
+}
+
+#[test]
+fn tree_socket_kill_errors_fullsync_evented() {
+    tree_fault_errors_cluster(evented_tree_tapped, FULL, inject_kill);
+}
+
+#[test]
+fn tree_corrupt_tag_errors_quorum_legacy() {
+    tree_fault_errors_cluster(tcp_tree_tapped, QUORUM_TREE, inject_corrupt_tag);
+}
+
+#[test]
+fn tree_corrupt_tag_errors_quorum_evented() {
+    tree_fault_errors_cluster(evented_tree_tapped, QUORUM_TREE, inject_corrupt_tag);
+}
