@@ -10,11 +10,12 @@
 //! (k/d ≤ 0.01, n ≥ 4, d ≥ 10^5) `decode+merge` must beat `decode+average`
 //! or the bench aborts — run by CI in quick mode.
 
-use rtopk::compress::aggregate::merge_scaled_into;
+use rtopk::compress::aggregate::{merge_scaled_into, SparseAggregator};
 use rtopk::compress::codec::{decode, encode, CodecConfig};
 use rtopk::optim::{MomentumSgd, Optimizer, Sgd};
 use rtopk::sparsify::SparseVec;
 use rtopk::util::bench::{bb, Bench};
+use rtopk::util::chunkpool::ChunkPool;
 use rtopk::util::rng::Rng;
 
 fn main() {
@@ -185,6 +186,55 @@ fn main() {
         star_stats.median_ns / tree_stats.median_ns
     };
 
+    // --- parallel decode+merge thread sweep (DESIGN.md §13) ---
+    // One row per (n, d, threads) with k = d/100 (the dense end of the
+    // paper's band, where aggregation dominates). threads=1 runs the
+    // literal serial code path, so the sweep doubles as a pooled-vs-
+    // serial regression guard; the 8-vs-1 ratio is asserted only under
+    // RTOPK_BENCH_STRICT=1 (it needs >= 8 real hardware threads).
+    let mut sweep_8v1 = f64::NAN;
+    for &n in &[8usize, 32] {
+        for &d in &[1_000_000usize, 10_000_000] {
+            let k = d / 100;
+            let messages: Vec<Vec<u8>> = (0..n)
+                .map(|_| {
+                    let mut idx = rng.sample_indices(d, k);
+                    idx.sort_unstable();
+                    let sv = SparseVec {
+                        dim: d,
+                        idx: idx.iter().map(|&i| i as u32).collect(),
+                        val: (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                    };
+                    let mut buf = Vec::new();
+                    encode(&sv, CodecConfig::default(), &mut buf);
+                    buf
+                })
+                .collect();
+            let frames: Vec<&[u8]> = messages.iter().map(|m| m.as_slice()).collect();
+            let scale = 1.0 / n as f32;
+            let mut agg = SparseAggregator::new();
+            let mut t1_ns = f64::NAN;
+            for &threads in &[1usize, 2, 8] {
+                let pool = ChunkPool::new(threads);
+                let stats = bench
+                    .run_elems(
+                        &format!("par/decode+merge/n={n}/d={d}/k={k}/threads={threads}"),
+                        Some(n * k),
+                        || {
+                            agg.decode_payloads(&frames, d, &pool).unwrap();
+                            bb(agg.merge_scaled_pooled(scale, d, &pool).nnz());
+                        },
+                    )
+                    .clone();
+                if threads == 1 {
+                    t1_ns = stats.median_ns;
+                } else if threads == 8 && n == 32 && d == 10_000_000 {
+                    sweep_8v1 = t1_ns / stats.median_ns;
+                }
+            }
+        }
+    }
+
     println!("\n-- merge-vs-dense aggregation gate (speedup = dense/merge median) --");
     let mut failed = false;
     for (label, speedup) in &gates {
@@ -205,6 +255,14 @@ fn main() {
         "the tree root's decode+merge (fanout pre-merged frames) must beat the star \
          root's (n worker frames) at n=32, fanout=4"
     );
+    println!("gate par/decode+merge threads=8 vs 1 (n=32, d=1e7): {sweep_8v1:.2}x");
+    if std::env::var("RTOPK_BENCH_STRICT").is_ok() {
+        assert!(
+            sweep_8v1 >= 2.0,
+            "threads=8 must deliver >= 2x median decode+merge throughput vs threads=1 \
+             at n=32, d=1e7 (RTOPK_BENCH_STRICT set; needs >= 8 hardware threads)"
+        );
+    }
     let path = bench.write_json().expect("bench json");
     println!("bench json: {}", path.display());
 }

@@ -1,0 +1,9 @@
+use crate::util::chunkpool::ChunkPool;
+
+/// The aggregation pool size flows from validated config
+/// (`--agg-threads`, default 1, DESIGN.md §13), never from the host:
+/// the parallel decode/merge/step fan-out replays bit-identically on
+/// any machine.
+pub fn agg_pool_from_config(agg_threads: usize) -> ChunkPool {
+    ChunkPool::new(agg_threads)
+}

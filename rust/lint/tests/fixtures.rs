@@ -107,6 +107,25 @@ fn determinism_threads_clean_and_waived() {
 }
 
 #[test]
+fn determinism_threads_covers_aggregation_call_sites() {
+    // The leader/relay aggregation pipeline now constructs ChunkPools
+    // too (parallel decode/merge/step — DESIGN.md §13); the global rule
+    // must cover every one of those files, and config-sourced pool
+    // sizes must stay clean there.
+    for rel in [
+        "compress/aggregate.rs",
+        "optim/mod.rs",
+        "coordinator/engine/mod.rs",
+        "coordinator/relay.rs",
+        "coordinator/federation/pool.rs",
+    ] {
+        let f = lint_fixture(rel, "determinism_threads_violation.rs");
+        assert_eq!(hits(&f), vec![(2, "determinism-threads")], "{rel}: {f:#?}");
+        assert_clean(rel, "determinism_threads_agg_clean.rs");
+    }
+}
+
+#[test]
 fn wire_panic_fires_and_mirrors_codec_finding() {
     // Mirrors the pre-existing finding this PR fixed: post-bounds reads in
     // the codec done with `buf[..].try_into().unwrap()`. The same line

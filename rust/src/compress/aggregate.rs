@@ -21,6 +21,7 @@
 
 use crate::compress::codec::CodecError;
 use crate::sparsify::SparseVec;
+use crate::util::chunkpool::{num_chunks, ChunkPool, SELECT_CHUNK};
 
 use super::layout::SegmentLayout;
 use super::GradientCompressor;
@@ -66,6 +67,22 @@ pub fn merge_scaled_into(inputs: &[SparseVec], scale: f32, dim: usize, out: &mut
         sv.debug_validate();
     }
     let mut cursors = vec![0usize; inputs.len()];
+    merge_range(inputs, &mut cursors, scale, u64::from(u32::MAX) + 1, out);
+}
+
+/// The min-scan core of [`merge_scaled_into`], restricted to coordinates
+/// `< end` and starting from the given per-input `cursors`. Every emitted
+/// coordinate is folded in input order exactly as documented above — the
+/// serial merge is one call over the full range, and the range-partitioned
+/// parallel merge ([`merge_scaled_into_pooled`]) is one call per disjoint
+/// coordinate range; both therefore produce identical bytes per coordinate.
+fn merge_range(
+    inputs: &[SparseVec],
+    cursors: &mut [usize],
+    scale: f32,
+    end: u64,
+    out: &mut SparseVec,
+) {
     loop {
         // Lowest pending index across all inputs, plus how many inputs sit
         // on it (the top-k regime is overlap-poor, so `hits == 1` is the
@@ -86,7 +103,7 @@ pub fn merge_scaled_into(inputs: &[SparseVec], scale: f32, dim: usize, out: &mut
                 }
             }
         }
-        if !any {
+        if !any || u64::from(next) >= end {
             break;
         }
         if hits == 1 {
@@ -110,6 +127,101 @@ pub fn merge_scaled_into(inputs: &[SparseVec], scale: f32, dim: usize, out: &mut
         }
         out.push(next, acc);
     }
+}
+
+/// Per-range partial state for the range-partitioned parallel merge: one
+/// output [`SparseVec`] plus a cursor vector per coordinate range, reused
+/// across rounds so steady-state merges allocate nothing.
+#[derive(Debug, Default)]
+struct RangePart {
+    out: SparseVec,
+    cursors: Vec<usize>,
+}
+
+/// Reusable scratch for [`merge_scaled_into_pooled`] /
+/// [`merge_tree_scaled_into_pooled`]. Holds the per-range partials (grown,
+/// never shrunk — the [`ChunkPool::run_chunks`] slot contract).
+#[derive(Debug, Default)]
+pub struct MergeScratch {
+    parts: Vec<RangePart>,
+}
+
+/// Range-partitioned parallel [`merge_scaled_into`]: the coordinate space
+/// `0..dim` is split into fixed [`SELECT_CHUNK`]-wide ranges (boundaries
+/// never depend on thread count), each range binary-searches every input's
+/// cursor start, runs the identical per-coordinate input-order fold
+/// independently into its own partial, and the partials are concatenated
+/// in range order. Bit-identical to the serial scan for ANY thread count
+/// by construction: ranges are disjoint, emitted in order, and the fold
+/// order *within* every coordinate is unchanged (see [`merge_range`]).
+///
+/// A serial pool (or a single-range dim) takes the literal
+/// [`merge_scaled_into`] path.
+pub fn merge_scaled_into_pooled(
+    inputs: &[SparseVec],
+    scale: f32,
+    dim: usize,
+    out: &mut SparseVec,
+    pool: &ChunkPool,
+    scratch: &mut MergeScratch,
+) {
+    let nranges = num_chunks(dim);
+    if pool.threads() <= 1 || nranges <= 1 {
+        merge_scaled_into(inputs, scale, dim, out);
+        return;
+    }
+    out.clear(dim);
+    if inputs.is_empty() {
+        return;
+    }
+    for sv in inputs {
+        sv.debug_validate();
+    }
+    pool.run_chunks(nranges, &mut scratch.parts, |r, part| {
+        let lo = (r * SELECT_CHUNK) as u64;
+        let hi = (((r + 1) * SELECT_CHUNK).min(dim)) as u64;
+        part.cursors.clear();
+        part.cursors.extend(inputs.iter().map(|sv| sv.idx.partition_point(|&i| u64::from(i) < lo)));
+        part.out.clear(dim);
+        merge_range(inputs, &mut part.cursors, scale, hi, &mut part.out);
+    });
+    for part in &scratch.parts[..nranges] {
+        out.idx.extend_from_slice(&part.out.idx);
+        out.val.extend_from_slice(&part.out.val);
+    }
+}
+
+/// Range-parallel dense accumulate: the bitwise equivalent of calling
+/// [`SparseVec::add_scaled_into`] once per input, in input order, into
+/// `dense` — the engine's near-dense fallback. Each fixed-width range of
+/// `dense` is a disjoint `&mut` part; within a range the inputs are folded
+/// in input order, so every coordinate sees the exact serial op sequence.
+pub fn add_scaled_dense_pooled(
+    inputs: &[SparseVec],
+    scale: f32,
+    dense: &mut [f32],
+    pool: &ChunkPool,
+) {
+    if pool.threads() <= 1 {
+        for sv in inputs {
+            sv.add_scaled_into(scale, dense);
+        }
+        return;
+    }
+    for sv in inputs {
+        sv.debug_validate();
+    }
+    pool.run_parts(dense, SELECT_CHUNK, |r, part| {
+        let lo = (r * SELECT_CHUNK) as u64;
+        let hi = lo + part.len() as u64;
+        for sv in inputs {
+            let s = sv.idx.partition_point(|&i| u64::from(i) < lo);
+            let e = sv.idx.partition_point(|&i| u64::from(i) < hi);
+            for (&i, &v) in sv.idx[s..e].iter().zip(&sv.val[s..e]) {
+                part[(u64::from(i) - lo) as usize] += scale * v;
+            }
+        }
+    });
 }
 
 /// The pinned tree-fold reduction: what a hierarchical (relay) aggregation
@@ -149,14 +261,57 @@ pub fn merge_tree_scaled_into(
     dim: usize,
     out: &mut SparseVec,
 ) {
+    let mut scratch = TreeMergeScratch::default();
+    merge_tree_scaled_into_pooled(
+        inputs,
+        groups,
+        scale,
+        dim,
+        out,
+        &ChunkPool::serial(),
+        &mut scratch,
+    );
+}
+
+/// Reusable scratch for [`merge_tree_scaled_into_pooled`]: the per-group
+/// partials (previously a fresh `SparseVec` allocation per group per call)
+/// plus the range-merge scratch. Grown, never shrunk.
+#[derive(Debug, Default)]
+pub struct TreeMergeScratch {
+    partials: Vec<SparseVec>,
+    merge: MergeScratch,
+}
+
+/// [`merge_tree_scaled_into`] with a caller-held scratch and a chunk pool:
+/// every group fold and the final group-order fold run the
+/// range-partitioned parallel merge. Same fold orders as the serial tree
+/// fold (each [`merge_scaled_into_pooled`] call is bit-identical to its
+/// serial counterpart), so the pinned tree-fold contract holds verbatim
+/// for any thread count.
+pub fn merge_tree_scaled_into_pooled(
+    inputs: &[SparseVec],
+    groups: &[std::ops::Range<usize>],
+    scale: f32,
+    dim: usize,
+    out: &mut SparseVec,
+    pool: &ChunkPool,
+    scratch: &mut TreeMergeScratch,
+) {
     debug_assert!(groups.iter().zip(groups.iter().skip(1)).all(|(a, b)| a.end == b.start));
-    let mut partials: Vec<SparseVec> = Vec::with_capacity(groups.len());
-    for g in groups {
-        let mut p = SparseVec::default();
-        merge_scaled_into(&inputs[g.clone()], 1.0, dim, &mut p);
-        partials.push(p);
+    if scratch.partials.len() < groups.len() {
+        scratch.partials.resize_with(groups.len(), SparseVec::default);
     }
-    merge_scaled_into(&partials, scale, dim, out);
+    for (g, p) in groups.iter().zip(scratch.partials.iter_mut()) {
+        merge_scaled_into_pooled(&inputs[g.clone()], 1.0, dim, p, pool, &mut scratch.merge);
+    }
+    merge_scaled_into_pooled(
+        &scratch.partials[..groups.len()],
+        scale,
+        dim,
+        out,
+        pool,
+        &mut scratch.merge,
+    );
 }
 
 /// Keep only the `budget` largest-magnitude coordinates of `sv` (the
@@ -164,7 +319,12 @@ pub fn merge_tree_scaled_into(
 /// deterministically toward the LOWER index, so a rerun reproduces the
 /// same frame bit for bit regardless of value distribution. The survivors
 /// stay sorted by index; a vector already within budget is untouched.
-pub fn truncate_topk(sv: &mut SparseVec, budget: usize) {
+///
+/// `order` is caller-held scratch for the permutation sort (cleared and
+/// refilled here; contents on entry are irrelevant) — a relay truncating
+/// every round under `--relay-budget` reuses one buffer and allocates
+/// nothing in steady state.
+pub fn truncate_topk(sv: &mut SparseVec, budget: usize, order: &mut Vec<usize>) {
     if sv.nnz() <= budget {
         return;
     }
@@ -175,7 +335,8 @@ pub fn truncate_topk(sv: &mut SparseVec, budget: usize) {
     }
     // order positions by (|v| desc, idx asc); |v| comparison via total_cmp
     // on the absolute value so NaN/-0.0 order deterministically too
-    let mut order: Vec<usize> = (0..sv.nnz()).collect();
+    order.clear();
+    order.extend(0..sv.nnz());
     order.sort_unstable_by(|&a, &b| {
         sv.val[b]
             .abs()
@@ -199,6 +360,8 @@ pub fn truncate_topk(sv: &mut SparseVec, budget: usize) {
 pub struct SparseAggregator {
     decoded: Vec<SparseVec>,
     used: usize,
+    /// Range-merge scratch for the pooled merge path.
+    merge_scratch: MergeScratch,
     /// The union aggregate of the last [`Self::merge_scaled`] call.
     pub merged: SparseVec,
 }
@@ -228,6 +391,61 @@ impl SparseAggregator {
         Ok(slot.nnz())
     }
 
+    /// Decode all `payloads` (one per frame, in child order) on the pool —
+    /// one task per frame into its reusable slot; decode is a pure
+    /// function of the buffer, so slot writes are independent. Returns the
+    /// total decoded nnz. On a corrupt frame the error reported is the
+    /// lowest-index failing frame's (the same frame the serial fail-fast
+    /// loop would have reported) and no slots count as decoded.
+    ///
+    /// A serial pool (or a single frame) takes the literal
+    /// [`Self::decode_payload`] loop.
+    pub fn decode_payloads(
+        &mut self,
+        payloads: &[&[u8]],
+        dim: usize,
+        pool: &ChunkPool,
+    ) -> Result<u64, CodecError> {
+        self.used = 0;
+        let n = payloads.len();
+        if pool.threads() <= 1 || n <= 1 {
+            for p in payloads {
+                if let Err(e) = self.decode_payload(p, dim) {
+                    // uniform error contract with the pooled branch below:
+                    // a failed round leaves nothing counted as decoded
+                    self.used = 0;
+                    return Err(e);
+                }
+            }
+        } else {
+            if self.decoded.len() < n {
+                self.decoded.resize_with(n, SparseVec::default);
+            }
+            // Errors are rare (a corrupt frame aborts the run): the mutex
+            // is only ever locked on a failing decode, so the hot path is
+            // contention-free.
+            let first_err: std::sync::Mutex<Option<(usize, CodecError)>> =
+                std::sync::Mutex::new(None);
+            pool.run_slots(&mut self.decoded[..n], |i, slot| {
+                if let Err(e) = GradientCompressor::decompress_expecting(payloads[i], dim, slot) {
+                    let mut held = first_err.lock().expect("decode error mutex");
+                    let keep_new = match held.as_ref() {
+                        None => true,
+                        Some((j, _)) => i < *j,
+                    };
+                    if keep_new {
+                        *held = Some((i, e));
+                    }
+                }
+            });
+            if let Some((_, e)) = first_err.into_inner().expect("decode error mutex") {
+                return Err(e);
+            }
+            self.used = n;
+        }
+        Ok(self.decoded[..self.used].iter().map(|sv| sv.nnz() as u64).sum())
+    }
+
     /// The payloads decoded since [`Self::begin`], in decode order.
     pub fn decoded(&self) -> &[SparseVec] {
         &self.decoded[..self.used]
@@ -236,6 +454,20 @@ impl SparseAggregator {
     /// K-way merge the decoded payloads into [`Self::merged`].
     pub fn merge_scaled(&mut self, scale: f32, dim: usize) -> &SparseVec {
         merge_scaled_into(&self.decoded[..self.used], scale, dim, &mut self.merged);
+        &self.merged
+    }
+
+    /// [`Self::merge_scaled`] on the pool: range-partitioned, bit-identical
+    /// for any thread count (serial pool = the serial merge verbatim).
+    pub fn merge_scaled_pooled(&mut self, scale: f32, dim: usize, pool: &ChunkPool) -> &SparseVec {
+        merge_scaled_into_pooled(
+            &self.decoded[..self.used],
+            scale,
+            dim,
+            &mut self.merged,
+            pool,
+            &mut self.merge_scratch,
+        );
         &self.merged
     }
 }
@@ -452,21 +684,144 @@ mod tests {
             idx: vec![1, 4, 9, 12, 20, 31],
             val: vec![0.5, -2.0, 1.0, -1.0, 2.0, 1.0],
         };
-        truncate_topk(&mut sv, 3);
+        let mut order = Vec::new();
+        truncate_topk(&mut sv, 3, &mut order);
         // |2.0| twice (idx 4 wins over 20? no: both keep — budget 3 takes
         // |−2.0|@4, |2.0|@20, then the |1.0| tie breaks to the LOWER idx 9
         assert_eq!(sv.idx, vec![4, 9, 20]);
         assert_eq!(sv.val, vec![-2.0, 1.0, 2.0]);
         sv.debug_validate();
-        // within budget: untouched
+        // within budget: untouched (stale scratch contents are irrelevant)
         let before = sv.clone();
-        truncate_topk(&mut sv, 10);
+        truncate_topk(&mut sv, 10, &mut order);
         assert_eq!(sv.idx, before.idx);
         assert_eq!(sv.val, before.val);
         // zero budget: empty, dim preserved
-        truncate_topk(&mut sv, 0);
+        truncate_topk(&mut sv, 0, &mut order);
         assert!(sv.is_empty());
         assert_eq!(sv.dim, 32);
+    }
+
+    #[test]
+    fn pooled_merge_matches_serial_bitwise_across_thread_counts() {
+        // Spans the range boundary (SELECT_CHUNK = 65_536) so multiple
+        // ranges are actually exercised, plus heavy-overlap small dims.
+        let mut rng = Rng::new(23);
+        let mut scratch = MergeScratch::default();
+        for &(n, dim, k) in &[
+            (4usize, 3 * SELECT_CHUNK + 17, 500usize),
+            (8, SELECT_CHUNK + 1, 300),
+            (5, 1000, 400), // single range: serial fallback path
+        ] {
+            let inputs: Vec<SparseVec> = (0..n).map(|_| random_sparse(dim, k, &mut rng)).collect();
+            let scale = 1.0 / n as f32;
+            let mut serial = SparseVec::default();
+            merge_scaled_into(&inputs, scale, dim, &mut serial);
+            for threads in [1usize, 2, 3, 8] {
+                let pool = ChunkPool::new(threads);
+                let mut par = SparseVec::default();
+                merge_scaled_into_pooled(&inputs, scale, dim, &mut par, &pool, &mut scratch);
+                par.debug_validate();
+                assert_eq!(serial.idx, par.idx, "threads={threads} dim={dim}");
+                assert_eq!(
+                    serial.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    par.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "threads={threads} dim={dim}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_dense_accumulate_matches_serial_bitwise() {
+        let mut rng = Rng::new(29);
+        let dim = 2 * SELECT_CHUNK + 101;
+        let inputs: Vec<SparseVec> = (0..6).map(|_| random_sparse(dim, 2000, &mut rng)).collect();
+        let mut serial = vec![0.0f32; dim];
+        for sv in &inputs {
+            sv.add_scaled_into(0.125, &mut serial);
+        }
+        for threads in [1usize, 2, 8] {
+            let mut par = vec![0.0f32; dim];
+            add_scaled_dense_pooled(&inputs, 0.125, &mut par, &ChunkPool::new(threads));
+            assert_eq!(
+                serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                par.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn pooled_decode_matches_serial_and_reports_first_error() {
+        let dim = 512;
+        let mut rng = Rng::new(31);
+        let inputs: Vec<SparseVec> = (0..5).map(|_| random_sparse(dim, 32, &mut rng)).collect();
+        let payloads: Vec<Vec<u8>> = inputs
+            .iter()
+            .map(|sv| {
+                let mut buf = Vec::new();
+                codec::encode(sv, CodecConfig::default(), &mut buf);
+                buf
+            })
+            .collect();
+        let refs: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        for threads in [1usize, 2, 8] {
+            let pool = ChunkPool::new(threads);
+            let mut agg = SparseAggregator::new();
+            for round in 0..2 {
+                agg.begin();
+                let nnz = agg.decode_payloads(&refs, dim, &pool).unwrap();
+                assert_eq!(nnz, 5 * 32, "threads={threads} round={round}");
+                assert_eq!(agg.decoded().len(), 5);
+                for (sv, want) in agg.decoded().iter().zip(&inputs) {
+                    assert_eq!(sv.idx, want.idx, "threads={threads}");
+                    assert_eq!(sv.val, want.val, "threads={threads}");
+                }
+            }
+            // corrupt frame 2: the reported error must be frame 2's (the
+            // serial fail-fast choice), and nothing counts as decoded
+            let mut bad = payloads.clone();
+            bad[2].truncate(3);
+            bad[4].truncate(1);
+            let bad_refs: Vec<&[u8]> = bad.iter().map(|p| p.as_slice()).collect();
+            agg.begin();
+            let err = agg.decode_payloads(&bad_refs, dim, &pool).unwrap_err();
+            let mut tmp = SparseVec::default();
+            let want =
+                GradientCompressor::decompress_expecting(&bad[2], dim, &mut tmp).unwrap_err();
+            assert_eq!(format!("{err}"), format!("{want}"), "threads={threads}");
+            assert_eq!(agg.decoded().len(), 0, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_tree_merge_matches_serial_bitwise() {
+        let mut rng = Rng::new(37);
+        let dim = SELECT_CHUNK + 999;
+        let inputs: Vec<SparseVec> = (0..8).map(|_| random_sparse(dim, 600, &mut rng)).collect();
+        let groups = vec![0..3, 3..5, 5..8];
+        let mut serial = SparseVec::default();
+        merge_tree_scaled_into(&inputs, &groups, 0.125, dim, &mut serial);
+        let mut scratch = TreeMergeScratch::default();
+        for threads in [1usize, 2, 8] {
+            let mut par = SparseVec::default();
+            merge_tree_scaled_into_pooled(
+                &inputs,
+                &groups,
+                0.125,
+                dim,
+                &mut par,
+                &ChunkPool::new(threads),
+                &mut scratch,
+            );
+            assert_eq!(serial.idx, par.idx, "threads={threads}");
+            assert_eq!(
+                serial.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                par.val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

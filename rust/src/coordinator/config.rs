@@ -140,6 +140,28 @@ pub struct TrainConfig {
     /// Determinism contract: the compressed bytes are identical for any
     /// value — only wall-clock time changes (DESIGN.md §11).
     pub select_threads: usize,
+    /// Leader/relay/federation-slot aggregation chunk-pool size (CLI
+    /// `--agg-threads`). Drives the per-frame decode fan-out, the
+    /// range-partitioned k-way merge, and the sparse-step scatter over
+    /// scoped threads; 1 (the default) is the literal serial path. Same
+    /// determinism contract as `select_threads`: bytes and trajectories
+    /// are identical for any value (DESIGN.md §13). The default can be
+    /// raised via the `RTOPK_AGG_THREADS` env var — the CI
+    /// thread-invariance pass runs the whole test suite under
+    /// `RTOPK_AGG_THREADS=4`.
+    pub agg_threads: usize,
+}
+
+/// Default for [`TrainConfig::agg_threads`]: 1 unless `RTOPK_AGG_THREADS`
+/// overrides it (mirroring the `RTOPK_PROPTEST_*` override pattern —
+/// util/proptest.rs). Reading an env var here is determinism-safe: the
+/// thread count changes wall-clock only, never bytes, which is exactly
+/// what the CI override pass exists to prove on every run.
+fn agg_threads_default() -> usize {
+    std::env::var("RTOPK_AGG_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .map_or(1, |t| t.max(1))
 }
 
 impl TrainConfig {
@@ -167,6 +189,7 @@ impl TrainConfig {
             seed: 0xD15C0,
             federation: None,
             select_threads: 1,
+            agg_threads: agg_threads_default(),
         }
     }
 
@@ -194,6 +217,7 @@ impl TrainConfig {
             seed: 0x17B,
             federation: None,
             select_threads: 1,
+            agg_threads: agg_threads_default(),
         }
     }
 
@@ -332,6 +356,7 @@ impl TrainConfig {
         // by zero panic mid-run rather than a config error.
         anyhow::ensure!(self.eval_every >= 1, "eval_every must be >= 1");
         anyhow::ensure!(self.select_threads >= 1, "select_threads must be >= 1");
+        anyhow::ensure!(self.agg_threads >= 1, "agg_threads must be >= 1");
         anyhow::ensure!(
             self.keep_frac > 0.0 && self.keep_frac <= 1.0,
             "keep_frac must be in (0, 1], got {}",
@@ -614,6 +639,18 @@ mod tests {
         }
         cfg.select_threads = 0;
         assert!(cfg.validate().is_err(), "0 threads is a config error");
+    }
+
+    #[test]
+    fn agg_threads_validates() {
+        let mut cfg = TrainConfig::image_default(4, SparsifierKind::TopK, 0.99);
+        // default is 1 unless RTOPK_AGG_THREADS overrides it (the CI
+        // thread-invariance pass sets 4), so assert the invariant only
+        assert!(cfg.agg_threads >= 1, "default 1, or RTOPK_AGG_THREADS when set");
+        cfg.agg_threads = 8;
+        assert!(cfg.validate().is_ok());
+        cfg.agg_threads = 0;
+        assert!(cfg.validate().is_err(), "0 agg threads is a config error");
     }
 
     #[test]

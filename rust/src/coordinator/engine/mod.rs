@@ -41,6 +41,7 @@ use crate::compress::{aggregate, SparseAggregator};
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::optim::{MomentumSgd, Optimizer, Sgd, WarmupSparsity};
 use crate::sparsify::SparseVec;
+use crate::util::chunkpool::ChunkPool;
 
 use super::config::{OptimKind, RoundMode, TrainConfig};
 use super::leader::Evaluator;
@@ -69,6 +70,10 @@ pub struct RoundEngine<'a> {
     broadcast: BroadcastPhase,
     gather: GatherPhase,
     agg: SparseAggregator,
+    /// Aggregation chunk pool (`--agg-threads`): parallel frame decode,
+    /// range-partitioned merge, sparse-step scatter. Serial (the literal
+    /// pre-pool code path) at the default size 1.
+    agg_pool: ChunkPool,
     /// Streaming decode scratch for the dense-accumulate fallback.
     scratch: SparseVec,
     /// Dense accumulator, materialized only when an optimizer or a
@@ -110,6 +115,7 @@ impl<'a> RoundEngine<'a> {
             broadcast: BroadcastPhase::new(cfg, dim),
             gather,
             agg: SparseAggregator::new(),
+            agg_pool: ChunkPool::new(cfg.agg_threads),
             scratch: SparseVec::default(),
             dense_agg: Vec::new(),
             dense_dirty: false,
@@ -181,45 +187,91 @@ impl<'a> RoundEngine<'a> {
             let mut seg_bytes = vec![0u64; nseg];
             let mut seg_mass = vec![0f64; nseg];
             let mut seg_overhead = 0u64;
-            for u in self.gather.updates().iter().flatten() {
-                if !dense_mode {
-                    let nnz = self.agg.decode_payload(&u.payload, self.dim)? as u64;
-                    coords += nnz;
-                    if let Some(layout) = &seg_layout {
-                        let sv = self.agg.decoded().last().expect("just decoded");
+            if self.agg_pool.threads() > 1 {
+                // Parallel path: decode EVERY frame on the pool first (one
+                // task per frame into its reusable slot), then run the
+                // accounting serially and pick sparse vs dense on the
+                // total. The serial path below streams instead (it can
+                // switch to dense mid-gather); both fold every coordinate
+                // in child order, so the round is bit-identical either way.
+                let frames: Vec<&[u8]> = self
+                    .gather
+                    .updates()
+                    .iter()
+                    .flatten()
+                    .map(|u| u.payload.as_slice())
+                    .collect();
+                coords = self.agg.decode_payloads(&frames, self.dim, &self.agg_pool)?;
+                if let Some(layout) = &seg_layout {
+                    for sv in self.agg.decoded() {
                         aggregate::mass_by_segment(sv, layout, &mut seg_mass);
                     }
-                    if coords >= self.dim as u64 {
-                        dense_mode = true;
-                        prepare_dense(&mut self.dense_agg, &mut self.dense_dirty, self.dim);
-                        for sv in self.agg.decoded() {
-                            sv.add_scaled_into(scale, &mut self.dense_agg);
-                        }
-                    }
-                } else {
-                    crate::compress::GradientCompressor::decompress_expecting(
-                        &u.payload,
-                        self.dim,
-                        &mut self.scratch,
-                    )?;
-                    coords += self.scratch.nnz() as u64;
-                    if let Some(layout) = &seg_layout {
-                        aggregate::mass_by_segment(&self.scratch, layout, &mut seg_mass);
-                    }
-                    self.scratch.add_scaled_into(scale, &mut self.dense_agg);
+                }
+                if coords >= self.dim as u64 {
+                    dense_mode = true;
+                    prepare_dense(&mut self.dense_agg, &mut self.dense_dirty, self.dim);
+                    aggregate::add_scaled_dense_pooled(
+                        self.agg.decoded(),
+                        scale,
+                        &mut self.dense_agg,
+                        &self.agg_pool,
+                    );
                 }
                 if seg_layout.is_some() {
-                    // a cheap table scan — the decode above already
-                    // validated this frame in full
-                    let scanned = codec::scan_segment_sizes(&u.payload, |s, nbytes| {
-                        if s < seg_bytes.len() {
-                            seg_bytes[s] += nbytes as u64;
+                    for u in self.gather.updates().iter().flatten() {
+                        let scanned = codec::scan_segment_sizes(&u.payload, |s, nbytes| {
+                            if s < seg_bytes.len() {
+                                seg_bytes[s] += nbytes as u64;
+                            }
+                        });
+                        match scanned {
+                            Some(overhead) => seg_overhead += overhead as u64,
+                            // single-segment layouts ride the flat frame
+                            None => seg_bytes[0] += u.payload.len() as u64,
                         }
-                    });
-                    match scanned {
-                        Some(overhead) => seg_overhead += overhead as u64,
-                        // single-segment layouts ride the flat frame
-                        None => seg_bytes[0] += u.payload.len() as u64,
+                    }
+                }
+            } else {
+                for u in self.gather.updates().iter().flatten() {
+                    if !dense_mode {
+                        let nnz = self.agg.decode_payload(&u.payload, self.dim)? as u64;
+                        coords += nnz;
+                        if let Some(layout) = &seg_layout {
+                            let sv = self.agg.decoded().last().expect("just decoded");
+                            aggregate::mass_by_segment(sv, layout, &mut seg_mass);
+                        }
+                        if coords >= self.dim as u64 {
+                            dense_mode = true;
+                            prepare_dense(&mut self.dense_agg, &mut self.dense_dirty, self.dim);
+                            for sv in self.agg.decoded() {
+                                sv.add_scaled_into(scale, &mut self.dense_agg);
+                            }
+                        }
+                    } else {
+                        crate::compress::GradientCompressor::decompress_expecting(
+                            &u.payload,
+                            self.dim,
+                            &mut self.scratch,
+                        )?;
+                        coords += self.scratch.nnz() as u64;
+                        if let Some(layout) = &seg_layout {
+                            aggregate::mass_by_segment(&self.scratch, layout, &mut seg_mass);
+                        }
+                        self.scratch.add_scaled_into(scale, &mut self.dense_agg);
+                    }
+                    if seg_layout.is_some() {
+                        // a cheap table scan — the decode above already
+                        // validated this frame in full
+                        let scanned = codec::scan_segment_sizes(&u.payload, |s, nbytes| {
+                            if s < seg_bytes.len() {
+                                seg_bytes[s] += nbytes as u64;
+                            }
+                        });
+                        match scanned {
+                            Some(overhead) => seg_overhead += overhead as u64,
+                            // single-segment layouts ride the flat frame
+                            None => seg_bytes[0] += u.payload.len() as u64,
+                        }
                     }
                 }
             }
@@ -230,8 +282,8 @@ impl<'a> RoundEngine<'a> {
                 self.dense_dirty = true;
                 false
             } else {
-                self.agg.merge_scaled(scale, self.dim);
-                if self.opt.step_sparse(&mut params, &self.agg.merged) {
+                self.agg.merge_scaled_pooled(scale, self.dim, &self.agg_pool);
+                if self.opt.step_sparse_pooled(&mut params, &self.agg.merged, &self.agg_pool) {
                     true
                 } else {
                     // stateful optimizer: scatter the union into the dense

@@ -36,8 +36,9 @@ use std::sync::Arc;
 
 use crate::compress::codec::{self, CodecConfig, SegEntry};
 use crate::comms::transport::{Message, WorkerEndpoints};
-use crate::compress::aggregate::merge_scaled_into;
+use crate::compress::aggregate::{merge_scaled_into_pooled, MergeScratch};
 use crate::compress::GradientCompressor;
+use crate::util::chunkpool::ChunkPool;
 use crate::runtime::{Batch, MockModel};
 use crate::sparsify::{ErrorFeedback, SparseVec};
 use crate::util::rng::Rng;
@@ -87,6 +88,11 @@ pub fn run_virtual_worker(
     let mut delta_sv = SparseVec::default();
     let mut kepts: Vec<SparseVec> = Vec::new();
     let mut merged = SparseVec::default();
+    // Aggregation pool (`--agg-threads`) for the slot's client fold —
+    // the same range-partitioned merge relays run, bit-identical to
+    // serial for any size.
+    let agg_pool = ChunkPool::new(cfg.agg_threads);
+    let mut merge_scratch = MergeScratch::default();
     let mut scratch: Vec<u8> = Vec::new();
     let mut payload: Vec<u8> = Vec::new();
     let mut sub_buf: Vec<u8> = Vec::new();
@@ -229,7 +235,7 @@ pub fn run_virtual_worker(
         }
 
         // ---- fold the slot's clients into ONE frame (relay contract) ----
-        merge_scaled_into(&kepts, 1.0, dim, &mut merged);
+        merge_scaled_into_pooled(&kepts, 1.0, dim, &mut merged, &agg_pool, &mut merge_scratch);
         match &layout {
             Some(layout) if !layout.is_single() => {
                 bodies.clear();

@@ -51,8 +51,9 @@ use std::time::Instant;
 
 use crate::compress::codec::{self, CodecConfig, SegEntry};
 use crate::comms::transport::{self, Message, RelayEndpoints};
-use crate::compress::aggregate::{merge_scaled_into, truncate_topk};
+use crate::compress::aggregate::{merge_scaled_into_pooled, truncate_topk, MergeScratch};
 use crate::compress::{SegmentLayout, SparseAggregator};
+use crate::util::chunkpool::ChunkPool;
 use crate::sparsify::SparseVec;
 
 use super::config::TrainConfig;
@@ -114,6 +115,11 @@ pub fn run_relay(
     let mut layout: Option<SegmentLayout> = None;
 
     let mut agg = SparseAggregator::new();
+    // Aggregation pool (`--agg-threads`): parallel frame decode + the
+    // range-partitioned merge; bit-identical to serial for any size.
+    let agg_pool = ChunkPool::new(cfg.agg_threads);
+    let mut merge_scratch = MergeScratch::default();
+    let mut topk_order: Vec<usize> = Vec::new();
     let mut merged = SparseVec::default();
     let mut delta_sv = SparseVec::default();
     let mut payload: Vec<u8> = Vec::new();
@@ -226,12 +232,22 @@ pub fn run_relay(
         // lint:allow(determinism-time): merge_ms metric timing only; never feeds training state
         let t0 = Instant::now();
         agg.begin();
-        for u in gather.updates().iter().flatten() {
-            agg.decode_payload(&u.payload, d)?;
+        if agg_pool.threads() > 1 {
+            let frames: Vec<&[u8]> = gather
+                .updates()
+                .iter()
+                .flatten()
+                .map(|u| u.payload.as_slice())
+                .collect();
+            agg.decode_payloads(&frames, d, &agg_pool)?;
+        } else {
+            for u in gather.updates().iter().flatten() {
+                agg.decode_payload(&u.payload, d)?;
+            }
         }
-        merge_scaled_into(agg.decoded(), 1.0, d, &mut merged);
+        merge_scaled_into_pooled(agg.decoded(), 1.0, d, &mut merged, &agg_pool, &mut merge_scratch);
         if let Some(budget) = cfg.relay_budget {
-            truncate_topk(&mut merged, budget);
+            truncate_topk(&mut merged, budget, &mut topk_order);
         }
 
         // ---- re-encode through the uplink codec stages ----

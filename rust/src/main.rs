@@ -125,6 +125,13 @@ SUBCOMMANDS
                                          (default 1 = serial); compressed
                                          bytes are identical for any N —
                                          only wall-clock time changes
+                --agg-threads N          leader/relay aggregation chunk
+                                         pool: parallel frame decode,
+                                         range-partitioned k-way merge and
+                                         sparse-step scatter (default 1 =
+                                         serial, env RTOPK_AGG_THREADS
+                                         overrides); trajectories are
+                                         bit-identical for any N
                 --artifacts DIR --out results/train
   experiment  regenerate a paper table/figure
                 --id table1..table5|fig2..fig6|figT1|figT2|figS1|figS2|figS3|figS4|all
@@ -194,6 +201,7 @@ fn parse_common(args: &Args) -> anyhow::Result<(TrainConfig, PathBuf)> {
     // Selection chunk-pool size: explicit config only, never ambient
     // machine parallelism (the determinism-threads lint contract).
     cfg.select_threads = args.usize_or("select-threads", cfg.select_threads)?;
+    cfg.agg_threads = args.usize_or("agg-threads", cfg.agg_threads)?;
     if !args.bool_or("error-feedback", true)? {
         cfg.error_feedback = false;
     }

@@ -8,6 +8,7 @@ pub mod schedule;
 pub use schedule::{LrSchedule, WarmupSparsity};
 
 use crate::sparsify::SparseVec;
+use crate::util::chunkpool::{ChunkPool, SELECT_CHUNK};
 
 /// An optimizer consumes the aggregated (dense) update direction and steps
 /// the flat parameter vector in place.
@@ -25,6 +26,22 @@ pub trait Optimizer: Send {
     /// trajectory guarantee rests on this).
     fn step_sparse(&mut self, _params: &mut [f32], _upd: &SparseVec) -> bool {
         false
+    }
+
+    /// [`Self::step_sparse`] with the scatter fanned out over disjoint
+    /// fixed-width ranges of `params` on the chunk pool (`--agg-threads`).
+    /// Per-coordinate writes are independent, so the result is bitwise
+    /// identical for any thread count; any serial reduction an optimizer
+    /// needs (e.g. the clip norm) must stay serial in the implementation.
+    /// Default: the serial [`Self::step_sparse`] (also the declined-step
+    /// answer for stateful optimizers).
+    fn step_sparse_pooled(
+        &mut self,
+        params: &mut [f32],
+        upd: &SparseVec,
+        _pool: &ChunkPool,
+    ) -> bool {
+        self.step_sparse(params, upd)
     }
 
     /// Current learning rate (after schedule application).
@@ -142,6 +159,50 @@ impl Optimizer for Sgd {
         true
     }
 
+    /// Parallel scatter over disjoint `params` ranges. The clip norm is a
+    /// float reduction whose op order matters, so it stays the serial
+    /// `upd.l2_sq()` scan; only the per-coordinate scatter (order-free,
+    /// each coordinate written exactly once) fans out. Bitwise identical
+    /// to [`Self::step_sparse`] for any thread count.
+    fn step_sparse_pooled(
+        &mut self,
+        params: &mut [f32],
+        upd: &SparseVec,
+        pool: &ChunkPool,
+    ) -> bool {
+        if pool.threads() <= 1 {
+            return self.step_sparse(params, upd);
+        }
+        let scale = match self.clip_norm {
+            Some(clip) => {
+                let norm = upd.l2_sq().sqrt() as f32;
+                if norm > clip {
+                    clip / norm
+                } else {
+                    1.0
+                }
+            }
+            None => 1.0,
+        };
+        let lr = self.lr_value;
+        pool.run_parts(params, SELECT_CHUNK, |r, part| {
+            let lo = (r * SELECT_CHUNK) as u64;
+            let hi = lo + part.len() as u64;
+            let s = upd.idx.partition_point(|&i| u64::from(i) < lo);
+            let e = upd.idx.partition_point(|&i| u64::from(i) < hi);
+            if scale == 1.0 {
+                for (&i, &v) in upd.idx[s..e].iter().zip(&upd.val[s..e]) {
+                    part[(u64::from(i) - lo) as usize] -= lr * v;
+                }
+            } else {
+                for (&i, &v) in upd.idx[s..e].iter().zip(&upd.val[s..e]) {
+                    part[(u64::from(i) - lo) as usize] -= lr * (v * scale);
+                }
+            }
+        });
+        true
+    }
+
     fn lr(&self) -> f32 {
         self.lr_value
     }
@@ -235,6 +296,42 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "clip={clip:?}");
             }
         }
+    }
+
+    #[test]
+    fn sgd_pooled_sparse_step_matches_serial_bitwise() {
+        // Cross the SELECT_CHUNK boundary so several params ranges are
+        // live; with and without clipping, every thread count must equal
+        // the serial scatter bit for bit.
+        let dim = 2 * SELECT_CHUNK + 33;
+        let idx: Vec<u32> = (0..400u32).map(|j| j * (dim as u32 / 400)).collect();
+        let val: Vec<f32> = (0..400).map(|j| (j as f32 * 0.37).sin() * 2.0).collect();
+        let upd = SparseVec { dim, idx, val };
+        for clip in [None, Some(0.5f32)] {
+            let mk = || match clip {
+                Some(c) => Sgd::with_clip(0.3, c),
+                None => Sgd::new(0.3),
+            };
+            let init: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.001).cos()).collect();
+            let mut w_serial = init.clone();
+            assert!(mk().step_sparse(&mut w_serial, &upd));
+            for threads in [1usize, 2, 8] {
+                let mut w_par = init.clone();
+                assert!(mk().step_sparse_pooled(&mut w_par, &upd, &ChunkPool::new(threads)));
+                for (a, b) in w_serial.iter().zip(&w_par) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "clip={clip:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn momentum_declines_pooled_sparse_step() {
+        let mut opt = MomentumSgd::new(4, 0.1, 0.9);
+        let mut w = vec![0.0; 4];
+        let upd = SparseVec { dim: 4, idx: vec![2], val: vec![1.0] };
+        assert!(!opt.step_sparse_pooled(&mut w, &upd, &ChunkPool::new(4)));
+        assert_eq!(w, vec![0.0; 4], "declined step must not touch params");
     }
 
     #[test]

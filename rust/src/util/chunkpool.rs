@@ -1,4 +1,5 @@
-//! Deterministic scoped-thread chunk pool for hot-path selection scans.
+//! Deterministic scoped-thread chunk pool for hot-path selection scans
+//! and the leader/relay aggregation pipeline.
 //!
 //! The selection kernels (`atopk` filter, magnitude histogram, max-abs)
 //! walk the gradient in fixed-size chunks of [`SELECT_CHUNK`] elements.
@@ -9,9 +10,11 @@
 //! writes only its own slot, the merged result is bit-identical for any
 //! thread count, including 1.
 //!
-//! The pool size flows from config (`--select-threads`); round logic
-//! must never read ambient machine parallelism (the `rtopk-lint`
-//! `determinism-threads` rule enforces this).
+//! The pool size flows from config (`--select-threads` for the worker
+//! selection scans, `--agg-threads` for the leader/relay aggregation
+//! pipeline — DESIGN.md §13); round logic must never read ambient
+//! machine parallelism (the `rtopk-lint` `determinism-threads` rule
+//! enforces this).
 
 /// Fixed chunk width for all parallel selection scans. Mirrors the
 /// Pallas prototype's block size; must never depend on thread count.
@@ -97,6 +100,64 @@ impl ChunkPool {
             }
         });
     }
+
+    /// Split `data` into consecutive parts of `width` elements (the last
+    /// part may be short) and run `f(part_index, part)` for each. Part
+    /// boundaries are fixed by `width` — never by thread count — and every
+    /// part is a disjoint `&mut` subslice, so writes cannot race and the
+    /// result is bit-identical for any thread count, including 1.
+    ///
+    /// This is the write-in-place dual of [`Self::run_chunks`]: instead of
+    /// merging per-chunk slots afterwards, the caller's buffer IS the
+    /// output (parallel scatter into a params/accumulator vector, one
+    /// decode slot per frame, …). Parts are assigned to threads as
+    /// contiguous blocks in index order, like chunks.
+    pub fn run_parts<T, F>(&self, data: &mut [T], width: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(width > 0, "part width must be positive");
+        let nparts = data.len().div_ceil(width);
+        let threads = self.threads.min(nparts);
+        if threads <= 1 {
+            for (p, part) in data.chunks_mut(width).enumerate() {
+                f(p, part);
+            }
+            return;
+        }
+        let base = nparts / threads;
+        let extra = nparts % threads;
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = data;
+            let mut first_part = 0usize;
+            for t in 0..threads {
+                let parts_here = base + usize::from(t < extra);
+                let elems = (parts_here * width).min(rest.len());
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(elems);
+                rest = tail;
+                let first = first_part;
+                scope.spawn(move || {
+                    for (j, part) in head.chunks_mut(width).enumerate() {
+                        f(first + j, part);
+                    }
+                });
+                first_part += parts_here;
+            }
+        });
+    }
+
+    /// Run `f(i, &mut data[i])` once per element — [`Self::run_parts`]
+    /// with width 1, for one-task-per-item fan-outs (e.g. one frame
+    /// decode per reusable slot).
+    pub fn run_slots<T, F>(&self, data: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        self.run_parts(data, 1, |i, part| f(i, &mut part[0]));
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +204,37 @@ mod tests {
         assert_eq!(ChunkPool::new(0).threads(), 1);
         assert_eq!(ChunkPool::default().threads(), 1);
         assert_eq!(ChunkPool::new(8).threads(), 8);
+    }
+
+    #[test]
+    fn run_parts_covers_every_element_once_with_fixed_boundaries() {
+        // Each part writes `part_index` into its own elements; for any
+        // thread count the result must be the same fixed partition.
+        for threads in [1, 2, 3, 8, 64] {
+            let pool = ChunkPool::new(threads);
+            for (len, width) in [(0usize, 3usize), (1, 3), (7, 3), (9, 3), (10, 3), (5, 100)] {
+                let mut data = vec![usize::MAX; len];
+                pool.run_parts(&mut data, width, |p, part| {
+                    assert!(part.len() <= width);
+                    for x in part.iter_mut() {
+                        *x = p;
+                    }
+                });
+                let want: Vec<usize> = (0..len).map(|i| i / width).collect();
+                assert_eq!(data, want, "threads={threads} len={len} width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_slots_is_one_task_per_element() {
+        for threads in [1, 2, 5] {
+            let pool = ChunkPool::new(threads);
+            let mut data = vec![0usize; 13];
+            pool.run_slots(&mut data, |i, x| *x = i * i);
+            let want: Vec<usize> = (0..13).map(|i| i * i).collect();
+            assert_eq!(data, want, "threads={threads}");
+        }
     }
 
     #[test]

@@ -195,6 +195,52 @@ fn relay_budget_cuts_root_ingress_and_converges() {
     assert!(d1 < 0.2 * d0, "lossy-relay run must still converge: {d0} -> {d1}");
 }
 
+/// The parallel-aggregation pin (DESIGN.md §13): `--agg-threads 4`
+/// (parallel frame decode, range-partitioned merge, parallel sparse step)
+/// must be bit-identical to `--agg-threads 1` (the literal serial code
+/// path) — params AND every per-round byte counter — on star and tree,
+/// over the in-process wire and both TCP wires. The model dim exceeds
+/// SELECT_CHUNK so the range-partitioned merge genuinely splits.
+#[test]
+fn agg_threads_bit_identical_on_star_and_tree_on_both_transports_tcp() {
+    let dim = 2 * rtopk::util::chunkpool::SELECT_CHUNK + 37;
+    let star = quick_cfg(SparsifierKind::RTopK, 0.99, 4, 6);
+    let mut tree = quick_cfg(SparsifierKind::RTopK, 0.99, 8, 6);
+    tree.set_topology("tree:fanout=4,depth=2").unwrap();
+    for cfg in [&star, &tree] {
+        for transport in [
+            coordinator::Transport::InProcess,
+            coordinator::Transport::Tcp,
+            coordinator::Transport::TcpEvented,
+        ] {
+            // set both sides explicitly: the default may be overridden by
+            // RTOPK_AGG_THREADS (the CI thread-invariance pass sets 4)
+            let mut cfg_serial = cfg.clone();
+            cfg_serial.agg_threads = 1;
+            let mut cfg_par = cfg.clone();
+            cfg_par.agg_threads = 4;
+            let a = run_on(&cfg_serial, dim, 0.05, transport);
+            let b = run_on(&cfg_par, dim, 0.05, transport);
+            for (x, y) in a.params.iter().zip(&b.params) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "agg-threads 1 vs 4 params must be bitwise equal \
+                     (topology={:?}, {transport:?})",
+                    cfg.topology
+                );
+            }
+            assert_eq!(a.metrics.records.len(), b.metrics.records.len());
+            for (ra, rb) in a.metrics.records.iter().zip(&b.metrics.records) {
+                assert_eq!(ra.uplink_bytes, rb.uplink_bytes, "round {}", ra.round);
+                assert_eq!(ra.uplink_coords, rb.uplink_coords, "round {}", ra.round);
+                assert_eq!(ra.downlink_bytes, rb.downlink_bytes, "round {}", ra.round);
+                assert_eq!(ra.participants, rb.participants, "round {}", ra.round);
+            }
+        }
+    }
+}
+
 /// Relay fault path: a failing worker inside one subtree must error the
 /// whole cluster (worker → relay → root via WorkerFailed), never hang —
 /// in-process wire.

@@ -6,14 +6,17 @@
 //! zeros, huge/tiny magnitudes — see `gen_vector`).
 
 use rtopk::compress::codec::{self, value_roundtrip, CodecConfig, IndexFormat, ValueFormat};
-use rtopk::compress::aggregate::{merge_scaled_into, merge_tree_scaled_into};
+use rtopk::compress::aggregate::{
+    merge_scaled_into, merge_scaled_into_pooled, merge_tree_scaled_into,
+    merge_tree_scaled_into_pooled, MergeScratch, TreeMergeScratch,
+};
 use rtopk::coordinator::{CohortSampler, FederationConfig, SamplerKind};
 use rtopk::data::PopulationSharder;
 use rtopk::compress::{
     BudgetPolicy, GradientCompressor, PartitionedCompressor, PipelineSpec, SegmentLayout, Select,
     SelectScratch,
 };
-use rtopk::util::chunkpool::ChunkPool;
+use rtopk::util::chunkpool::{ChunkPool, SELECT_CHUNK};
 use rtopk::prop_assert;
 use rtopk::sparsify::{
     l2_sq, select_top_r, CompressionOperator, ErrorFeedback, NoCompression, RTopK, RandomK,
@@ -1095,6 +1098,105 @@ fn prop_simulated_relay_path_matches_tree_fold_reference() {
                     }
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Range-partitioned parallel aggregation ≡ serial, bit for bit, for any
+// thread count (DESIGN.md §13).
+// ---------------------------------------------------------------------------
+
+/// A sparse vector whose support is biased onto the [`SELECT_CHUNK`] range
+/// boundaries, so the parallel merge's binary-searched cursor starts and
+/// range hand-offs are actually exercised (uniform sampling at dim ~65537
+/// almost never lands on the one coordinate in the second range).
+fn boundary_sparse(rng: &mut Rng, dim: usize) -> SparseVec {
+    let k = 1 + rng.index(dim.min(64));
+    let mut idx: Vec<u32> = rng.sample_indices(dim, k).iter().map(|&i| i as u32).collect();
+    for b in [0, SELECT_CHUNK - 1, SELECT_CHUNK, SELECT_CHUNK + 1, dim - 1] {
+        if b < dim && rng.bernoulli(0.5) {
+            idx.push(b as u32);
+        }
+    }
+    idx.sort_unstable();
+    idx.dedup();
+    let val = idx.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    SparseVec { dim, idx, val }
+}
+
+#[test]
+fn prop_pooled_merge_bit_identical_to_serial_for_any_thread_count() {
+    check("pooled-merge", default_cases(), |rng| {
+        // dims straddle the range boundary: 1, 65535, 65536, 65537, multi
+        let dims = [1, SELECT_CHUNK - 1, SELECT_CHUNK, SELECT_CHUNK + 1, 3 * SELECT_CHUNK + 17];
+        let dim = dims[rng.index(dims.len())];
+        // n = 0 is the empty-input corner
+        let n = rng.index(6);
+        let mut inputs: Vec<SparseVec> = (0..n).map(|_| boundary_sparse(rng, dim)).collect();
+        if n >= 2 && rng.bernoulli(0.3) {
+            // all-overlap corner: every worker shares worker 0's support,
+            // so every coordinate folds across all n inputs
+            let base_idx = inputs[0].idx.clone();
+            for sv in &mut inputs[1..] {
+                sv.val = base_idx.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                sv.idx = base_idx.clone();
+            }
+        }
+        let scale = 1.0 / n.max(1) as f32;
+        let mut serial = SparseVec::default();
+        merge_scaled_into(&inputs, scale, dim, &mut serial);
+        let mut scratch = MergeScratch::default();
+        for threads in [1, 2, 3, 8] {
+            let pool = ChunkPool::new(threads);
+            let mut pooled = SparseVec::default();
+            merge_scaled_into_pooled(&inputs, scale, dim, &mut pooled, &pool, &mut scratch);
+            prop_assert!(
+                pooled.idx == serial.idx,
+                "threads={threads} dim={dim} n={n}: support mismatch"
+            );
+            prop_assert!(
+                pooled.val.iter().zip(&serial.val).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads} dim={dim} n={n}: values not bit-identical"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pooled_tree_merge_bit_identical_to_serial() {
+    check("pooled-tree-merge", default_cases(), |rng| {
+        let dims = [1, SELECT_CHUNK - 1, SELECT_CHUNK + 1, 2 * SELECT_CHUNK + 5];
+        let dim = dims[rng.index(dims.len())];
+        let n = 1 + rng.index(8);
+        let inputs: Vec<SparseVec> = (0..n).map(|_| boundary_sparse(rng, dim)).collect();
+        let groups = random_contiguous_groups(rng, n);
+        let scale = 1.0 / n as f32;
+        let mut serial = SparseVec::default();
+        merge_tree_scaled_into(&inputs, &groups, scale, dim, &mut serial);
+        let mut scratch = TreeMergeScratch::default();
+        for threads in [1, 2, 3, 8] {
+            let pool = ChunkPool::new(threads);
+            let mut pooled = SparseVec::default();
+            merge_tree_scaled_into_pooled(
+                &inputs,
+                &groups,
+                scale,
+                dim,
+                &mut pooled,
+                &pool,
+                &mut scratch,
+            );
+            prop_assert!(
+                pooled.idx == serial.idx,
+                "threads={threads} dim={dim} groups={groups:?}: support mismatch"
+            );
+            prop_assert!(
+                pooled.val.iter().zip(&serial.val).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads} dim={dim} groups={groups:?}: values not bit-identical"
+            );
         }
         Ok(())
     });
